@@ -1,0 +1,57 @@
+//! Motif census across k on a skewed collaboration-network stand-in,
+//! showing the load balancer's effect (the paper's headline motif story).
+//!
+//! ```
+//! cargo run --release --example motif_census [-- --scale 0.1]
+//! ```
+
+use dumato::apps::MotifCount;
+use dumato::balance::LbConfig;
+use dumato::canon::patterns::pattern_name;
+use dumato::cli::Args;
+use dumato::engine::{EngineConfig, Runner};
+use dumato::graph::generators;
+use dumato::report::Table;
+use dumato::util::fmt_count;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1), &[])?;
+    let scale: f64 = args.parse_or("scale", 0.05)?;
+    let g = generators::ASTROPH.scaled(scale).generate(1);
+    println!(
+        "dataset={} |V|={} |E|={} max_deg={}\n",
+        g.name(),
+        g.num_vertices(),
+        g.num_edges(),
+        g.max_degree()
+    );
+
+    for k in 3..=4 {
+        let base = EngineConfig {
+            warps: 1024,
+            ..Default::default()
+        };
+        let wc = Runner::run(&g, &MotifCount::new(k), &base);
+        let opt = Runner::run(
+            &g,
+            &MotifCount::new(k),
+            &base.clone().with_lb(LbConfig::motif()),
+        );
+        let mut t = Table::new(
+            format!(
+                "{k}-motif census (DM_WC {:.4}s vs DM_OPT {:.4}s simulated; {} migrations)",
+                wc.metrics.sim_seconds, opt.metrics.sim_seconds, opt.metrics.migrations
+            ),
+            &["pattern", "count"],
+        );
+        let total: u64 = opt.patterns.iter().map(|&(_, c)| c).sum();
+        for &(bm, c) in &opt.patterns {
+            t.row(vec![pattern_name(k, bm), fmt_count(c)]);
+        }
+        t.row(vec!["TOTAL".into(), fmt_count(total)]);
+        println!("{}", t.render());
+        // LB must not change the answer
+        assert_eq!(wc.patterns, opt.patterns, "LB changed results!");
+    }
+    Ok(())
+}

@@ -1,0 +1,19 @@
+//! §Perf driver: times the engine hot path on a fixed workload so
+//! optimization iterations are comparable (EXPERIMENTS.md §Perf).
+use dumato::apps::{CliqueCount, MotifCount};
+use dumato::engine::{EngineConfig, Runner};
+use dumato::graph::generators;
+use dumato::util::Timer;
+
+fn main() {
+    let g = generators::MICO.scaled(0.05).generate(1);
+    println!("mico@0.05 |V|={} |E|={} maxdeg={}", g.num_vertices(), g.num_edges(), g.max_degree());
+    let cfg = EngineConfig { warps: 1024, threads: 1, ..Default::default() };
+    let t = Timer::start();
+    let r = Runner::run(&g, &CliqueCount::new(5), &cfg);
+    println!("clique k=5: count={} wall={:.3}s insts={}", r.count, t.secs(), r.metrics.total_insts);
+    let t = Timer::start();
+    let r = Runner::run(&g, &MotifCount::new(4), &cfg);
+    let total: u64 = r.patterns.iter().map(|&(_,c)| c).sum();
+    println!("motif  k=4: total={} wall={:.3}s insts={}", total, t.secs(), r.metrics.total_insts);
+}

@@ -1,0 +1,5 @@
+"""Build-time compile package: L2 jax model + L1 Pallas kernels + AOT lowering.
+
+Never imported at runtime — ``make artifacts`` runs once and the rust binary
+is self-contained afterwards.
+"""

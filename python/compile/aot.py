@@ -1,0 +1,93 @@
+"""AOT lowering: jax model -> HLO *text* artifacts for the rust runtime.
+
+HLO text (NOT ``.serialize()``) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (what
+the published ``xla`` 0.1.6 crate links) rejects (``proto.id() <= INT_MAX``).
+The text parser reassigns ids, so text round-trips cleanly.  See
+/opt/xla-example/gen_hlo.py.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits one ``.hlo.txt`` per (function, shape variant) plus ``manifest.txt``
+(a simple ``name|file|inputs|outputs`` listing the rust runtime parses —
+no JSON dependency needed on the rust side).
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (name, function, example-input specs)
+# Variants cover the graph sizes the benches feed: triangles over dense
+# adjacency tiles, and intersect batches sized for the engine's warp count.
+TRIANGLE_SIDES = (256, 512, 1024)
+INTERSECT_VARIANTS = ((1024, 32), (1024, 128), (4096, 32))
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec_str(s: jax.ShapeDtypeStruct) -> str:
+    return f"{s.dtype}[{','.join(str(d) for d in s.shape)}]"
+
+
+def artifact_entries():
+    """Yield (name, lowered, in_specs, n_outputs) for every artifact."""
+    for n in TRIANGLE_SIDES:
+        spec = jax.ShapeDtypeStruct((n, n), jnp.float32)
+        yield (
+            f"triangle_{n}",
+            jax.jit(model.triangle_count).lower(spec),
+            [spec],
+            1,
+        )
+        yield (
+            f"motif3_{n}",
+            jax.jit(model.motif3_census).lower(spec),
+            [spec],
+            2,
+        )
+    for b, w in INTERSECT_VARIANTS:
+        spec = jax.ShapeDtypeStruct((b, w), jnp.int32)
+        yield (
+            f"intersect_{b}x{w}",
+            jax.jit(model.intersect_count).lower(spec, spec),
+            [spec, spec],
+            2,
+        )
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest_lines = []
+    for name, lowered, in_specs, n_out in artifact_entries():
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        inputs = ";".join(spec_str(s) for s in in_specs)
+        manifest_lines.append(f"{name}|{fname}|{inputs}|{n_out}")
+        print(f"  wrote {fname} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote manifest.txt ({len(manifest_lines)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

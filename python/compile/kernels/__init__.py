@@ -1,0 +1,16 @@
+"""Layer-1 Pallas kernels for DuMato's compute hot-spots.
+
+All kernels are lowered with ``interpret=True`` so the resulting HLO runs on
+any PJRT backend (including the rust CPU client). See DESIGN.md
+§Hardware-Adaptation for the GPU-warp -> TPU-MXU mapping.
+"""
+
+from .triangle import triangle_kernel_call, TRIANGLE_BLOCK
+from .intersect import intersect_count_call, INTERSECT_ROWS
+
+__all__ = [
+    "triangle_kernel_call",
+    "TRIANGLE_BLOCK",
+    "intersect_count_call",
+    "INTERSECT_ROWS",
+]

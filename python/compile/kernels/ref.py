@@ -1,0 +1,22 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth)."""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def triangle_ref(adj: jax.Array) -> jax.Array:
+    """Masked square ``(A @ A) * A`` — oracle for triangle_kernel_call."""
+    return jnp.dot(adj, adj, preferred_element_type=jnp.float32) * adj
+
+
+def triangle_count_ref(adj: jax.Array) -> jax.Array:
+    """Number of triangles in an undirected 0/1 adjacency matrix."""
+    return jnp.sum(triangle_ref(adj)) / 6.0
+
+
+def intersect_count_ref(cur: jax.Array, nbr: jax.Array):
+    """AND + per-row popcount — oracle for intersect_count_call."""
+    inter = cur & nbr
+    counts = jnp.sum(lax.population_count(inter), axis=1).astype(jnp.int32)
+    return inter, counts

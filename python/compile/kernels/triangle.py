@@ -1,0 +1,69 @@
+"""Tiled masked-matmul Pallas kernel: C = (A @ A) * A per tile.
+
+Triangle counting is ``sum(A^2 * A) / 6`` for an undirected 0/1 adjacency
+matrix A.  The paper computes k=3 cliques with warp-SIMD adjacency-list
+intersections; the TPU rethink (DESIGN.md §Hardware-Adaptation) turns the
+intersection into a *blocked dense matmul* so the MXU systolic array does
+128x128 multiply-accumulates per step instead of 32-lane compares.
+
+BlockSpec schedule (the threadblock analogue):
+  grid = (N/B, N/B, N/B); step (i, j, k) loads A[i,k] and A[k,j] into VMEM,
+  accumulates into the output tile C[i,j] (revisited across k), and applies
+  the adjacency mask on the last k step.  VMEM footprint = 4 tiles
+  (a, b, mask, out) * B*B*4 bytes; B=128 -> 256 KiB, far below the ~16 MiB
+  VMEM budget, leaving room for double-buffering by the pipeline.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile edge. 128 matches the MXU systolic array edge; the CPU
+# interpret path accepts any divisor of N.
+TRIANGLE_BLOCK = 128
+
+
+def _triangle_kernel(a_ref, b_ref, m_ref, o_ref, *, nk: int):
+    """One (i, j, k) grid step: o += a @ b; mask on the final k step."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _mask():
+        o_ref[...] *= m_ref[...]
+
+
+def triangle_kernel_call(adj: jax.Array, block: int = TRIANGLE_BLOCK) -> jax.Array:
+    """Return the masked square ``(adj @ adj) * adj`` of a dense f32 adjacency.
+
+    ``adj`` must be square with side divisible by ``block``. The caller
+    (L2 model) reduces the result to the triangle count.
+    """
+    n = adj.shape[0]
+    if adj.shape != (n, n):
+        raise ValueError(f"adjacency must be square, got {adj.shape}")
+    if n % block != 0:
+        raise ValueError(f"side {n} not divisible by block {block}")
+    nb = n // block
+    kernel = functools.partial(_triangle_kernel, nk=nb)
+    return pl.pallas_call(
+        kernel,
+        grid=(nb, nb, nb),
+        in_specs=[
+            pl.BlockSpec((block, block), lambda i, j, k: (i, k)),  # A row-tile
+            pl.BlockSpec((block, block), lambda i, j, k: (k, j)),  # A col-tile
+            pl.BlockSpec((block, block), lambda i, j, k: (i, j)),  # mask tile
+        ],
+        out_specs=pl.BlockSpec((block, block), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(adj, adj, adj)

@@ -1,0 +1,46 @@
+"""Layer-2 jax model: DuMato's offloadable compute graphs.
+
+These functions are what ``aot.py`` lowers to HLO text.  They call the
+Layer-1 Pallas kernels so the kernels lower into the same HLO module, and
+add the surrounding reduction/bookkeeping that the rust coordinator expects.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import triangle_kernel_call, intersect_count_call
+
+
+def triangle_count(adj: jax.Array) -> tuple[jax.Array]:
+    """Count triangles of a dense f32 0/1 adjacency matrix.
+
+    Returns a 1-tuple (the AOT bridge lowers with return_tuple=True).
+    The division by 6 removes the 3! orderings of each triangle.
+    """
+    masked = triangle_kernel_call(adj)
+    return (jnp.sum(masked) / 6.0,)
+
+
+def intersect_count(cur: jax.Array, nbr: jax.Array):
+    """Batched candidate-set intersection for the clique hot loop.
+
+    cur, nbr: [B, W] int32 bitmaps. Returns (intersections [B, W] int32,
+    counts [B] int32).
+    """
+    inter, counts = intersect_count_call(cur, nbr)
+    return (inter, counts)
+
+
+def motif3_census(adj: jax.Array):
+    """Closed-form 3-vertex motif census from the adjacency matrix.
+
+    Returns (wedge_count, triangle_count): the two connected 3-motifs.
+    Wedges (paths of length 2) = sum_v C(deg_v, 2) - 3 * triangles.
+    Exercises kernel + jnp composition in a single lowered module.
+    """
+    masked = triangle_kernel_call(adj)
+    triangles = jnp.sum(masked) / 6.0
+    deg = jnp.sum(adj, axis=1)
+    paths2 = jnp.sum(deg * (deg - 1.0) / 2.0)
+    wedges = paths2 - 3.0 * triangles
+    return (wedges, triangles)

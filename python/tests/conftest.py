@@ -1,0 +1,20 @@
+import os
+import sys
+
+# Allow `pytest python/tests` from the repo root as well as `cd python`.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0xD0AA70)
+
+
+def random_adjacency(rng, n: int, p: float) -> np.ndarray:
+    """Symmetric 0/1 f32 adjacency with zero diagonal."""
+    a = (rng.random((n, n)) < p).astype(np.float32)
+    a = np.triu(a, 1)
+    return a + a.T

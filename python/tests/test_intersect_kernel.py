@@ -1,0 +1,73 @@
+"""L1 intersect kernel vs pure-jnp oracle."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.intersect import intersect_count_call
+from compile.kernels.ref import intersect_count_ref
+
+
+def _popcount_rows(a: np.ndarray) -> np.ndarray:
+    bits = np.unpackbits(a.view(np.uint8), axis=-1)
+    return bits.reshape(a.shape[0], -1).sum(axis=1).astype(np.int32)
+
+
+@pytest.mark.parametrize("b,w,rows", [(32, 4, 32), (64, 8, 32), (128, 32, 32), (64, 8, 16)])
+def test_matches_ref(rng, b, w, rows):
+    cur = rng.integers(0, 2**31, (b, w), dtype=np.int32)
+    nbr = rng.integers(0, 2**31, (b, w), dtype=np.int32)
+    inter, counts = intersect_count_call(jnp.asarray(cur), jnp.asarray(nbr), rows=rows)
+    ref_inter, ref_counts = intersect_count_ref(cur, nbr)
+    np.testing.assert_array_equal(np.asarray(inter), np.asarray(ref_inter))
+    np.testing.assert_array_equal(np.asarray(counts), np.asarray(ref_counts))
+
+
+def test_counts_against_numpy_popcount(rng):
+    b, w = 64, 8
+    cur = rng.integers(0, 2**31, (b, w), dtype=np.int32)
+    nbr = rng.integers(0, 2**31, (b, w), dtype=np.int32)
+    _, counts = intersect_count_call(jnp.asarray(cur), jnp.asarray(nbr))
+    np.testing.assert_array_equal(np.asarray(counts), _popcount_rows(cur & nbr))
+
+
+def test_disjoint_and_identical(rng):
+    b, w = 32, 4
+    a = np.full((b, w), 0x55555555, np.int32)
+    z = np.full((b, w), ~np.int32(0x55555555), np.int32)
+    _, c0 = intersect_count_call(jnp.asarray(a), jnp.asarray(z))
+    assert np.all(np.asarray(c0) == 0)
+    _, c1 = intersect_count_call(jnp.asarray(a), jnp.asarray(a))
+    assert np.all(np.asarray(c1) == w * 16)
+
+
+def test_negative_words_popcount_correct(rng):
+    """Sign bit must count as a set bit (int32 interchange, u32 semantics)."""
+    a = np.full((32, 4), -1, np.int32)  # all 32 bits set
+    _, c = intersect_count_call(jnp.asarray(a), jnp.asarray(a))
+    assert np.all(np.asarray(c) == 4 * 32)
+
+
+def test_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        intersect_count_call(jnp.zeros((8, 4), jnp.int32), jnp.zeros((8, 8), jnp.int32))
+    with pytest.raises(ValueError):
+        intersect_count_call(jnp.zeros((20, 4), jnp.int32), jnp.zeros((20, 4), jnp.int32), rows=32)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    blocks=st.integers(1, 4),
+    rows=st.sampled_from([8, 16, 32]),
+    w=st.integers(1, 16),
+)
+def test_property_matches_ref(seed, blocks, rows, w):
+    rng = np.random.default_rng(seed)
+    b = blocks * rows
+    cur = rng.integers(-(2**31), 2**31, (b, w)).astype(np.int32)
+    nbr = rng.integers(-(2**31), 2**31, (b, w)).astype(np.int32)
+    inter, counts = intersect_count_call(jnp.asarray(cur), jnp.asarray(nbr), rows=rows)
+    np.testing.assert_array_equal(np.asarray(inter), cur & nbr)
+    np.testing.assert_array_equal(np.asarray(counts), _popcount_rows(cur & nbr))

@@ -1,0 +1,57 @@
+"""L2 model functions: composition, shapes, and known closed forms."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from conftest import random_adjacency
+
+
+def test_triangle_count_complete_graph():
+    n = 128
+    adj = np.ones((n, n), np.float32) - np.eye(n, dtype=np.float32)
+    (count,) = model.triangle_count(jnp.asarray(adj))
+    assert float(count) == n * (n - 1) * (n - 2) / 6
+
+
+def test_triangle_count_cycle():
+    """An n-cycle (n>3) has no triangles."""
+    n = 128
+    adj = np.zeros((n, n), np.float32)
+    for i in range(n):
+        adj[i, (i + 1) % n] = adj[(i + 1) % n, i] = 1.0
+    (count,) = model.triangle_count(jnp.asarray(adj))
+    assert float(count) == 0.0
+
+
+def test_motif3_census_closed_forms(rng):
+    n = 128
+    adj = random_adjacency(rng, n, 0.08)
+    wedges, triangles = model.motif3_census(jnp.asarray(adj))
+    # brute-force over all 3-subsets is O(n^3); use matrix identities instead
+    a2 = adj @ adj
+    tri = float(np.sum(a2 * adj)) / 6.0
+    deg = adj.sum(axis=1)
+    wed = float(np.sum(deg * (deg - 1) / 2)) - 3.0 * tri
+    assert float(triangles) == pytest.approx(tri)
+    assert float(wedges) == pytest.approx(wed)
+
+
+def test_motif3_census_triangle_graph():
+    """A single triangle: 1 triangle, 0 wedges."""
+    adj = np.zeros((128, 128), np.float32)
+    for i, j in [(0, 1), (1, 2), (0, 2)]:
+        adj[i, j] = adj[j, i] = 1.0
+    wedges, triangles = model.motif3_census(jnp.asarray(adj))
+    assert float(triangles) == 1.0
+    assert float(wedges) == 0.0
+
+
+def test_intersect_count_model(rng):
+    b, w = 64, 8
+    cur = rng.integers(0, 2**31, (b, w), dtype=np.int32)
+    nbr = rng.integers(0, 2**31, (b, w), dtype=np.int32)
+    inter, counts = model.intersect_count(jnp.asarray(cur), jnp.asarray(nbr))
+    np.testing.assert_array_equal(np.asarray(inter), cur & nbr)
+    assert counts.shape == (b,)

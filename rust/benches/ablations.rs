@@ -1,0 +1,162 @@
+//! Ablations for the design choices DESIGN.md calls out:
+//!
+//! - `lb-threshold` — the §V-A2 sensitivity analysis: rebalance threshold
+//!   sweep for clique and motif counting.
+//! - `compact`      — the optional Compact phase on/off (§IV-C3).
+//! - `memory`       — DFS-wide TE footprint vs BFS frontier growth with k
+//!   (the §IV-B complexity argument, measured).
+//! - `warps`        — occupancy sweep around the paper's 172k-thread
+//!   configuration.
+//!
+//! ```
+//! cargo bench --bench ablations                 # all
+//! cargo bench --bench ablations -- lb-threshold # one section
+//! ```
+
+#[path = "support.rs"]
+mod support;
+
+use dumato::apps::{CliqueCount, MotifCount};
+use dumato::balance::LbConfig;
+use dumato::baselines::{App, PangolinBfs, PangolinError};
+use dumato::engine::{EngineConfig, Runner, Te};
+use dumato::graph::generators;
+use dumato::report::Table;
+use dumato::util::fmt_count;
+
+fn lb_threshold() {
+    let g = generators::ASTROPH.scaled(support::scale()).generate(1);
+    let mut t = Table::new(
+        "LB threshold sensitivity (simulated seconds; paper optima: 40% clique, 10% motif)",
+        &["app", "no-LB", "5%", "10%", "20%", "40%", "60%"],
+    );
+    for (name, app, k) in [("clique k=6", App::Clique, 6), ("motif k=4", App::Motif, 4)] {
+        let mut row = vec![name.to_string()];
+        let mut cfg = support::engine_cfg();
+        cfg.lb = None;
+        let base = match app {
+            App::Clique => Runner::run(&g, &CliqueCount::new(k), &cfg).metrics.sim_seconds,
+            App::Motif => Runner::run(&g, &MotifCount::new(k), &cfg).metrics.sim_seconds,
+        };
+        row.push(format!("{base:.4}"));
+        for thr in [0.05, 0.10, 0.20, 0.40, 0.60] {
+            let mut cfg = support::engine_cfg();
+            cfg.lb = Some(LbConfig::default().with_threshold(thr));
+            let s = match app {
+                App::Clique => Runner::run(&g, &CliqueCount::new(k), &cfg).metrics.sim_seconds,
+                App::Motif => Runner::run(&g, &MotifCount::new(k), &cfg).metrics.sim_seconds,
+            };
+            row.push(format!("{s:.4}"));
+        }
+        t.row(row);
+    }
+    println!("{}", t.render());
+}
+
+fn compact() {
+    let g = generators::MICO.scaled(support::scale()).generate(1);
+    let mut t = Table::new(
+        "Compact phase ablation (clique counting, simulated seconds + insts)",
+        &["k", "with compact", "insts", "without", "insts", "delta"],
+    );
+    for k in 4..=6usize {
+        let cfg = support::engine_cfg();
+        let with = Runner::run(&g, &CliqueCount::new(k), &cfg);
+        let without = Runner::run(&g, &CliqueCount::new(k).without_compact(), &cfg);
+        if with.timed_out || without.timed_out {
+            t.row(vec![k.to_string(), "-".into(), "-".into(), "-".into(), "-".into(), "-".into()]);
+            continue;
+        }
+        assert_eq!(with.count, without.count, "compact must not change counts");
+        let delta = without.metrics.sim_seconds / with.metrics.sim_seconds;
+        t.row(vec![
+            k.to_string(),
+            format!("{:.4}", with.metrics.sim_seconds),
+            fmt_count(with.metrics.total_insts),
+            format!("{:.4}", without.metrics.sim_seconds),
+            fmt_count(without.metrics.total_insts),
+            format!("{delta:.2}x"),
+        ]);
+    }
+    println!("{}", t.render());
+}
+
+fn memory() {
+    let g = generators::ASTROPH.scaled(support::scale()).generate(1);
+    let mut t = Table::new(
+        "Memory demand: DFS-wide TE (all warps) vs Pangolin BFS peak frontier",
+        &["k", "TE bytes (DFS-wide)", "frontier bytes (BFS)", "ratio"],
+    );
+    for k in 3..=6usize {
+        // DFS-wide worst case: warps x (k levels x max_deg ext + tr)
+        let te_per_warp = {
+            let mut te = Te::new(k.max(3));
+            // upper bound: each level's ext at max degree
+            te.memory_bytes() + (k.saturating_sub(1)) * g.max_degree() * 4
+        };
+        let te_total = te_per_warp * support::warps();
+        let mut p = PangolinBfs::new(App::Motif, k).with_budget(usize::MAX >> 1);
+        p.time_limit = Some(support::budget());
+        let frontier = match p.run(&g) {
+            Ok(r) => r.peak_frontier_bytes,
+            Err(PangolinError::Oom { bytes_needed, .. }) => bytes_needed,
+            Err(PangolinError::Timeout) => {
+                t.row(vec![k.to_string(), fmt_count(te_total as u64), "-".into(), "-".into()]);
+                continue;
+            }
+        };
+        t.row(vec![
+            k.to_string(),
+            fmt_count(te_total as u64),
+            fmt_count(frontier as u64),
+            format!("{:.1}x", frontier as f64 / te_total.max(1) as f64),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("(paper §IV-B: BFS is O(max_deg^(k-1)) per traversal, DFS-wide O(max_deg * k^2))\n");
+}
+
+fn warps_sweep() {
+    let g = generators::MICO.scaled(support::scale()).generate(1);
+    let mut t = Table::new(
+        "Occupancy sweep (clique k=5, simulated seconds; paper picked 5376 warps)",
+        &["warps", "sim_time", "wall"],
+    );
+    for warps in [128, 512, 1024, 2048, 5376] {
+        let cfg = EngineConfig {
+            warps,
+            time_limit: Some(support::budget()),
+            ..Default::default()
+        };
+        let r = Runner::run(&g, &CliqueCount::new(5), &cfg);
+        t.row(vec![
+            warps.to_string(),
+            format!("{:.4}", r.metrics.sim_seconds),
+            format!("{:.3}", r.metrics.wall_seconds),
+        ]);
+    }
+    println!("{}", t.render());
+}
+
+fn main() {
+    support::print_env_banner("ablations");
+    // cargo passes a trailing `--bench` flag to harness=false binaries;
+    // only non-flag positionals select sections
+    let args: Vec<String> = std::env::args()
+        .skip(1)
+        .filter(|a| !a.starts_with('-'))
+        .collect();
+    let want = |s: &str| args.is_empty() || args.iter().any(|a| a == s);
+    if want("lb-threshold") {
+        lb_threshold();
+    }
+    if want("compact") {
+        compact();
+    }
+    if want("memory") {
+        memory();
+    }
+    if want("warps") {
+        warps_sweep();
+    }
+}

@@ -1,0 +1,76 @@
+//! Shared bench harness helpers (criterion is not vendored offline; the
+//! benches are `harness = false` binaries that print paper-style tables).
+//!
+//! Environment knobs:
+//! - `DUMATO_BENCH_SCALE`   dataset scale factor (default 0.05 — CI-speed;
+//!   1.0 regenerates at the paper's full sizes)
+//! - `DUMATO_BENCH_BUDGET`  per-cell wall-clock budget in seconds
+//!   (default 5; the paper used 24 h)
+//! - `DUMATO_BENCH_WARPS`   virtual warps (default 1024; paper 5376)
+
+#![allow(dead_code)]
+
+use std::time::Duration;
+
+use dumato::engine::EngineConfig;
+use dumato::graph::{generators, CsrGraph};
+
+pub fn scale() -> f64 {
+    std::env::var("DUMATO_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.05)
+}
+
+pub fn budget() -> Duration {
+    let s: f64 = std::env::var("DUMATO_BENCH_BUDGET")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(5.0);
+    Duration::from_secs_f64(s)
+}
+
+pub fn warps() -> usize {
+    std::env::var("DUMATO_BENCH_WARPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1024)
+}
+
+/// The four datasets Table IV/VI sweep (LiveJournal joins at scale >= 0.2
+/// to keep default runs minutes, matching the paper's clique-only use).
+pub fn datasets() -> Vec<CsrGraph> {
+    let s = scale();
+    let mut v = vec![
+        generators::CITESEER.scaled(s).generate(1),
+        generators::ASTROPH.scaled(s).generate(1),
+        generators::MICO.scaled(s).generate(1),
+        generators::DBLP.scaled(s).generate(1),
+    ];
+    if s >= 0.2 {
+        v.push(generators::LIVEJOURNAL.scaled(s * 0.1).generate(1));
+    }
+    v
+}
+
+pub fn engine_cfg() -> EngineConfig {
+    EngineConfig {
+        warps: warps(),
+        time_limit: Some(budget()),
+        ..Default::default()
+    }
+}
+
+pub fn print_env_banner(bench: &str) {
+    println!(
+        "[{bench}] scale={} budget={:?} warps={} threads={}",
+        scale(),
+        budget(),
+        warps(),
+        std::thread::available_parallelism().map_or(0, |n| n.get())
+    );
+    println!(
+        "[{bench}] note: datasets are Table III-matched synthetic stand-ins; \
+         times are simulated GPU seconds from the vGPU cost model (DESIGN.md §2)\n"
+    );
+}

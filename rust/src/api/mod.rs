@@ -1,0 +1,38 @@
+//! DuMato's public programming interface (paper §IV-E, Table II).
+//!
+//! A GPM algorithm is a loop over the Table II primitives exposed by
+//! [`WarpContext`](crate::engine::WarpContext); implementations provide the
+//! loop body via [`GpmAlgorithm::run`] — exactly the shape of the paper's
+//! Algorithm 4. See `apps/` for clique counting, motif counting, and
+//! subgraph querying built on this trait.
+
+pub mod properties;
+
+use crate::engine::WarpContext;
+
+/// A GPM algorithm programmed against the DuMato API.
+///
+/// `run` is invoked once per warp per kernel segment and must loop on
+/// `ctx.control()` — when it returns, the warp has either drained its work
+/// queue or checkpointed at a load-balancing stop.
+pub trait GpmAlgorithm: Sync {
+    /// Display name for reports.
+    fn name(&self) -> &str;
+
+    /// Target subgraph size k.
+    fn k(&self) -> usize;
+
+    /// Whether Move must maintain induced-edge bitmaps (paper `genedges`).
+    fn needs_edges(&self) -> bool {
+        false
+    }
+
+    /// Whether the runner should build the canonical dictionary
+    /// (aggregate_pattern with k <= 7 uses in-kernel relabeling).
+    fn needs_dict(&self) -> bool {
+        false
+    }
+
+    /// The algorithm loop (paper Algorithm 4).
+    fn run(&self, ctx: &mut WarpContext);
+}

@@ -1,0 +1,167 @@
+//! Filter property functions (paper §IV-E: `lower`, `is_clique`,
+//! `is_canonical`) plus their warp-level cost models.
+//!
+//! Each property is a pure predicate `(graph, te, extension) -> keep`
+//! paired with a `*_cost` function giving the (instructions, transactions)
+//! charged per 32-candidate chunk by the Filter phase.
+
+use crate::engine::Te;
+use crate::graph::{CsrGraph, VertexId};
+
+/// `lower` (clique canonicality): keep extensions greater than the last
+/// traversal vertex, so cliques are enumerated in ascending vertex order.
+#[inline]
+pub fn lower(_g: &CsrGraph, te: &Te, e: VertexId) -> bool {
+    e > te.last_vertex()
+}
+
+/// Cost of `lower` per chunk: one broadcast compare.
+pub fn lower_cost(_te: &Te) -> (u64, u64) {
+    (1, 0)
+}
+
+/// `is_clique`: the extension must be adjacent to every traversal vertex.
+/// Position 0 is guaranteed by construction (clique extensions are drawn
+/// from N(tr[0])), so probing starts at position 1.
+#[inline]
+pub fn is_clique(g: &CsrGraph, te: &Te, e: VertexId) -> bool {
+    (1..te.len()).all(|j| g.has_edge(te.vertex(j), e))
+}
+
+/// Cost of `is_clique` per chunk: one broadcast compare plus one scattered
+/// adjacency probe per traversal vertex.
+pub fn is_clique_cost(te: &Te) -> (u64, u64) {
+    (te.len() as u64, te.len() as u64)
+}
+
+/// `is_canonical` (motif canonicality): the canonical candidate rule
+/// (DESIGN.md §5.4). Extension `e` of prefix `[v0..vp-1]` is canonical iff
+/// `e > v0` and, with `j` the first prefix index adjacent to `e`,
+/// `e > vi` for every `i` in `(j, p)`.
+///
+/// This admits exactly one vertex-addition order per connected induced
+/// subgraph (property-tested in `apps::motif`).
+#[inline]
+pub fn is_canonical(g: &CsrGraph, te: &Te, e: VertexId) -> bool {
+    if e <= te.vertex(0) {
+        return false;
+    }
+    let len = te.len();
+    let mut first_nbr = None;
+    for i in 0..len {
+        if g.has_edge(te.vertex(i), e) {
+            first_nbr = Some(i);
+            break;
+        }
+    }
+    // extensions are drawn from N(prefix), so a neighbor exists
+    let j = first_nbr.expect("extension must touch the traversal");
+    ((j + 1)..len).all(|i| e > te.vertex(i))
+}
+
+/// Cost of `is_canonical` per chunk: a broadcast compare per prefix vertex
+/// plus one adjacency probe per prefix vertex.
+pub fn is_canonical_cost(te: &Te) -> (u64, u64) {
+    (2 * te.len() as u64, te.len() as u64)
+}
+
+/// Density property for quasi-clique mining (paper §IV-E mentions density
+/// filters): keep `e` if the extended subgraph has edge density >= gamma.
+#[inline]
+pub fn min_density(gamma: f64) -> impl Fn(&CsrGraph, &Te, VertexId) -> bool {
+    move |g: &CsrGraph, te: &Te, e: VertexId| {
+        let len = te.len();
+        let mut edges = 0usize;
+        for a in 0..len {
+            for b in (a + 1)..len {
+                if g.has_edge(te.vertex(a), te.vertex(b)) {
+                    edges += 1;
+                }
+            }
+        }
+        for a in 0..len {
+            if g.has_edge(te.vertex(a), e) {
+                edges += 1;
+            }
+        }
+        let n = len + 1;
+        let max_e = n * (n - 1) / 2;
+        edges as f64 >= gamma * max_e as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    fn te_with(g: &CsrGraph, k: usize, vs: &[VertexId]) -> Te {
+        let mut te = Te::new(k);
+        te.init_from_seed(&vec![vs[0]], g, false);
+        for &v in &vs[1..] {
+            te.push_vertex(v, g, false);
+        }
+        te
+    }
+
+    #[test]
+    fn lower_keeps_ascending() {
+        let g = generators::complete(6);
+        let te = te_with(&g, 4, &[1, 3]);
+        assert!(lower(&g, &te, 4));
+        assert!(!lower(&g, &te, 2));
+        assert!(!lower(&g, &te, 3));
+    }
+
+    #[test]
+    fn is_clique_requires_full_adjacency() {
+        // K4 plus pendant 4-0
+        let g = crate::graph::CsrGraph::from_adjacency(
+            vec![vec![1, 2, 3, 4], vec![0, 2, 3], vec![0, 1, 3], vec![0, 1, 2], vec![0]],
+            "k4p",
+        );
+        let te = te_with(&g, 4, &[0, 1]);
+        assert!(is_clique(&g, &te, 2));
+        assert!(is_clique(&g, &te, 3));
+        assert!(!is_clique(&g, &te, 4)); // 4 not adjacent to 1
+    }
+
+    #[test]
+    fn canonical_triangle_unique_order() {
+        let g = generators::complete(3);
+        // order [0,1] can accept 2; [0,2] must reject 1 (1 < 2 after first nbr 0)
+        let te01 = te_with(&g, 3, &[0, 1]);
+        assert!(is_canonical(&g, &te01, 2));
+        let te02 = te_with(&g, 3, &[0, 2]);
+        assert!(!is_canonical(&g, &te02, 1));
+        // nothing below v0
+        let te12 = te_with(&g, 3, &[1, 2]);
+        assert!(!is_canonical(&g, &te12, 0));
+    }
+
+    #[test]
+    fn canonical_wedge_through_high_center() {
+        // path 1-3, 3-2: only [1,3,2] should be canonical
+        let g = crate::graph::CsrGraph::from_adjacency(
+            vec![vec![], vec![3], vec![3], vec![1, 2]],
+            "w",
+        );
+        let te13 = te_with(&g, 3, &[1, 3]);
+        assert!(is_canonical(&g, &te13, 2)); // first nbr of 2 is 3 (idx 1), nothing after
+        let te23 = te_with(&g, 3, &[2, 3]);
+        assert!(!is_canonical(&g, &te23, 1)); // 1 < v0=2
+    }
+
+    #[test]
+    fn min_density_thresholds() {
+        let g = generators::complete(5);
+        let te = te_with(&g, 4, &[0, 1]);
+        // extending K2 by an adjacent vertex in K5: density 1.0
+        assert!(min_density(1.0)(&g, &te, 2));
+        let sparse = generators::star(6);
+        let te2 = te_with(&sparse, 4, &[1, 0]); // leaf, center
+        // extension 2: edges = (1,0),(0,2) = 2 of C(3,2)=3 -> 0.67
+        assert!(min_density(0.5)(&sparse, &te2, 2));
+        assert!(!min_density(0.9)(&sparse, &te2, 2));
+    }
+}

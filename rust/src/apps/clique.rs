@@ -1,0 +1,146 @@
+//! Clique counting (paper Algorithm 4, left column).
+//!
+//! Extensions are drawn from N(tr[0]) (range [0,1)), filtered to ascending
+//! vertex order (`lower` — the clique canonicality rule), compacted, then
+//! filtered to full adjacency (`is_clique`). At k-1 vertices the valid
+//! extensions each complete a k-clique and are counted with [A1].
+
+use crate::api::properties::{is_clique, is_clique_cost, lower, lower_cost};
+use crate::api::GpmAlgorithm;
+use crate::engine::WarpContext;
+
+pub struct CliqueCount {
+    k: usize,
+    /// Run the optional Compact phase between filters (paper §IV-C3).
+    /// Disabling it is the ablation measured in `benches/ablations.rs`.
+    compact: bool,
+}
+
+impl CliqueCount {
+    pub fn new(k: usize) -> Self {
+        assert!(k >= 3, "clique counting needs k >= 3");
+        Self { k, compact: true }
+    }
+
+    pub fn without_compact(mut self) -> Self {
+        self.compact = false;
+        self
+    }
+}
+
+impl GpmAlgorithm for CliqueCount {
+    fn name(&self) -> &str {
+        "clique_counting"
+    }
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn run(&self, ctx: &mut WarpContext) {
+        let k = self.k;
+        while ctx.control() {
+            if ctx.extend(0, 1) {
+                let lc = lower_cost(ctx.te);
+                ctx.filter(lc, lower);
+                if self.compact {
+                    ctx.compact();
+                }
+                let cc = is_clique_cost(ctx.te);
+                ctx.filter(cc, is_clique);
+                if ctx.te.len() == k - 1 {
+                    ctx.aggregate_counter();
+                }
+            }
+            ctx.move_(false);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{EngineConfig, Runner};
+    use crate::graph::{generators, CsrGraph};
+
+    fn cfg() -> EngineConfig {
+        EngineConfig {
+            warps: 8,
+            threads: 2,
+            ..Default::default()
+        }
+    }
+
+    /// Brute-force k-clique counter for cross-validation.
+    pub(crate) fn brute_cliques(g: &CsrGraph, k: usize) -> u64 {
+        fn rec(g: &CsrGraph, cur: &mut Vec<u32>, start: u32, k: usize, acc: &mut u64) {
+            if cur.len() == k {
+                *acc += 1;
+                return;
+            }
+            for v in start..g.num_vertices() as u32 {
+                if cur.iter().all(|&u| g.has_edge(u, v)) {
+                    cur.push(v);
+                    rec(g, cur, v + 1, k, acc);
+                    cur.pop();
+                }
+            }
+        }
+        let mut acc = 0;
+        rec(g, &mut Vec::new(), 0, k, &mut acc);
+        acc
+    }
+
+    #[test]
+    fn complete_graph_counts() {
+        let g = generators::complete(9);
+        for k in 3..=6 {
+            let r = Runner::run(&g, &CliqueCount::new(k), &cfg());
+            let expect = brute_cliques(&g, k);
+            assert_eq!(r.count, expect, "k={k}");
+        }
+    }
+
+    #[test]
+    fn star_has_no_triangles() {
+        let g = generators::star(30);
+        let r = Runner::run(&g, &CliqueCount::new(3), &cfg());
+        assert_eq!(r.count, 0);
+    }
+
+    #[test]
+    fn er_matches_brute_force() {
+        for seed in 0..5 {
+            let g = generators::erdos_renyi(30, 0.35, seed);
+            for k in 3..=5 {
+                let r = Runner::run(&g, &CliqueCount::new(k), &cfg());
+                assert_eq!(r.count, brute_cliques(&g, k), "seed={seed} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn powerlaw_standin_matches_brute_force() {
+        let g = generators::CITESEER.scaled(0.05).generate(3);
+        let r = Runner::run(&g, &CliqueCount::new(3), &cfg());
+        assert_eq!(r.count, brute_cliques(&g, 3));
+    }
+
+    #[test]
+    fn property_engine_equals_brute_force() {
+        crate::util::proptest::check(
+            crate::util::proptest::Config { cases: 24, ..Default::default() },
+            "engine k-clique count == brute force",
+            |rng| {
+                let n = rng.range(8, 28);
+                let p = 0.15 + rng.f64() * 0.35;
+                let g = generators::erdos_renyi(n, p, rng.next_u64());
+                let k = rng.range(3, 6);
+                let got = Runner::run(&g, &CliqueCount::new(k), &cfg()).count;
+                let want = brute_cliques(&g, k);
+                crate::prop_assert_eq!(got, want, "n={n} p={p:.2} k={k}");
+                Ok(())
+            },
+        );
+    }
+}

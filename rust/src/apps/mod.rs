@@ -1,0 +1,11 @@
+//! GPM applications built on the DuMato API (paper Algorithm 4).
+
+pub mod clique;
+pub mod motif;
+pub mod quasi_clique;
+pub mod query;
+
+pub use clique::CliqueCount;
+pub use motif::MotifCount;
+pub use quasi_clique::QuasiCliqueCount;
+pub use query::SubgraphQuery;

@@ -1,0 +1,14 @@
+//! Warp-level load balancing (paper §IV-D, Fig 5).
+//!
+//! A CPU-side monitor (see `engine::runner`) polls warp activity and stops
+//! the kernel when the active fraction drops below a threshold; this
+//! module implements the *redistribute* step: idle warps receive work
+//! migrated from donators, round-robin. Donations come from queued seeds
+//! first, then from unexplored subtrees inside a donator's TE (a pending
+//! extension at the shallowest level plus its prefix).
+
+pub mod policy;
+pub mod redistribute;
+
+pub use policy::LbConfig;
+pub use redistribute::redistribute;

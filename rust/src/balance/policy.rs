@@ -1,0 +1,60 @@
+//! Load-balancing policy knobs (the paper's sensitivity analysis, §V-A2).
+
+use std::time::Duration;
+
+/// Configuration of the CPU-side monitor + redistribute layer.
+#[derive(Clone, Debug)]
+pub struct LbConfig {
+    /// Rebalance when `active_warps < threshold * total_warps`.
+    /// Paper optima: 0.40 for clique counting, 0.10 for motif counting.
+    pub threshold: f64,
+    /// Monitor polling period (the paper's CPU reads activity
+    /// "constantly and asynchronously").
+    pub poll_interval: Duration,
+}
+
+impl LbConfig {
+    /// Paper's clique-counting threshold (40%).
+    pub fn clique() -> Self {
+        Self {
+            threshold: 0.40,
+            poll_interval: Duration::from_micros(500),
+        }
+    }
+
+    /// Paper's motif-counting threshold (10%).
+    pub fn motif() -> Self {
+        Self {
+            threshold: 0.10,
+            poll_interval: Duration::from_micros(500),
+        }
+    }
+
+    pub fn with_threshold(mut self, t: f64) -> Self {
+        self.threshold = t;
+        self
+    }
+}
+
+impl Default for LbConfig {
+    fn default() -> Self {
+        Self::clique()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_thresholds() {
+        assert_eq!(LbConfig::clique().threshold, 0.40);
+        assert_eq!(LbConfig::motif().threshold, 0.10);
+    }
+
+    #[test]
+    fn builder_overrides() {
+        let c = LbConfig::clique().with_threshold(0.25);
+        assert_eq!(c.threshold, 0.25);
+    }
+}

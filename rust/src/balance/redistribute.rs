@@ -1,0 +1,169 @@
+//! The redistribute step (paper Fig 5 step 4): migrate traversals from
+//! donator warps to idle warps, round-robin over donators.
+
+use crate::engine::WarpState;
+
+/// Move work from donators to idle warps. Returns the number of migrated
+/// traversals. Donation preference per donator: an unstarted queued seed,
+/// else an unexplored subtree popped from the shallowest TE level (the
+/// biggest pending unit of work).
+pub fn redistribute(warps: &mut [WarpState]) -> u64 {
+    let mut idle: Vec<usize> = warps
+        .iter()
+        .enumerate()
+        .filter(|(_, w)| w.finished)
+        .map(|(i, _)| i)
+        .collect();
+    if idle.is_empty() {
+        return 0;
+    }
+    let mut migrations = 0u64;
+    loop {
+        let mut progressed = false;
+        for d in 0..warps.len() {
+            if idle.is_empty() {
+                return migrations;
+            }
+            if warps[d].finished {
+                continue;
+            }
+            // Donators are warps with *multiple* traversals (paper §IV-D):
+            // never strip a warp's last unit of work. A queued seed may be
+            // donated when the warp keeps an active TE or another seed; a
+            // TE subtree donation always leaves the TE itself behind.
+            let seed = if !warps[d].queue.is_empty()
+                && (!warps[d].te.is_empty() || warps[d].queue.len() >= 2)
+            {
+                warps[d].queue.pop_back()
+            } else if let Some(level) = warps[d].te.donation_level() {
+                warps[d].te.donate(level)
+            } else {
+                None
+            };
+            if let Some(seed) = seed {
+                let i = idle.pop().expect("checked non-empty");
+                warps[i].queue.push_back(seed);
+                warps[i].finished = false;
+                migrations += 1;
+                progressed = true;
+            }
+        }
+        if !progressed {
+            return migrations;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::WarpState;
+    use crate::graph::generators;
+    use crate::util::proptest::{check, Config};
+
+    fn warp_with_seeds(id: usize, k: usize, seeds: &[Vec<u32>]) -> WarpState {
+        let mut w = WarpState::new(id, k);
+        for s in seeds {
+            w.queue.push_back(s.clone());
+        }
+        w
+    }
+
+    #[test]
+    fn migrates_queued_seeds_to_idle() {
+        let mut warps = vec![
+            warp_with_seeds(0, 4, &[vec![1], vec![2], vec![3]]),
+            {
+                let mut w = WarpState::new(1, 4);
+                w.finished = true;
+                w
+            },
+        ];
+        let n = redistribute(&mut warps);
+        assert_eq!(n, 1);
+        assert!(!warps[1].finished);
+        assert_eq!(warps[1].queue.len(), 1);
+        assert_eq!(warps[0].queue.len(), 2);
+    }
+
+    #[test]
+    fn no_idle_no_migration() {
+        let mut warps = vec![warp_with_seeds(0, 4, &[vec![1], vec![2]])];
+        assert_eq!(redistribute(&mut warps), 0);
+    }
+
+    #[test]
+    fn donates_te_subtree_when_queue_empty() {
+        let g = generators::complete(8);
+        let mut donor = WarpState::new(0, 5);
+        donor.te.init_from_seed(&vec![0], &g, false);
+        donor.te.ext_at(0).items = vec![4, 5];
+        donor.te.ext_at(0).generated = true;
+        let mut idle = WarpState::new(1, 5);
+        idle.finished = true;
+        let mut warps = vec![donor, idle];
+        let n = redistribute(&mut warps);
+        assert_eq!(n, 1);
+        assert_eq!(warps[1].queue.front().unwrap(), &vec![0, 5]);
+        assert_eq!(warps[0].te.ext_at(0).valid_count(), 1);
+    }
+
+    #[test]
+    fn round_robin_spreads_across_donators() {
+        let mut warps = vec![
+            warp_with_seeds(0, 4, &[vec![1], vec![2], vec![3], vec![4]]),
+            warp_with_seeds(1, 4, &[vec![5], vec![6], vec![7], vec![8]]),
+        ];
+        for i in 2..6 {
+            let mut w = WarpState::new(i, 4);
+            w.finished = true;
+            warps.push(w);
+        }
+        let n = redistribute(&mut warps);
+        assert_eq!(n, 4);
+        // both donators contributed (round-robin), not just the first
+        assert!(warps[0].queue.len() < 4);
+        assert!(warps[1].queue.len() < 4);
+        assert!(warps[2..].iter().all(|w| !w.finished));
+    }
+
+    #[test]
+    fn redistribution_preserves_total_work_property() {
+        check(
+            Config { cases: 32, ..Default::default() },
+            "redistribute preserves seed multiset size",
+            |rng| {
+                let n = rng.range(2, 12);
+                let mut warps: Vec<WarpState> = (0..n)
+                    .map(|i| {
+                        let mut w = WarpState::new(i, 4);
+                        if rng.chance(0.4) {
+                            w.finished = true;
+                        } else {
+                            for _ in 0..rng.range(0, 5) {
+                                w.queue.push_back(vec![rng.range(0, 100) as u32]);
+                            }
+                            if !w.has_work() {
+                                w.finished = true;
+                            }
+                        }
+                        w
+                    })
+                    .collect();
+                let before: usize = warps.iter().map(|w| w.queue.len()).sum();
+                redistribute(&mut warps);
+                let after: usize = warps.iter().map(|w| w.queue.len()).sum();
+                crate::prop_assert_eq!(before, after, "seed count changed");
+                // every unfinished warp must have work
+                for w in &warps {
+                    crate::prop_assert!(
+                        w.finished || w.has_work(),
+                        "warp {} marked active without work",
+                        w.id
+                    );
+                }
+                Ok(())
+            },
+        );
+    }
+}

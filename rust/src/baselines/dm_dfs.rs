@@ -1,0 +1,353 @@
+//! DM_DFS — the paper's thread-centric baseline (§V-A): "each GPU thread
+//! receives a traversal tr and calculates E(G, tr, k, P) using DFS".
+//!
+//! Execution model: a warp's 32 lanes each enumerate *independent*
+//! traversals. Per-lane scalar cost is measured exactly (one instruction
+//! per candidate processed plus bookkeeping; one 4-byte load per adjacency
+//! element with a streaming-reuse window for L1 — `coalesce::StreamingReuse`
+//! semantics). Warp-level cost applies the SIMT divergence model:
+//!
+//! ```text
+//! warp_insts = max_i(insts_i) + alpha * (sum_i(insts_i) - max_i(insts_i))
+//! alpha      = clamp(cv(insts_i), 0.05, 1.0)
+//! ```
+//!
+//! i.e. perfectly overlapping lanes issue together (lockstep over equal
+//! trip counts); imbalanced lanes serialize in proportion to their spread
+//! (coefficient of variation). `gld` transactions never coalesce across
+//! lanes (different lanes stream different adjacency lists). DESIGN.md §2
+//! documents the calibration of the streaming window.
+
+use std::collections::HashMap;
+
+use crate::graph::{CsrGraph, VertexId};
+use crate::util::Timer;
+use crate::vgpu::{CostModel, KernelMetrics, WARP_SIZE};
+
+use super::enumerate::is_canonical_ext;
+use super::App;
+
+/// Streaming-reuse window (elements) for per-lane sequential loads.
+/// Calibrated once against Table V's DBLP clique k=3 ratio; see
+/// EXPERIMENTS.md §Table V.
+pub const STREAM_WINDOW: u64 = 8;
+
+/// Per-lane measured cost.
+#[derive(Clone, Copy, Debug, Default)]
+struct LaneCost {
+    insts: u64,
+    glds: u64,
+}
+
+/// DM_DFS runner configuration.
+pub struct DmDfs {
+    pub app: App,
+    pub k: usize,
+    /// Total lanes (paper: 172,032 threads); warps = lanes / 32.
+    pub lanes: usize,
+    pub threads: usize,
+    pub cost: CostModel,
+    pub time_limit: Option<std::time::Duration>,
+}
+
+/// DM_DFS run result.
+#[derive(Debug)]
+pub struct DmDfsReport {
+    pub count: u64,
+    pub patterns: Vec<(u64, u64)>,
+    pub metrics: KernelMetrics,
+    pub timed_out: bool,
+}
+
+impl DmDfs {
+    pub fn new(app: App, k: usize) -> Self {
+        Self {
+            app,
+            k,
+            lanes: 1024 * WARP_SIZE,
+            threads: std::thread::available_parallelism().map_or(4, |n| n.get()),
+            cost: CostModel::default(),
+            time_limit: None,
+        }
+    }
+
+    pub fn run(&self, g: &CsrGraph) -> DmDfsReport {
+        let wall = Timer::start();
+        let lanes = self.lanes.max(WARP_SIZE);
+        let warps = lanes / WARP_SIZE;
+        let deadline = self.time_limit.map(|d| std::time::Instant::now() + d);
+        let timed_out = std::sync::atomic::AtomicBool::new(false);
+
+        // lane id -> seeds dealt round-robin (same deal as the engine)
+        let n = g.num_vertices();
+        let mut lane_costs = vec![LaneCost::default(); lanes];
+        let mut lane_counts = vec![0u64; lanes];
+        let mut lane_patterns: Vec<HashMap<u64, u64>> = vec![HashMap::new(); lanes];
+
+        std::thread::scope(|s| {
+            let chunk = lanes.div_ceil(self.threads.max(1));
+            let iter = lane_costs
+                .chunks_mut(chunk)
+                .zip(lane_counts.chunks_mut(chunk))
+                .zip(lane_patterns.chunks_mut(chunk))
+                .enumerate();
+            for (ci, ((costs, counts), patterns)) in iter {
+                let timed_out = &timed_out;
+                s.spawn(move || {
+                    let base = ci * chunk;
+                    for li in 0..costs.len() {
+                        if let Some(d) = deadline {
+                            if std::time::Instant::now() > d {
+                                timed_out.store(true, std::sync::atomic::Ordering::Relaxed);
+                                return;
+                            }
+                        }
+                        let lane = base + li;
+                        let mut v = lane;
+                        while v < n {
+                            if g.degree(v as u32) > 0 {
+                                match self.app {
+                                    App::Clique => self.clique_lane(
+                                        g,
+                                        v as u32,
+                                        &mut counts[li],
+                                        &mut costs[li],
+                                    ),
+                                    App::Motif => self.motif_lane(
+                                        g,
+                                        v as u32,
+                                        &mut patterns[li],
+                                        &mut costs[li],
+                                    ),
+                                }
+                            }
+                            v += lanes;
+                        }
+                    }
+                });
+            }
+        });
+
+        // Warp-level aggregation with the divergence model.
+        let mut metrics = KernelMetrics {
+            warps,
+            ..Default::default()
+        };
+        let mut total_cycles = 0.0f64;
+        let mut max_cycles = 0.0f64;
+        for w in 0..warps {
+            let lane_slice = &lane_costs[w * WARP_SIZE..(w + 1) * WARP_SIZE];
+            let insts: Vec<u64> = lane_slice.iter().map(|c| c.insts).collect();
+            let sum: u64 = insts.iter().sum();
+            let max = *insts.iter().max().unwrap();
+            let mean = sum as f64 / WARP_SIZE as f64;
+            let var = insts
+                .iter()
+                .map(|&x| (x as f64 - mean).powi(2))
+                .sum::<f64>()
+                / WARP_SIZE as f64;
+            let cv = if mean > 0.0 { var.sqrt() / mean } else { 0.0 };
+            let alpha = cv.clamp(0.35, 1.0);
+            let warp_insts = max as f64 + alpha * (sum - max) as f64;
+            let warp_glds: u64 = lane_slice.iter().map(|c| c.glds).sum();
+            metrics.total_insts += warp_insts as u64;
+            metrics.total_gld += warp_glds;
+            let cycles = self.cost.warp_cycles(warp_insts as u64, warp_glds);
+            total_cycles += cycles;
+            max_cycles = max_cycles.max(cycles);
+        }
+        metrics.segments = 1;
+        metrics.sim_seconds = self.cost.segment_seconds(total_cycles, max_cycles);
+        metrics.wall_seconds = wall.secs();
+
+        let count = lane_counts.iter().sum();
+        let patterns = if self.app == App::Motif {
+            let merged = crate::canon::cache::merge_pattern_counts(self.k, &lane_patterns);
+            let mut v: Vec<(u64, u64)> = merged.into_iter().collect();
+            v.sort_unstable();
+            v
+        } else {
+            Vec::new()
+        };
+        DmDfsReport {
+            count,
+            patterns,
+            metrics,
+            timed_out: timed_out.into_inner(),
+        }
+    }
+
+    /// Scalar clique DFS with exact per-lane cost accounting.
+    fn clique_lane(&self, g: &CsrGraph, seed: VertexId, count: &mut u64, cost: &mut LaneCost) {
+        let mut tr = vec![seed];
+        self.clique_rec(g, &mut tr, count, cost);
+    }
+
+    fn clique_rec(&self, g: &CsrGraph, tr: &mut Vec<VertexId>, count: &mut u64, cost: &mut LaneCost) {
+        let last = *tr.last().unwrap();
+        let n0 = g.neighbors(tr[0]);
+        cost.insts += 2; // level bookkeeping
+        // scalar scan of N(tr[0]): one inst + one (windowed) load per element
+        cost.insts += n0.len() as u64;
+        cost.glds += (n0.len() as u64).div_ceil(STREAM_WINDOW);
+        let from = n0.partition_point(|&e| e <= last);
+        for &e in &n0[from..] {
+            // adjacency probes against the traversal: 1 inst + 1 load each
+            let mut ok = true;
+            for &u in &tr[1..] {
+                cost.insts += 1;
+                cost.glds += 1;
+                if !g.has_edge(u, e) {
+                    ok = false;
+                    break;
+                }
+            }
+            if !ok {
+                continue;
+            }
+            if tr.len() == self.k - 1 {
+                cost.insts += 1;
+                *count += 1;
+            } else {
+                tr.push(e);
+                self.clique_rec(g, tr, count, cost);
+                tr.pop();
+            }
+        }
+    }
+
+    /// Scalar motif DFS with exact per-lane cost accounting.
+    fn motif_lane(
+        &self,
+        g: &CsrGraph,
+        seed: VertexId,
+        patterns: &mut HashMap<u64, u64>,
+        cost: &mut LaneCost,
+    ) {
+        let mut tr = vec![seed];
+        self.motif_rec(g, &mut tr, 0u64, patterns, cost);
+    }
+
+    fn motif_rec(
+        &self,
+        g: &CsrGraph,
+        tr: &mut Vec<VertexId>,
+        edges: u64,
+        patterns: &mut HashMap<u64, u64>,
+        cost: &mut LaneCost,
+    ) {
+        // scalar extension generation: scan each traversal vertex's list;
+        // every candidate pays a scalar scan of the traversal AND of the
+        // extensions gathered so far (the dedup the warp-centric version
+        // does with one lockstep broadcast per element)
+        let mut ext: Vec<VertexId> = Vec::new();
+        for &v in tr.iter() {
+            let adj = g.neighbors(v);
+            cost.insts += adj.len() as u64 * (tr.len() as u64 + 1);
+            cost.glds += (adj.len() as u64).div_ceil(STREAM_WINDOW);
+            for &e in adj {
+                cost.insts += ext.len() as u64; // scalar dedup scan
+                if !tr.contains(&e) && !ext.contains(&e) {
+                    ext.push(e);
+                }
+            }
+        }
+        // canonicality checks: a traversal scan plus a first-neighbor
+        // adjacency probe per candidate
+        cost.insts += ext.len() as u64 * tr.len() as u64;
+        cost.glds += ext.len() as u64;
+        ext.retain(|&e| is_canonical_ext(g, tr, e));
+        let p = tr.len();
+        for &e in &ext {
+            let mut bits = 0u64;
+            for (j, &v) in tr.iter().enumerate() {
+                cost.insts += 1;
+                cost.glds += 1;
+                if g.has_edge(v, e) {
+                    bits |= crate::canon::bitmap::edge_bit(j, p);
+                }
+            }
+            let new_edges = edges | bits;
+            if tr.len() == self.k - 1 {
+                cost.insts += 2; // relabel + counter
+                cost.glds += 1;
+                *patterns.entry(new_edges).or_insert(0) += 1;
+            } else {
+                tr.push(e);
+                self.motif_rec(g, tr, new_edges, patterns, cost);
+                tr.pop();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::{CliqueCount, MotifCount};
+    use crate::engine::{EngineConfig, Runner};
+    use crate::graph::generators;
+
+    fn dfs(app: App, k: usize) -> DmDfs {
+        let mut d = DmDfs::new(app, k);
+        d.lanes = 8 * WARP_SIZE;
+        d.threads = 2;
+        d
+    }
+
+    fn engine_cfg() -> EngineConfig {
+        EngineConfig {
+            warps: 8,
+            threads: 2,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn clique_counts_agree_with_engine() {
+        for seed in 0..3 {
+            let g = generators::erdos_renyi(30, 0.3, seed);
+            for k in 3..=5 {
+                let dfs_c = dfs(App::Clique, k).run(&g).count;
+                let eng_c = Runner::run(&g, &CliqueCount::new(k), &engine_cfg()).count;
+                assert_eq!(dfs_c, eng_c, "seed={seed} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn motif_census_agrees_with_engine() {
+        let g = generators::erdos_renyi(16, 0.3, 4);
+        let d = dfs(App::Motif, 4).run(&g);
+        let e = Runner::run(&g, &MotifCount::new(4), &engine_cfg());
+        assert_eq!(d.patterns, {
+            let mut v = e.patterns.clone();
+            v.sort_unstable();
+            v
+        });
+    }
+
+    #[test]
+    fn dfs_issues_more_transactions_than_engine() {
+        // the paper's Table V claim, in model form: thread-centric DFS is
+        // memory-inefficient vs the warp-centric engine
+        let g = generators::ASTROPH.scaled(0.02).generate(1);
+        let d = dfs(App::Clique, 4).run(&g);
+        let e = Runner::run(&g, &CliqueCount::new(4), &engine_cfg());
+        assert!(
+            d.metrics.total_gld > e.metrics.total_gld,
+            "DFS gld {} must exceed WC gld {}",
+            d.metrics.total_gld,
+            e.metrics.total_gld
+        );
+    }
+
+    #[test]
+    fn time_limit_respected() {
+        let g = generators::complete(32);
+        let mut d = dfs(App::Clique, 10);
+        d.time_limit = Some(std::time::Duration::from_millis(1));
+        let r = d.run(&g);
+        assert!(r.timed_out);
+    }
+}

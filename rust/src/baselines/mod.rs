@@ -1,0 +1,30 @@
+//! Baseline systems the paper compares against (§V, Tables IV and VI):
+//!
+//! - `dm_dfs` — DM_DFS: thread-centric DFS on the vGPU (each lane owns a
+//!   traversal; divergent execution, strided loads). Paper §V-A.
+//! - `pangolin_bfs` — Pangolin-like GPU BFS: level-synchronous frontier
+//!   materialization with a device-memory cap (OOM cells of Table VI).
+//! - `fractal_dfs` — Fractal-like CPU DFS with hierarchical work stealing.
+//! - `peregrine` — Peregrine-like pattern-aware matcher: one exploration
+//!   plan per pattern with automorphism symmetry breaking.
+//!
+//! All baselines produce exact counts (cross-validated against the engine
+//! in integration tests); they differ in execution model and cost.
+
+pub mod dm_dfs;
+pub mod enumerate;
+pub mod fractal_dfs;
+pub mod pangolin_bfs;
+pub mod peregrine;
+
+pub use dm_dfs::DmDfs;
+pub use fractal_dfs::FractalDfs;
+pub use pangolin_bfs::{PangolinBfs, PangolinError};
+pub use peregrine::Peregrine;
+
+/// Which GPM application a baseline runs (the paper evaluates these two).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum App {
+    Clique,
+    Motif,
+}

@@ -1,0 +1,311 @@
+//! Pangolin-like GPU BFS baseline (paper §III): level-synchronous
+//! subgraph enumeration that *materializes* every intermediate frontier in
+//! device memory. Fast and regular for small k, but the frontier grows as
+//! O(max_deg^(k-1)) and runs out of the device-memory budget around k=5 —
+//! the OOM cells of Table VI.
+
+use std::collections::HashMap;
+
+use crate::graph::{CsrGraph, VertexId};
+use crate::util::Timer;
+use crate::vgpu::{CostModel, KernelMetrics, WARP_SIZE};
+
+use super::enumerate::is_canonical_ext;
+use super::App;
+
+#[derive(Debug, PartialEq, Eq)]
+pub enum PangolinError {
+    /// Frontier exceeded the device-memory budget at the given level.
+    Oom { level: usize, bytes_needed: usize },
+    /// Wall-clock budget exhausted.
+    Timeout,
+}
+
+impl std::fmt::Display for PangolinError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PangolinError::Oom { level, bytes_needed } => {
+                write!(f, "OOM at level {level}: frontier needs {bytes_needed} bytes")
+            }
+            PangolinError::Timeout => write!(f, "timed out"),
+        }
+    }
+}
+
+pub struct PangolinBfs {
+    pub app: App,
+    pub k: usize,
+    /// Device-memory budget in bytes (paper: 32 GB V100).
+    pub memory_budget: usize,
+    pub cost: CostModel,
+    pub time_limit: Option<std::time::Duration>,
+}
+
+#[derive(Debug)]
+pub struct PangolinReport {
+    pub count: u64,
+    pub patterns: Vec<(u64, u64)>,
+    pub metrics: KernelMetrics,
+    /// Largest materialized frontier (bytes) — the BFS memory ablation.
+    pub peak_frontier_bytes: usize,
+}
+
+/// One materialized embedding: the traversal plus its edge bitmap.
+#[derive(Clone)]
+struct Embedding {
+    vertices: Vec<VertexId>,
+    edges: u64,
+}
+
+impl PangolinBfs {
+    pub fn new(app: App, k: usize) -> Self {
+        Self {
+            app,
+            k,
+            memory_budget: 32 << 30,
+            cost: CostModel::default(),
+            time_limit: None,
+        }
+    }
+
+    pub fn with_budget(mut self, bytes: usize) -> Self {
+        self.memory_budget = bytes;
+        self
+    }
+
+    fn embedding_bytes(level: usize) -> usize {
+        level * std::mem::size_of::<VertexId>() + std::mem::size_of::<u64>()
+    }
+
+    pub fn run(&self, g: &CsrGraph) -> Result<PangolinReport, PangolinError> {
+        let wall = Timer::start();
+        let mut insts = 0u64;
+        let mut glds = 0u64;
+        let mut peak_bytes = 0usize;
+        // level-1 frontier: every non-isolated vertex
+        let mut frontier: Vec<Embedding> = (0..g.num_vertices() as u32)
+            .filter(|&v| g.degree(v) > 0)
+            .map(|v| Embedding {
+                vertices: vec![v],
+                edges: 0,
+            })
+            .collect();
+
+        let deadline = self.time_limit.map(|d| std::time::Instant::now() + d);
+        // BFS levels 2..k-1: materialize extended frontiers.
+        for level in 2..self.k {
+            let mut next: Vec<Embedding> = Vec::new();
+            for (i, emb) in frontier.iter().enumerate() {
+                if i % 4096 == 0 {
+                    if let Some(d) = deadline {
+                        if std::time::Instant::now() > d {
+                            return Err(PangolinError::Timeout);
+                        }
+                    }
+                }
+                let emb: &Embedding = emb;
+                let ext = self.extensions(g, emb, &mut insts, &mut glds);
+                for (e, bits) in ext {
+                    next.push(Embedding {
+                        vertices: {
+                            let mut v = emb.vertices.clone();
+                            v.push(e);
+                            v
+                        },
+                        edges: emb.edges | bits,
+                    });
+                }
+            }
+            let bytes = next.len() * Self::embedding_bytes(level);
+            peak_bytes = peak_bytes.max(bytes);
+            if bytes > self.memory_budget {
+                return Err(PangolinError::Oom {
+                    level,
+                    bytes_needed: bytes,
+                });
+            }
+            frontier = next;
+        }
+
+        // final level: aggregate without materializing
+        let mut count = 0u64;
+        let mut raw: HashMap<u64, u64> = HashMap::new();
+        for (i, emb) in frontier.iter().enumerate() {
+            if i % 4096 == 0 {
+                if let Some(d) = deadline {
+                    if std::time::Instant::now() > d {
+                        return Err(PangolinError::Timeout);
+                    }
+                }
+            }
+            let ext = self.extensions(g, emb, &mut insts, &mut glds);
+            match self.app {
+                App::Clique => count += ext.len() as u64,
+                App::Motif => {
+                    for (_, bits) in ext {
+                        *raw.entry(emb.edges | bits).or_insert(0) += 1;
+                    }
+                }
+            }
+        }
+        let patterns = if self.app == App::Motif {
+            let mut v: Vec<(u64, u64)> =
+                super::enumerate::canonicalize_census(self.k, &raw)
+                    .into_iter()
+                    .collect();
+            v.sort_unstable();
+            count = v.iter().map(|&(_, c)| c).sum();
+            v
+        } else {
+            Vec::new()
+        };
+
+        // BFS on GPU is regular (thread per embedding, coalesced frontier
+        // reads): throughput-bound cost, no critical-path term.
+        let total_cycles = self.cost.warp_cycles(insts / WARP_SIZE as u64, glds);
+        let metrics = KernelMetrics {
+            sim_seconds: self
+                .cost
+                .segment_seconds(total_cycles, total_cycles / 1024.0),
+            wall_seconds: wall.secs(),
+            total_insts: insts,
+            total_gld: glds,
+            warps: 1024,
+            segments: self.k - 1,
+            ..Default::default()
+        };
+        Ok(PangolinReport {
+            count,
+            patterns,
+            metrics,
+            peak_frontier_bytes: peak_bytes,
+        })
+    }
+
+    /// Valid extensions of an embedding under the app's rules, with the
+    /// new vertex's edge bits.
+    fn extensions(
+        &self,
+        g: &CsrGraph,
+        emb: &Embedding,
+        insts: &mut u64,
+        glds: &mut u64,
+    ) -> Vec<(VertexId, u64)> {
+        let tr = &emb.vertices;
+        let p = tr.len();
+        let mut out = Vec::new();
+        match self.app {
+            App::Clique => {
+                let last = *tr.last().unwrap();
+                let n0 = g.neighbors(tr[0]);
+                *insts += n0.len() as u64;
+                *glds += (n0.len() as u64).div_ceil(WARP_SIZE as u64).max(1);
+                for &e in &n0[n0.partition_point(|&x| x <= last)..] {
+                    *insts += p as u64;
+                    *glds += p as u64 - 1;
+                    if tr[1..].iter().all(|&u| g.has_edge(u, e)) {
+                        out.push((e, full_bits(p)));
+                    }
+                }
+            }
+            App::Motif => {
+                let mut ext: Vec<VertexId> = Vec::new();
+                for &v in tr {
+                    let adj = g.neighbors(v);
+                    *insts += adj.len() as u64 * (p as u64 + 1);
+                    *glds += (adj.len() as u64).div_ceil(WARP_SIZE as u64).max(1);
+                    for &e in adj {
+                        if !tr.contains(&e) && !ext.contains(&e) {
+                            ext.push(e);
+                        }
+                    }
+                }
+                for e in ext {
+                    *insts += p as u64;
+                    if is_canonical_ext(g, tr, e) {
+                        let mut bits = 0u64;
+                        for (j, &v) in tr.iter().enumerate() {
+                            *glds += 1;
+                            if g.has_edge(v, e) {
+                                bits |= crate::canon::bitmap::edge_bit(j, p);
+                            }
+                        }
+                        out.push((e, bits));
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Edge bits of a clique extension at position p (adjacent to everything).
+fn full_bits(p: usize) -> u64 {
+    if p < 2 {
+        return 0;
+    }
+    let mut bits = 0u64;
+    for j in 0..p {
+        bits |= crate::canon::bitmap::edge_bit(j, p);
+    }
+    bits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::{CliqueCount, MotifCount};
+    use crate::engine::{EngineConfig, Runner};
+    use crate::graph::generators;
+
+    fn engine_cfg() -> EngineConfig {
+        EngineConfig {
+            warps: 8,
+            threads: 2,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn clique_counts_agree_with_engine() {
+        let g = generators::erdos_renyi(30, 0.3, 7);
+        for k in 3..=5 {
+            let p = PangolinBfs::new(App::Clique, k).run(&g).unwrap();
+            let e = Runner::run(&g, &CliqueCount::new(k), &engine_cfg());
+            assert_eq!(p.count, e.count, "k={k}");
+        }
+    }
+
+    #[test]
+    fn motif_census_agrees_with_engine() {
+        let g = generators::erdos_renyi(14, 0.35, 1);
+        let p = PangolinBfs::new(App::Motif, 4).run(&g).unwrap();
+        let e = Runner::run(&g, &MotifCount::new(4), &engine_cfg());
+        let mut want = e.patterns.clone();
+        want.sort_unstable();
+        assert_eq!(p.patterns, want);
+    }
+
+    #[test]
+    fn ooms_when_frontier_exceeds_budget() {
+        let g = generators::ASTROPH.scaled(0.05).generate(2);
+        let r = PangolinBfs::new(App::Motif, 6)
+            .with_budget(1 << 20) // 1 MiB "device"
+            .run(&g);
+        match r {
+            Err(PangolinError::Oom { level, bytes_needed }) => {
+                assert!(level <= 5);
+                assert!(bytes_needed > 1 << 20);
+            }
+            _ => panic!("expected OOM"),
+        }
+    }
+
+    #[test]
+    fn small_run_fits_big_budget() {
+        let g = generators::cycle(50);
+        let r = PangolinBfs::new(App::Clique, 4).run(&g).unwrap();
+        assert_eq!(r.count, 0);
+        assert!(r.metrics.sim_seconds > 0.0);
+    }
+}

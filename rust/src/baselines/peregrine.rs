@@ -1,0 +1,339 @@
+//! Peregrine-like pattern-aware baseline (paper §III): one exploration
+//! plan per pattern, with automorphism-based symmetry breaking, matched by
+//! backtracking over the data graph.
+//!
+//! The paper's observation — pattern-aware systems are competitive at
+//! small k but pay plan-explosion costs for large-k motifs (853 patterns
+//! at k=7, tens of thousands at k=8) — emerges directly: plan generation
+//! enumerates every canonical pattern and its automorphism group.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::canon::bitmap::AdjMat;
+use crate::canon::canonical::canonical_form;
+use crate::canon::patterns::{all_patterns, automorphisms};
+use crate::graph::{CsrGraph, VertexId};
+use crate::util::Timer;
+
+use super::App;
+
+/// An exploration plan for one pattern.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    /// pattern adjacency, remapped to the matching order
+    pub pat: AdjMat,
+    /// canonical bitmap of the pattern (report key)
+    pub canonical: u64,
+    /// symmetry-breaking constraints: match[a] < match[b]
+    pub less_than: Vec<(usize, usize)>,
+    /// for each position i >= 1: an earlier neighbor position to draw
+    /// candidates from
+    pub anchor: Vec<usize>,
+}
+
+impl Plan {
+    /// Build a plan: BFS-reorder the pattern so every position connects to
+    /// an earlier one, then derive symmetry-breaking constraints from the
+    /// automorphism group (first-moved-position rule).
+    pub fn build(pat: &AdjMat) -> Plan {
+        let k = pat.k;
+        debug_assert!(pat.is_connected());
+        // BFS order from position 0
+        let mut order = vec![0usize];
+        let mut seen = vec![false; k];
+        seen[0] = true;
+        let mut qi = 0;
+        while order.len() < k {
+            // prefer neighbors of the BFS frontier
+            let u = order[qi.min(order.len() - 1)];
+            let mut advanced = false;
+            for v in 0..k {
+                if !seen[v] && pat.has_edge(u, v) {
+                    seen[v] = true;
+                    order.push(v);
+                    advanced = true;
+                }
+            }
+            if !advanced {
+                qi += 1;
+            }
+        }
+        // remap pattern to matching order: new position i = order[i]
+        let mut inv = vec![0usize; k];
+        for (newp, &oldp) in order.iter().enumerate() {
+            inv[oldp] = newp;
+        }
+        let remapped = pat.permute(&inv);
+        // anchors: for each position, an earlier neighbor (exists by BFS)
+        let anchor = (0..k)
+            .map(|i| {
+                if i == 0 {
+                    0
+                } else {
+                    (0..i)
+                        .find(|&j| remapped.has_edge(j, i))
+                        .expect("BFS order guarantees an earlier neighbor")
+                }
+            })
+            .collect();
+        // symmetry breaking on the remapped pattern
+        let mut less_than = Vec::new();
+        for sigma in automorphisms(&remapped) {
+            if let Some(p) = (0..k).find(|&p| sigma[p] != p) {
+                let pair = (p.min(sigma[p]), p.max(sigma[p]));
+                if !less_than.contains(&pair) {
+                    less_than.push(pair);
+                }
+            }
+        }
+        Plan {
+            pat: remapped,
+            canonical: canonical_form(pat),
+            less_than,
+            anchor,
+        }
+    }
+
+    /// Count induced matches rooted at data vertex `v0` (position 0).
+    pub fn count_from(&self, g: &CsrGraph, v0: VertexId) -> u64 {
+        let mut matched = vec![VertexId::MAX; self.pat.k];
+        matched[0] = v0;
+        let mut acc = 0;
+        self.rec(g, 1, &mut matched, &mut acc);
+        acc
+    }
+
+    fn rec(&self, g: &CsrGraph, pos: usize, matched: &mut Vec<VertexId>, acc: &mut u64) {
+        if pos == self.pat.k {
+            *acc += 1;
+            return;
+        }
+        let anchor_v = matched[self.anchor[pos]];
+        'cand: for &c in g.neighbors(anchor_v) {
+            // distinctness
+            for &m in matched[..pos].iter() {
+                if m == c {
+                    continue 'cand;
+                }
+            }
+            // symmetry-breaking order constraints involving pos
+            for &(a, b) in &self.less_than {
+                if b == pos && matched[a] != VertexId::MAX && matched[a] >= c {
+                    continue 'cand;
+                }
+                if a == pos && matched[b] != VertexId::MAX && c >= matched[b] {
+                    continue 'cand;
+                }
+            }
+            // induced adjacency vs all earlier positions
+            for j in 0..pos {
+                let want = self.pat.has_edge(j, pos);
+                if g.has_edge(matched[j], c) != want {
+                    continue 'cand;
+                }
+            }
+            matched[pos] = c;
+            self.rec(g, pos + 1, matched, acc);
+            matched[pos] = VertexId::MAX;
+        }
+    }
+}
+
+pub struct Peregrine {
+    pub app: App,
+    pub k: usize,
+    pub threads: usize,
+    pub time_limit: Option<std::time::Duration>,
+}
+
+#[derive(Debug)]
+pub struct PeregrineReport {
+    pub count: u64,
+    pub patterns: Vec<(u64, u64)>,
+    pub plan_seconds: f64,
+    pub match_seconds: f64,
+    pub wall_seconds: f64,
+    pub num_plans: usize,
+    pub timed_out: bool,
+}
+
+impl Peregrine {
+    pub fn new(app: App, k: usize) -> Self {
+        Self {
+            app,
+            k,
+            threads: std::thread::available_parallelism().map_or(4, |n| n.get()),
+            time_limit: None,
+        }
+    }
+
+    /// Pattern set for the app. Motifs need every connected k-pattern,
+    /// which requires the k <= 7 dictionary (the paper notes pattern-aware
+    /// systems' plan space explodes beyond that).
+    fn plans(&self) -> Option<Vec<Plan>> {
+        match self.app {
+            App::Clique => {
+                let mut m = AdjMat::empty(self.k);
+                for a in 0..self.k {
+                    for b in (a + 1)..self.k {
+                        m.set_edge(a, b);
+                    }
+                }
+                Some(vec![Plan::build(&m)])
+            }
+            App::Motif => {
+                if self.k > crate::canon::CanonDict::MAX_DICT_K {
+                    return None; // plan space beyond practical envelope
+                }
+                Some(all_patterns(self.k).iter().map(Plan::build).collect())
+            }
+        }
+    }
+
+    pub fn run(&self, g: &CsrGraph) -> Option<PeregrineReport> {
+        let wall = Timer::start();
+        let plan_timer = Timer::start();
+        let plans = self.plans()?;
+        let plan_seconds = plan_timer.secs();
+
+        let deadline = self.time_limit.map(|d| std::time::Instant::now() + d);
+        let timed_out = AtomicBool::new(false);
+        let match_timer = Timer::start();
+        let n = g.num_vertices();
+        let per_pattern: Mutex<HashMap<u64, u64>> = Mutex::new(HashMap::new());
+        for plan in &plans {
+            let cursor = AtomicUsize::new(0);
+            let total = AtomicUsize::new(0);
+            std::thread::scope(|s| {
+                for _ in 0..self.threads.max(1) {
+                    let cursor = &cursor;
+                    let total = &total;
+                    let timed_out = &timed_out;
+                    s.spawn(move || {
+                        let mut local = 0u64;
+                        loop {
+                            if let Some(d) = deadline {
+                                if std::time::Instant::now() > d {
+                                    timed_out.store(true, Ordering::Relaxed);
+                                    break;
+                                }
+                            }
+                            let v = cursor.fetch_add(1, Ordering::Relaxed);
+                            if v >= n {
+                                break;
+                            }
+                            local += plan.count_from(g, v as u32);
+                        }
+                        total.fetch_add(local as usize, Ordering::Relaxed);
+                    });
+                }
+            });
+            let mut m = per_pattern.lock().unwrap();
+            *m.entry(plan.canonical).or_insert(0) += total.into_inner() as u64;
+            if timed_out.load(Ordering::Relaxed) {
+                break;
+            }
+        }
+        let match_seconds = match_timer.secs();
+
+        let mut patterns: Vec<(u64, u64)> = per_pattern
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .filter(|&(_, c)| c > 0)
+            .collect();
+        patterns.sort_unstable();
+        let count = patterns.iter().map(|&(_, c)| c).sum();
+        Some(PeregrineReport {
+            count,
+            patterns,
+            plan_seconds,
+            match_seconds,
+            wall_seconds: wall.secs(),
+            num_plans: plans.len(),
+            timed_out: timed_out.into_inner(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::{CliqueCount, MotifCount};
+    use crate::engine::{EngineConfig, Runner};
+    use crate::graph::generators;
+
+    fn engine_cfg() -> EngineConfig {
+        EngineConfig {
+            warps: 8,
+            threads: 2,
+            ..Default::default()
+        }
+    }
+
+    fn peregrine(app: App, k: usize) -> Peregrine {
+        let mut p = Peregrine::new(app, k);
+        p.threads = 4;
+        p
+    }
+
+    #[test]
+    fn clique_plan_counts_agree_with_engine() {
+        let g = generators::erdos_renyi(30, 0.35, 3);
+        for k in 3..=5 {
+            let p = peregrine(App::Clique, k).run(&g).unwrap();
+            let e = Runner::run(&g, &CliqueCount::new(k), &engine_cfg());
+            assert_eq!(p.count, e.count, "k={k}");
+        }
+    }
+
+    #[test]
+    fn motif_census_agrees_with_engine() {
+        for seed in 0..3 {
+            let g = generators::erdos_renyi(14, 0.35, seed);
+            for k in 3..=4 {
+                let p = peregrine(App::Motif, k).run(&g).unwrap();
+                let e = Runner::run(&g, &MotifCount::new(k), &engine_cfg());
+                let mut want = e.patterns.clone();
+                want.sort_unstable();
+                let want: Vec<(u64, u64)> =
+                    want.into_iter().filter(|&(_, c)| c > 0).collect();
+                assert_eq!(p.patterns, want, "seed={seed} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn plan_count_grows_with_k() {
+        let g = generators::cycle(6);
+        let p3 = peregrine(App::Motif, 3).run(&g).unwrap();
+        let p5 = peregrine(App::Motif, 5).run(&g).unwrap();
+        assert_eq!(p3.num_plans, 2);
+        assert_eq!(p5.num_plans, 21);
+    }
+
+    #[test]
+    fn motif_beyond_dict_unsupported() {
+        let g = generators::cycle(10);
+        assert!(peregrine(App::Motif, 8).run(&g).is_none());
+    }
+
+    #[test]
+    fn symmetry_breaking_counts_each_clique_once() {
+        // K5 has C(5,3) = 10 triangles; the triangle's 6 automorphisms
+        // must collapse to exactly one match each
+        let g = generators::complete(5);
+        let p = peregrine(App::Clique, 3).run(&g).unwrap();
+        assert_eq!(p.count, 10);
+    }
+
+    #[test]
+    fn wedge_plan_on_star() {
+        let g = generators::star(6);
+        let p = peregrine(App::Motif, 3).run(&g).unwrap();
+        assert_eq!(p.count, 15); // C(6,2) wedges, no triangles
+        assert_eq!(p.patterns.len(), 1);
+    }
+}

@@ -1,0 +1,212 @@
+//! Edge-bitmap encoding of small induced subgraphs (paper Fig 4a).
+//!
+//! Layout: the vertex at position `i >= 2` contributes `i` bits recording
+//! its edges to positions `0..i`; those bits start at offset
+//! `i*(i-1)/2 - 1`. Total bits for k vertices: `C(k,2) - 1`. The (0,1)
+//! edge is implicit (always present in a connected traversal).
+//!
+//! Example, k=4 (paper's 5-bit case): bits 0,1 = edges (0,2),(1,2);
+//! bits 2,3,4 = edges (0,3),(1,3),(2,3).
+
+/// Maximum subgraph size the engines support (paper mines up to 12).
+pub const MAX_K: usize = 12;
+
+/// Maximum k for *pattern* bitmaps in a u64: C(11,2)-1 = 54 bits.
+/// (k=12 is only reached by clique counting, which needs no relabeling.)
+pub const MAX_PATTERN_K: usize = 11;
+
+/// Number of bitmap bits for a k-vertex subgraph.
+#[inline]
+pub fn bits_for(k: usize) -> usize {
+    debug_assert!(k >= 2);
+    k * (k - 1) / 2 - 1
+}
+
+/// Bit offset where position `i`'s edge block starts (i >= 2).
+#[inline]
+pub fn level_offset(i: usize) -> usize {
+    debug_assert!(i >= 2);
+    i * (i - 1) / 2 - 1
+}
+
+/// The bit recording edge (position j, position i) with j < i, i >= 2.
+#[inline]
+pub fn edge_bit(j: usize, i: usize) -> u64 {
+    debug_assert!(j < i && i >= 2);
+    1u64 << (level_offset(i) + j)
+}
+
+/// Tiny adjacency matrix over traversal *positions* (not graph vertex ids);
+/// row `i` is a bitmask of positions adjacent to `i`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AdjMat {
+    pub rows: [u16; MAX_K],
+    pub k: usize,
+}
+
+impl AdjMat {
+    pub fn empty(k: usize) -> Self {
+        debug_assert!((2..=MAX_K).contains(&k));
+        Self {
+            rows: [0; MAX_K],
+            k,
+        }
+    }
+
+    #[inline]
+    pub fn set_edge(&mut self, a: usize, b: usize) {
+        debug_assert!(a != b && a < self.k && b < self.k);
+        self.rows[a] |= 1 << b;
+        self.rows[b] |= 1 << a;
+    }
+
+    #[inline]
+    pub fn has_edge(&self, a: usize, b: usize) -> bool {
+        (self.rows[a] >> b) & 1 == 1
+    }
+
+    #[inline]
+    pub fn degree(&self, a: usize) -> u32 {
+        self.rows[a].count_ones()
+    }
+
+    /// Encode to the traversal bitmap. Requires the (0,1) edge present.
+    pub fn encode(&self) -> u64 {
+        debug_assert!(self.has_edge(0, 1), "traversal bitmaps assume the (0,1) edge");
+        let mut bm = 0u64;
+        for i in 2..self.k {
+            for j in 0..i {
+                if self.has_edge(j, i) {
+                    bm |= edge_bit(j, i);
+                }
+            }
+        }
+        bm
+    }
+
+    /// Decode a traversal bitmap (the implicit (0,1) edge is restored).
+    pub fn decode(bitmap: u64, k: usize) -> Self {
+        debug_assert!(bitmap < (1u64 << bits_for(k)) || bits_for(k) == 64);
+        let mut m = AdjMat::empty(k);
+        m.set_edge(0, 1);
+        for i in 2..k {
+            for j in 0..i {
+                if bitmap & edge_bit(j, i) != 0 {
+                    m.set_edge(j, i);
+                }
+            }
+        }
+        m
+    }
+
+    /// Apply a position permutation: vertex at position p moves to
+    /// `perm[p]`. Returns the permuted matrix.
+    pub fn permute(&self, perm: &[usize]) -> Self {
+        let mut m = AdjMat::empty(self.k);
+        for a in 0..self.k {
+            for b in (a + 1)..self.k {
+                if self.has_edge(a, b) {
+                    m.set_edge(perm[a], perm[b]);
+                }
+            }
+        }
+        m
+    }
+
+    /// Connectivity over all k positions (BFS on the tiny matrix).
+    pub fn is_connected(&self) -> bool {
+        let mut seen: u16 = 1;
+        let mut frontier: u16 = 1;
+        while frontier != 0 {
+            let mut next: u16 = 0;
+            let mut f = frontier;
+            while f != 0 {
+                let v = f.trailing_zeros() as usize;
+                f &= f - 1;
+                next |= self.rows[v];
+            }
+            frontier = next & !seen;
+            seen |= next;
+        }
+        seen.count_ones() as usize >= self.k
+    }
+
+    /// Total number of edges.
+    pub fn num_edges(&self) -> usize {
+        (0..self.k).map(|i| self.degree(i) as usize).sum::<usize>() / 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bits_for_matches_paper() {
+        // paper: k=4 needs 5 bits
+        assert_eq!(bits_for(4), 5);
+        assert_eq!(bits_for(3), 2);
+        assert_eq!(bits_for(11), 54);
+    }
+
+    #[test]
+    fn edge_bit_layout_matches_paper_k4() {
+        // two least significant bits: edges of v2 to {v0, v1}
+        assert_eq!(edge_bit(0, 2), 1 << 0);
+        assert_eq!(edge_bit(1, 2), 1 << 1);
+        // next three bits: edges of v3 to {v0, v1, v2}
+        assert_eq!(edge_bit(0, 3), 1 << 2);
+        assert_eq!(edge_bit(1, 3), 1 << 3);
+        assert_eq!(edge_bit(2, 3), 1 << 4);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        for k in 2..=6 {
+            for bm in 0..(1u64 << bits_for(k)) {
+                let m = AdjMat::decode(bm, k);
+                assert_eq!(m.encode(), bm, "k={k} bm={bm}");
+            }
+        }
+    }
+
+    #[test]
+    fn triangle_is_connected_path_order_respected() {
+        let mut m = AdjMat::empty(3);
+        m.set_edge(0, 1);
+        m.set_edge(1, 2);
+        assert!(m.is_connected());
+        assert_eq!(m.num_edges(), 2);
+        m.set_edge(0, 2);
+        assert_eq!(m.encode(), 0b11);
+    }
+
+    #[test]
+    fn disconnected_detected() {
+        let mut m = AdjMat::empty(4);
+        m.set_edge(0, 1);
+        m.set_edge(2, 3);
+        assert!(!m.is_connected());
+    }
+
+    #[test]
+    fn permute_preserves_edge_count_and_structure() {
+        let mut m = AdjMat::empty(4);
+        m.set_edge(0, 1);
+        m.set_edge(1, 2);
+        m.set_edge(2, 3);
+        let p = m.permute(&[3, 2, 1, 0]);
+        assert_eq!(p.num_edges(), 3);
+        assert!(p.has_edge(3, 2) && p.has_edge(2, 1) && p.has_edge(1, 0));
+    }
+
+    #[test]
+    fn degrees() {
+        let mut m = AdjMat::empty(4);
+        m.set_edge(0, 1);
+        m.set_edge(0, 2);
+        m.set_edge(0, 3);
+        assert_eq!(m.degree(0), 3);
+        assert_eq!(m.degree(3), 1);
+    }
+}

@@ -1,0 +1,198 @@
+//! Precomputed canonical-relabeling dictionary (paper Fig 4, steps a->b->c).
+//!
+//! `table[bitmap]` gives the *contiguous* pattern id of every valid
+//! traversal bitmap, so the Aggregate phase is a single array lookup inside
+//! the "kernel" — the paper's headline claim of canonical relabeling on
+//! GPU. Built once per k by orbit enumeration: scan bitmaps in ascending
+//! order; the first unlabeled connected bitmap is a new canonical
+//! representative, and all encodings of its permutation orbit receive the
+//! same dense id. Complexity: O(#patterns * k! * k^2), comfortably fast
+//! for k <= 7 (853 patterns * 5040 perms at k=7).
+
+use super::bitmap::{bits_for, AdjMat};
+use super::canonical::for_each_permutation;
+
+const UNSET: u32 = u32::MAX;
+/// Public sentinel: bitmap does not correspond to a connected traversal.
+pub const INVALID: u32 = u32::MAX - 1;
+
+/// Dense bitmap -> pattern-id dictionary for one k.
+pub struct CanonDict {
+    k: usize,
+    table: Vec<u32>,
+    /// canonical representative bitmap per dense id
+    reps: Vec<u64>,
+}
+
+impl CanonDict {
+    /// Largest k for which the dense table is practical (2^20 entries).
+    pub const MAX_DICT_K: usize = 7;
+
+    pub fn build(k: usize) -> Self {
+        assert!((2..=Self::MAX_DICT_K).contains(&k), "dict supports k in 2..=7");
+        let nbits = bits_for(k);
+        let mut table = vec![UNSET; 1usize << nbits];
+        let mut reps = Vec::new();
+        for bm in 0..(1u64 << nbits) {
+            if table[bm as usize] != UNSET {
+                continue;
+            }
+            let m = AdjMat::decode(bm, k);
+            if !m.is_connected() {
+                table[bm as usize] = INVALID;
+                continue;
+            }
+            // bm is the smallest bitmap of a fresh orbit => canonical rep
+            let id = reps.len() as u32;
+            reps.push(bm);
+            for_each_permutation(k, |perm| {
+                let p = m.permute(perm);
+                if p.has_edge(0, 1) {
+                    let enc = p.encode() as usize;
+                    debug_assert!(table[enc] == UNSET || table[enc] == id);
+                    table[enc] = id;
+                }
+            });
+        }
+        Self { k, table, reps }
+    }
+
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Number of distinct patterns (connected canonical representatives).
+    pub fn num_patterns(&self) -> usize {
+        self.reps.len()
+    }
+
+    /// Dense id for a traversal bitmap; `INVALID` if disconnected.
+    #[inline]
+    pub fn pattern_id(&self, bitmap: u64) -> u32 {
+        self.table[bitmap as usize]
+    }
+
+    /// Canonical representative bitmap of a dense id.
+    pub fn representative(&self, id: u32) -> u64 {
+        self.reps[id as usize]
+    }
+
+    /// Serialize to the paper's "input file" form (`k`, then one rep per
+    /// line; the table is rebuilt on load).
+    pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        use std::io::Write;
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(f, "k={}", self.k)?;
+        for rep in &self.reps {
+            writeln!(f, "{rep}")?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let mut lines = text.lines();
+        let header = lines.next().ok_or_else(|| anyhow::anyhow!("empty dict file"))?;
+        let k: usize = header
+            .strip_prefix("k=")
+            .ok_or_else(|| anyhow::anyhow!("bad dict header"))?
+            .parse()?;
+        let dict = Self::build(k);
+        // verify representatives agree with the freshly built table
+        let reps: Vec<u64> = lines.map(|l| l.parse()).collect::<Result<_, _>>()?;
+        anyhow::ensure!(reps == dict.reps, "dict file disagrees with builder");
+        Ok(dict)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::canon::canonical::canonical_form;
+    use crate::util::proptest::{check_default, Config};
+
+    #[test]
+    fn known_pattern_counts() {
+        // Numbers of connected graphs on n unlabeled vertices (OEIS A001349):
+        // n=2: 1, n=3: 2, n=4: 6, n=5: 21, n=6: 112
+        assert_eq!(CanonDict::build(2).num_patterns(), 1);
+        assert_eq!(CanonDict::build(3).num_patterns(), 2);
+        assert_eq!(CanonDict::build(4).num_patterns(), 6);
+        assert_eq!(CanonDict::build(5).num_patterns(), 21);
+        assert_eq!(CanonDict::build(6).num_patterns(), 112);
+    }
+
+    #[test]
+    fn representative_maps_to_own_id() {
+        let d = CanonDict::build(4);
+        for id in 0..d.num_patterns() as u32 {
+            assert_eq!(d.pattern_id(d.representative(id)), id);
+        }
+    }
+
+    #[test]
+    fn disconnected_bitmaps_invalid() {
+        let d = CanonDict::build(4);
+        // bitmap 0: only the implicit (0,1) edge; v2, v3 isolated
+        assert_eq!(d.pattern_id(0), INVALID);
+    }
+
+    #[test]
+    fn ids_agree_with_canonical_form() {
+        let d = CanonDict::build(5);
+        crate::util::proptest::check(
+            Config { cases: 300, ..Default::default() },
+            "dict id == id of canonical form",
+            |rng| {
+                let bm = rng.below(1 << bits_for(5));
+                let m = AdjMat::decode(bm, 5);
+                if !m.is_connected() {
+                    crate::prop_assert_eq!(d.pattern_id(bm), INVALID, "disconnected must be INVALID");
+                    return Ok(());
+                }
+                let canon = canonical_form(&m);
+                crate::prop_assert_eq!(
+                    d.pattern_id(bm),
+                    d.pattern_id(canon),
+                    "bitmap {bm} vs canonical {canon}"
+                );
+                crate::prop_assert_eq!(d.representative(d.pattern_id(bm)), canon, "rep mismatch");
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn permutation_invariance_property() {
+        let d = CanonDict::build(4);
+        check_default("permuting a traversal keeps its pattern id", |rng| {
+            let bm = rng.below(1 << bits_for(4));
+            let m = AdjMat::decode(bm, 4);
+            if !m.is_connected() {
+                return Ok(());
+            }
+            let id = d.pattern_id(bm);
+            let mut fails = Vec::new();
+            for_each_permutation(4, |perm| {
+                let p = m.permute(perm);
+                if p.has_edge(0, 1) && d.pattern_id(p.encode()) != id {
+                    fails.push(perm.to_vec());
+                }
+            });
+            crate::prop_assert!(fails.is_empty(), "perms {fails:?} changed id of {bm}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join("dumato_dict_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("k4.dict");
+        let d = CanonDict::build(4);
+        d.save(&p).unwrap();
+        let l = CanonDict::load(&p).unwrap();
+        assert_eq!(l.num_patterns(), d.num_patterns());
+    }
+}

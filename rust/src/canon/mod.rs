@@ -1,0 +1,27 @@
+//! Canonical relabeling (paper §IV-C4, Fig 4).
+//!
+//! A k-vertex traversal's induced edges are packed into a bitmap of
+//! `C(k,2) - 1` bits — the v0–v1 edge is implicit because traversals are
+//! connected and tr[1] is always a neighbor of tr[0]. The bitmap is mapped
+//! to a *contiguous* canonical pattern id so per-warp pattern counters
+//! waste no memory:
+//!
+//! ```text
+//! (a) traversal edges  ->  (b) canonical representative  ->  (c) dense id
+//! ```
+//!
+//! For k <= 7 the full map is a precomputed array (`CanonDict`) — the
+//! "dictionary provided as an input file" of the paper, built by orbit
+//! enumeration. For k >= 8 the table would exceed memory (2^27 entries at
+//! k=8), so a memoized canonicalizer (`CanonCache`) computes forms on
+//! demand with degree-class pruning.
+
+pub mod bitmap;
+pub mod cache;
+pub mod canonical;
+pub mod dict;
+pub mod patterns;
+
+pub use bitmap::{bits_for, edge_bit, AdjMat, MAX_K, MAX_PATTERN_K};
+pub use cache::CanonCache;
+pub use dict::CanonDict;

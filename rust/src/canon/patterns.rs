@@ -1,0 +1,147 @@
+//! Pattern utilities: human names for small motifs, automorphism counts,
+//! and enumeration of all k-vertex patterns (consumed by the
+//! Peregrine-like pattern-aware baseline to build its exploration plans).
+
+use super::bitmap::{bits_for, AdjMat};
+use super::canonical::for_each_permutation;
+use super::dict::{CanonDict, INVALID};
+
+/// Human-readable name for tiny canonical representatives (reports).
+pub fn pattern_name(k: usize, canonical_bitmap: u64) -> String {
+    let m = AdjMat::decode(canonical_bitmap, k);
+    let e = m.num_edges();
+    let max_e = k * (k - 1) / 2;
+    if e == max_e {
+        return format!("{k}-clique");
+    }
+    match (k, e) {
+        (3, 2) => "wedge".into(),
+        (4, 3) => {
+            if (0..4).any(|v| m.degree(v) == 3) {
+                "3-star".into()
+            } else {
+                "4-path".into()
+            }
+        }
+        (4, 4) => {
+            if (0..4).all(|v| m.degree(v) == 2) {
+                "4-cycle".into()
+            } else {
+                "tailed-triangle".into()
+            }
+        }
+        (4, 5) => "diamond".into(),
+        _ => format!("k{k}-e{e}-{canonical_bitmap:#x}"),
+    }
+}
+
+/// Number of automorphisms of the pattern (permutations mapping the graph
+/// to itself). Used by the pattern-aware baseline's symmetry breaking.
+pub fn automorphism_count(m: &AdjMat) -> usize {
+    let mut count = 0;
+    for_each_permutation(m.k, |perm| {
+        if m.permute(perm) == *m {
+            count += 1;
+        }
+    });
+    count
+}
+
+/// All automorphisms as explicit permutations.
+pub fn automorphisms(m: &AdjMat) -> Vec<Vec<usize>> {
+    let mut autos = Vec::new();
+    for_each_permutation(m.k, |perm| {
+        if m.permute(perm) == *m {
+            autos.push(perm.to_vec());
+        }
+    });
+    autos
+}
+
+/// Enumerate every connected k-vertex pattern as its canonical AdjMat
+/// (k <= CanonDict::MAX_DICT_K; the baseline only plans small patterns,
+/// matching Peregrine's practical envelope the paper describes).
+pub fn all_patterns(k: usize) -> Vec<AdjMat> {
+    let dict = CanonDict::build(k);
+    (0..dict.num_patterns() as u32)
+        .map(|id| AdjMat::decode(dict.representative(id), k))
+        .collect()
+}
+
+/// Check a bitmap is a valid connected traversal encoding.
+pub fn is_valid_traversal_bitmap(k: usize, bitmap: u64) -> bool {
+    if bits_for(k) < 64 && bitmap >= (1u64 << bits_for(k)) {
+        return false;
+    }
+    AdjMat::decode(bitmap, k).is_connected()
+}
+
+/// Dense-id -> name table for a dict (report rendering).
+pub fn pattern_names(dict: &CanonDict) -> Vec<String> {
+    (0..dict.num_patterns() as u32)
+        .map(|id| pattern_name(dict.k(), dict.representative(id)))
+        .collect()
+}
+
+/// INVALID re-export for callers matching on pattern_id results.
+pub const INVALID_PATTERN: u32 = INVALID;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_for_3_motifs() {
+        let d = CanonDict::build(3);
+        let names = pattern_names(&d);
+        assert_eq!(names.len(), 2);
+        assert!(names.contains(&"wedge".to_string()));
+        assert!(names.contains(&"3-clique".to_string()));
+    }
+
+    #[test]
+    fn names_for_4_motifs() {
+        let d = CanonDict::build(4);
+        let names = pattern_names(&d);
+        assert_eq!(names.len(), 6);
+        for expected in ["4-path", "3-star", "4-cycle", "tailed-triangle", "diamond", "4-clique"] {
+            assert!(names.contains(&expected.to_string()), "missing {expected}");
+        }
+    }
+
+    #[test]
+    fn automorphisms_of_known_graphs() {
+        // triangle: all 3! = 6 permutations
+        let mut tri = AdjMat::empty(3);
+        tri.set_edge(0, 1);
+        tri.set_edge(1, 2);
+        tri.set_edge(0, 2);
+        assert_eq!(automorphism_count(&tri), 6);
+        // wedge (path on 3): swap endpoints = 2
+        let mut w = AdjMat::empty(3);
+        w.set_edge(0, 1);
+        w.set_edge(1, 2);
+        assert_eq!(automorphism_count(&w), 2);
+        // 4-cycle: dihedral group D4 = 8
+        let mut c4 = AdjMat::empty(4);
+        c4.set_edge(0, 1);
+        c4.set_edge(1, 2);
+        c4.set_edge(2, 3);
+        c4.set_edge(0, 3);
+        assert_eq!(automorphism_count(&c4), 8);
+    }
+
+    #[test]
+    fn all_patterns_counts() {
+        assert_eq!(all_patterns(3).len(), 2);
+        assert_eq!(all_patterns(4).len(), 6);
+        assert_eq!(all_patterns(5).len(), 21);
+    }
+
+    #[test]
+    fn valid_traversal_bitmap_checks() {
+        assert!(is_valid_traversal_bitmap(3, 0b01));
+        assert!(!is_valid_traversal_bitmap(4, 0)); // v2, v3 isolated
+        assert!(!is_valid_traversal_bitmap(3, 0b100)); // out of range
+    }
+}

@@ -1,0 +1,117 @@
+//! Minimal CLI argument parser (the `clap` crate is not vendored offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positionals.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positionals: Vec<String>,
+    options: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw args (without argv[0]). `flag_names` lists boolean flags
+    /// (no value); everything else starting with `--` takes a value.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, flag_names: &[&str]) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&key) {
+                    args.flags.push(key.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| anyhow!("option --{key} expects a value"))?;
+                    args.options.insert(key.to_string(), v);
+                }
+            } else {
+                args.positionals.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("bad value '{v}' for --{name}")),
+        }
+    }
+
+    pub fn require(&self, name: &str) -> Result<&str> {
+        self.get(name)
+            .ok_or_else(|| anyhow!("missing required option --{name}"))
+    }
+
+    pub fn expect_positionals(&self, n: usize, usage: &str) -> Result<()> {
+        if self.positionals.len() != n {
+            bail!("expected {n} positional argument(s); usage: {usage}");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str], flags: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()), flags).unwrap()
+    }
+
+    #[test]
+    fn parses_mixed_styles() {
+        let a = parse(
+            &["clique", "--k", "5", "--dataset=mico", "--lb", "rest"],
+            &["lb"],
+        );
+        assert_eq!(a.positionals, vec!["clique", "rest"]);
+        assert_eq!(a.get("k"), Some("5"));
+        assert_eq!(a.get("dataset"), Some("mico"));
+        assert!(a.flag("lb"));
+        assert!(!a.flag("other"));
+    }
+
+    #[test]
+    fn typed_access_with_default() {
+        let a = parse(&["--k", "7"], &[]);
+        assert_eq!(a.parse_or("k", 3usize).unwrap(), 7);
+        assert_eq!(a.parse_or("scale", 1.0f64).unwrap(), 1.0);
+        assert!(a.parse_or::<usize>("k", 0).is_ok());
+        let b = parse(&["--k", "x"], &[]);
+        assert!(b.parse_or::<usize>("k", 0).is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        let r = Args::parse(["--k".to_string()].into_iter(), &[]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn require_reports_missing() {
+        let a = parse(&[], &[]);
+        assert!(a.require("dataset").is_err());
+    }
+}

@@ -1,0 +1,127 @@
+//! Run configuration shared by the CLI, examples, and benches: dataset
+//! resolution (generator name or file path) and engine settings from
+//! parsed arguments / environment.
+
+use std::path::Path;
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::balance::LbConfig;
+use crate::cli::Args;
+use crate::engine::EngineConfig;
+use crate::graph::{generators, loaders, CsrGraph};
+
+/// Resolve a dataset: a Table III stand-in name (citeseer/astroph/mico/
+/// dblp/livejournal), a fixture (`complete:16`, `cycle:30`, `star:64`,
+/// `grid:4x5`, `er:100,0.1`, `ba:500,3`), or a path to an edge list.
+pub fn load_graph(spec: &str, scale: f64, seed: u64) -> Result<CsrGraph> {
+    if let Some(g) = generators::dataset(spec, scale, seed) {
+        return Ok(g);
+    }
+    if let Some((kind, params)) = spec.split_once(':') {
+        return fixture(kind, params, seed);
+    }
+    if Path::new(spec).exists() {
+        return loaders::load(Path::new(spec));
+    }
+    Err(anyhow!(
+        "unknown dataset '{spec}' (not a stand-in name, fixture, or file)"
+    ))
+}
+
+fn fixture(kind: &str, params: &str, seed: u64) -> Result<CsrGraph> {
+    let bad = || anyhow!("bad fixture params '{params}' for '{kind}'");
+    match kind {
+        "complete" => Ok(generators::complete(params.parse().map_err(|_| bad())?)),
+        "cycle" => Ok(generators::cycle(params.parse().map_err(|_| bad())?)),
+        "star" => Ok(generators::star(params.parse().map_err(|_| bad())?)),
+        "grid" => {
+            let (r, c) = params.split_once('x').ok_or_else(bad)?;
+            Ok(generators::grid(
+                r.parse().map_err(|_| bad())?,
+                c.parse().map_err(|_| bad())?,
+            ))
+        }
+        "er" => {
+            let (n, p) = params.split_once(',').ok_or_else(bad)?;
+            Ok(generators::erdos_renyi(
+                n.parse().map_err(|_| bad())?,
+                p.parse().map_err(|_| bad())?,
+                seed,
+            ))
+        }
+        "ba" => {
+            let (n, m) = params.split_once(',').ok_or_else(bad)?;
+            Ok(generators::barabasi_albert(
+                n.parse().map_err(|_| bad())?,
+                m.parse().map_err(|_| bad())?,
+                seed,
+            ))
+        }
+        _ => Err(anyhow!("unknown fixture kind '{kind}'")),
+    }
+}
+
+/// Build an `EngineConfig` from CLI args:
+/// `--warps N --threads N --lb --lb-threshold F --timeout SECS`.
+pub fn engine_config(args: &Args, default_lb_threshold: f64) -> Result<EngineConfig> {
+    let mut cfg = EngineConfig {
+        warps: args.parse_or("warps", 1024usize)?,
+        threads: args.parse_or(
+            "threads",
+            std::thread::available_parallelism().map_or(4, |n| n.get()),
+        )?,
+        ..Default::default()
+    };
+    if args.flag("lb") {
+        let threshold = args.parse_or("lb-threshold", default_lb_threshold)?;
+        cfg.lb = Some(LbConfig::default().with_threshold(threshold));
+    }
+    let timeout: f64 = args.parse_or("timeout", 0.0)?;
+    if timeout > 0.0 {
+        cfg.time_limit = Some(Duration::from_secs_f64(timeout));
+    }
+    Ok(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()), &["lb"]).unwrap()
+    }
+
+    #[test]
+    fn loads_named_datasets_scaled() {
+        let g = load_graph("citeseer", 0.1, 1).unwrap();
+        assert!(g.num_vertices() > 100);
+    }
+
+    #[test]
+    fn loads_fixtures() {
+        assert_eq!(load_graph("complete:6", 1.0, 1).unwrap().num_edges(), 15);
+        assert_eq!(load_graph("grid:3x4", 1.0, 1).unwrap().num_vertices(), 12);
+        assert!(load_graph("er:50,0.2", 1.0, 7).unwrap().num_edges() > 0);
+        assert!(load_graph("ba:100,2", 1.0, 7).unwrap().num_edges() >= 190);
+    }
+
+    #[test]
+    fn rejects_unknown() {
+        assert!(load_graph("not-a-thing", 1.0, 1).is_err());
+        assert!(load_graph("grid:bad", 1.0, 1).is_err());
+    }
+
+    #[test]
+    fn engine_config_from_args() {
+        let cfg = engine_config(&args(&["--warps", "64", "--lb", "--timeout", "2.5"]), 0.4).unwrap();
+        assert_eq!(cfg.warps, 64);
+        assert!(cfg.lb.is_some());
+        assert_eq!(cfg.lb.unwrap().threshold, 0.4);
+        assert_eq!(cfg.time_limit, Some(Duration::from_secs_f64(2.5)));
+        let cfg2 = engine_config(&args(&[]), 0.4).unwrap();
+        assert!(cfg2.lb.is_none());
+        assert!(cfg2.time_limit.is_none());
+    }
+}

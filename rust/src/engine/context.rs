@@ -1,0 +1,582 @@
+//! `WarpContext` — the Table II programming interface, executed by one
+//! virtual warp with vGPU cost accounting.
+//!
+//! Phase implementations follow the paper's algorithms:
+//! - `control`  (Alg. — termination / next-traversal pull)   [CT]
+//! - `move_`    (Alg 1 — DFS step forward/backward)          [MV]
+//! - `extend`   (Alg 2 — BFS step, warp-centric)             [EX]
+//! - `filter`   (Alg 3 — property-based invalidation)        [FL]
+//! - `compact`  (ballot/prefix-sum compaction)               [CP]
+//! - `aggregate_counter` / `aggregate_pattern` / `aggregate_store`
+//!   ([A1] / [A2] / [A3])
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::Ordering;
+
+use crate::graph::{CsrGraph, VertexId};
+use crate::vgpu::{WarpProfiler, WARP_SIZE};
+
+use super::runner::SharedRun;
+use super::te::{Te, INVALID_V};
+use super::Seed;
+
+/// Per-thread scratch: an epoch-stamped membership array over vertex ids,
+/// used by Extend for dedup/traversal-exclusion in O(1) per candidate.
+/// (On the GPU this is the lockstep broadcast scan of Alg 2; the cost
+/// model charges that scan, the CPU implementation just runs faster.)
+pub struct ThreadScratch {
+    stamps: Vec<u32>,
+    epoch: u32,
+    /// Per-vertex adjacency bitmask vs the *marked* traversal: bit `j` set
+    /// iff the vertex is a neighbor of `marked[j]`. Lazily maintained —
+    /// `ensure_marked` only rewrites the bits when the traversal changed —
+    /// turning the per-subgraph `has_edge` bisects of the canonical filter
+    /// and Aggregate phases into O(1) lookups (§Perf optimizations 1 & 3).
+    adj_bits: Vec<u16>,
+    marked: Vec<VertexId>,
+}
+
+impl ThreadScratch {
+    pub fn new(num_vertices: usize) -> Self {
+        Self {
+            stamps: vec![0; num_vertices],
+            epoch: 0,
+            adj_bits: vec![0; num_vertices],
+            marked: Vec::new(),
+        }
+    }
+
+    /// Make `adj_bits` describe `te`'s traversal, unmarking a previously
+    /// marked traversal only when it differs (lazy double-use: the
+    /// canonical filter and the Aggregate phase of the same node share one
+    /// mark pass).
+    fn ensure_marked(&mut self, g: &CsrGraph, te: &Te) {
+        if self.marked.len() == te.len()
+            && self.marked.iter().zip(te.traversal()).all(|(a, b)| a == b)
+        {
+            return;
+        }
+        for (j, &v) in self.marked.iter().enumerate() {
+            let clear = !(1u16 << j);
+            for &u in g.neighbors(v) {
+                self.adj_bits[u as usize] &= clear;
+            }
+        }
+        self.marked.clear();
+        self.marked.extend_from_slice(te.traversal());
+        for (j, &v) in self.marked.iter().enumerate() {
+            let bit = 1u16 << j;
+            for &u in g.neighbors(v) {
+                self.adj_bits[u as usize] |= bit;
+            }
+        }
+    }
+
+    #[inline]
+    fn begin(&mut self) {
+        self.epoch = self.epoch.wrapping_add(1);
+        if self.epoch == 0 {
+            self.stamps.fill(0);
+            self.epoch = 1;
+        }
+    }
+
+    #[inline]
+    fn mark(&mut self, v: VertexId) {
+        self.stamps[v as usize] = self.epoch;
+    }
+
+    #[inline]
+    fn seen(&self, v: VertexId) -> bool {
+        self.stamps[v as usize] == self.epoch
+    }
+}
+
+/// Subgraph emitted by `aggregate_store` (paper [A3]): the traversal's
+/// vertices plus the connectivity bitmap.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StoredSubgraph {
+    pub vertices: Vec<VertexId>,
+    pub edges_bitmap: u64,
+}
+
+/// Per-warp aggregation state, merged by the runner after the run.
+#[derive(Debug, Default)]
+pub struct Aggregators {
+    /// [A1] subgraph counter.
+    pub count: u64,
+    /// [A2] per-pattern counters, dense ids (k <= 7, dict in SharedRun).
+    pub pattern_dense: Vec<u64>,
+    /// [A2] raw-bitmap counters (k >= 8; canonicalized at reduction).
+    pub pattern_raw: HashMap<u64, u64>,
+    /// [A3] stored subgraphs.
+    pub stored: Vec<StoredSubgraph>,
+}
+
+/// The warp execution context handed to `GpmAlgorithm::run`.
+pub struct WarpContext<'a> {
+    pub g: &'a CsrGraph,
+    pub te: &'a mut Te,
+    pub queue: &'a mut VecDeque<Seed>,
+    pub prof: &'a mut WarpProfiler,
+    pub agg: &'a mut Aggregators,
+    pub shared: &'a SharedRun,
+    pub scratch: &'a mut ThreadScratch,
+    /// Segment-cycle ceiling for this scheduling round (quantum). The
+    /// runner round-robins warps in quanta so all warps of a segment
+    /// progress quasi-concurrently, as they would on the GPU; `INFINITY`
+    /// disables preemption (unit tests).
+    pub quantum_limit: f64,
+}
+
+impl<'a> WarpContext<'a> {
+    // ------------------------------------------------------------------
+    // [CT] Control: keep the workflow alive while traversals remain.
+    // ------------------------------------------------------------------
+    pub fn control(&mut self) -> bool {
+        self.prof.sisd();
+        if self.shared.stop.load(Ordering::Relaxed) {
+            // LB stop: TE is at a phase boundary => consistent checkpoint.
+            return false;
+        }
+        if self.prof.segment_cycles(&self.shared.cost) > self.quantum_limit {
+            return false; // quantum expired: yield, resume next round
+        }
+        if self.te.is_empty() {
+            match self.queue.pop_front() {
+                Some(seed) => {
+                    self.te.init_from_seed(&seed, self.g, self.shared.genedges);
+                    self.prof.simd(seed.len());
+                    true
+                }
+                None => false, // warp drained
+            }
+        } else {
+            true
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // [MV] Move (paper Alg 1): DFS step forward/backward.
+    // ------------------------------------------------------------------
+    pub fn move_(&mut self, genedges: bool) {
+        self.prof.sisd(); // read extensions array head
+        let k = self.te.k();
+        if self.te.len() < k - 1 {
+            self.prof.sisd(); // branch test
+            if let Some(e) = self.te.cur_ext().pop_valid() {
+                self.prof.sisd(); // pop + tr write
+                self.te.push_vertex(e, self.g, genedges);
+                if genedges {
+                    // induce(): SIMD broadcast compare over the prefix
+                    self.prof.simd(self.te.len());
+                    self.prof.gld_raw(self.te.len() as u64 - 1);
+                }
+                return;
+            }
+        }
+        // backward (exhausted level, or traversal reached k-1)
+        self.prof.sisd();
+        self.te.pop_vertex();
+    }
+
+    // ------------------------------------------------------------------
+    // [EX] Extend (paper Alg 2): warp-centric BFS step.
+    //
+    // Generates the current level's extensions from the adjacency of
+    // tr[start..end]. Candidates already in the traversal or already
+    // generated are rejected. All reads of an adjacency list are
+    // coalesced 32-word warp loads; the traversal/extension membership
+    // scans are lockstep broadcasts charged to the instruction counter.
+    // Returns true when extensions were (newly) generated.
+    // ------------------------------------------------------------------
+    pub fn extend(&mut self, start: usize, end: usize) -> bool {
+        debug_assert!(start < end && end <= self.te.len());
+        self.prof.sisd(); // fetch level + generated test (Alg 2 line 2-3)
+        if self.te.cur_ext_ref().generated {
+            return false;
+        }
+        let len = self.te.len();
+        self.scratch.begin();
+        for p in 0..len {
+            self.scratch.mark(self.te.vertex(p));
+        }
+        let level = len - 1;
+        // Single-source extends (cliques) read one sorted adjacency list:
+        // candidates are unique, so the in-extensions lockstep scan of
+        // Alg 2 line 7 is skipped (and not charged).
+        let multi_source = end - start > 1;
+        let mut out: Vec<VertexId> = std::mem::take(&mut self.te.ext_at(level).items);
+        out.clear();
+        for pos in start..end {
+            let v = self.te.vertex(pos);
+            self.prof.sisd(); // broadcast vertex id (Alg 2 line 4)
+            let adj = self.g.neighbors(v);
+            let mut offset = 0usize;
+            while offset < adj.len() {
+                let chunk = &adj[offset..adj.len().min(offset + WARP_SIZE)];
+                // coalesced adjacency read (line 5)
+                self.prof
+                    .gld_contiguous(self.g.adj_address(v, offset), chunk.len());
+                // lockstep membership scans (lines 6-7): one broadcast
+                // compare per traversal vertex and per existing extension
+                self.prof.simd_n(len as u64);
+                if multi_source {
+                    self.prof.simd_n((out.len() as u64).max(1));
+                }
+                // select + coalesced write (lines 8-9)
+                self.prof.simd(chunk.len());
+                for &e in chunk {
+                    if !self.scratch.seen(e) {
+                        self.scratch.mark(e);
+                        out.push(e);
+                    }
+                }
+                offset += WARP_SIZE;
+            }
+        }
+        let lvl = self.te.ext_at(level);
+        lvl.items = out;
+        lvl.generated = true;
+        self.prof.sisd(); // return flag
+        true
+    }
+
+    // ------------------------------------------------------------------
+    // [FL] Filter (paper Alg 3): invalidate extensions violating `keep`.
+    //
+    // `cost = (insts_per_chunk, probes_per_chunk)`: instructions are
+    // lockstep (one broadcast compare serves all 32 lanes). Filter probes
+    // repeatedly bisect the *same* traversal's adjacency lists across
+    // consecutive chunks — those lines are cache-hot, so a probe costs
+    // one transaction per chunk (vs. the cold per-lane probes of
+    // Aggregate; see EXPERIMENTS.md §Table V for the calibration).
+    // ------------------------------------------------------------------
+    pub fn filter<F>(&mut self, cost: (u64, u64), keep: F)
+    where
+        F: Fn(&CsrGraph, &Te, VertexId) -> bool,
+    {
+        self.prof.sisd(); // fetch extensions array
+        let level = self.te.len() - 1;
+        let mut items = std::mem::take(&mut self.te.ext_at(level).items);
+        for chunk in items.chunks_mut(WARP_SIZE) {
+            // coalesced read of the chunk + property cost + write-back
+            self.prof.simd(chunk.len());
+            self.prof.simd_n(cost.0);
+            self.prof.gld_raw(cost.1);
+            for e in chunk.iter_mut() {
+                if *e != INVALID_V && !keep(self.g, self.te, *e) {
+                    *e = INVALID_V;
+                }
+            }
+        }
+        self.te.ext_at(level).items = items;
+    }
+
+    // ------------------------------------------------------------------
+    // [FL] filter_canonical: the canonical-candidate rule as a fused,
+    // optimized filter (§Perf optimization 2). Semantically identical to
+    // `filter(is_canonical_cost(te), is_canonical)` — asserted by tests —
+    // but the first-neighbor search is a trailing_zeros on the marked
+    // adjacency bitmask instead of per-candidate bisects. Charges the
+    // same vGPU cost as the generic path.
+    // ------------------------------------------------------------------
+    pub fn filter_canonical(&mut self) {
+        self.prof.sisd();
+        let len = self.te.len();
+        let level = len - 1;
+        self.scratch.ensure_marked(self.g, self.te);
+        let mut items = std::mem::take(&mut self.te.ext_at(level).items);
+        let v0 = self.te.vertex(0);
+        for chunk in items.chunks_mut(WARP_SIZE) {
+            self.prof.simd(chunk.len());
+            self.prof.simd_n(2 * len as u64);
+            self.prof.gld_raw(len as u64);
+            for e in chunk.iter_mut() {
+                if *e == INVALID_V {
+                    continue;
+                }
+                let keep = *e > v0 && {
+                    // extensions touch the traversal, so bits != 0
+                    let bits = self.scratch.adj_bits[*e as usize];
+                    let j = bits.trailing_zeros() as usize;
+                    ((j + 1)..len).all(|i| *e > self.te.vertex(i))
+                };
+                if !keep {
+                    *e = INVALID_V;
+                }
+            }
+        }
+        self.te.ext_at(level).items = items;
+    }
+
+    // ------------------------------------------------------------------
+    // [CP] Compact: drop invalidated slots (warp ballot + prefix sum).
+    // ------------------------------------------------------------------
+    pub fn compact(&mut self) {
+        self.prof.sisd();
+        let level = self.te.len() - 1;
+        let items = &mut self.te.ext_at(level).items;
+        // ballot + scan + scatter: ~3 lockstep steps per chunk
+        self.prof
+            .simd_n(3 * (items.len() as u64).div_ceil(WARP_SIZE as u64));
+        items.retain(|&e| e != INVALID_V);
+    }
+
+    // ------------------------------------------------------------------
+    // [A1] aggregate_counter: count valid extensions of a (k-1)-traversal.
+    // ------------------------------------------------------------------
+    pub fn aggregate_counter(&mut self) {
+        debug_assert_eq!(self.te.len(), self.te.k() - 1);
+        let lvl = self.te.cur_ext_ref();
+        self.prof
+            .simd_n((lvl.items.len() as u64).div_ceil(WARP_SIZE as u64).max(1));
+        self.agg.count += lvl.valid_count() as u64;
+    }
+
+    // ------------------------------------------------------------------
+    // [A2] aggregate_pattern: canonical relabeling per valid extension.
+    //
+    // For each valid last-level extension e, the k-vertex bitmap is the
+    // traversal's cumulative bitmap plus e's adjacency bits (computed here
+    // — the last vertex is never pushed). With the k <= 7 dictionary the
+    // dense pattern id is a single lookup (canonical relabeling on GPU,
+    // §IV-C4); otherwise raw bitmaps are counted and canonicalized in the
+    // CPU-side reduction.
+    // ------------------------------------------------------------------
+    pub fn aggregate_pattern(&mut self) {
+        debug_assert_eq!(self.te.len(), self.te.k() - 1);
+        let len = self.te.len();
+        let base = self.te.edges_bitmap();
+        let level = len - 1;
+        let items = std::mem::take(&mut self.te.ext_at(level).items);
+        // warp-parallel relabeling: 32 extensions per lockstep pass.
+        // Instructions are per-chunk (broadcast compares); the relabeling
+        // probes for 32 candidates against one prefix vertex's list
+        // partially coalesce; the chunk-level charge is the fitted
+        // mid-point (EXPERIMENTS.md §Table V).
+        let valid = items.iter().filter(|&&e| e != INVALID_V).count();
+        let chunks = (valid as u64).div_ceil(WARP_SIZE as u64);
+        self.prof.simd_n(chunks * (len as u64 + 1));
+        self.prof.gld_raw(chunks * (len as u64 + 1));
+        // O(1) adjacency probes: the extension's edge bits vs the whole
+        // traversal are one masked shift of its adj_bits entry
+        self.scratch.ensure_marked(self.g, self.te);
+        let shift = crate::canon::bitmap::level_offset(len);
+        let mask = (1u16 << len) - 1;
+        for &e in items.iter().filter(|&&e| e != INVALID_V) {
+            let bits = ((self.scratch.adj_bits[e as usize] & mask) as u64) << shift;
+            let bitmap = base | bits;
+            match &self.shared.dict {
+                Some(dict) => {
+                    let id = dict.pattern_id(bitmap);
+                    debug_assert_ne!(id, crate::canon::dict::INVALID);
+                    if self.agg.pattern_dense.len() <= id as usize {
+                        self.agg.pattern_dense.resize(dict.num_patterns(), 0);
+                    }
+                    self.agg.pattern_dense[id as usize] += 1;
+                }
+                None => {
+                    *self.agg.pattern_raw.entry(bitmap).or_insert(0) += 1;
+                }
+            }
+        }
+        self.te.ext_at(level).items = items;
+    }
+
+    // ------------------------------------------------------------------
+    // [A3] aggregate_store: buffer k-vertex subgraphs for downstream
+    // consumers (subgraph querying).
+    // ------------------------------------------------------------------
+    pub fn aggregate_store(&mut self) {
+        debug_assert_eq!(self.te.len(), self.te.k() - 1);
+        let len = self.te.len();
+        let base = self.te.edges_bitmap();
+        let level = len - 1;
+        let items = std::mem::take(&mut self.te.ext_at(level).items);
+        let valid = items.iter().filter(|&&e| e != INVALID_V).count();
+        let chunks = (valid as u64).div_ceil(WARP_SIZE as u64);
+        self.prof.simd_n(chunks * (len as u64 + 1));
+        self.prof.gld_raw(chunks * (len as u64 + 1));
+        self.scratch.ensure_marked(self.g, self.te);
+        let shift = crate::canon::bitmap::level_offset(len);
+        let mask = (1u16 << len) - 1;
+        for &e in items.iter().filter(|&&e| e != INVALID_V) {
+            let bits = ((self.scratch.adj_bits[e as usize] & mask) as u64) << shift;
+            let mut vertices = self.te.traversal().to_vec();
+            vertices.push(e);
+            self.agg.stored.push(StoredSubgraph {
+                vertices,
+                edges_bitmap: base | bits,
+            });
+        }
+        self.te.ext_at(level).items = items;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::runner::SharedRun;
+    use crate::graph::generators;
+
+    fn harness(g: &CsrGraph, k: usize) -> (Te, VecDeque<Seed>, WarpProfiler, Aggregators, SharedRun, ThreadScratch) {
+        (
+            Te::new(k),
+            VecDeque::new(),
+            WarpProfiler::new(),
+            Aggregators::default(),
+            SharedRun::new(k, false, None),
+            ThreadScratch::new(g.num_vertices()),
+        )
+    }
+
+    macro_rules! ctx {
+        ($g:expr, $h:expr) => {
+            WarpContext {
+                g: $g,
+                te: &mut $h.0,
+                queue: &mut $h.1,
+                prof: &mut $h.2,
+                agg: &mut $h.3,
+                shared: &$h.4,
+                scratch: &mut $h.5,
+                quantum_limit: f64::INFINITY,
+            }
+        };
+    }
+
+    #[test]
+    fn control_pulls_seed_then_drains() {
+        let g = generators::complete(5);
+        let mut h = harness(&g, 3);
+        h.1.push_back(vec![2]);
+        let mut c = ctx!(&g, h);
+        assert!(c.control());
+        assert_eq!(c.te.traversal(), &[2]);
+        c.te.pop_vertex();
+        assert!(!c.control()); // queue empty, te empty
+    }
+
+    #[test]
+    fn extend_excludes_traversal_and_dedups() {
+        let g = generators::complete(6);
+        let mut h = harness(&g, 4);
+        h.1.push_back(vec![0]);
+        let mut c = ctx!(&g, h);
+        assert!(c.control());
+        c.te.push_vertex(1, &g, false);
+        // union of N(0) and N(1) minus {0,1} = {2,3,4,5}
+        assert!(c.extend(0, 2));
+        let mut items = c.te.cur_ext_ref().items.clone();
+        items.sort_unstable();
+        assert_eq!(items, vec![2, 3, 4, 5]);
+        // second call: already generated
+        assert!(!c.extend(0, 2));
+    }
+
+    #[test]
+    fn extend_single_source_is_neighborhood() {
+        let g = generators::cycle(6);
+        let mut h = harness(&g, 3);
+        h.1.push_back(vec![2]);
+        let mut c = ctx!(&g, h);
+        assert!(c.control());
+        assert!(c.extend(0, 1));
+        let mut items = c.te.cur_ext_ref().items.clone();
+        items.sort_unstable();
+        assert_eq!(items, vec![1, 3]);
+    }
+
+    #[test]
+    fn filter_invalidates_and_compact_removes() {
+        let g = generators::complete(8);
+        let mut h = harness(&g, 4);
+        h.1.push_back(vec![3]);
+        let mut c = ctx!(&g, h);
+        assert!(c.control());
+        assert!(c.extend(0, 1));
+        c.filter((1, 0), |_, te, e| e > te.last_vertex());
+        let valid = c.te.cur_ext_ref().valid_count();
+        assert_eq!(valid, 4); // {4,5,6,7}
+        let before = c.te.cur_ext_ref().items.len();
+        assert_eq!(before, 7);
+        c.compact();
+        assert_eq!(c.te.cur_ext_ref().items.len(), 4);
+    }
+
+    #[test]
+    fn aggregate_counter_counts_valid() {
+        let g = generators::complete(5);
+        let mut h = harness(&g, 3);
+        h.1.push_back(vec![0]);
+        let mut c = ctx!(&g, h);
+        assert!(c.control());
+        c.te.push_vertex(1, &g, false);
+        assert!(c.extend(0, 1)); // N(0) \ {0,1} = {2,3,4}
+        c.aggregate_counter();
+        assert_eq!(c.agg.count, 3);
+    }
+
+    #[test]
+    fn move_descends_then_backtracks() {
+        let g = generators::complete(5);
+        let mut h = harness(&g, 4);
+        h.1.push_back(vec![0]);
+        let mut c = ctx!(&g, h);
+        assert!(c.control());
+        assert!(c.extend(0, 1));
+        let n_ext = c.te.cur_ext_ref().items.len();
+        assert_eq!(n_ext, 4);
+        c.move_(false); // forward
+        assert_eq!(c.te.len(), 2);
+        // exhaust: new level, no extensions generated -> mark empty
+        c.te.cur_ext().generated = true;
+        c.move_(false); // backward (empty ext at level 1)
+        assert_eq!(c.te.len(), 1);
+        assert_eq!(c.te.cur_ext_ref().items.len(), 3);
+    }
+
+    #[test]
+    fn aggregate_pattern_uses_dict() {
+        let g = generators::complete(4); // K4: all 3-subsets are triangles
+        let mut h = harness(&g, 3);
+        h.4 = SharedRun::new(3, true, Some(crate::canon::CanonDict::build(3)));
+        h.1.push_back(vec![0]);
+        let mut c = ctx!(&g, h);
+        assert!(c.control());
+        c.te.push_vertex(1, &g, true);
+        assert!(c.extend(0, 2)); // {2,3}
+        c.aggregate_pattern();
+        let dict = c.shared.dict.as_ref().unwrap();
+        let tri_id = dict.pattern_id(0b11);
+        assert_eq!(c.agg.pattern_dense[tri_id as usize], 2);
+    }
+
+    #[test]
+    fn aggregate_store_buffers_subgraphs() {
+        let g = generators::complete(4);
+        let mut h = harness(&g, 3);
+        h.1.push_back(vec![0]);
+        let mut c = ctx!(&g, h);
+        assert!(c.control());
+        c.te.push_vertex(1, &g, false);
+        assert!(c.extend(0, 2));
+        c.aggregate_store();
+        assert_eq!(c.agg.stored.len(), 2);
+        assert!(c.agg.stored.iter().all(|s| s.vertices.len() == 3));
+        assert!(c.agg.stored.iter().all(|s| s.edges_bitmap == 0b11));
+    }
+
+    #[test]
+    fn stop_flag_halts_control() {
+        let g = generators::complete(5);
+        let mut h = harness(&g, 3);
+        h.1.push_back(vec![0]);
+        h.4.stop.store(true, Ordering::Relaxed);
+        let mut c = ctx!(&g, h);
+        assert!(!c.control());
+        // seed still queued: checkpoint kept work
+        assert_eq!(c.queue.len(), 1);
+    }
+}

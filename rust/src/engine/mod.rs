@@ -1,0 +1,22 @@
+//! The DuMato engine: DFS-wide subgraph exploration executed by virtual
+//! warps (paper §IV).
+//!
+//! - `te.rs` — the Traversal Enumeration state (Fig 3): current traversal,
+//!   per-level extension arrays, induced-edge bitmaps.
+//! - `context.rs` — `WarpContext`, implementing the Table II primitives
+//!   (control / move / extend / filter / compact / aggregate_*) with
+//!   warp-centric cost accounting against the vGPU model.
+//! - `runner.rs` — the kernel-launch loop: warps dealt across OS threads,
+//!   segments separated by load-balancing stops, metric aggregation.
+
+pub mod context;
+pub mod runner;
+pub mod te;
+
+pub use context::{Aggregators, ThreadScratch, WarpContext};
+pub use runner::{EngineConfig, RunReport, Runner, SharedRun, WarpState};
+pub use te::{ExtLevel, Te, INVALID_V};
+
+/// A (possibly partial) traversal used as a unit of work: the initial
+/// seeds are single vertices; the load balancer migrates longer prefixes.
+pub type Seed = Vec<crate::graph::VertexId>;

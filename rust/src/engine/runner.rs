@@ -1,0 +1,393 @@
+//! The engine runner: virtual warps dealt across OS threads, executed in
+//! kernel-launch *segments* separated by load-balancing stops (paper Fig 5).
+//!
+//! Simulated GPU time is derived from the vGPU cost model per segment
+//! (max-warp critical path vs. aggregate throughput; DESIGN.md §2), which
+//! is what the Table IV / VI benches report; wall-clock is kept alongside.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
+
+use crate::api::GpmAlgorithm;
+use crate::balance::{redistribute, LbConfig};
+use crate::canon::cache::merge_pattern_counts;
+use crate::canon::CanonDict;
+use crate::graph::CsrGraph;
+use crate::util::Timer;
+use crate::vgpu::{CostModel, KernelMetrics, WarpProfiler};
+
+use super::context::{Aggregators, StoredSubgraph, ThreadScratch, WarpContext};
+use super::te::Te;
+use super::Seed;
+
+/// State shared (read-only or atomically) by all warps of a run.
+pub struct SharedRun {
+    pub k: usize,
+    pub genedges: bool,
+    pub stop: AtomicBool,
+    pub dict: Option<CanonDict>,
+    /// vGPU cost model (quantum accounting in `control`).
+    pub cost: CostModel,
+}
+
+impl SharedRun {
+    pub fn new(k: usize, genedges: bool, dict: Option<CanonDict>) -> Self {
+        Self {
+            k,
+            genedges,
+            stop: AtomicBool::new(false),
+            dict,
+            cost: CostModel::default(),
+        }
+    }
+}
+
+/// One virtual warp: its TE, work queue, profiler, and aggregators.
+pub struct WarpState {
+    pub id: usize,
+    pub te: Te,
+    pub queue: VecDeque<Seed>,
+    pub prof: WarpProfiler,
+    pub agg: Aggregators,
+    pub finished: bool,
+}
+
+impl WarpState {
+    pub fn new(id: usize, k: usize) -> Self {
+        Self {
+            id,
+            te: Te::new(k),
+            queue: VecDeque::new(),
+            prof: WarpProfiler::new(),
+            agg: Aggregators::default(),
+            finished: false,
+        }
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.te.is_empty() || !self.queue.is_empty()
+    }
+}
+
+/// Engine configuration (one Table IV/VI cell = one run).
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// Virtual warps (paper default: 172,032 threads / 32 = 5,376).
+    pub warps: usize,
+    /// OS threads executing the warps.
+    pub threads: usize,
+    /// Load balancing layer; `None` = DM_WC, `Some` = DM_OPT.
+    pub lb: Option<LbConfig>,
+    /// vGPU cost model for simulated time.
+    pub cost: CostModel,
+    /// Wall-clock budget; exceeded runs report `timed_out`.
+    pub time_limit: Option<Duration>,
+    /// Scheduling quantum in vGPU cycles: each warp runs at most this many
+    /// cycles per round before yielding, so all warps of a segment advance
+    /// quasi-concurrently (as they would on the device).
+    pub quantum_cycles: f64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self {
+            warps: 1024,
+            threads: std::thread::available_parallelism().map_or(4, |n| n.get()),
+            lb: None,
+            cost: CostModel::default(),
+            time_limit: None,
+            quantum_cycles: 2.0e6, // ~1.4 ms of device time per round
+        }
+    }
+}
+
+impl EngineConfig {
+    /// The paper's occupancy configuration (172,032 threads).
+    pub fn paper_scale() -> Self {
+        Self {
+            warps: crate::vgpu::PAPER_WARPS,
+            ..Default::default()
+        }
+    }
+
+    pub fn with_lb(mut self, lb: LbConfig) -> Self {
+        self.lb = Some(lb);
+        self
+    }
+}
+
+/// Result of one engine run.
+#[derive(Debug)]
+pub struct RunReport {
+    pub algorithm: String,
+    pub k: usize,
+    /// [A1] total.
+    pub count: u64,
+    /// [A2] merged (canonical bitmap, count), sorted by bitmap.
+    pub patterns: Vec<(u64, u64)>,
+    /// [A3] all stored subgraphs.
+    pub stored: Vec<StoredSubgraph>,
+    pub metrics: KernelMetrics,
+    pub timed_out: bool,
+}
+
+/// The engine entry point.
+pub struct Runner;
+
+impl Runner {
+    pub fn run<A: GpmAlgorithm>(g: &CsrGraph, algo: &A, cfg: &EngineConfig) -> RunReport {
+        let k = algo.k();
+        let dict = if algo.needs_dict() && k <= CanonDict::MAX_DICT_K {
+            Some(CanonDict::build(k))
+        } else {
+            None
+        };
+        let mut shared = SharedRun::new(k, algo.needs_edges(), dict);
+        shared.cost = cfg.cost;
+        let num_warps = cfg.warps.max(1);
+        let mut warps: Vec<WarpState> = (0..num_warps).map(|i| WarpState::new(i, k)).collect();
+        // Deal single-vertex seeds round-robin (paper: traversals start at
+        // every vertex; isolated vertices can't extend and are skipped).
+        for v in 0..g.num_vertices() {
+            if g.degree(v as u32) > 0 {
+                warps[v % num_warps].queue.push_back(vec![v as u32]);
+            }
+        }
+        for w in &mut warps {
+            if !w.has_work() {
+                w.finished = true;
+            }
+        }
+
+        let wall = Timer::start();
+        let deadline = cfg.time_limit.map(|d| Instant::now() + d);
+        let timed_out = AtomicBool::new(false);
+        let mut metrics = KernelMetrics {
+            warps: num_warps,
+            ..Default::default()
+        };
+        let finished_count =
+            AtomicUsize::new(warps.iter().filter(|w| w.finished).count());
+
+        loop {
+            shared.stop.store(false, Ordering::Relaxed);
+            let workers_done = AtomicUsize::new(0);
+            let nthreads = cfg.threads.clamp(1, num_warps);
+            let chunk = num_warps.div_ceil(nthreads);
+            std::thread::scope(|s| {
+                for slice in warps.chunks_mut(chunk) {
+                    let shared = &shared;
+                    let finished_count = &finished_count;
+                    let workers_done = &workers_done;
+                    let timed_out = &timed_out;
+                    let quantum = cfg.quantum_cycles;
+                    s.spawn(move || {
+                        let mut scratch = ThreadScratch::new(g.num_vertices());
+                        // Round-robin the slice in quanta so every warp of
+                        // the segment advances quasi-concurrently.
+                        'segment: loop {
+                            let mut any_unfinished = false;
+                            for warp in slice.iter_mut() {
+                                if shared.stop.load(Ordering::Relaxed) {
+                                    break 'segment;
+                                }
+                                if let Some(d) = deadline {
+                                    if Instant::now() > d {
+                                        timed_out.store(true, Ordering::Relaxed);
+                                        shared.stop.store(true, Ordering::Relaxed);
+                                        break 'segment;
+                                    }
+                                }
+                                if warp.finished {
+                                    continue;
+                                }
+                                let limit =
+                                    warp.prof.segment_cycles(&shared.cost) + quantum;
+                                let mut ctx = WarpContext {
+                                    g,
+                                    te: &mut warp.te,
+                                    queue: &mut warp.queue,
+                                    prof: &mut warp.prof,
+                                    agg: &mut warp.agg,
+                                    shared,
+                                    scratch: &mut scratch,
+                                    quantum_limit: limit,
+                                };
+                                algo.run(&mut ctx);
+                                if !warp.has_work() {
+                                    warp.finished = true;
+                                    finished_count.fetch_add(1, Ordering::Relaxed);
+                                } else {
+                                    any_unfinished = true;
+                                }
+                            }
+                            if !any_unfinished {
+                                break;
+                            }
+                        }
+                        workers_done.fetch_add(1, Ordering::Relaxed);
+                    });
+                }
+                // Monitor thread (the paper's CPU-side LB layer, Fig 5
+                // steps 1-3): poll warp activity, raise the stop flag when
+                // the active fraction drops below the threshold.
+                let lb = cfg.lb.as_ref();
+                let n_spawned = num_warps.div_ceil(chunk);
+                while workers_done.load(Ordering::Relaxed) < n_spawned {
+                    std::thread::sleep(
+                        lb.map_or(Duration::from_micros(200), |l| l.poll_interval),
+                    );
+                    if let Some(d) = deadline {
+                        if Instant::now() > d {
+                            timed_out.store(true, Ordering::Relaxed);
+                            shared.stop.store(true, Ordering::Relaxed);
+                        }
+                    }
+                    if let Some(l) = lb {
+                        let fin = finished_count.load(Ordering::Relaxed);
+                        let active = num_warps - fin;
+                        if active > 0 && (active as f64) < l.threshold * num_warps as f64 {
+                            shared.stop.store(true, Ordering::Relaxed);
+                        }
+                    }
+                }
+            });
+
+            // Segment accounting (paper: kernel elapsed = slowest warp,
+            // bounded below by aggregate issue throughput).
+            let mut total_cycles = 0.0f64;
+            let mut max_cycles = 0.0f64;
+            for w in &mut warps {
+                let c = w.prof.end_segment(&cfg.cost);
+                total_cycles += c;
+                max_cycles = max_cycles.max(c);
+            }
+            metrics.sim_seconds += cfg.cost.segment_seconds(total_cycles, max_cycles);
+            metrics.segments += 1;
+
+            if timed_out.load(Ordering::Relaxed) {
+                break;
+            }
+            if finished_count.load(Ordering::Relaxed) >= num_warps {
+                break;
+            }
+            // Redistribute (paper Fig 5 steps 4-5).
+            let te_bytes: usize = warps.iter().map(|w| w.te.memory_bytes()).sum();
+            let migrated = redistribute(&mut warps);
+            metrics.migrations += migrated;
+            let lb_cost = cfg.cost.rebalance_seconds(te_bytes);
+            metrics.sim_seconds += lb_cost;
+            metrics.lb_overhead_seconds += lb_cost;
+            if migrated > 0 {
+                let fin = warps.iter().filter(|w| w.finished).count();
+                finished_count.store(fin, Ordering::Relaxed);
+            }
+        }
+
+        // Reduction (CPU side, as in the paper).
+        let mut count = 0u64;
+        let mut stored = Vec::new();
+        for w in &mut warps {
+            count += w.agg.count;
+            stored.append(&mut w.agg.stored);
+            metrics.total_insts += w.prof.insts;
+            metrics.total_gld += w.prof.gld_transactions;
+        }
+        let patterns = match &shared.dict {
+            Some(dict) => {
+                let mut dense = vec![0u64; dict.num_patterns()];
+                for w in &warps {
+                    for (id, &c) in w.agg.pattern_dense.iter().enumerate() {
+                        dense[id] += c;
+                    }
+                }
+                (0..dense.len())
+                    .filter(|&i| dense[i] > 0)
+                    .map(|i| (dict.representative(i as u32), dense[i]))
+                    .collect()
+            }
+            None => {
+                let locals: Vec<_> = warps.iter().map(|w| w.agg.pattern_raw.clone()).collect();
+                let mut v: Vec<(u64, u64)> =
+                    merge_pattern_counts(k, &locals).into_iter().collect();
+                v.retain(|&(_, c)| c > 0);
+                v.sort_unstable();
+                v
+            }
+        };
+        metrics.wall_seconds = wall.secs();
+
+        RunReport {
+            algorithm: algo.name().to_string(),
+            k,
+            count,
+            patterns,
+            stored,
+            metrics,
+            timed_out: timed_out.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::clique::CliqueCount;
+    use crate::graph::generators;
+
+    fn small_cfg() -> EngineConfig {
+        EngineConfig {
+            warps: 16,
+            threads: 4,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn clique_count_on_complete_graph() {
+        // C(8,4) = 70 four-cliques in K8
+        let g = generators::complete(8);
+        let r = Runner::run(&g, &CliqueCount::new(4), &small_cfg());
+        assert_eq!(r.count, 70);
+        assert!(!r.timed_out);
+        assert_eq!(r.metrics.segments, 1);
+        assert!(r.metrics.total_insts > 0);
+        assert!(r.metrics.sim_seconds > 0.0);
+    }
+
+    #[test]
+    fn triangle_count_on_cycle_is_zero() {
+        let g = generators::cycle(20);
+        let r = Runner::run(&g, &CliqueCount::new(3), &small_cfg());
+        assert_eq!(r.count, 0);
+    }
+
+    #[test]
+    fn empty_graph_is_handled() {
+        let g = crate::graph::CsrGraph::from_adjacency(vec![vec![], vec![]], "iso");
+        let r = Runner::run(&g, &CliqueCount::new(3), &small_cfg());
+        assert_eq!(r.count, 0);
+    }
+
+    #[test]
+    fn warp_count_does_not_change_result() {
+        let g = generators::erdos_renyi(40, 0.3, 5);
+        let r1 = Runner::run(&g, &CliqueCount::new(4), &EngineConfig { warps: 1, threads: 1, ..Default::default() });
+        let r64 = Runner::run(&g, &CliqueCount::new(4), &EngineConfig { warps: 64, threads: 8, ..Default::default() });
+        assert_eq!(r1.count, r64.count);
+    }
+
+    #[test]
+    fn time_limit_triggers_timeout() {
+        let g = generators::complete(40);
+        let cfg = EngineConfig {
+            warps: 4,
+            threads: 2,
+            time_limit: Some(Duration::from_millis(1)),
+            ..Default::default()
+        };
+        let r = Runner::run(&g, &CliqueCount::new(9), &cfg);
+        assert!(r.timed_out);
+    }
+}

@@ -1,0 +1,297 @@
+//! TE — Traversal Enumeration state (paper Fig 3).
+//!
+//! One TE per warp: the current traversal `tr`, one extensions array per
+//! level (`ext[l]` holds the extensions of the prefix `tr[0..=l]`), and
+//! cumulative induced-edge bitmaps per level for `genedges` algorithms.
+//! Traversals never exceed `k-1` vertices: the k-th vertex is consumed
+//! directly from the last level's extensions by the Aggregate phase.
+
+use crate::canon::bitmap::{edge_bit, MAX_K};
+use crate::graph::{CsrGraph, VertexId};
+
+use super::Seed;
+
+/// Invalidated extension sentinel (the paper writes -1).
+pub const INVALID_V: VertexId = VertexId::MAX;
+
+/// One level's extensions array.
+#[derive(Clone, Debug, Default)]
+pub struct ExtLevel {
+    pub items: Vec<VertexId>,
+    /// Whether `items` is populated for the current prefix (paper's
+    /// "extensions generated" test in Alg 2 line 3).
+    pub generated: bool,
+}
+
+impl ExtLevel {
+    /// Pop the next valid extension, skipping invalidated slots.
+    #[inline]
+    pub fn pop_valid(&mut self) -> Option<VertexId> {
+        while let Some(v) = self.items.pop() {
+            if v != INVALID_V {
+                return Some(v);
+            }
+        }
+        None
+    }
+
+    pub fn valid_count(&self) -> usize {
+        self.items.iter().filter(|&&v| v != INVALID_V).count()
+    }
+
+    pub fn clear(&mut self) {
+        self.items.clear();
+        self.generated = false;
+    }
+}
+
+/// Traversal enumeration state for one warp.
+#[derive(Clone, Debug)]
+pub struct Te {
+    k: usize,
+    len: usize,
+    tr: [VertexId; MAX_K],
+    ext: Vec<ExtLevel>,
+    /// `edges[i]`: bitmap of induced edges among `tr[0..=i]` (traversal
+    /// encoding; the (0,1) edge implicit). Maintained when genedges.
+    edges: [u64; MAX_K],
+}
+
+impl Te {
+    pub fn new(k: usize) -> Self {
+        assert!((3..=MAX_K).contains(&k), "k must be in 3..={MAX_K}");
+        Self {
+            k,
+            len: 0,
+            tr: [INVALID_V; MAX_K],
+            ext: (0..k).map(|_| ExtLevel::default()).collect(),
+            edges: [0; MAX_K],
+        }
+    }
+
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn vertex(&self, pos: usize) -> VertexId {
+        debug_assert!(pos < self.len);
+        self.tr[pos]
+    }
+
+    #[inline]
+    pub fn traversal(&self) -> &[VertexId] {
+        &self.tr[..self.len]
+    }
+
+    #[inline]
+    pub fn last_vertex(&self) -> VertexId {
+        debug_assert!(self.len > 0);
+        self.tr[self.len - 1]
+    }
+
+    /// Extensions array of the current level (`len - 1`).
+    #[inline]
+    pub fn cur_ext(&mut self) -> &mut ExtLevel {
+        let l = self.len - 1;
+        &mut self.ext[l]
+    }
+
+    #[inline]
+    pub fn cur_ext_ref(&self) -> &ExtLevel {
+        &self.ext[self.len - 1]
+    }
+
+    #[inline]
+    pub fn ext_at(&mut self, level: usize) -> &mut ExtLevel {
+        &mut self.ext[level]
+    }
+
+    /// Induced-edge bitmap of the current traversal (`tr[0..len]`).
+    #[inline]
+    pub fn edges_bitmap(&self) -> u64 {
+        if self.len < 2 {
+            0
+        } else {
+            self.edges[self.len - 1]
+        }
+    }
+
+    /// Move forward: append `v`, mark the entered level's extensions as
+    /// not yet generated. `induce` computes the new vertex's edge bits
+    /// (paper Alg 1 line 6) when requested.
+    pub fn push_vertex(&mut self, v: VertexId, g: &CsrGraph, genedges: bool) {
+        debug_assert!(self.len < self.k - 1, "traversals are capped at k-1 vertices");
+        let p = self.len;
+        self.tr[p] = v;
+        self.len += 1;
+        self.ext[self.len - 1].clear();
+        if genedges && p >= 2 {
+            let mut bits = 0u64;
+            for j in 0..p {
+                if g.has_edge(self.tr[j], v) {
+                    bits |= edge_bit(j, p);
+                }
+            }
+            self.edges[p] = self.edges[p - 1] | bits;
+        } else if genedges {
+            self.edges[p] = 0;
+        }
+    }
+
+    /// Move backward: drop the last vertex, clearing the level left.
+    pub fn pop_vertex(&mut self) {
+        debug_assert!(self.len > 0);
+        self.ext[self.len - 1].clear();
+        self.len -= 1;
+    }
+
+    /// Reset to a (possibly partial) seed traversal. Prefix levels are
+    /// marked generated-and-empty: their remaining extensions belong to
+    /// the donating warp (or don't exist for fresh single-vertex seeds).
+    pub fn init_from_seed(&mut self, seed: &Seed, g: &CsrGraph, genedges: bool) {
+        debug_assert!(!seed.is_empty() && seed.len() <= self.k - 1);
+        for l in &mut self.ext {
+            l.clear();
+        }
+        self.len = seed.len();
+        self.tr[..seed.len()].copy_from_slice(seed);
+        for l in 0..self.len.saturating_sub(1) {
+            self.ext[l].generated = true; // empty: nothing left at prefix levels
+        }
+        if genedges {
+            self.edges = [0; MAX_K];
+            for p in 2..self.len {
+                let mut bits = 0u64;
+                for j in 0..p {
+                    if g.has_edge(self.tr[j], self.tr[p]) {
+                        bits |= edge_bit(j, p);
+                    }
+                }
+                self.edges[p] = self.edges[p - 1] | bits;
+            }
+        }
+    }
+
+    /// Shallowest level (<= k-3) holding an unconsumed valid extension —
+    /// the donation point for the load balancer. Levels strictly below the
+    /// current one hold whole unexplored subtrees.
+    pub fn donation_level(&self) -> Option<usize> {
+        if self.len == 0 {
+            return None;
+        }
+        (0..self.len.min(self.k - 2))
+            .find(|&l| self.ext[l].generated && self.ext[l].valid_count() > 0)
+    }
+
+    /// Pop one extension from `level` to form a donated seed.
+    pub fn donate(&mut self, level: usize) -> Option<Seed> {
+        let e = self.ext[level].pop_valid()?;
+        let mut seed: Seed = self.tr[..=level].to_vec();
+        seed.push(e);
+        Some(seed)
+    }
+
+    /// Resident bytes of the TE structure (LB copy cost, memory ablation).
+    pub fn memory_bytes(&self) -> usize {
+        std::mem::size_of::<Self>()
+            + self
+                .ext
+                .iter()
+                .map(|l| l.items.capacity() * std::mem::size_of::<VertexId>())
+                .sum::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn push_pop_roundtrip() {
+        let g = generators::complete(5);
+        let mut te = Te::new(4);
+        te.init_from_seed(&vec![0], &g, true);
+        assert_eq!(te.len(), 1);
+        te.push_vertex(1, &g, true);
+        te.push_vertex(2, &g, true);
+        assert_eq!(te.traversal(), &[0, 1, 2]);
+        // complete graph: v2 adjacent to both -> bits 0b11
+        assert_eq!(te.edges_bitmap(), 0b11);
+        te.pop_vertex();
+        assert_eq!(te.len(), 2);
+        assert_eq!(te.edges_bitmap(), 0);
+    }
+
+    #[test]
+    fn induce_reflects_actual_edges() {
+        // path 0-1-2: v2 adjacent only to v1 -> bit (1,2) = 0b10
+        let g = generators::cycle(5); // 0-1-2-3-4-0
+        let mut te = Te::new(4);
+        te.init_from_seed(&vec![0], &g, true);
+        te.push_vertex(1, &g, true);
+        te.push_vertex(2, &g, true);
+        assert_eq!(te.edges_bitmap(), 0b10);
+    }
+
+    #[test]
+    fn seed_init_marks_prefix_levels_generated() {
+        let g = generators::complete(6);
+        let mut te = Te::new(5);
+        te.init_from_seed(&vec![0, 1, 2], &g, true);
+        assert_eq!(te.len(), 3);
+        assert!(te.ext_at(0).generated);
+        assert!(te.ext_at(1).generated);
+        assert!(!te.ext_at(2).generated);
+        // edges of the seed prefix recomputed (complete graph)
+        assert_eq!(te.edges_bitmap(), 0b11);
+    }
+
+    #[test]
+    fn pop_valid_skips_invalidated() {
+        let mut l = ExtLevel::default();
+        l.items = vec![3, INVALID_V, 7, INVALID_V];
+        assert_eq!(l.pop_valid(), Some(7));
+        assert_eq!(l.pop_valid(), Some(3));
+        assert_eq!(l.pop_valid(), None);
+        assert_eq!(l.valid_count(), 0);
+    }
+
+    #[test]
+    fn donation_takes_shallowest_subtree() {
+        let g = generators::complete(8);
+        let mut te = Te::new(6);
+        te.init_from_seed(&vec![0], &g, false);
+        te.ext_at(0).items = vec![5, 6];
+        te.ext_at(0).generated = true;
+        te.push_vertex(1, &g, false);
+        te.ext_at(1).items = vec![7];
+        te.ext_at(1).generated = true;
+        assert_eq!(te.donation_level(), Some(0));
+        let seed = te.donate(0).unwrap();
+        assert_eq!(seed, vec![0, 6]);
+        assert_eq!(te.ext_at(0).valid_count(), 1);
+    }
+
+    #[test]
+    fn donation_level_respects_depth_cap() {
+        let g = generators::complete(8);
+        let mut te = Te::new(4); // donations only from levels <= k-3 = 1
+        te.init_from_seed(&vec![0, 1, 2], &g, false);
+        te.ext_at(2).items = vec![5];
+        te.ext_at(2).generated = true;
+        assert_eq!(te.donation_level(), None);
+    }
+}

@@ -1,0 +1,94 @@
+//! Incremental edge-list builder for `CsrGraph`.
+
+use super::{CsrGraph, VertexId};
+
+/// Accumulates edges, then freezes into CSR. Tolerates duplicate edges,
+/// self-loops, and out-of-order vertex ids (the loaders feed it raw data).
+#[derive(Default)]
+pub struct GraphBuilder {
+    edges: Vec<(VertexId, VertexId)>,
+    max_vertex: Option<VertexId>,
+    name: String,
+}
+
+impl GraphBuilder {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self {
+            edges: Vec::new(),
+            max_vertex: None,
+            name: name.into(),
+        }
+    }
+
+    pub fn add_edge(&mut self, u: VertexId, v: VertexId) {
+        let m = u.max(v);
+        self.max_vertex = Some(self.max_vertex.map_or(m, |x| x.max(m)));
+        self.edges.push((u, v));
+    }
+
+    pub fn num_edges_added(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Reserve vertex ids up to `n - 1` even if isolated.
+    pub fn ensure_vertices(&mut self, n: usize) {
+        if n > 0 {
+            let m = (n - 1) as VertexId;
+            self.max_vertex = Some(self.max_vertex.map_or(m, |x| x.max(m)));
+        }
+    }
+
+    pub fn build(self) -> CsrGraph {
+        let n = self.max_vertex.map_or(0, |m| m as usize + 1);
+        let mut lists = vec![Vec::new(); n];
+        for (u, v) in self.edges {
+            if u != v {
+                lists[u as usize].push(v);
+            }
+        }
+        CsrGraph::from_adjacency(lists, self.name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_symmetric_graph() {
+        let mut b = GraphBuilder::new("b");
+        b.add_edge(0, 1);
+        b.add_edge(2, 1);
+        let g = b.build();
+        assert_eq!(g.num_vertices(), 3);
+        assert_eq!(g.num_edges(), 2);
+        assert!(g.has_edge(1, 2));
+    }
+
+    #[test]
+    fn ignores_self_loops_and_dups() {
+        let mut b = GraphBuilder::new("b");
+        b.add_edge(0, 0);
+        b.add_edge(0, 1);
+        b.add_edge(1, 0);
+        let g = b.build();
+        assert_eq!(g.num_edges(), 1);
+    }
+
+    #[test]
+    fn ensure_vertices_creates_isolated() {
+        let mut b = GraphBuilder::new("b");
+        b.add_edge(0, 1);
+        b.ensure_vertices(5);
+        let g = b.build();
+        assert_eq!(g.num_vertices(), 5);
+        assert_eq!(g.degree(4), 0);
+    }
+
+    #[test]
+    fn empty_builder_builds_empty_graph() {
+        let g = GraphBuilder::new("e").build();
+        assert_eq!(g.num_vertices(), 0);
+        assert_eq!(g.num_edges(), 0);
+    }
+}

@@ -1,0 +1,195 @@
+//! Compressed sparse row (CSR) undirected graph.
+//!
+//! The layout mirrors what the paper's GPU kernels read: one contiguous
+//! `adj` array plus per-vertex offsets, with each adjacency list sorted so
+//! warp-chunked reads are coalesced and membership tests can bisect.
+
+use super::VertexId;
+
+#[derive(Clone, Debug)]
+pub struct CsrGraph {
+    /// `offsets[v]..offsets[v+1]` indexes `adj` for vertex `v`.
+    offsets: Vec<usize>,
+    /// Concatenated sorted adjacency lists.
+    adj: Vec<VertexId>,
+    /// Cached maximum degree.
+    max_degree: usize,
+    /// Optional dataset name (for reports).
+    name: String,
+}
+
+impl CsrGraph {
+    /// Build from per-vertex adjacency lists. Lists are sorted and deduped;
+    /// self-loops are dropped. The input must be symmetric or is
+    /// symmetrized here.
+    pub fn from_adjacency(mut lists: Vec<Vec<VertexId>>, name: impl Into<String>) -> Self {
+        let n = lists.len();
+        // Symmetrize: ensure v in adj(u) implies u in adj(v).
+        let mut missing: Vec<(VertexId, VertexId)> = Vec::new();
+        for (u, list) in lists.iter().enumerate() {
+            for &v in list {
+                debug_assert!((v as usize) < n, "vertex {v} out of range");
+                missing.push((v, u as VertexId));
+            }
+        }
+        for (v, u) in missing {
+            lists[v as usize].push(u);
+        }
+        let mut offsets = Vec::with_capacity(n + 1);
+        offsets.push(0);
+        let mut adj = Vec::new();
+        let mut max_degree = 0;
+        for (u, list) in lists.iter_mut().enumerate() {
+            list.sort_unstable();
+            list.dedup();
+            list.retain(|&v| v as usize != u); // drop self-loops
+            max_degree = max_degree.max(list.len());
+            adj.extend_from_slice(list);
+            offsets.push(adj.len());
+        }
+        Self {
+            offsets,
+            adj,
+            max_degree,
+            name: name.into(),
+        }
+    }
+
+    #[inline]
+    pub fn num_vertices(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Number of undirected edges.
+    #[inline]
+    pub fn num_edges(&self) -> usize {
+        self.adj.len() / 2
+    }
+
+    #[inline]
+    pub fn degree(&self, v: VertexId) -> usize {
+        self.offsets[v as usize + 1] - self.offsets[v as usize]
+    }
+
+    #[inline]
+    pub fn max_degree(&self) -> usize {
+        self.max_degree
+    }
+
+    #[inline]
+    pub fn neighbors(&self, v: VertexId) -> &[VertexId] {
+        &self.adj[self.offsets[v as usize]..self.offsets[v as usize + 1]]
+    }
+
+    /// Byte offset of `neighbors(v)[i]` in the adjacency array — the
+    /// address the vGPU memory model feeds to the coalescing rule.
+    #[inline]
+    pub fn adj_address(&self, v: VertexId, i: usize) -> usize {
+        (self.offsets[v as usize] + i) * std::mem::size_of::<VertexId>()
+    }
+
+    /// O(log deg) membership test on the sorted adjacency list.
+    #[inline]
+    pub fn has_edge(&self, u: VertexId, v: VertexId) -> bool {
+        if u == v {
+            return false;
+        }
+        // Bisect the shorter list.
+        let (a, b) = if self.degree(u) <= self.degree(v) {
+            (u, v)
+        } else {
+            (v, u)
+        };
+        self.neighbors(a).binary_search(&b).is_ok()
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn set_name(&mut self, name: impl Into<String>) {
+        self.name = name.into();
+    }
+
+    /// Estimated resident bytes (offsets + adjacency).
+    pub fn memory_bytes(&self) -> usize {
+        self.offsets.len() * std::mem::size_of::<usize>()
+            + self.adj.len() * std::mem::size_of::<VertexId>()
+    }
+
+    /// Iterate all undirected edges (u < v).
+    pub fn edges(&self) -> impl Iterator<Item = (VertexId, VertexId)> + '_ {
+        (0..self.num_vertices() as VertexId).flat_map(move |u| {
+            self.neighbors(u)
+                .iter()
+                .copied()
+                .filter(move |&v| u < v)
+                .map(move |v| (u, v))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn triangle_plus_leaf() -> CsrGraph {
+        // 0-1-2 triangle, 3 hanging off 0
+        CsrGraph::from_adjacency(
+            vec![vec![1, 2, 3], vec![0, 2], vec![0, 1], vec![0]],
+            "t",
+        )
+    }
+
+    #[test]
+    fn basic_shape() {
+        let g = triangle_plus_leaf();
+        assert_eq!(g.num_vertices(), 4);
+        assert_eq!(g.num_edges(), 4);
+        assert_eq!(g.degree(0), 3);
+        assert_eq!(g.degree(3), 1);
+        assert_eq!(g.max_degree(), 3);
+        assert_eq!(g.neighbors(0), &[1, 2, 3]);
+    }
+
+    #[test]
+    fn has_edge_symmetric() {
+        let g = triangle_plus_leaf();
+        assert!(g.has_edge(0, 1) && g.has_edge(1, 0));
+        assert!(g.has_edge(0, 3) && g.has_edge(3, 0));
+        assert!(!g.has_edge(1, 3) && !g.has_edge(3, 1));
+        assert!(!g.has_edge(2, 2));
+    }
+
+    #[test]
+    fn symmetrizes_one_sided_input() {
+        let g = CsrGraph::from_adjacency(vec![vec![1], vec![], vec![0]], "s");
+        assert!(g.has_edge(0, 1));
+        assert!(g.has_edge(1, 0));
+        assert!(g.has_edge(0, 2));
+        assert_eq!(g.num_edges(), 2);
+    }
+
+    #[test]
+    fn drops_self_loops_and_duplicates() {
+        let g = CsrGraph::from_adjacency(vec![vec![0, 1, 1, 1], vec![1, 0, 0]], "d");
+        assert_eq!(g.num_edges(), 1);
+        assert_eq!(g.neighbors(0), &[1]);
+        assert_eq!(g.neighbors(1), &[0]);
+    }
+
+    #[test]
+    fn edges_iterator_yields_each_once() {
+        let g = triangle_plus_leaf();
+        let edges: Vec<_> = g.edges().collect();
+        assert_eq!(edges, vec![(0, 1), (0, 2), (0, 3), (1, 2)]);
+    }
+
+    #[test]
+    fn adj_address_is_contiguous_per_vertex() {
+        let g = triangle_plus_leaf();
+        let a0 = g.adj_address(0, 0);
+        let a1 = g.adj_address(0, 1);
+        assert_eq!(a1 - a0, 4);
+    }
+}

@@ -1,0 +1,417 @@
+//! Synthetic dataset generators.
+//!
+//! The paper evaluates on five real graphs (Table III). Those files are not
+//! available offline, so each gets a deterministic synthetic stand-in
+//! matched on |V|, |E|, and max degree: a capped power-law degree sequence
+//! realized with the configuration model, plus a triangle-closing pass that
+//! reproduces the local clustering real networks have (and which drives GPM
+//! workload skew). DESIGN.md §2 documents the substitution rationale.
+//!
+//! Fixture generators (complete, cycle, star, grid, ER, BA) feed tests and
+//! ablations.
+
+use crate::util::Rng;
+
+use super::{CsrGraph, GraphBuilder, VertexId};
+
+/// Parameters for a Table III-style power-law graph.
+#[derive(Clone, Debug)]
+pub struct PowerLawSpec {
+    pub name: &'static str,
+    pub vertices: usize,
+    /// Target undirected edge count (pre-clustering; the closing pass takes
+    /// its budget from this).
+    pub edges: usize,
+    /// Cap on any vertex degree.
+    pub max_degree: usize,
+    /// Power-law exponent for the degree sequence.
+    pub gamma: f64,
+    /// Fraction of the edge budget spent closing wedges into triangles.
+    pub closure: f64,
+}
+
+/// Table III stand-ins (|V|, |E|, max degree from the paper).
+pub const CITESEER: PowerLawSpec = PowerLawSpec {
+    name: "citeseer",
+    vertices: 3_264,
+    edges: 4_536,
+    max_degree: 99,
+    gamma: 2.5,
+    closure: 0.08,
+};
+
+pub const ASTROPH: PowerLawSpec = PowerLawSpec {
+    name: "ca-astroph",
+    vertices: 18_772,
+    edges: 198_110,
+    max_degree: 504,
+    gamma: 2.1,
+    closure: 0.25,
+};
+
+pub const MICO: PowerLawSpec = PowerLawSpec {
+    name: "mico",
+    vertices: 96_638,
+    edges: 1_080_156,
+    max_degree: 1_359,
+    gamma: 2.0,
+    closure: 0.20,
+};
+
+pub const DBLP: PowerLawSpec = PowerLawSpec {
+    name: "com-dblp",
+    vertices: 317_080,
+    edges: 1_049_866,
+    max_degree: 343,
+    gamma: 2.3,
+    closure: 0.30,
+};
+
+pub const LIVEJOURNAL: PowerLawSpec = PowerLawSpec {
+    name: "com-livejournal",
+    vertices: 3_997_962,
+    edges: 34_681_189,
+    max_degree: 14_815,
+    gamma: 2.2,
+    closure: 0.15,
+};
+
+pub const ALL_DATASETS: [&PowerLawSpec; 5] = [&CITESEER, &ASTROPH, &MICO, &DBLP, &LIVEJOURNAL];
+
+impl PowerLawSpec {
+    /// Shrink |V| and |E| by `scale` (max degree shrinks with sqrt so the
+    /// skew survives). `scale = 1.0` is the paper-size graph.
+    pub fn scaled(&self, scale: f64) -> PowerLawSpec {
+        let mut s = self.clone();
+        if (scale - 1.0).abs() > f64::EPSILON {
+            s.vertices = ((self.vertices as f64 * scale) as usize).max(16);
+            s.edges = ((self.edges as f64 * scale) as usize).max(15);
+            s.max_degree = ((self.max_degree as f64 * scale.sqrt()) as usize).max(4);
+        }
+        s
+    }
+
+    pub fn generate(&self, seed: u64) -> CsrGraph {
+        generate_power_law(self, seed)
+    }
+}
+
+/// Power-law degree sequence, capped, summing to ~2E.
+fn degree_sequence(spec: &PowerLawSpec, rng: &mut Rng) -> Vec<usize> {
+    let n = spec.vertices;
+    // Raw weights w_i = (i+1)^-gamma over a shuffled vertex order so hub
+    // ids are spread across the id space (matters for engine queues).
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    let mut weights = vec![0f64; n];
+    let mut total = 0f64;
+    for (rank, &v) in order.iter().enumerate() {
+        let w = 1.0 / ((rank + 1) as f64).powf(spec.gamma - 1.0);
+        weights[v] = w;
+        total += w;
+    }
+    let target_stubs = (2 * spec.edges) as f64;
+    let mut degs: Vec<usize> = weights
+        .iter()
+        .map(|w| {
+            let d = (w / total * target_stubs).round() as usize;
+            d.clamp(1, spec.max_degree)
+        })
+        .collect();
+    // Nudge the stub total to an even number near 2E.
+    if degs.iter().sum::<usize>() % 2 == 1 {
+        degs[order[n - 1]] += 1;
+    }
+    degs
+}
+
+/// Configuration-model realization + wedge-closing clustering pass.
+pub fn generate_power_law(spec: &PowerLawSpec, seed: u64) -> CsrGraph {
+    let mut rng = Rng::new(seed ^ 0xD0AA70);
+    let degs = degree_sequence(spec, &mut rng);
+
+    // Degree-weighted distinct-edge sampling (Chung–Lu style): draw both
+    // endpoints from the stub pool, reject self-loops and duplicates, until
+    // the pre-clustering edge budget is met.
+    let mut stubs: Vec<VertexId> = Vec::with_capacity(degs.iter().sum());
+    for (v, &d) in degs.iter().enumerate() {
+        for _ in 0..d {
+            stubs.push(v as VertexId);
+        }
+    }
+    let mut builder = GraphBuilder::new(spec.name);
+    builder.ensure_vertices(spec.vertices);
+    let closing_budget = (spec.edges as f64 * spec.closure) as usize;
+    let pair_budget = spec.edges.saturating_sub(closing_budget);
+    let mut seen: std::collections::HashSet<u64> = std::collections::HashSet::new();
+    let edge_key = |u: VertexId, v: VertexId| ((u.min(v) as u64) << 32) | u.max(v) as u64;
+    let mut realized = vec![0usize; spec.vertices];
+    let mut added = 0usize;
+    let mut attempts = 0usize;
+    while added < pair_budget && attempts < pair_budget * 20 {
+        attempts += 1;
+        let u = *rng.pick(&stubs);
+        let v = *rng.pick(&stubs);
+        if u != v
+            && realized[u as usize] < spec.max_degree
+            && realized[v as usize] < spec.max_degree
+            && seen.insert(edge_key(u, v))
+        {
+            builder.add_edge(u, v);
+            realized[u as usize] += 1;
+            realized[v as usize] += 1;
+            added += 1;
+        }
+    }
+
+    // Triangle-closing: materialize interim adjacency, then close wedges at
+    // random centers (degree-biased by construction: pick a random edge
+    // endpoint's neighborhood).
+    let interim = builder.build();
+    let mut builder = GraphBuilder::new(spec.name);
+    builder.ensure_vertices(spec.vertices);
+    for (u, v) in interim.edges() {
+        builder.add_edge(u, v);
+    }
+    let n = interim.num_vertices();
+    let mut degs_now: Vec<usize> = (0..n).map(|v| interim.degree(v as VertexId)).collect();
+    let mut closed = 0usize;
+    let mut attempts = 0usize;
+    while closed < closing_budget && attempts < closing_budget * 8 {
+        attempts += 1;
+        let c = rng.range(0, n) as VertexId;
+        let deg = interim.degree(c);
+        if deg < 2 {
+            continue;
+        }
+        let a = interim.neighbors(c)[rng.range(0, deg)];
+        let b = interim.neighbors(c)[rng.range(0, deg)];
+        if a == b || interim.has_edge(a, b) || !seen.insert(edge_key(a, b)) {
+            continue;
+        }
+        if degs_now[a as usize] >= spec.max_degree || degs_now[b as usize] >= spec.max_degree {
+            continue;
+        }
+        builder.add_edge(a, b);
+        degs_now[a as usize] += 1;
+        degs_now[b as usize] += 1;
+        closed += 1;
+    }
+    builder.build()
+}
+
+/// Complete graph K_n (every pair connected). C(n,k) k-cliques.
+pub fn complete(n: usize) -> CsrGraph {
+    let lists = (0..n)
+        .map(|u| (0..n).filter(|&v| v != u).map(|v| v as VertexId).collect())
+        .collect();
+    CsrGraph::from_adjacency(lists, format!("complete_{n}"))
+}
+
+/// Cycle C_n. Zero triangles for n > 3.
+pub fn cycle(n: usize) -> CsrGraph {
+    assert!(n >= 3);
+    let lists = (0..n)
+        .map(|u| {
+            vec![
+                ((u + 1) % n) as VertexId,
+                ((u + n - 1) % n) as VertexId,
+            ]
+        })
+        .collect();
+    CsrGraph::from_adjacency(lists, format!("cycle_{n}"))
+}
+
+/// Star S_n: center 0 with n leaves. Max-skew workload fixture.
+pub fn star(leaves: usize) -> CsrGraph {
+    let mut lists = vec![Vec::new(); leaves + 1];
+    lists[0] = (1..=leaves as VertexId).collect();
+    CsrGraph::from_adjacency(lists, format!("star_{leaves}"))
+}
+
+/// r x c grid graph. Zero triangles, many 4-paths.
+pub fn grid(r: usize, c: usize) -> CsrGraph {
+    let idx = |i: usize, j: usize| (i * c + j) as VertexId;
+    let mut lists = vec![Vec::new(); r * c];
+    for i in 0..r {
+        for j in 0..c {
+            if i + 1 < r {
+                lists[idx(i, j) as usize].push(idx(i + 1, j));
+            }
+            if j + 1 < c {
+                lists[idx(i, j) as usize].push(idx(i, j + 1));
+            }
+        }
+    }
+    CsrGraph::from_adjacency(lists, format!("grid_{r}x{c}"))
+}
+
+/// Erdős–Rényi G(n, p).
+pub fn erdos_renyi(n: usize, p: f64, seed: u64) -> CsrGraph {
+    let mut rng = Rng::new(seed);
+    let mut builder = GraphBuilder::new(format!("er_{n}_{p}"));
+    builder.ensure_vertices(n);
+    for u in 0..n {
+        for v in (u + 1)..n {
+            if rng.chance(p) {
+                builder.add_edge(u as VertexId, v as VertexId);
+            }
+        }
+    }
+    builder.build()
+}
+
+/// Barabási–Albert preferential attachment with `m` edges per new vertex.
+pub fn barabasi_albert(n: usize, m: usize, seed: u64) -> CsrGraph {
+    assert!(n > m && m >= 1);
+    let mut rng = Rng::new(seed);
+    let mut builder = GraphBuilder::new(format!("ba_{n}_{m}"));
+    builder.ensure_vertices(n);
+    // Degree-proportional sampling via the repeated-endpoint trick.
+    let mut endpoints: Vec<VertexId> = Vec::with_capacity(2 * n * m);
+    // Seed clique over the first m+1 vertices.
+    for u in 0..=m {
+        for v in (u + 1)..=m {
+            builder.add_edge(u as VertexId, v as VertexId);
+            endpoints.push(u as VertexId);
+            endpoints.push(v as VertexId);
+        }
+    }
+    for u in (m + 1)..n {
+        let mut targets = Vec::with_capacity(m);
+        while targets.len() < m {
+            let t = *rng.pick(&endpoints);
+            if t as usize != u && !targets.contains(&t) {
+                targets.push(t);
+            }
+        }
+        for &t in &targets {
+            builder.add_edge(u as VertexId, t);
+            endpoints.push(u as VertexId);
+            endpoints.push(t);
+        }
+    }
+    builder.build()
+}
+
+/// Look up a dataset stand-in by name with a scale factor.
+pub fn dataset(name: &str, scale: f64, seed: u64) -> Option<CsrGraph> {
+    let spec = match name {
+        "citeseer" => &CITESEER,
+        "astroph" | "ca-astroph" => &ASTROPH,
+        "mico" => &MICO,
+        "dblp" | "com-dblp" => &DBLP,
+        "livejournal" | "com-livejournal" | "lj" => &LIVEJOURNAL,
+        _ => return None,
+    };
+    let mut g = spec.scaled(scale).generate(seed);
+    if (scale - 1.0).abs() > f64::EPSILON {
+        g.set_name(format!("{name}@{scale}"));
+    }
+    Some(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn complete_graph_shape() {
+        let g = complete(6);
+        assert_eq!(g.num_vertices(), 6);
+        assert_eq!(g.num_edges(), 15);
+        assert_eq!(g.max_degree(), 5);
+    }
+
+    #[test]
+    fn cycle_has_uniform_degree_2() {
+        let g = cycle(10);
+        assert_eq!(g.num_edges(), 10);
+        for v in 0..10 {
+            assert_eq!(g.degree(v), 2);
+        }
+    }
+
+    #[test]
+    fn star_is_maximally_skewed() {
+        let g = star(20);
+        assert_eq!(g.degree(0), 20);
+        assert_eq!(g.degree(1), 1);
+        assert_eq!(g.num_edges(), 20);
+    }
+
+    #[test]
+    fn grid_shape() {
+        let g = grid(3, 4);
+        assert_eq!(g.num_vertices(), 12);
+        assert_eq!(g.num_edges(), 3 * 3 + 2 * 4); // (c-1)*r + (r-1)*c
+    }
+
+    #[test]
+    fn er_is_deterministic_per_seed() {
+        let a = erdos_renyi(50, 0.1, 7);
+        let b = erdos_renyi(50, 0.1, 7);
+        assert_eq!(a.num_edges(), b.num_edges());
+        for (u, v) in a.edges() {
+            assert!(b.has_edge(u, v));
+        }
+    }
+
+    #[test]
+    fn ba_degrees_and_size() {
+        let g = barabasi_albert(200, 3, 11);
+        assert_eq!(g.num_vertices(), 200);
+        // m(m+1)/2 seed edges + ~m per added vertex (dups collapse a few)
+        assert!(g.num_edges() >= 3 * (200 - 4));
+        // preferential attachment should produce a hub above the mean
+        assert!(g.max_degree() > 10);
+    }
+
+    #[test]
+    fn citeseer_standin_matches_table3_shape() {
+        let g = CITESEER.generate(1);
+        assert_eq!(g.num_vertices(), 3_264);
+        let e = g.num_edges() as f64;
+        assert!((e - 4_536.0).abs() / 4_536.0 < 0.15, "edges={e}");
+        assert!(g.max_degree() <= 99 + 1);
+    }
+
+    #[test]
+    fn scaled_spec_shrinks() {
+        let s = MICO.scaled(0.1);
+        assert!(s.vertices < MICO.vertices / 5);
+        assert!(s.edges < MICO.edges / 5);
+        let g = s.generate(3);
+        assert_eq!(g.num_vertices(), s.vertices);
+    }
+
+    #[test]
+    fn dataset_lookup_names() {
+        assert!(dataset("citeseer", 0.5, 1).is_some());
+        assert!(dataset("lj", 0.01, 1).is_some());
+        assert!(dataset("nope", 1.0, 1).is_none());
+    }
+
+    #[test]
+    fn power_law_graphs_have_triangles() {
+        // the closing pass must produce clustering (GPM workloads need it)
+        let g = ASTROPH.scaled(0.05).generate(5);
+        let mut tri = 0u64;
+        for (u, v) in g.edges() {
+            let (nu, nv) = (g.neighbors(u), g.neighbors(v));
+            let (mut i, mut j) = (0, 0);
+            while i < nu.len() && j < nv.len() {
+                match nu[i].cmp(&nv[j]) {
+                    std::cmp::Ordering::Less => i += 1,
+                    std::cmp::Ordering::Greater => j += 1,
+                    std::cmp::Ordering::Equal => {
+                        tri += 1;
+                        i += 1;
+                        j += 1;
+                    }
+                }
+            }
+        }
+        assert!(tri / 3 > 0, "no triangles in clustered power-law graph");
+    }
+}

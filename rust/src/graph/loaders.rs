@@ -1,0 +1,159 @@
+//! Dataset loaders: whitespace edge lists (SNAP style) and MatrixMarket.
+//!
+//! The paper's datasets come from networkrepository/SNAP in these formats;
+//! if real files are available they can be dropped in and loaded here,
+//! otherwise `generators` provides Table III-matched synthetic stand-ins.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::{CsrGraph, GraphBuilder};
+
+/// Load a SNAP-style edge list: one `u v` pair per line, `#` comments.
+pub fn load_edge_list(path: &Path) -> Result<CsrGraph> {
+    let name = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "graph".into());
+    let file = File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut builder = GraphBuilder::new(name);
+    for (lineno, line) in BufReader::new(file).lines().enumerate() {
+        let line = line?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() || trimmed.starts_with('#') || trimmed.starts_with('%') {
+            continue;
+        }
+        let mut it = trimmed.split_whitespace();
+        let (u, v) = match (it.next(), it.next()) {
+            (Some(u), Some(v)) => (u, v),
+            _ => bail!("{}:{}: expected 'u v'", path.display(), lineno + 1),
+        };
+        let u: u32 = u
+            .parse()
+            .with_context(|| format!("{}:{}: bad vertex '{u}'", path.display(), lineno + 1))?;
+        let v: u32 = v
+            .parse()
+            .with_context(|| format!("{}:{}: bad vertex '{v}'", path.display(), lineno + 1))?;
+        builder.add_edge(u, v);
+    }
+    Ok(builder.build())
+}
+
+/// Load a MatrixMarket `.mtx` coordinate file (1-based indices).
+pub fn load_mtx(path: &Path) -> Result<CsrGraph> {
+    let name = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "graph".into());
+    let file = File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut builder = GraphBuilder::new(name);
+    let mut header_seen = false;
+    for (lineno, line) in BufReader::new(file).lines().enumerate() {
+        let line = line?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() || trimmed.starts_with('%') {
+            continue;
+        }
+        let mut it = trimmed.split_whitespace();
+        if !header_seen {
+            // rows cols nnz
+            let rows: usize = it.next().context("mtx header")?.parse()?;
+            builder.ensure_vertices(rows);
+            header_seen = true;
+            continue;
+        }
+        let (u, v) = match (it.next(), it.next()) {
+            (Some(u), Some(v)) => (u, v),
+            _ => bail!("{}:{}: expected 'u v [w]'", path.display(), lineno + 1),
+        };
+        let u: u32 = u.parse()?;
+        let v: u32 = v.parse()?;
+        if u == 0 || v == 0 {
+            bail!("{}:{}: mtx is 1-based", path.display(), lineno + 1);
+        }
+        builder.add_edge(u - 1, v - 1);
+    }
+    Ok(builder.build())
+}
+
+/// Dispatch on extension (.mtx vs everything else = edge list).
+pub fn load(path: &Path) -> Result<CsrGraph> {
+    match path.extension().and_then(|e| e.to_str()) {
+        Some("mtx") => load_mtx(path),
+        _ => load_edge_list(path),
+    }
+}
+
+/// Write a graph back out as an edge list (for interchange with the
+/// baselines' external formats and test fixtures).
+pub fn save_edge_list(g: &CsrGraph, path: &Path) -> Result<()> {
+    use std::io::Write;
+    let mut f = std::io::BufWriter::new(File::create(path)?);
+    writeln!(f, "# {} |V|={} |E|={}", g.name(), g.num_vertices(), g.num_edges())?;
+    for (u, v) in g.edges() {
+        writeln!(f, "{u} {v}")?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str, contents: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("dumato_loader_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(name);
+        std::fs::write(&p, contents).unwrap();
+        p
+    }
+
+    #[test]
+    fn loads_edge_list_with_comments() {
+        let p = tmpfile("a.txt", "# comment\n0 1\n1 2\n\n2 0\n");
+        let g = load_edge_list(&p).unwrap();
+        assert_eq!(g.num_vertices(), 3);
+        assert_eq!(g.num_edges(), 3);
+    }
+
+    #[test]
+    fn rejects_malformed_line() {
+        let p = tmpfile("bad.txt", "0 1\nnonsense\n");
+        assert!(load_edge_list(&p).is_err());
+    }
+
+    #[test]
+    fn loads_mtx_one_based() {
+        let p = tmpfile(
+            "m.mtx",
+            "%%MatrixMarket matrix coordinate pattern symmetric\n3 3 2\n1 2\n2 3\n",
+        );
+        let g = load_mtx(&p).unwrap();
+        assert_eq!(g.num_vertices(), 3);
+        assert!(g.has_edge(0, 1));
+        assert!(g.has_edge(1, 2));
+    }
+
+    #[test]
+    fn roundtrip_save_load() {
+        let g0 = CsrGraph::from_adjacency(vec![vec![1, 2], vec![0], vec![0]], "rt");
+        let p = tmpfile("rt.txt", "");
+        save_edge_list(&g0, &p).unwrap();
+        let g1 = load_edge_list(&p).unwrap();
+        assert_eq!(g0.num_vertices(), g1.num_vertices());
+        assert_eq!(g0.num_edges(), g1.num_edges());
+        for (u, v) in g0.edges() {
+            assert!(g1.has_edge(u, v));
+        }
+    }
+
+    #[test]
+    fn dispatch_on_extension() {
+        let p = tmpfile("d.mtx", "%%header\n2 2 1\n1 2\n");
+        let g = load(&p).unwrap();
+        assert_eq!(g.num_edges(), 1);
+    }
+}

@@ -1,0 +1,16 @@
+//! Graph substrate: CSR storage, builders, file loaders, synthetic dataset
+//! generators (Table III equivalents), statistics, and vertex orderings.
+
+pub mod builder;
+pub mod csr;
+pub mod generators;
+pub mod loaders;
+pub mod ordering;
+pub mod stats;
+
+pub use builder::GraphBuilder;
+pub use csr::CsrGraph;
+pub use stats::GraphStats;
+
+/// Vertex identifier. Graphs up to 2^32 vertices (paper max: 3.9M).
+pub type VertexId = u32;

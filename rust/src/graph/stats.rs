@@ -1,0 +1,115 @@
+//! Graph statistics — regenerates Table III (|V|, |E|, avg/max degree,
+//! density) for any loaded or generated graph.
+
+use super::CsrGraph;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct GraphStats {
+    pub name: String,
+    pub vertices: usize,
+    pub edges: usize,
+    pub avg_degree: f64,
+    pub density: f64,
+    pub max_degree: usize,
+}
+
+impl GraphStats {
+    pub fn of(g: &CsrGraph) -> Self {
+        let n = g.num_vertices();
+        let m = g.num_edges();
+        let avg = if n == 0 { 0.0 } else { 2.0 * m as f64 / n as f64 };
+        let density = if n < 2 {
+            0.0
+        } else {
+            2.0 * m as f64 / (n as f64 * (n as f64 - 1.0))
+        };
+        Self {
+            name: g.name().to_string(),
+            vertices: n,
+            edges: m,
+            avg_degree: avg,
+            density,
+            max_degree: g.max_degree(),
+        }
+    }
+
+    /// One row in the Table III format:
+    /// `name |V| |E| avg_deg density max_deg`.
+    pub fn table_row(&self) -> String {
+        format!(
+            "{:<18} {:>9} {:>10} {:>8.2} {:>11.2e} {:>8}",
+            self.name, self.vertices, self.edges, self.avg_degree, self.density, self.max_degree
+        )
+    }
+
+    pub fn table_header() -> String {
+        format!(
+            "{:<18} {:>9} {:>10} {:>8} {:>11} {:>8}",
+            "Dataset", "|V(G)|", "|E(G)|", "AvgDeg", "Density", "MaxDeg"
+        )
+    }
+}
+
+/// Degree distribution histogram (log-2 buckets) — used by the generators'
+/// validation tests to confirm the power-law shape of Table III stand-ins.
+pub fn degree_histogram(g: &CsrGraph) -> Vec<(usize, usize)> {
+    let mut buckets: Vec<usize> = Vec::new();
+    for v in 0..g.num_vertices() {
+        let d = g.degree(v as u32);
+        let b = if d == 0 { 0 } else { (usize::BITS - d.leading_zeros()) as usize };
+        if b >= buckets.len() {
+            buckets.resize(b + 1, 0);
+        }
+        buckets[b] += 1;
+    }
+    buckets
+        .into_iter()
+        .enumerate()
+        .filter(|&(_, c)| c > 0)
+        .map(|(b, c)| (if b == 0 { 0 } else { 1 << (b - 1) }, c))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn stats_of_complete_graph() {
+        let g = generators::complete(10);
+        let s = GraphStats::of(&g);
+        assert_eq!(s.vertices, 10);
+        assert_eq!(s.edges, 45);
+        assert!((s.avg_degree - 9.0).abs() < 1e-9);
+        assert!((s.density - 1.0).abs() < 1e-9);
+        assert_eq!(s.max_degree, 9);
+    }
+
+    #[test]
+    fn table_row_formats() {
+        let g = generators::cycle(5);
+        let s = GraphStats::of(&g);
+        let row = s.table_row();
+        assert!(row.contains("cycle_5"));
+        assert!(row.contains('5'));
+    }
+
+    #[test]
+    fn histogram_buckets_powerlaw_skew() {
+        let g = generators::ASTROPH.scaled(0.05).generate(2);
+        let h = degree_histogram(&g);
+        // more low-degree than high-degree vertices
+        let low: usize = h.iter().filter(|&&(d, _)| d <= 4).map(|&(_, c)| c).sum();
+        let high: usize = h.iter().filter(|&&(d, _)| d > 64).map(|&(_, c)| c).sum();
+        assert!(low > high * 5, "low={low} high={high}");
+    }
+
+    #[test]
+    fn empty_graph_stats() {
+        let g = crate::graph::CsrGraph::from_adjacency(vec![], "empty");
+        let s = GraphStats::of(&g);
+        assert_eq!(s.vertices, 0);
+        assert_eq!(s.avg_degree, 0.0);
+    }
+}

@@ -1,0 +1,23 @@
+//! DuMato: efficient strategies for graph pattern mining algorithms,
+//! reproduced as a three-layer Rust + JAX/Pallas stack (SBAC-PAD 2022).
+//!
+//! Layer map (see DESIGN.md):
+//! - L3 (this crate): DuMato API, DFS-wide engine on a virtual-GPU
+//!   execution model, warp-level load balancing, baselines, benches.
+//! - L2/L1 (python/compile): jax + Pallas kernels, AOT-lowered to HLO text.
+//! - runtime: PJRT CPU client executing the AOT artifacts from the L3 hot
+//!   path.
+
+pub mod api;
+pub mod apps;
+pub mod balance;
+pub mod baselines;
+pub mod canon;
+pub mod cli;
+pub mod config;
+pub mod engine;
+pub mod graph;
+pub mod report;
+pub mod runtime;
+pub mod util;
+pub mod vgpu;

@@ -1,0 +1,252 @@
+//! `dumato` — CLI for the DuMato GPM system.
+//!
+//! ```text
+//! dumato clique  --dataset mico --k 5 [--lb] [--warps N] [--scale F]
+//! dumato motif   --dataset citeseer --k 4 [--lb]
+//! dumato query   --dataset dblp --pattern 4-cycle
+//! dumato stats   --dataset all [--scale F]          # Table III
+//! dumato triangles --dataset er:500,0.05 [--engine xla|engine]
+//! dumato baseline --system dfs|pangolin|fractal|peregrine --app clique --k 4 --dataset mico
+//! ```
+
+use anyhow::{anyhow, bail, Result};
+
+use dumato::apps::{CliqueCount, MotifCount, SubgraphQuery};
+use dumato::baselines::{App, DmDfs, FractalDfs, PangolinBfs, Peregrine};
+use dumato::canon::patterns::pattern_name;
+use dumato::cli::Args;
+use dumato::config::{engine_config, load_graph};
+use dumato::engine::Runner;
+use dumato::graph::{generators, GraphStats};
+use dumato::report::Table;
+use dumato::util::fmt_count;
+
+const FLAGS: &[&str] = &["lb", "wall"];
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    if raw.is_empty() {
+        eprintln!("{}", USAGE);
+        std::process::exit(2);
+    }
+    if let Err(e) = dispatch(raw) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+const USAGE: &str = "usage: dumato <clique|motif|query|stats|triangles|baseline> [options]
+  common: --dataset NAME|FIXTURE|PATH --scale F --seed N --warps N --threads N --lb --timeout SECS
+  clique/motif: --k N
+  query: --k N --pattern <3-clique|wedge|4-cycle|4-path|3-star|diamond|tailed-triangle>
+  triangles: --engine <engine|xla>
+  baseline: --system <dfs|pangolin|fractal|peregrine> --app <clique|motif> --k N";
+
+fn dispatch(raw: Vec<String>) -> Result<()> {
+    let cmd = raw[0].clone();
+    let args = Args::parse(raw.into_iter().skip(1), FLAGS)?;
+    match cmd.as_str() {
+        "clique" => cmd_clique(&args),
+        "motif" => cmd_motif(&args),
+        "query" => cmd_query(&args),
+        "stats" => cmd_stats(&args),
+        "triangles" => cmd_triangles(&args),
+        "baseline" => cmd_baseline(&args),
+        other => bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}
+
+fn graph_from(args: &Args) -> Result<dumato::graph::CsrGraph> {
+    let dataset = args.get_or("dataset", "citeseer");
+    let scale: f64 = args.parse_or("scale", 1.0)?;
+    let seed: u64 = args.parse_or("seed", 1)?;
+    load_graph(dataset, scale, seed)
+}
+
+fn print_run(report: &dumato::engine::RunReport, wall: bool) {
+    println!(
+        "{} k={}  count={}  sim_time={:.4}s  wall={:.3}s  segments={} migrations={}",
+        report.algorithm,
+        report.k,
+        fmt_count(report.count),
+        report.metrics.sim_seconds,
+        report.metrics.wall_seconds,
+        report.metrics.segments,
+        report.metrics.migrations,
+    );
+    if wall {
+        println!(
+            "  insts={}  gld_transactions={}  inst/warp={:.0}",
+            fmt_count(report.metrics.total_insts),
+            fmt_count(report.metrics.total_gld),
+            report.metrics.inst_per_warp()
+        );
+    }
+    if report.timed_out {
+        println!("  ** timed out — counts are partial **");
+    }
+}
+
+fn cmd_clique(args: &Args) -> Result<()> {
+    let g = graph_from(args)?;
+    let k: usize = args.parse_or("k", 4)?;
+    let cfg = engine_config(args, 0.40)?;
+    let r = Runner::run(&g, &CliqueCount::new(k), &cfg);
+    println!("dataset={} |V|={} |E|={}", g.name(), g.num_vertices(), g.num_edges());
+    print_run(&r, args.flag("wall"));
+    Ok(())
+}
+
+fn cmd_motif(args: &Args) -> Result<()> {
+    let g = graph_from(args)?;
+    let k: usize = args.parse_or("k", 3)?;
+    let cfg = engine_config(args, 0.10)?;
+    let mut r = Runner::run(&g, &MotifCount::new(k), &cfg);
+    r.count = r.patterns.iter().map(|&(_, c)| c).sum(); // total subgraphs
+    println!("dataset={} |V|={} |E|={}", g.name(), g.num_vertices(), g.num_edges());
+    print_run(&r, args.flag("wall"));
+    let mut t = Table::new(format!("{k}-motif census"), &["pattern", "count"]);
+    for &(bm, c) in &r.patterns {
+        t.row(vec![pattern_name(k, bm), fmt_count(c)]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn known_pattern(k: usize, name: &str) -> Result<Vec<(usize, usize)>> {
+    let edges: Vec<(usize, usize)> = match (k, name) {
+        (3, "wedge") => vec![(0, 1), (1, 2)],
+        (3, "3-clique" | "triangle") => vec![(0, 1), (1, 2), (0, 2)],
+        (4, "4-path") => vec![(0, 1), (1, 2), (2, 3)],
+        (4, "3-star") => vec![(0, 1), (0, 2), (0, 3)],
+        (4, "4-cycle") => vec![(0, 1), (1, 2), (2, 3), (3, 0)],
+        (4, "tailed-triangle") => vec![(0, 1), (1, 2), (0, 2), (2, 3)],
+        (4, "diamond") => vec![(0, 1), (1, 2), (0, 2), (0, 3), (2, 3)],
+        (k, "clique") => (0..k).flat_map(|a| ((a + 1)..k).map(move |b| (a, b))).collect(),
+        _ => bail!("unknown pattern '{name}' for k={k}"),
+    };
+    Ok(edges)
+}
+
+fn cmd_query(args: &Args) -> Result<()> {
+    let g = graph_from(args)?;
+    let k: usize = args.parse_or("k", 3)?;
+    let pattern = args.get_or("pattern", "3-clique");
+    let edges = known_pattern(k, pattern)?;
+    let q = SubgraphQuery::new(k, &edges);
+    let cfg = engine_config(args, 0.10)?;
+    let r = Runner::run(&g, &q, &cfg);
+    let matches = q.matches(&r);
+    println!(
+        "dataset={} pattern={pattern} matches={}",
+        g.name(),
+        fmt_count(matches.len() as u64)
+    );
+    for m in matches.iter().take(args.parse_or("limit", 10usize)?) {
+        println!("  {m:?}");
+    }
+    Ok(())
+}
+
+fn cmd_stats(args: &Args) -> Result<()> {
+    let scale: f64 = args.parse_or("scale", 1.0)?;
+    let seed: u64 = args.parse_or("seed", 1)?;
+    let dataset = args.get_or("dataset", "all");
+    println!("{}", GraphStats::table_header());
+    if dataset == "all" {
+        for spec in generators::ALL_DATASETS {
+            let g = spec.scaled(scale).generate(seed);
+            println!("{}", GraphStats::of(&g).table_row());
+        }
+    } else {
+        let g = load_graph(dataset, scale, seed)?;
+        println!("{}", GraphStats::of(&g).table_row());
+    }
+    Ok(())
+}
+
+fn cmd_triangles(args: &Args) -> Result<()> {
+    let g = graph_from(args)?;
+    let engine = args.get_or("engine", "engine");
+    let timer = dumato::util::Timer::start();
+    let count = match engine {
+        "xla" => {
+            let mut rt = dumato::runtime::XlaRuntime::new(&dumato::runtime::artifacts_dir())?;
+            rt.triangle_count(&g)?
+        }
+        "engine" => {
+            let cfg = engine_config(args, 0.40)?;
+            Runner::run(&g, &CliqueCount::new(3), &cfg).count
+        }
+        other => bail!("unknown engine '{other}' (engine|xla)"),
+    };
+    println!(
+        "dataset={} triangles={} engine={engine} wall={:.3}s",
+        g.name(),
+        fmt_count(count),
+        timer.secs()
+    );
+    Ok(())
+}
+
+fn cmd_baseline(args: &Args) -> Result<()> {
+    let g = graph_from(args)?;
+    let k: usize = args.parse_or("k", 4)?;
+    let app = match args.get_or("app", "clique") {
+        "clique" => App::Clique,
+        "motif" => App::Motif,
+        other => bail!("unknown app '{other}'"),
+    };
+    let system = args.require("system")?;
+    match system {
+        "dfs" => {
+            let mut d = DmDfs::new(app, k);
+            d.lanes = args.parse_or("warps", 1024usize)? * 32;
+            let r = d.run(&g);
+            println!(
+                "DM_DFS count={} sim_time={:.4}s wall={:.3}s inst/warp={:.0} gld={}",
+                fmt_count(r.count),
+                r.metrics.sim_seconds,
+                r.metrics.wall_seconds,
+                r.metrics.inst_per_warp(),
+                fmt_count(r.metrics.total_gld)
+            );
+        }
+        "pangolin" => {
+            let budget = args.parse_or("memory-gb", 32usize)? << 30;
+            match PangolinBfs::new(app, k).with_budget(budget).run(&g) {
+                Ok(r) => println!(
+                    "Pangolin count={} sim_time={:.4}s wall={:.3}s",
+                    fmt_count(r.count),
+                    r.metrics.sim_seconds,
+                    r.metrics.wall_seconds
+                ),
+                Err(e) => println!("Pangolin {e}"),
+            }
+        }
+        "fractal" => {
+            let r = FractalDfs::new(app, k).run(&g);
+            println!(
+                "Fractal count={} wall={:.3}s total={:.3}s steals={}",
+                fmt_count(r.count),
+                r.wall_seconds,
+                r.total_seconds,
+                r.steals
+            );
+        }
+        "peregrine" => {
+            let r = Peregrine::new(app, k)
+                .run(&g)
+                .ok_or_else(|| anyhow!("peregrine: k={k} motifs beyond plan envelope"))?;
+            println!(
+                "Peregrine count={} plans={} plan_time={:.3}s match_time={:.3}s",
+                fmt_count(r.count),
+                r.num_plans,
+                r.plan_seconds,
+                r.match_seconds
+            );
+        }
+        other => bail!("unknown system '{other}'"),
+    }
+    Ok(())
+}

@@ -1,0 +1,110 @@
+//! Report rendering: paper-style tables for bench and CLI output.
+
+use crate::util::{fmt_count, fmt_secs};
+
+/// A simple fixed-width table builder.
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, header: &[&str]) -> Self {
+        Self {
+            title: title.into(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        debug_assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let fmt_row = |cells: &[String]| -> String {
+            let mut line = String::new();
+            for i in 0..ncols {
+                if i > 0 {
+                    line.push_str("  ");
+                }
+                line.push_str(&format!("{:<w$}", cells[i], w = widths[i]));
+            }
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncols - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format a Table IV/VI time cell: simulated seconds, `-` for
+/// exceeded-budget, `OOM`, or `0` ("no valid subgraphs").
+pub fn time_cell(result: CellResult) -> String {
+    match result {
+        CellResult::Time(s) => fmt_secs(s),
+        CellResult::Exceeded => "-".into(),
+        CellResult::Oom => "OOM".into(),
+        CellResult::NoSubgraphs => "0".into(),
+        CellResult::Unsupported => "n/a".into(),
+    }
+}
+
+/// Outcome of one benchmark cell.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CellResult {
+    Time(f64),
+    Exceeded,
+    Oom,
+    NoSubgraphs,
+    Unsupported,
+}
+
+/// Render a count with separators (pattern tables).
+pub fn count_cell(c: u64) -> String {
+    fmt_count(c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("T", &["a", "bbbb"]);
+        t.row(vec!["xxxxx".into(), "1".into()]);
+        t.row(vec!["y".into(), "22".into()]);
+        let r = t.render();
+        assert!(r.contains("== T =="));
+        let lines: Vec<&str> = r.lines().collect();
+        assert_eq!(lines.len(), 5);
+        assert!(lines[1].starts_with("a      bbbb"));
+    }
+
+    #[test]
+    fn cells_format_like_paper() {
+        assert_eq!(time_cell(CellResult::Time(0.013)), "0.01");
+        assert_eq!(time_cell(CellResult::Time(28_140.0)), "28.14K");
+        assert_eq!(time_cell(CellResult::Exceeded), "-");
+        assert_eq!(time_cell(CellResult::Oom), "OOM");
+        assert_eq!(time_cell(CellResult::NoSubgraphs), "0");
+    }
+}

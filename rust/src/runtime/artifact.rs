@@ -1,0 +1,160 @@
+//! Artifact manifest: the `manifest.txt` emitted by `aot.py`, listing
+//! every lowered HLO module with its input signature.
+//!
+//! Format (one line per artifact, pipe-separated):
+//! `name|file|dtype[d0,d1];dtype[d0]|n_outputs`
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// Input spec: dtype + shape.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct InputSpec {
+    pub dtype: String,
+    pub dims: Vec<usize>,
+}
+
+impl InputSpec {
+    pub fn parse(s: &str) -> Result<Self> {
+        let (dtype, rest) = s
+            .split_once('[')
+            .with_context(|| format!("bad input spec '{s}'"))?;
+        let dims_str = rest.strip_suffix(']').context("missing ']'")?;
+        let dims = if dims_str.is_empty() {
+            vec![]
+        } else {
+            dims_str
+                .split(',')
+                .map(|d| d.parse::<usize>().map_err(Into::into))
+                .collect::<Result<Vec<_>>>()?
+        };
+        Ok(Self {
+            dtype: dtype.to_string(),
+            dims,
+        })
+    }
+
+    pub fn elements(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Artifact {
+    pub name: String,
+    pub path: PathBuf,
+    pub inputs: Vec<InputSpec>,
+    pub n_outputs: usize,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub artifacts: Vec<Artifact>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(dir.join("manifest.txt"))
+            .with_context(|| format!("read {}/manifest.txt (run `make artifacts`)", dir.display()))?;
+        let mut artifacts = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let parts: Vec<&str> = line.split('|').collect();
+            if parts.len() != 4 {
+                bail!("manifest line {}: expected 4 fields", lineno + 1);
+            }
+            let inputs = parts[2]
+                .split(';')
+                .map(InputSpec::parse)
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.push(Artifact {
+                name: parts[0].to_string(),
+                path: dir.join(parts[1]),
+                inputs,
+                n_outputs: parts[3].parse()?,
+            });
+        }
+        Ok(Self { artifacts })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&Artifact> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// The triangle-kernel variant whose side is the smallest >= n.
+    pub fn triangle_variant(&self, n: usize) -> Option<&Artifact> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.name.starts_with("triangle_"))
+            .filter(|a| a.inputs[0].dims[0] >= n)
+            .min_by_key(|a| a.inputs[0].dims[0])
+    }
+
+    /// The intersect-kernel variant for at least `b` rows of `w` words.
+    pub fn intersect_variant(&self, b: usize, w: usize) -> Option<&Artifact> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.name.starts_with("intersect_"))
+            .filter(|a| a.inputs[0].dims[0] >= b && a.inputs[0].dims[1] >= w)
+            .min_by_key(|a| a.inputs[0].elements())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(lines: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("dumato_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), lines).unwrap();
+        dir
+    }
+
+    #[test]
+    fn parses_input_specs() {
+        let s = InputSpec::parse("float32[256,256]").unwrap();
+        assert_eq!(s.dtype, "float32");
+        assert_eq!(s.dims, vec![256, 256]);
+        assert_eq!(s.elements(), 65536);
+        assert!(InputSpec::parse("garbage").is_err());
+    }
+
+    #[test]
+    fn loads_manifest_and_selects_variants() {
+        let dir = write_manifest(
+            "triangle_256|triangle_256.hlo.txt|float32[256,256]|1\n\
+             triangle_512|triangle_512.hlo.txt|float32[512,512]|1\n\
+             intersect_1024x32|i.hlo.txt|int32[1024,32];int32[1024,32]|2\n",
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 3);
+        assert_eq!(m.triangle_variant(100).unwrap().name, "triangle_256");
+        assert_eq!(m.triangle_variant(300).unwrap().name, "triangle_512");
+        assert!(m.triangle_variant(2000).is_none());
+        assert_eq!(
+            m.intersect_variant(512, 32).unwrap().name,
+            "intersect_1024x32"
+        );
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        // soft check against the actual artifacts dir when present
+        let dir = crate::runtime::artifacts_dir();
+        if dir.join("manifest.txt").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.find("triangle_256").is_some());
+            assert!(m.find("intersect_1024x32").is_some());
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        let dir = write_manifest("only|three|fields\n");
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

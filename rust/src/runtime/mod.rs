@@ -1,0 +1,26 @@
+//! PJRT runtime: load the AOT-compiled HLO artifacts (emitted once by
+//! `python/compile/aot.py`) and execute them from the rust hot path.
+//!
+//! Interchange is HLO *text*: jax >= 0.5 emits HloModuleProto with 64-bit
+//! instruction ids which xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md and DESIGN.md). Python
+//! never runs at request time — `XlaRuntime` only needs `artifacts/`.
+
+pub mod artifact;
+pub mod offload;
+
+pub use artifact::{Artifact, Manifest};
+pub use offload::XlaRuntime;
+
+/// Quick probe used by examples/benches to skip XLA paths gracefully when
+/// the PJRT plugin is unavailable.
+pub fn pjrt_available() -> bool {
+    xla::PjRtClient::cpu().is_ok()
+}
+
+/// Default artifacts directory, overridable via `DUMATO_ARTIFACTS`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var_os("DUMATO_ARTIFACTS")
+        .map(Into::into)
+        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}

@@ -1,0 +1,231 @@
+//! XLA offload executor: compiled PJRT executables for the L1/L2 kernels,
+//! plus graph-level helpers the apps call (triangle counting over a dense
+//! adjacency; batched bitmap intersect+count for the clique hot loop).
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::graph::CsrGraph;
+
+use super::artifact::Manifest;
+
+/// PJRT CPU client with lazily compiled executables, keyed by artifact
+/// name. One compiled executable per model variant (compile once, execute
+/// many — python is never on this path).
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl XlaRuntime {
+    pub fn new(artifacts_dir: &std::path::Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let manifest = Manifest::load(artifacts_dir)?;
+        Ok(Self {
+            client,
+            manifest,
+            compiled: HashMap::new(),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.compiled.contains_key(name) {
+            let art = self
+                .manifest
+                .find(name)
+                .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?;
+            let proto = xla::HloModuleProto::from_text_file(
+                art.path
+                    .to_str()
+                    .ok_or_else(|| anyhow!("non-utf8 path {:?}", art.path))?,
+            )
+            .map_err(|e| anyhow!("parse {}: {e}", art.path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {name}: {e}"))?;
+            self.compiled.insert(name.to_string(), exe);
+        }
+        Ok(&self.compiled[name])
+    }
+
+    /// Execute an artifact on literals, unwrapping the outer result tuple.
+    pub fn execute(&mut self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute {name}: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result of {name}: {e}"))?;
+        result.to_tuple().map_err(|e| anyhow!("untuple {name}: {e}"))
+    }
+
+    /// Triangle count of a graph via the L1 Pallas matmul kernel: the
+    /// adjacency is densified into the smallest available variant.
+    /// Fails when the graph exceeds the largest lowered side.
+    pub fn triangle_count(&mut self, g: &CsrGraph) -> Result<u64> {
+        let n = g.num_vertices();
+        let art = self
+            .manifest
+            .triangle_variant(n)
+            .ok_or_else(|| anyhow!("no triangle variant fits |V|={n}"))?;
+        let side = art.inputs[0].dims[0];
+        let name = art.name.clone();
+        let mut dense = vec![0f32; side * side];
+        for (u, v) in g.edges() {
+            dense[u as usize * side + v as usize] = 1.0;
+            dense[v as usize * side + u as usize] = 1.0;
+        }
+        let lit = xla::Literal::vec1(&dense)
+            .reshape(&[side as i64, side as i64])
+            .map_err(|e| anyhow!("reshape: {e}"))?;
+        let out = self.execute(&name, &[lit])?;
+        let count: f32 = out[0]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("read count: {e}"))?[0];
+        Ok(count.round() as u64)
+    }
+
+    /// 3-motif census (wedges, triangles) via the motif3 artifact.
+    pub fn motif3_census(&mut self, g: &CsrGraph) -> Result<(u64, u64)> {
+        let n = g.num_vertices();
+        let art = self
+            .manifest
+            .artifacts
+            .iter()
+            .filter(|a| a.name.starts_with("motif3_"))
+            .filter(|a| a.inputs[0].dims[0] >= n)
+            .min_by_key(|a| a.inputs[0].dims[0])
+            .ok_or_else(|| anyhow!("no motif3 variant fits |V|={n}"))?;
+        let side = art.inputs[0].dims[0];
+        let name = art.name.clone();
+        let mut dense = vec![0f32; side * side];
+        for (u, v) in g.edges() {
+            dense[u as usize * side + v as usize] = 1.0;
+            dense[v as usize * side + u as usize] = 1.0;
+        }
+        let lit = xla::Literal::vec1(&dense)
+            .reshape(&[side as i64, side as i64])
+            .map_err(|e| anyhow!("reshape: {e}"))?;
+        let out = self.execute(&name, &[lit])?;
+        let wedges: f32 = out[0].to_vec::<f32>().map_err(|e| anyhow!("{e}"))?[0];
+        let triangles: f32 = out[1].to_vec::<f32>().map_err(|e| anyhow!("{e}"))?[0];
+        Ok((wedges.round() as u64, triangles.round() as u64))
+    }
+
+    /// Batched bitmap intersect + popcount via the L1 intersect kernel.
+    /// `cur` and `nbr` are row-major `[b][w]` i32 bitmaps; rows beyond the
+    /// caller's batch must be zero-padded to a lowered variant's shape by
+    /// the caller's choice of `b`/`w`.
+    pub fn intersect_count(
+        &mut self,
+        b: usize,
+        w: usize,
+        cur: &[i32],
+        nbr: &[i32],
+    ) -> Result<(Vec<i32>, Vec<i32>)> {
+        anyhow::ensure!(cur.len() == b * w && nbr.len() == b * w, "shape mismatch");
+        let art = self
+            .manifest
+            .intersect_variant(b, w)
+            .ok_or_else(|| anyhow!("no intersect variant fits {b}x{w}"))?;
+        let (vb, vw) = (art.inputs[0].dims[0], art.inputs[0].dims[1]);
+        let name = art.name.clone();
+        // zero-pad into the variant's shape
+        let pad = |src: &[i32]| -> Vec<i32> {
+            let mut out = vec![0i32; vb * vw];
+            for r in 0..b {
+                out[r * vw..r * vw + w].copy_from_slice(&src[r * w..(r + 1) * w]);
+            }
+            out
+        };
+        let lit_c = xla::Literal::vec1(&pad(cur))
+            .reshape(&[vb as i64, vw as i64])
+            .map_err(|e| anyhow!("{e}"))?;
+        let lit_n = xla::Literal::vec1(&pad(nbr))
+            .reshape(&[vb as i64, vw as i64])
+            .map_err(|e| anyhow!("{e}"))?;
+        let out = self.execute(&name, &[lit_c, lit_n])?;
+        let inter_full = out[0].to_vec::<i32>().map_err(|e| anyhow!("{e}"))?;
+        let counts_full = out[1].to_vec::<i32>().map_err(|e| anyhow!("{e}"))?;
+        // slice back to the caller's shape
+        let mut inter = Vec::with_capacity(b * w);
+        for r in 0..b {
+            inter.extend_from_slice(&inter_full[r * vw..r * vw + w]);
+        }
+        Ok((inter, counts_full[..b].to_vec()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::runtime::artifacts_dir;
+
+    fn runtime() -> Option<XlaRuntime> {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.txt").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(XlaRuntime::new(&dir).expect("runtime"))
+    }
+
+    #[test]
+    fn triangle_count_matches_engine() {
+        let Some(mut rt) = runtime() else { return };
+        let g = generators::erdos_renyi(200, 0.05, 5);
+        let xla_count = rt.triangle_count(&g).unwrap();
+        let eng = crate::engine::Runner::run(
+            &g,
+            &crate::apps::CliqueCount::new(3),
+            &crate::engine::EngineConfig {
+                warps: 8,
+                threads: 2,
+                ..Default::default()
+            },
+        );
+        assert_eq!(xla_count, eng.count);
+    }
+
+    #[test]
+    fn motif3_census_matches_known_values() {
+        let Some(mut rt) = runtime() else { return };
+        let g = generators::star(20);
+        let (wedges, triangles) = rt.motif3_census(&g).unwrap();
+        assert_eq!(wedges, 190); // C(20,2)
+        assert_eq!(triangles, 0);
+    }
+
+    #[test]
+    fn intersect_count_roundtrip() {
+        let Some(mut rt) = runtime() else { return };
+        let b = 64;
+        let w = 4;
+        let cur: Vec<i32> = (0..b * w).map(|i| (i as i32).wrapping_mul(2654435761u32 as i32)).collect();
+        let nbr: Vec<i32> = (0..b * w).map(|i| (i as i32).wrapping_mul(40503)).collect();
+        let (inter, counts) = rt.intersect_count(b, w, &cur, &nbr).unwrap();
+        for i in 0..b * w {
+            assert_eq!(inter[i], cur[i] & nbr[i]);
+        }
+        for r in 0..b {
+            let want: u32 = (0..w).map(|c| (cur[r * w + c] & nbr[r * w + c]).count_ones()).sum();
+            assert_eq!(counts[r] as u32, want, "row {r}");
+        }
+    }
+
+    #[test]
+    fn graph_too_large_errors_cleanly() {
+        let Some(mut rt) = runtime() else { return };
+        let g = generators::cycle(5000);
+        assert!(rt.triangle_count(&g).is_err());
+    }
+}

@@ -1,0 +1,141 @@
+//! Fixed-capacity bitset over `u64` words.
+//!
+//! Used for adjacency bitmaps (dense small graphs / hub vertices), the
+//! canonical-relabeling edge bitmaps, and visited sets in the engines.
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Bitset {
+    words: Vec<u64>,
+    bits: usize,
+}
+
+impl Bitset {
+    pub fn new(bits: usize) -> Self {
+        Self {
+            words: vec![0; bits.div_ceil(64)],
+            bits,
+        }
+    }
+
+    #[inline]
+    pub fn capacity(&self) -> usize {
+        self.bits
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize) {
+        debug_assert!(i < self.bits);
+        self.words[i >> 6] |= 1u64 << (i & 63);
+    }
+
+    #[inline]
+    pub fn clear(&mut self, i: usize) {
+        debug_assert!(i < self.bits);
+        self.words[i >> 6] &= !(1u64 << (i & 63));
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.bits);
+        (self.words[i >> 6] >> (i & 63)) & 1 == 1
+    }
+
+    /// Clear all bits, keeping capacity.
+    pub fn reset(&mut self) {
+        self.words.fill(0);
+    }
+
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Intersect in place with another bitset of the same capacity.
+    pub fn intersect_with(&mut self, other: &Bitset) {
+        debug_assert_eq!(self.bits, other.bits);
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a &= *b;
+        }
+    }
+
+    pub fn union_with(&mut self, other: &Bitset) {
+        debug_assert_eq!(self.bits, other.bits);
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a |= *b;
+        }
+    }
+
+    /// Iterate set bit indices in increasing order.
+    pub fn iter_ones(&self) -> impl Iterator<Item = usize> + '_ {
+        self.words.iter().enumerate().flat_map(|(wi, &w)| {
+            let mut w = w;
+            std::iter::from_fn(move || {
+                if w == 0 {
+                    None
+                } else {
+                    let b = w.trailing_zeros() as usize;
+                    w &= w - 1;
+                    Some(wi * 64 + b)
+                }
+            })
+        })
+    }
+
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_clear() {
+        let mut b = Bitset::new(130);
+        assert!(!b.get(0) && !b.get(129));
+        b.set(0);
+        b.set(64);
+        b.set(129);
+        assert!(b.get(0) && b.get(64) && b.get(129) && !b.get(1));
+        b.clear(64);
+        assert!(!b.get(64));
+        assert_eq!(b.count_ones(), 2);
+    }
+
+    #[test]
+    fn reset_clears_everything() {
+        let mut b = Bitset::new(100);
+        for i in (0..100).step_by(3) {
+            b.set(i);
+        }
+        b.reset();
+        assert_eq!(b.count_ones(), 0);
+    }
+
+    #[test]
+    fn intersect_and_union() {
+        let mut a = Bitset::new(70);
+        let mut b = Bitset::new(70);
+        a.set(1);
+        a.set(65);
+        a.set(69);
+        b.set(65);
+        b.set(2);
+        let mut i = a.clone();
+        i.intersect_with(&b);
+        assert_eq!(i.iter_ones().collect::<Vec<_>>(), vec![65]);
+        let mut u = a.clone();
+        u.union_with(&b);
+        assert_eq!(u.iter_ones().collect::<Vec<_>>(), vec![1, 2, 65, 69]);
+    }
+
+    #[test]
+    fn iter_ones_in_order() {
+        let mut b = Bitset::new(200);
+        let idx = [0, 5, 63, 64, 127, 128, 199];
+        for &i in &idx {
+            b.set(i);
+        }
+        assert_eq!(b.iter_ones().collect::<Vec<_>>(), idx);
+    }
+}

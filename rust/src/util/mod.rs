@@ -1,0 +1,87 @@
+//! Shared utilities: deterministic RNG, bitsets, timing, and a hand-rolled
+//! property-testing harness (the `proptest`/`rand` crates are not vendored
+//! in this offline environment, so we carry small, tested equivalents).
+
+pub mod bitset;
+pub mod proptest;
+pub mod rng;
+pub mod timer;
+
+pub use bitset::Bitset;
+pub use rng::Rng;
+pub use timer::Timer;
+
+/// Integer ceiling division.
+#[inline]
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+/// Binomial coefficient C(n, 2) — the number of vertex pairs.
+#[inline]
+pub fn pairs(n: usize) -> usize {
+    n * n.saturating_sub(1) / 2
+}
+
+/// Format a large count with thousands separators for reports.
+pub fn fmt_count(mut n: u64) -> String {
+    if n == 0 {
+        return "0".into();
+    }
+    let mut groups = Vec::new();
+    while n > 0 {
+        groups.push((n % 1000) as u16);
+        n /= 1000;
+    }
+    let mut s = groups.pop().unwrap().to_string();
+    while let Some(g) = groups.pop() {
+        s.push_str(&format!(",{g:03}"));
+    }
+    s
+}
+
+/// Format seconds like the paper's tables: "0.01", "4.75", "19.67K".
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1000.0 {
+        format!("{:.2}K", s / 1000.0)
+    } else {
+        format!("{s:.2}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(0, 32), 0);
+        assert_eq!(ceil_div(1, 32), 1);
+        assert_eq!(ceil_div(32, 32), 1);
+        assert_eq!(ceil_div(33, 32), 2);
+    }
+
+    #[test]
+    fn pairs_basics() {
+        assert_eq!(pairs(0), 0);
+        assert_eq!(pairs(1), 0);
+        assert_eq!(pairs(2), 1);
+        assert_eq!(pairs(5), 10);
+    }
+
+    #[test]
+    fn fmt_count_groups() {
+        assert_eq!(fmt_count(0), "0");
+        assert_eq!(fmt_count(999), "999");
+        assert_eq!(fmt_count(1000), "1,000");
+        assert_eq!(fmt_count(1234567), "1,234,567");
+    }
+
+    #[test]
+    fn fmt_secs_matches_paper_style() {
+        assert_eq!(fmt_secs(0.012), "0.01");
+        assert_eq!(fmt_secs(4.747), "4.75");
+        assert_eq!(fmt_secs(19670.0), "19.67K");
+    }
+}

@@ -1,0 +1,112 @@
+//! Minimal property-testing harness (hand-rolled; `proptest` is not
+//! vendored offline).
+//!
+//! A property is a function `Fn(&mut Rng) -> Result<(), String>`; the
+//! harness runs it for `cases` seeds derived from a base seed and reports
+//! the first failing seed so failures are reproducible.  Generators are
+//! free functions over `Rng` (see `gen_graph` users in graph/canon tests).
+
+use super::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            cases: 64,
+            seed: 0xD0AA70,
+        }
+    }
+}
+
+/// Run `prop` for `cfg.cases` independent seeded RNGs; panic with the
+/// failing seed + message on the first violation.
+pub fn check<F>(cfg: Config, name: &str, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case} (rerun with seed {case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Shorthand with the default config.
+pub fn check_default<F>(name: &str, prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    check(Config::default(), name, prop)
+}
+
+/// Assert helper producing a `Result` for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+/// Assert equality helper.
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr, $($fmt:tt)+) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!("{} (left={a:?}, right={b:?})", format!($($fmt)+)));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check_default("u64 below bound", |rng| {
+            let x = rng.below(10);
+            prop_assert!(x < 10, "x={x} out of range");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_reports_seed() {
+        check(
+            Config { cases: 3, seed: 1 },
+            "always fails",
+            |_| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    fn seeds_vary_between_cases() {
+        let mut seen = std::collections::HashSet::new();
+        check(
+            Config {
+                cases: 16,
+                seed: 99,
+            },
+            "distinct streams",
+            |rng| {
+                seen.insert(rng.next_u64());
+                Ok(())
+            },
+        );
+        assert_eq!(seen.len(), 16);
+    }
+}

@@ -1,0 +1,71 @@
+//! Wall-clock timing helpers for benches and the load-balance monitor.
+
+use std::time::{Duration, Instant};
+
+/// Simple stopwatch.
+#[derive(Debug)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Self {
+            start: Instant::now(),
+        }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Run `f` at least `min_runs` times or until `min_time` elapses, returning
+/// (mean seconds, runs). The hand-rolled criterion replacement used by the
+/// bench harness (criterion is not vendored offline).
+pub fn measure<F: FnMut()>(mut f: F, min_runs: usize, min_time: Duration) -> (f64, usize) {
+    let t = Timer::start();
+    let mut runs = 0;
+    loop {
+        f();
+        runs += 1;
+        if runs >= min_runs && t.elapsed() >= min_time {
+            break;
+        }
+        // Hard cap to keep pathological cases bounded.
+        if runs >= 1_000_000 {
+            break;
+        }
+    }
+    (t.secs() / runs as f64, runs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_advances() {
+        let t = Timer::start();
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(t.secs() >= 0.004);
+    }
+
+    #[test]
+    fn measure_runs_at_least_min() {
+        let mut n = 0;
+        let (_mean, runs) = measure(|| n += 1, 5, Duration::from_millis(0));
+        assert!(runs >= 5);
+        assert_eq!(n, runs);
+    }
+}

@@ -1,0 +1,130 @@
+//! Memory-coalescing model: warp loads -> 128-byte segment transactions.
+
+use super::{SEGMENT_BYTES, WARP_SIZE};
+
+/// Transactions for a warp load of `words` consecutive 4-byte words
+/// starting at byte address `base` (the coalesced case: Extend streaming
+/// an adjacency list). At most `WARP_SIZE` words per warp load.
+#[inline]
+pub fn contiguous_transactions(base: usize, words: usize) -> u64 {
+    if words == 0 {
+        return 0;
+    }
+    debug_assert!(words <= WARP_SIZE);
+    let first = base / SEGMENT_BYTES;
+    let last = (base + words * 4 - 1) / SEGMENT_BYTES;
+    (last - first + 1) as u64
+}
+
+/// Transactions for a warp load where each active lane reads one 4-byte
+/// word at its own address (the divergent DM_DFS case): distinct segments
+/// across the lanes.
+pub fn scattered_transactions(addrs: &[usize]) -> u64 {
+    debug_assert!(addrs.len() <= WARP_SIZE);
+    // tiny n: quadratic distinct-count beats hashing
+    let mut segs = [usize::MAX; WARP_SIZE];
+    let mut n = 0u64;
+    'outer: for &a in addrs {
+        let s = a / SEGMENT_BYTES;
+        for &seen in segs.iter().take(n as usize) {
+            if seen == s {
+                continue 'outer;
+            }
+        }
+        segs[n as usize] = s;
+        n += 1;
+    }
+    n
+}
+
+/// Streaming-reuse window for the per-lane model (DM_DFS): a lane re-reading
+/// inside the 128-byte segment it touched within the last `window` loads
+/// hits in L1 and costs no new transaction. Calibrated once (window = 8)
+/// against the paper's Table V DBLP k=3 ratio; see EXPERIMENTS.md.
+#[derive(Clone, Debug)]
+pub struct StreamingReuse {
+    last_segment: Vec<usize>,
+    age: Vec<u32>,
+    window: u32,
+}
+
+impl StreamingReuse {
+    pub fn new(lanes: usize, window: u32) -> Self {
+        Self {
+            last_segment: vec![usize::MAX; lanes],
+            age: vec![0; lanes],
+            window,
+        }
+    }
+
+    /// Record a lane load of the 4-byte word at `addr`; returns true when
+    /// it misses (i.e., a new transaction is issued).
+    #[inline]
+    pub fn load(&mut self, lane: usize, addr: usize) -> bool {
+        let seg = addr / SEGMENT_BYTES;
+        if self.last_segment[lane] == seg && self.age[lane] + 1 < self.window {
+            self.age[lane] += 1;
+            false
+        } else {
+            self.last_segment[lane] = seg;
+            self.age[lane] = 0;
+            true
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aligned_full_warp_is_one_transaction() {
+        assert_eq!(contiguous_transactions(0, 32), 1);
+        assert_eq!(contiguous_transactions(128, 32), 1);
+    }
+
+    #[test]
+    fn misaligned_full_warp_is_two() {
+        assert_eq!(contiguous_transactions(4, 32), 2);
+        assert_eq!(contiguous_transactions(64, 32), 2);
+    }
+
+    #[test]
+    fn short_loads() {
+        assert_eq!(contiguous_transactions(0, 0), 0);
+        assert_eq!(contiguous_transactions(0, 1), 1);
+        assert_eq!(contiguous_transactions(124, 2), 2); // straddles boundary
+    }
+
+    #[test]
+    fn scattered_all_distinct() {
+        let addrs: Vec<usize> = (0..32).map(|i| i * 4096).collect();
+        assert_eq!(scattered_transactions(&addrs), 32);
+    }
+
+    #[test]
+    fn scattered_same_segment_coalesces() {
+        let addrs: Vec<usize> = (0..32).map(|i| 256 + i * 4).collect();
+        assert_eq!(scattered_transactions(&addrs), 1);
+    }
+
+    #[test]
+    fn scattered_mixed() {
+        // 16 lanes in one segment, 16 in another
+        let addrs: Vec<usize> = (0..32)
+            .map(|i| if i < 16 { i * 4 } else { 102_400 + (i - 16) * 4 })
+            .collect();
+        assert_eq!(scattered_transactions(&addrs), 2);
+    }
+
+    #[test]
+    fn streaming_reuse_hits_within_window() {
+        let mut s = StreamingReuse::new(1, 8);
+        assert!(s.load(0, 0)); // cold miss
+        for i in 1..8 {
+            assert!(!s.load(0, i * 4), "i={i} should hit");
+        }
+        assert!(s.load(0, 8 * 4)); // window exhausted -> refetch
+        assert!(s.load(0, 4096)); // new segment -> miss
+    }
+}

@@ -1,0 +1,99 @@
+//! Cycle/time cost model converting vGPU counters into simulated kernel
+//! seconds (the "time" Tables IV and VI report; DESIGN.md §2).
+//!
+//! Two-term occupancy model per kernel segment:
+//!
+//! ```text
+//! t_seg = max( total_cycles / (SCHEDULERS * CLOCK_HZ),   // throughput bound
+//!              max_warp_cycles / CLOCK_HZ )              // critical path
+//! ```
+//!
+//! V100-flavoured constants: 80 SMs x 4 warp schedulers issue 320
+//! warp-instructions per cycle at 1.38 GHz. A warp instruction retires in
+//! `CPI` cycles; a global-memory transaction costs `MEM_CYCLES` of issue
+//! budget (bandwidth-side cost: 128 B / (900 GB/s / 320 schedulers) at
+//! 1.38 GHz ~ 60 cycles; latency is assumed hidden by occupancy, which the
+//! paper's 172k-thread configuration is chosen to achieve).
+
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    /// Cycles per issued warp instruction.
+    pub cpi: f64,
+    /// Issue-budget cycles per 128-byte memory transaction.
+    pub mem_cycles: f64,
+    /// Concurrent warp schedulers (SMs x schedulers/SM).
+    pub schedulers: f64,
+    /// Core clock in Hz.
+    pub clock_hz: f64,
+    /// Fixed cost per kernel launch (s) — charged per LB segment.
+    pub launch_overhead_s: f64,
+    /// Host<->device copy bandwidth for the LB layer's TE copies (B/s).
+    pub copy_bandwidth: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        Self {
+            cpi: 4.0,
+            mem_cycles: 60.0,
+            schedulers: 320.0,
+            clock_hz: 1.38e9,
+            launch_overhead_s: 20e-6,
+            copy_bandwidth: 12e9, // PCIe gen3 x16 effective
+        }
+    }
+}
+
+impl CostModel {
+    /// Cycles charged to a warp for its counters.
+    #[inline]
+    pub fn warp_cycles(&self, insts: u64, transactions: u64) -> f64 {
+        insts as f64 * self.cpi + transactions as f64 * self.mem_cycles
+    }
+
+    /// Simulated seconds for one kernel segment.
+    pub fn segment_seconds(&self, total_cycles: f64, max_warp_cycles: f64) -> f64 {
+        let throughput = total_cycles / (self.schedulers * self.clock_hz);
+        let critical = max_warp_cycles / self.clock_hz;
+        throughput.max(critical) + self.launch_overhead_s
+    }
+
+    /// Simulated seconds for one LB stop-copy-redistribute-relaunch.
+    pub fn rebalance_seconds(&self, te_bytes: usize) -> f64 {
+        // TE copied device->host and back
+        2.0 * te_bytes as f64 / self.copy_bandwidth
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn critical_path_dominates_skewed_segments() {
+        let m = CostModel::default();
+        // one warp with 1e9 cycles, total 2e9: critical path wins
+        let t = m.segment_seconds(2e9, 1e9);
+        assert!((t - (1e9 / m.clock_hz + m.launch_overhead_s)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn throughput_dominates_balanced_segments() {
+        let m = CostModel::default();
+        // 10^12 total cycles spread evenly (max = 10^12/320)
+        let t = m.segment_seconds(1e12, 1e12 / 320.0);
+        assert!((t - (1e12 / (320.0 * m.clock_hz) + m.launch_overhead_s)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn warp_cycles_mix() {
+        let m = CostModel::default();
+        assert_eq!(m.warp_cycles(10, 2), 10.0 * 4.0 + 2.0 * 60.0);
+    }
+
+    #[test]
+    fn rebalance_scales_with_te_size() {
+        let m = CostModel::default();
+        assert!(m.rebalance_seconds(1 << 20) > m.rebalance_seconds(1 << 10));
+    }
+}

@@ -1,0 +1,164 @@
+//! Per-warp profiling counters and run-level metric aggregation.
+//!
+//! `WarpProfiler` is updated inline by the engine phases; the counters map
+//! 1:1 to the NVProf metrics of Table V: `insts` = `inst_per_warp`
+//! contributions, `gld_transactions` = global-load transactions.
+
+use super::coalesce;
+use super::cost::CostModel;
+use super::WARP_SIZE;
+
+/// Counters for one virtual warp. `segment_*` accumulate within the
+/// current kernel-launch segment and are drained by the runner when the
+/// segment ends (the LB layer stops/relaunches kernels).
+#[derive(Clone, Debug, Default)]
+pub struct WarpProfiler {
+    pub insts: u64,
+    pub gld_transactions: u64,
+    segment_insts: u64,
+    segment_glds: u64,
+}
+
+impl WarpProfiler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// One SISD step (single lane does bookkeeping; paper Alg 1-3 "SISD").
+    #[inline]
+    pub fn sisd(&mut self) {
+        self.insts += 1;
+        self.segment_insts += 1;
+    }
+
+    /// A SIMD step over `lanes` elements: ceil(lanes/32) lockstep issues.
+    #[inline]
+    pub fn simd(&mut self, lanes: usize) {
+        let n = lanes.div_ceil(WARP_SIZE).max(1) as u64;
+        self.insts += n;
+        self.segment_insts += n;
+    }
+
+    /// `count` SIMD steps at once (bulk accounting for inner loops).
+    #[inline]
+    pub fn simd_n(&mut self, steps: u64) {
+        self.insts += steps;
+        self.segment_insts += steps;
+    }
+
+    /// Coalesced warp load of `words` consecutive 4-byte words at `base`.
+    #[inline]
+    pub fn gld_contiguous(&mut self, base: usize, words: usize) {
+        let t = coalesce::contiguous_transactions(base, words);
+        self.gld_transactions += t;
+        self.segment_glds += t;
+    }
+
+    /// Scattered warp load (one word per active lane).
+    #[inline]
+    pub fn gld_scattered(&mut self, addrs: &[usize]) {
+        let t = coalesce::scattered_transactions(addrs);
+        self.gld_transactions += t;
+        self.segment_glds += t;
+    }
+
+    /// Raw transaction count (pre-modelled callers, e.g. streaming reuse).
+    #[inline]
+    pub fn gld_raw(&mut self, transactions: u64) {
+        self.gld_transactions += transactions;
+        self.segment_glds += transactions;
+    }
+
+    /// Cycles accumulated in the current segment (quantum scheduling).
+    #[inline]
+    pub fn segment_cycles(&self, cost: &CostModel) -> f64 {
+        cost.warp_cycles(self.segment_insts, self.segment_glds)
+    }
+
+    /// Drain the segment counters, returning cycles for the cost model.
+    pub fn end_segment(&mut self, cost: &CostModel) -> f64 {
+        let c = cost.warp_cycles(self.segment_insts, self.segment_glds);
+        self.segment_insts = 0;
+        self.segment_glds = 0;
+        c
+    }
+}
+
+/// Aggregated metrics for one engine run (one Table IV / V / VI cell).
+#[derive(Clone, Debug, Default)]
+pub struct KernelMetrics {
+    /// Simulated GPU seconds (cost model over all segments).
+    pub sim_seconds: f64,
+    /// Wall-clock seconds of the rust run.
+    pub wall_seconds: f64,
+    /// Total issued warp instructions.
+    pub total_insts: u64,
+    /// Total global-load transactions.
+    pub total_gld: u64,
+    /// Number of virtual warps.
+    pub warps: usize,
+    /// Kernel-launch segments executed (1 + number of LB stops).
+    pub segments: usize,
+    /// Traversals migrated by the LB layer.
+    pub migrations: u64,
+    /// Simulated seconds spent in LB copies.
+    pub lb_overhead_seconds: f64,
+}
+
+impl KernelMetrics {
+    /// Average instructions per warp — Table V's `inst_per_warp`.
+    pub fn inst_per_warp(&self) -> f64 {
+        if self.warps == 0 {
+            0.0
+        } else {
+            self.total_insts as f64 / self.warps as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simd_rounds_up_to_warp_chunks() {
+        let mut p = WarpProfiler::new();
+        p.simd(1);
+        p.simd(32);
+        p.simd(33);
+        assert_eq!(p.insts, 1 + 1 + 2);
+    }
+
+    #[test]
+    fn contiguous_load_counts_segments() {
+        let mut p = WarpProfiler::new();
+        p.gld_contiguous(0, 32); // aligned -> 1
+        p.gld_contiguous(4, 32); // misaligned -> 2
+        assert_eq!(p.gld_transactions, 3);
+    }
+
+    #[test]
+    fn end_segment_drains() {
+        let cost = CostModel::default();
+        let mut p = WarpProfiler::new();
+        p.sisd();
+        p.gld_raw(2);
+        let c1 = p.end_segment(&cost);
+        assert!(c1 > 0.0);
+        let c2 = p.end_segment(&cost);
+        assert_eq!(c2, 0.0);
+        // lifetime counters survive the drain
+        assert_eq!(p.insts, 1);
+        assert_eq!(p.gld_transactions, 2);
+    }
+
+    #[test]
+    fn inst_per_warp_average() {
+        let m = KernelMetrics {
+            total_insts: 640,
+            warps: 64,
+            ..Default::default()
+        };
+        assert_eq!(m.inst_per_warp(), 10.0);
+    }
+}

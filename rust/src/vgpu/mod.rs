@@ -1,0 +1,40 @@
+//! Virtual GPU execution model ("vGPU").
+//!
+//! The paper's evidence is warp-level: coalesced vs. strided loads
+//! (`gld_transactions`), lockstep vs. divergent issue (`inst_per_warp`),
+//! busy vs. idle warps (load balancing). No GPU is available in this
+//! environment, so the engines run against this model, which counts
+//! exactly those events with CUDA's rules:
+//!
+//! - a warp is 32 lanes issuing in lockstep;
+//! - a warp-level global load coalesces into 128-byte segment
+//!   transactions (32 lanes x 4-byte words -> 1 transaction when
+//!   contiguous and aligned, up to 32 when scattered);
+//! - divergent control flow serializes: issued instructions follow the
+//!   union of the lanes' paths.
+//!
+//! Simulated kernel time converts the counters to cycles with a two-term
+//! occupancy model (throughput-bound vs. critical-path-bound; see
+//! `cost.rs`), which is what Tables IV and VI report. Wall-clock times of
+//! the rust process are reported alongside in EXPERIMENTS.md.
+
+pub mod coalesce;
+pub mod cost;
+pub mod metrics;
+
+pub use cost::CostModel;
+pub use metrics::{KernelMetrics, WarpProfiler};
+
+/// Lanes per warp (CUDA warp width).
+pub const WARP_SIZE: usize = 32;
+
+/// Bytes per global-memory transaction segment.
+pub const SEGMENT_BYTES: usize = 128;
+
+/// Default total thread count from the paper's occupancy analysis
+/// (§V: "172,032 threads for all datasets").
+pub const PAPER_THREADS: usize = 172_032;
+
+/// Default virtual warp count = 172,032 / 32.
+pub const PAPER_WARPS: usize = PAPER_THREADS / WARP_SIZE;
+

@@ -1,0 +1,129 @@
+//! Cross-system integration tests: the DuMato engine and every baseline
+//! must produce identical exact counts on the same graphs — the paper's
+//! implicit correctness contract for Table VI comparability.
+
+use dumato::apps::{CliqueCount, MotifCount};
+use dumato::balance::LbConfig;
+use dumato::baselines::{App, DmDfs, FractalDfs, PangolinBfs, Peregrine};
+use dumato::engine::{EngineConfig, Runner};
+use dumato::graph::generators;
+
+fn cfg() -> EngineConfig {
+    EngineConfig {
+        warps: 32,
+        threads: 4,
+        ..Default::default()
+    }
+}
+
+fn graphs() -> Vec<dumato::graph::CsrGraph> {
+    vec![
+        generators::erdos_renyi(40, 0.25, 3),
+        generators::barabasi_albert(60, 3, 5),
+        generators::CITESEER.scaled(0.03).generate(7),
+        generators::grid(5, 5),
+    ]
+}
+
+#[test]
+fn all_systems_agree_on_clique_counts() {
+    for g in graphs() {
+        for k in 3..=5usize {
+            let engine = Runner::run(&g, &CliqueCount::new(k), &cfg()).count;
+            let mut dfs = DmDfs::new(App::Clique, k);
+            dfs.lanes = 128;
+            assert_eq!(dfs.run(&g).count, engine, "{} k={k} DM_DFS", g.name());
+            let pan = PangolinBfs::new(App::Clique, k).run(&g).unwrap().count;
+            assert_eq!(pan, engine, "{} k={k} pangolin", g.name());
+            let mut fra = FractalDfs::new(App::Clique, k);
+            fra.startup_seconds = 0.0;
+            assert_eq!(fra.run(&g).count, engine, "{} k={k} fractal", g.name());
+            let per = Peregrine::new(App::Clique, k).run(&g).unwrap().count;
+            assert_eq!(per, engine, "{} k={k} peregrine", g.name());
+        }
+    }
+}
+
+#[test]
+fn all_systems_agree_on_motif_censuses() {
+    for g in graphs() {
+        for k in 3..=4usize {
+            let mut engine = Runner::run(&g, &MotifCount::new(k), &cfg()).patterns;
+            engine.sort_unstable();
+            engine.retain(|&(_, c)| c > 0);
+
+            let mut dfs = DmDfs::new(App::Motif, k);
+            dfs.lanes = 128;
+            assert_eq!(dfs.run(&g).patterns, engine, "{} k={k} DM_DFS", g.name());
+
+            let pan = PangolinBfs::new(App::Motif, k).run(&g).unwrap().patterns;
+            assert_eq!(pan, engine, "{} k={k} pangolin", g.name());
+
+            let mut fra = FractalDfs::new(App::Motif, k);
+            fra.startup_seconds = 0.0;
+            assert_eq!(fra.run(&g).patterns, engine, "{} k={k} fractal", g.name());
+
+            let per = Peregrine::new(App::Motif, k).run(&g).unwrap().patterns;
+            assert_eq!(per, engine, "{} k={k} peregrine", g.name());
+        }
+    }
+}
+
+#[test]
+fn load_balancing_never_changes_results() {
+    for g in graphs() {
+        for threshold in [0.1, 0.4, 0.9] {
+            let base = Runner::run(&g, &CliqueCount::new(4), &cfg());
+            let mut lb_cfg = cfg();
+            lb_cfg.lb = Some(LbConfig::default().with_threshold(threshold));
+            let lb = Runner::run(&g, &CliqueCount::new(4), &lb_cfg);
+            assert_eq!(base.count, lb.count, "{} thr={threshold}", g.name());
+
+            let base_m = Runner::run(&g, &MotifCount::new(4), &cfg());
+            let lb_m = Runner::run(&g, &MotifCount::new(4), &lb_cfg);
+            assert_eq!(base_m.patterns, lb_m.patterns, "{} motifs", g.name());
+        }
+    }
+}
+
+#[test]
+fn warp_and_thread_counts_are_invariant() {
+    let g = generators::barabasi_albert(80, 4, 9);
+    let reference = Runner::run(&g, &CliqueCount::new(5), &cfg()).count;
+    for (warps, threads) in [(1, 1), (7, 3), (256, 8), (1024, 16)] {
+        let c = Runner::run(
+            &g,
+            &CliqueCount::new(5),
+            &EngineConfig {
+                warps,
+                threads,
+                ..Default::default()
+            },
+        )
+        .count;
+        assert_eq!(c, reference, "warps={warps} threads={threads}");
+    }
+}
+
+#[test]
+fn motif_total_equals_subset_identity() {
+    // sum over patterns of a k-census == number of connected induced
+    // k-subgraphs, cross-checked against pangolin's independent traversal
+    let g = generators::erdos_renyi(20, 0.3, 21);
+    let e = Runner::run(&g, &MotifCount::new(4), &cfg());
+    let total: u64 = e.patterns.iter().map(|&(_, c)| c).sum();
+    let p = PangolinBfs::new(App::Motif, 4).run(&g).unwrap();
+    assert_eq!(total, p.count);
+}
+
+#[test]
+fn deep_k_on_dense_graph() {
+    // k = 8 exercises the raw-bitmap pattern path and deep TE stacks
+    let g = generators::complete(12);
+    let r = Runner::run(&g, &CliqueCount::new(8), &cfg());
+    // C(12,8) = 495
+    assert_eq!(r.count, 495);
+    let m = Runner::run(&g, &MotifCount::new(8), &cfg());
+    assert_eq!(m.patterns.len(), 1); // only the 8-clique pattern
+    assert_eq!(m.patterns[0].1, 495);
+}

@@ -1,0 +1,124 @@
+//! Three-layer integration: AOT HLO artifacts (L1 Pallas kernels inside
+//! L2 jax functions) executed through the rust PJRT runtime must agree
+//! with the pure-rust engine on real graphs.
+//!
+//! These tests skip (pass trivially) when `artifacts/` has not been built;
+//! `make test` builds artifacts first so CI always exercises them.
+
+use dumato::apps::CliqueCount;
+use dumato::engine::{EngineConfig, Runner};
+use dumato::graph::generators;
+use dumato::runtime::{artifacts_dir, Manifest, XlaRuntime};
+
+fn runtime() -> Option<XlaRuntime> {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("artifacts not built; skipping runtime integration");
+        return None;
+    }
+    Some(XlaRuntime::new(&dir).expect("PJRT runtime"))
+}
+
+fn cfg() -> EngineConfig {
+    EngineConfig {
+        warps: 64,
+        threads: 4,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn manifest_covers_expected_artifacts() {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.txt").exists() {
+        return;
+    }
+    let m = Manifest::load(&dir).unwrap();
+    for name in [
+        "triangle_256",
+        "triangle_512",
+        "triangle_1024",
+        "motif3_256",
+        "intersect_1024x32",
+        "intersect_4096x32",
+        "intersect_1024x128",
+    ] {
+        assert!(m.find(name).is_some(), "missing artifact {name}");
+        assert!(m.find(name).unwrap().path.exists());
+    }
+}
+
+#[test]
+fn xla_triangles_match_engine_across_graph_families() {
+    let Some(mut rt) = runtime() else { return };
+    let graphs = vec![
+        generators::erdos_renyi(250, 0.04, 11),
+        generators::barabasi_albert(500, 4, 13),
+        generators::complete(40),
+        generators::cycle(300),
+        generators::CITESEER.scaled(0.2).generate(3),
+    ];
+    for g in graphs {
+        let xla = rt.triangle_count(&g).unwrap();
+        let eng = Runner::run(&g, &CliqueCount::new(3), &cfg()).count;
+        assert_eq!(xla, eng, "{}", g.name());
+    }
+}
+
+#[test]
+fn xla_motif3_closed_form_matches_engine() {
+    let Some(mut rt) = runtime() else { return };
+    let g = generators::barabasi_albert(400, 3, 17);
+    let (wedges, triangles) = rt.motif3_census(&g).unwrap();
+    let eng = Runner::run(&g, &dumato::apps::MotifCount::new(3), &cfg());
+    let mut eng_wedges = 0;
+    let mut eng_tris = 0;
+    for &(bm, c) in &eng.patterns {
+        if bm == 0b11 {
+            eng_tris = c;
+        } else {
+            eng_wedges = c;
+        }
+    }
+    assert_eq!(triangles, eng_tris);
+    assert_eq!(wedges, eng_wedges);
+}
+
+#[test]
+fn intersect_kernel_executes_batches_of_every_variant() {
+    let Some(mut rt) = runtime() else { return };
+    for (b, w) in [(1024, 32), (4096, 32), (1024, 128), (100, 16), (1, 1)] {
+        let cur: Vec<i32> = (0..b * w).map(|i| (i as i32).wrapping_mul(2246822519u32 as i32)).collect();
+        let nbr: Vec<i32> = (0..b * w).map(|i| (i as i32).wrapping_mul(-1640531527)).collect();
+        let (inter, counts) = rt.intersect_count(b, w, &cur, &nbr).unwrap();
+        assert_eq!(inter.len(), b * w);
+        assert_eq!(counts.len(), b);
+        for i in 0..b * w {
+            assert_eq!(inter[i], cur[i] & nbr[i], "({b},{w}) elem {i}");
+        }
+        for r in 0..b {
+            let want: u32 = (0..w)
+                .map(|c| (cur[r * w + c] & nbr[r * w + c]).count_ones())
+                .sum();
+            assert_eq!(counts[r] as u32, want, "({b},{w}) row {r}");
+        }
+    }
+}
+
+#[test]
+fn executables_are_cached_across_calls() {
+    let Some(mut rt) = runtime() else { return };
+    let g = generators::cycle(100);
+    let t0 = std::time::Instant::now();
+    let a = rt.triangle_count(&g).unwrap();
+    let first = t0.elapsed();
+    let t1 = std::time::Instant::now();
+    let b = rt.triangle_count(&g).unwrap();
+    let second = t1.elapsed();
+    assert_eq!(a, b);
+    // second call skips HLO parse + compile; it must be much faster
+    assert!(
+        second < first / 2,
+        "no caching? first={first:?} second={second:?}"
+    );
+}
