@@ -3,6 +3,8 @@
 //! - `lb-threshold` — the §V-A2 sensitivity analysis: rebalance threshold
 //!   sweep for clique and motif counting.
 //! - `compact`      — the optional Compact phase on/off (§IV-C3).
+//! - `arena`        — flat TE pool (Fig 3) vs the legacy scattered-vector
+//!   address model, on `gld_transactions` and simulated seconds.
 //! - `memory`       — DFS-wide TE footprint vs BFS frontier growth with k
 //!   (the §IV-B complexity argument, measured).
 //! - `warps`        — occupancy sweep around the paper's 172k-thread
@@ -19,7 +21,7 @@ mod support;
 use dumato::apps::{CliqueCount, MotifCount};
 use dumato::balance::LbConfig;
 use dumato::baselines::{App, PangolinBfs, PangolinError};
-use dumato::engine::{EngineConfig, Runner, Te};
+use dumato::engine::{EngineConfig, ExtLayout, Runner, TeArena};
 use dumato::graph::generators;
 use dumato::report::Table;
 use dumato::util::fmt_count;
@@ -81,6 +83,42 @@ fn compact() {
     println!("{}", t.render());
 }
 
+fn arena_layout() {
+    let g = generators::ASTROPH.scaled(support::scale()).generate(1);
+    let mut t = Table::new(
+        "Extensions-pool layout (flat Fig 3 arena vs legacy scattered vectors)",
+        &["app", "layout", "gld_transactions", "sim_time", "vs flat"],
+    );
+    for (name, app, k) in [("clique k=5", App::Clique, 5), ("motif k=4", App::Motif, 4)] {
+        let mut flat_gld = 0u64;
+        let mut flat_time = 0.0f64;
+        for layout in [ExtLayout::Flat, ExtLayout::Legacy] {
+            let mut cfg = support::engine_cfg();
+            cfg.layout = layout;
+            let m = match app {
+                App::Clique => Runner::run(&g, &CliqueCount::new(k), &cfg).metrics,
+                App::Motif => Runner::run(&g, &MotifCount::new(k), &cfg).metrics,
+            };
+            if layout == ExtLayout::Flat {
+                flat_gld = m.total_gld;
+                flat_time = m.sim_seconds;
+            }
+            t.row(vec![
+                name.to_string(),
+                format!("{layout:?}"),
+                fmt_count(m.total_gld),
+                format!("{:.4}", m.sim_seconds),
+                format!(
+                    "{:.2}x gld, {:.2}x time",
+                    m.total_gld as f64 / flat_gld.max(1) as f64,
+                    m.sim_seconds / flat_time.max(1e-12)
+                ),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+}
+
 fn memory() {
     let g = generators::ASTROPH.scaled(support::scale()).generate(1);
     let mut t = Table::new(
@@ -88,13 +126,9 @@ fn memory() {
         &["k", "TE bytes (DFS-wide)", "frontier bytes (BFS)", "ratio"],
     );
     for k in 3..=6usize {
-        // DFS-wide worst case: warps x (k levels x max_deg ext + tr)
-        let te_per_warp = {
-            let mut te = Te::new(k.max(3));
-            // upper bound: each level's ext at max degree
-            te.memory_bytes() + (k.saturating_sub(1)) * g.max_degree() * 4
-        };
-        let te_total = te_per_warp * support::warps();
+        // DFS-wide worst case: the whole flat pool for this run shape
+        // (size query only — no need to allocate hundreds of MB here)
+        let te_total = TeArena::pool_bytes(&g, k.max(3), support::warps());
         let mut p = PangolinBfs::new(App::Motif, k).with_budget(usize::MAX >> 1);
         p.time_limit = Some(support::budget());
         let frontier = match p.run(&g) {
@@ -152,6 +186,9 @@ fn main() {
     }
     if want("compact") {
         compact();
+    }
+    if want("arena") {
+        arena_layout();
     }
     if want("memory") {
         memory();

@@ -10,5 +10,5 @@
 pub mod policy;
 pub mod redistribute;
 
-pub use policy::LbConfig;
+pub use policy::{LbConfig, LbPolicy};
 pub use redistribute::redistribute;

@@ -1,15 +1,30 @@
-//! Load-balancing policy knobs (the paper's sensitivity analysis, §V-A2).
+//! Load-balancing policy: the monitor's stop decision behind a trait, so
+//! the scheduler is generic over *when* to stop a segment (the paper's
+//! threshold rule is one implementation; its sensitivity analysis, §V-A2,
+//! sweeps the knob).
 
 use std::time::Duration;
 
-/// Configuration of the CPU-side monitor + redistribute layer.
+/// The CPU-side monitor's policy (paper Fig 5 steps 1-3): how often to
+/// poll warp activity, and when to stop the running kernel segment so the
+/// redistribute step can run.
+pub trait LbPolicy: Sync {
+    /// Monitor polling period (the paper's CPU reads activity
+    /// "constantly and asynchronously").
+    fn poll_interval(&self) -> Duration;
+
+    /// Decide whether to stop the segment given the current activity.
+    fn should_stop(&self, active_warps: usize, total_warps: usize) -> bool;
+}
+
+/// Configuration of the CPU-side monitor + redistribute layer: the
+/// paper's activity-threshold policy.
 #[derive(Clone, Debug)]
 pub struct LbConfig {
     /// Rebalance when `active_warps < threshold * total_warps`.
     /// Paper optima: 0.40 for clique counting, 0.10 for motif counting.
     pub threshold: f64,
-    /// Monitor polling period (the paper's CPU reads activity
-    /// "constantly and asynchronously").
+    /// Monitor polling period.
     pub poll_interval: Duration,
 }
 
@@ -42,6 +57,16 @@ impl Default for LbConfig {
     }
 }
 
+impl LbPolicy for LbConfig {
+    fn poll_interval(&self) -> Duration {
+        self.poll_interval
+    }
+
+    fn should_stop(&self, active_warps: usize, total_warps: usize) -> bool {
+        active_warps > 0 && (active_warps as f64) < self.threshold * total_warps as f64
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -56,5 +81,15 @@ mod tests {
     fn builder_overrides() {
         let c = LbConfig::clique().with_threshold(0.25);
         assert_eq!(c.threshold, 0.25);
+    }
+
+    #[test]
+    fn threshold_policy_stop_rule() {
+        let p = LbConfig::clique(); // 40%
+        assert!(!p.should_stop(64, 64));
+        assert!(!p.should_stop(26, 64)); // 26 > 25.6
+        assert!(p.should_stop(25, 64)); // 25 < 25.6
+        // a fully drained run is the scheduler's natural exit, not a stop
+        assert!(!p.should_stop(0, 64));
     }
 }

@@ -69,6 +69,29 @@ mod tests {
         w
     }
 
+    /// Every pending unit of work across all warps, as the seed each unit
+    /// would become if donated: queued seeds, plus each valid extension e
+    /// at TE level l expanded to `tr[0..=l] ++ [e]`. A donation moves one
+    /// item between the two representations, so this multiset is a
+    /// redistribute invariant.
+    fn work_multiset(warps: &[WarpState]) -> Vec<Vec<u32>> {
+        let mut units: Vec<Vec<u32>> = Vec::new();
+        for w in warps {
+            units.extend(w.queue.iter().cloned());
+            for l in 0..w.te.len() {
+                for &e in w.te.ext_slice(l) {
+                    if e != crate::engine::INVALID_V {
+                        let mut s = w.te.traversal()[..=l].to_vec();
+                        s.push(e);
+                        units.push(s);
+                    }
+                }
+            }
+        }
+        units.sort_unstable();
+        units
+    }
+
     #[test]
     fn migrates_queued_seeds_to_idle() {
         let mut warps = vec![
@@ -97,15 +120,15 @@ mod tests {
         let g = generators::complete(8);
         let mut donor = WarpState::new(0, 5);
         donor.te.init_from_seed(&vec![0], &g, false);
-        donor.te.ext_at(0).items = vec![4, 5];
-        donor.te.ext_at(0).generated = true;
+        donor.te.set_ext(0, &[4, 5]);
+        donor.te.set_generated(0, true);
         let mut idle = WarpState::new(1, 5);
         idle.finished = true;
         let mut warps = vec![donor, idle];
         let n = redistribute(&mut warps);
         assert_eq!(n, 1);
         assert_eq!(warps[1].queue.front().unwrap(), &vec![0, 5]);
-        assert_eq!(warps[0].te.ext_at(0).valid_count(), 1);
+        assert_eq!(warps[0].te.live_count(0), 1);
     }
 
     #[test]
@@ -160,6 +183,94 @@ mod tests {
                         w.finished || w.has_work(),
                         "warp {} marked active without work",
                         w.id
+                    );
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn redistribution_preserves_work_multiset_including_subtrees() {
+        // The stronger invariant: no unit of pending work — queued seed or
+        // unexplored TE subtree — is lost, duplicated, or rewritten by the
+        // redistribute step, across randomized warp states.
+        check(
+            Config { cases: 48, ..Default::default() },
+            "redistribute preserves the expanded work multiset",
+            |rng| {
+                let gn = rng.range(12, 30);
+                let g = generators::erdos_renyi(gn, 0.3, rng.next_u64());
+                let k = rng.range(4, 7);
+                let nw = rng.range(2, 10);
+                let mut warps: Vec<WarpState> = (0..nw)
+                    .map(|i| {
+                        let mut w = WarpState::new(i, k);
+                        if rng.chance(0.35) {
+                            w.finished = true;
+                            return w;
+                        }
+                        for _ in 0..rng.range(0, 3) {
+                            w.queue.push_back(vec![rng.range(0, gn) as u32]);
+                        }
+                        if rng.chance(0.7) {
+                            // a mid-enumeration TE: consecutive-id prefix
+                            // (distinct vertices), random slabs below it
+                            let plen = rng.range(1, k - 1);
+                            let start = rng.range(0, gn);
+                            let seed: Vec<u32> =
+                                (0..plen).map(|j| ((start + j) % gn) as u32).collect();
+                            w.te.init_from_seed(&seed, &g, false);
+                            for l in 0..plen {
+                                if rng.chance(0.6) {
+                                    let m = rng.range(0, 5);
+                                    let items: Vec<u32> = (0..m)
+                                        .map(|_| {
+                                            if rng.chance(0.2) {
+                                                crate::engine::INVALID_V
+                                            } else {
+                                                rng.range(0, gn) as u32
+                                            }
+                                        })
+                                        .collect();
+                                    w.te.set_ext(l, &items);
+                                    w.te.set_generated(l, true);
+                                }
+                            }
+                        }
+                        if !w.has_work() {
+                            w.finished = true;
+                        }
+                        w
+                    })
+                    .collect();
+                let donors_with_one_unit: Vec<usize> = warps
+                    .iter()
+                    .filter(|w| !w.finished)
+                    .filter(|w| {
+                        let units = work_multiset(std::slice::from_ref(*w)).len();
+                        units <= 1
+                    })
+                    .map(|w| w.id)
+                    .collect();
+                let before = work_multiset(&warps);
+                redistribute(&mut warps);
+                let after = work_multiset(&warps);
+                crate::prop_assert_eq!(before, after, "work multiset changed");
+                for w in &warps {
+                    crate::prop_assert!(
+                        w.finished || w.has_work(),
+                        "warp {} active without work",
+                        w.id
+                    );
+                }
+                // a donator is never stripped of its last unit: warps that
+                // started with <= 1 unit still hold their work (an active
+                // TE with an empty queue also counts as the last unit)
+                for id in donors_with_one_unit {
+                    crate::prop_assert!(
+                        warps[id].has_work(),
+                        "warp {id} lost its last unit"
                     );
                 }
                 Ok(())

@@ -17,9 +17,19 @@
 //! (coefficient of variation). `gld` transactions never coalesce across
 //! lanes (different lanes stream different adjacency lists). DESIGN.md §2
 //! documents the calibration of the streaming window.
+//!
+//! Since the scheduler unification, the baseline has no drive loop of its
+//! own: lanes are scheduled as units of the same persistent work-stealing
+//! pool the engine uses (`engine::scheduler`, thread-centric mode = warp
+//! width 1, one seed root per quantum), which guarantees engine/baseline
+//! cost parity comes from execution-model differences only.
 
 use std::collections::HashMap;
+use std::sync::atomic::AtomicBool;
+use std::time::Instant;
 
+use crate::engine::scheduler::{self, SchedulerConfig, SegmentRunner};
+use crate::engine::segment::{SegmentControl, UnitTable};
 use crate::graph::{CsrGraph, VertexId};
 use crate::util::Timer;
 use crate::vgpu::{CostModel, KernelMetrics, WARP_SIZE};
@@ -39,6 +49,16 @@ struct LaneCost {
     glds: u64,
 }
 
+/// One GPU thread's state: the next seed root in its strided range plus
+/// its accumulators.
+#[derive(Debug, Default)]
+struct LaneState {
+    next: usize,
+    cost: LaneCost,
+    count: u64,
+    patterns: HashMap<u64, u64>,
+}
+
 /// DM_DFS runner configuration.
 pub struct DmDfs {
     pub app: App,
@@ -48,6 +68,8 @@ pub struct DmDfs {
     pub threads: usize,
     pub cost: CostModel,
     pub time_limit: Option<std::time::Duration>,
+    /// Work stealing between worker threads (shared scheduler knob).
+    pub steal: bool,
 }
 
 /// DM_DFS run result.
@@ -59,6 +81,41 @@ pub struct DmDfsReport {
     pub timed_out: bool,
 }
 
+/// Scheduler-facing view: the lane table in a `UnitTable` (the
+/// exclusivity unsafety lives in `engine::segment`); units are lanes
+/// (thread-centric mode: warp width 1, one seed per quantum).
+struct DfsRun<'a> {
+    dfs: &'a DmDfs,
+    g: &'a CsrGraph,
+    lanes: usize,
+    state: UnitTable<LaneState>,
+}
+
+impl SegmentRunner for DfsRun<'_> {
+    type Scratch = ();
+
+    fn make_scratch(&self) {}
+
+    fn run_quantum(&self, unit: usize, _scratch: &mut ()) -> bool {
+        // SAFETY: exclusive claim of `unit` per the scheduler contract.
+        let lane = unsafe { self.state.claim(unit) };
+        let n = self.g.num_vertices();
+        while lane.next < n && self.g.degree(lane.next as u32) == 0 {
+            lane.next += self.lanes;
+        }
+        if lane.next >= n {
+            return false;
+        }
+        let v = lane.next as VertexId;
+        match self.dfs.app {
+            App::Clique => self.dfs.clique_lane(self.g, v, &mut lane.count, &mut lane.cost),
+            App::Motif => self.dfs.motif_lane(self.g, v, &mut lane.patterns, &mut lane.cost),
+        }
+        lane.next += self.lanes;
+        lane.next < n
+    }
+}
+
 impl DmDfs {
     pub fn new(app: App, k: usize) -> Self {
         Self {
@@ -68,6 +125,7 @@ impl DmDfs {
             threads: std::thread::available_parallelism().map_or(4, |n| n.get()),
             cost: CostModel::default(),
             time_limit: None,
+            steal: true,
         }
     }
 
@@ -75,58 +133,46 @@ impl DmDfs {
         let wall = Timer::start();
         let lanes = self.lanes.max(WARP_SIZE);
         let warps = lanes / WARP_SIZE;
-        let deadline = self.time_limit.map(|d| std::time::Instant::now() + d);
-        let timed_out = std::sync::atomic::AtomicBool::new(false);
-
-        // lane id -> seeds dealt round-robin (same deal as the engine)
         let n = g.num_vertices();
-        let mut lane_costs = vec![LaneCost::default(); lanes];
-        let mut lane_counts = vec![0u64; lanes];
-        let mut lane_patterns: Vec<HashMap<u64, u64>> = vec![HashMap::new(); lanes];
 
-        std::thread::scope(|s| {
-            let chunk = lanes.div_ceil(self.threads.max(1));
-            let iter = lane_costs
-                .chunks_mut(chunk)
-                .zip(lane_counts.chunks_mut(chunk))
-                .zip(lane_patterns.chunks_mut(chunk))
-                .enumerate();
-            for (ci, ((costs, counts), patterns)) in iter {
-                let timed_out = &timed_out;
-                s.spawn(move || {
-                    let base = ci * chunk;
-                    for li in 0..costs.len() {
-                        if let Some(d) = deadline {
-                            if std::time::Instant::now() > d {
-                                timed_out.store(true, std::sync::atomic::Ordering::Relaxed);
-                                return;
-                            }
-                        }
-                        let lane = base + li;
-                        let mut v = lane;
-                        while v < n {
-                            if g.degree(v as u32) > 0 {
-                                match self.app {
-                                    App::Clique => self.clique_lane(
-                                        g,
-                                        v as u32,
-                                        &mut counts[li],
-                                        &mut costs[li],
-                                    ),
-                                    App::Motif => self.motif_lane(
-                                        g,
-                                        v as u32,
-                                        &mut patterns[li],
-                                        &mut costs[li],
-                                    ),
-                                }
-                            }
-                            v += lanes;
-                        }
-                    }
-                });
+        // Lane i owns seed roots {i, i + lanes, ...} — the same strided
+        // deal as before the scheduler unification.
+        let initial: Vec<usize> = (0..lanes.min(n)).collect();
+        let run = DfsRun {
+            dfs: self,
+            g,
+            lanes,
+            state: UnitTable::new(
+                (0..lanes)
+                    .map(|i| LaneState {
+                        next: i,
+                        ..Default::default()
+                    })
+                    .collect(),
+            ),
+        };
+        let stop = AtomicBool::new(false);
+        let sched_cfg = SchedulerConfig {
+            threads: self.threads.max(1),
+            steal: self.steal,
+            deadline: self.time_limit.map(|d| Instant::now() + d),
+            ..Default::default()
+        };
+        let outcome = scheduler::drive(&run, lanes, initial, &sched_cfg, None, &stop, |timed_out| {
+            if timed_out {
+                return SegmentControl::Done;
+            }
+            // SAFETY: workers are parked while this hook runs.
+            let live: Vec<usize> = (0..lanes.min(n))
+                .filter(|&i| unsafe { run.state.claim(i) }.next < n)
+                .collect();
+            if live.is_empty() {
+                SegmentControl::Done
+            } else {
+                SegmentControl::Continue(live)
             }
         });
+        let state: Vec<LaneState> = run.state.into_inner();
 
         // Warp-level aggregation with the divergence model.
         let mut metrics = KernelMetrics {
@@ -136,8 +182,8 @@ impl DmDfs {
         let mut total_cycles = 0.0f64;
         let mut max_cycles = 0.0f64;
         for w in 0..warps {
-            let lane_slice = &lane_costs[w * WARP_SIZE..(w + 1) * WARP_SIZE];
-            let insts: Vec<u64> = lane_slice.iter().map(|c| c.insts).collect();
+            let lane_slice = &state[w * WARP_SIZE..(w + 1) * WARP_SIZE];
+            let insts: Vec<u64> = lane_slice.iter().map(|l| l.cost.insts).collect();
             let sum: u64 = insts.iter().sum();
             let max = *insts.iter().max().unwrap();
             let mean = sum as f64 / WARP_SIZE as f64;
@@ -149,20 +195,27 @@ impl DmDfs {
             let cv = if mean > 0.0 { var.sqrt() / mean } else { 0.0 };
             let alpha = cv.clamp(0.35, 1.0);
             let warp_insts = max as f64 + alpha * (sum - max) as f64;
-            let warp_glds: u64 = lane_slice.iter().map(|c| c.glds).sum();
+            let warp_glds: u64 = lane_slice.iter().map(|l| l.cost.glds).sum();
             metrics.total_insts += warp_insts as u64;
             metrics.total_gld += warp_glds;
             let cycles = self.cost.warp_cycles(warp_insts as u64, warp_glds);
             total_cycles += cycles;
             max_cycles = max_cycles.max(cycles);
         }
-        metrics.segments = 1;
+        metrics.segments = outcome.segments;
+        metrics.steals = outcome.steals;
+        metrics.idle_worker_segments = outcome.idle_worker_segments;
+        metrics.thread_spawns = outcome.thread_spawns;
         metrics.sim_seconds = self.cost.segment_seconds(total_cycles, max_cycles);
         metrics.wall_seconds = wall.secs();
 
-        let count = lane_counts.iter().sum();
+        let count = state.iter().map(|l| l.count).sum();
         let patterns = if self.app == App::Motif {
-            let merged = crate::canon::cache::merge_pattern_counts(self.k, &lane_patterns);
+            // move the per-lane maps out — at paper scale that's 172k
+            // HashMaps we'd otherwise deep-clone just to merge
+            let locals: Vec<HashMap<u64, u64>> =
+                state.into_iter().map(|l| l.patterns).collect();
+            let merged = crate::canon::cache::merge_pattern_counts(self.k, &locals);
             let mut v: Vec<(u64, u64)> = merged.into_iter().collect();
             v.sort_unstable();
             v
@@ -173,7 +226,7 @@ impl DmDfs {
             count,
             patterns,
             metrics,
-            timed_out: timed_out.into_inner(),
+            timed_out: outcome.timed_out,
         }
     }
 
@@ -325,6 +378,29 @@ mod tests {
             v.sort_unstable();
             v
         });
+    }
+
+    #[test]
+    fn steal_toggle_does_not_change_counts() {
+        // the unified scheduler must be a pure execution detail
+        let g = generators::erdos_renyi(24, 0.3, 8);
+        let mut on = dfs(App::Clique, 4);
+        on.steal = true;
+        let mut off = dfs(App::Clique, 4);
+        off.steal = false;
+        let r_on = on.run(&g);
+        let r_off = off.run(&g);
+        assert_eq!(r_on.count, r_off.count);
+        // measured per-lane costs are scheduler-independent too
+        assert_eq!(r_on.metrics.total_gld, r_off.metrics.total_gld);
+    }
+
+    #[test]
+    fn lanes_are_driven_by_the_shared_pool() {
+        let g = generators::erdos_renyi(30, 0.3, 1);
+        let r = dfs(App::Clique, 3).run(&g);
+        assert_eq!(r.metrics.thread_spawns, 2, "scheduler pool size");
+        assert!(r.metrics.segments >= 1);
     }
 
     #[test]

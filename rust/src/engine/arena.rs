@@ -1,0 +1,297 @@
+//! Flat TE pool (paper Fig 3): one contiguous struct-of-arrays allocation
+//! per run holding every warp's per-level extensions slabs at fixed
+//! strides.
+//!
+//! Layout is level-major: all warps' level-`l` slabs are adjacent, each
+//! slab a fixed `caps[l]` words (rounded up to a warp-load, so each slab
+//! starts on a 128-byte transaction segment). The slabs have *real* base
+//! addresses in the vGPU address space — placed right after the CSR
+//! arrays — so `vgpu::coalesce` charges Filter/Compact/Aggregate reads of
+//! the extensions arrays from the actual layout instead of synthetic
+//! transaction counts.
+//!
+//! [`ExtLayout::Legacy`] keeps the same physical storage but reports the
+//! pre-refactor address model (one heap vector per warp and level:
+//! scattered, unaligned) so the layout win is measurable as an ablation
+//! (`cargo bench --bench ablations -- arena`).
+
+use crate::graph::CsrGraph;
+use crate::graph::VertexId;
+use crate::vgpu::{SEGMENT_BYTES, WARP_SIZE};
+
+use super::te::Te;
+
+/// Address model for the extensions slabs.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ExtLayout {
+    /// One contiguous pool, every slab aligned to a 128-byte segment
+    /// (the paper's Fig 3 layout; the engine default).
+    #[default]
+    Flat,
+    /// Pre-refactor model: per-(warp, level) heap vectors at scattered,
+    /// unaligned addresses. Storage is still the pool; only the addresses
+    /// fed to the coalescing model differ. Ablation baseline.
+    Legacy,
+}
+
+/// One warp's view of one level slab, handed to [`Te`] at bind time.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct LevelSlab {
+    pub ptr: *mut VertexId,
+    pub cap: usize,
+    /// Device byte address of slot 0 (what the coalescing model sees).
+    pub addr: usize,
+}
+
+/// The arena: owns the pool allocation and the layout arithmetic. All
+/// mutation of the pool happens through the [`Te`] handles produced by
+/// [`TeArena::bind_all`]; the arena itself only keeps the storage alive
+/// and answers layout queries.
+pub struct TeArena {
+    k: usize,
+    num_warps: usize,
+    layout: ExtLayout,
+    /// Words per (warp, level) slab, indexed by level; WARP_SIZE multiple.
+    caps: Vec<usize>,
+    /// Word offset of level `l`'s block (all warps) within the pool.
+    level_base: Vec<usize>,
+    /// Device byte address of pool word 0 (128-byte aligned).
+    base_addr: usize,
+    buf: Box<[VertexId]>,
+    bound: bool,
+}
+
+impl TeArena {
+    /// Slab capacities for a run on `g`, warp-load rounded: level `l`
+    /// extends a prefix of `l + 1` vertices, so its extensions are at
+    /// most the union of `l + 1` neighborhoods — bounded by
+    /// `(l+1) * max_degree` and by `|V| - 1` (extensions exclude the
+    /// traversal itself). Single source of truth for both the real
+    /// allocation and the allocation-free size query.
+    fn run_level_caps(g: &CsrGraph, k: usize) -> Vec<usize> {
+        let n = g.num_vertices();
+        (0..k.saturating_sub(1))
+            .map(|l| {
+                ((l + 1) * g.max_degree())
+                    .min(n.saturating_sub(1))
+                    .max(1)
+                    .div_ceil(WARP_SIZE)
+                    * WARP_SIZE
+            })
+            .collect()
+    }
+
+    pub fn for_graph(g: &CsrGraph, k: usize, num_warps: usize, layout: ExtLayout) -> Self {
+        // The pool sits right after the CSR arrays in the flat device
+        // address space, aligned to a transaction segment.
+        let base_addr = g.memory_bytes().div_ceil(SEGMENT_BYTES) * SEGMENT_BYTES;
+        Self::new(k, num_warps, &Self::run_level_caps(g, k), base_addr, layout)
+    }
+
+    pub fn new(
+        k: usize,
+        num_warps: usize,
+        level_caps: &[usize],
+        base_addr: usize,
+        layout: ExtLayout,
+    ) -> Self {
+        assert!(k >= 3, "k must be >= 3");
+        assert!(num_warps >= 1, "need at least one warp");
+        assert_eq!(level_caps.len(), k - 1, "one capacity per extension level");
+        assert_eq!(base_addr % SEGMENT_BYTES, 0, "pool base must be segment-aligned");
+        let caps: Vec<usize> = level_caps
+            .iter()
+            .map(|&c| c.max(1).div_ceil(WARP_SIZE) * WARP_SIZE)
+            .collect();
+        let mut level_base = Vec::with_capacity(caps.len());
+        let mut off = 0usize;
+        for &c in &caps {
+            level_base.push(off);
+            off += num_warps * c;
+        }
+        let buf = vec![super::te::INVALID_V; off].into_boxed_slice();
+        Self {
+            k,
+            num_warps,
+            layout,
+            caps,
+            level_base,
+            base_addr,
+            buf,
+            bound: false,
+        }
+    }
+
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    #[inline]
+    pub fn num_warps(&self) -> usize {
+        self.num_warps
+    }
+
+    #[inline]
+    pub fn layout(&self) -> ExtLayout {
+        self.layout
+    }
+
+    /// Word offset of `(warp, level)`'s slab within the pool.
+    #[inline]
+    fn word_off(&self, warp: usize, level: usize) -> usize {
+        self.level_base[level] + warp * self.caps[level]
+    }
+
+    /// Device byte address of `(warp, level)`'s slab under the configured
+    /// address model.
+    pub fn ext_addr(&self, warp: usize, level: usize) -> usize {
+        let word_off = self.word_off(warp, level);
+        match self.layout {
+            // Contiguous pool: slab starts are WARP_SIZE-word multiples,
+            // i.e. 128-byte aligned — a full warp load is one transaction.
+            ExtLayout::Flat => self.base_addr + word_off * 4,
+            // Heap-vector model: every slab its own allocation, pushed off
+            // 128-byte alignment by a per-slab stagger so warp loads
+            // straddle segments. Doubling the offsets leaves >= 4*cap
+            // bytes of slack before the next slab, and the stagger is
+            // kept below one segment (mod 128 <= 4*WARP_SIZE*4), so the
+            // regions stay disjoint.
+            ExtLayout::Legacy => {
+                let slab_id = warp * (self.k - 1) + level;
+                self.base_addr + word_off * 8 + (slab_id * 40 + 4) % SEGMENT_BYTES
+            }
+        }
+    }
+
+    /// Total pool bytes (the DFS-wide memory footprint of Table/§IV-B
+    /// arguments, and the upper bound on an LB full-pool copy).
+    pub fn memory_bytes(&self) -> usize {
+        self.buf.len() * std::mem::size_of::<VertexId>()
+    }
+
+    /// What [`memory_bytes`](Self::memory_bytes) would be for this run
+    /// shape, without allocating the pool (memory ablations sweep k at
+    /// paper-scale warp counts — hundreds of MB — just to read the size).
+    pub fn pool_bytes(g: &CsrGraph, k: usize, num_warps: usize) -> usize {
+        Self::run_level_caps(g, k).iter().sum::<usize>()
+            * num_warps
+            * std::mem::size_of::<VertexId>()
+    }
+
+    /// Pool bytes belonging to one warp.
+    pub fn warp_bytes(&self) -> usize {
+        self.caps.iter().sum::<usize>() * std::mem::size_of::<VertexId>()
+    }
+
+    /// Carve the pool into one [`Te`] handle per warp. Callable once.
+    ///
+    /// # Safety
+    ///
+    /// The handles hold raw pointers into the pool with no lifetime tie:
+    /// the caller must keep this arena alive (and unmoved) until every
+    /// returned handle is dropped, and must hand each handle to at most
+    /// one thread at a time (the scheduler's warp-exclusivity contract).
+    pub unsafe fn bind_all(&mut self) -> Vec<Te> {
+        assert!(!self.bound, "arena already bound");
+        self.bound = true;
+        let base = self.buf.as_mut_ptr();
+        (0..self.num_warps)
+            .map(|w| {
+                let slabs: Vec<LevelSlab> = (0..self.k - 1)
+                    .map(|l| LevelSlab {
+                        // SAFETY: word_off(w, l) + caps[l] <= buf.len() by
+                        // construction; slabs of distinct (w, l) are
+                        // disjoint.
+                        ptr: unsafe { base.add(self.word_off(w, l)) },
+                        cap: self.caps[l],
+                        addr: self.ext_addr(w, l),
+                    })
+                    .collect();
+                Te::bound(self.k, &slabs)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn flat_slabs_are_segment_aligned_and_disjoint() {
+        let a = TeArena::new(5, 4, &[10, 20, 30, 40], 1024, ExtLayout::Flat);
+        let mut seen = Vec::new();
+        for w in 0..4 {
+            for l in 0..4 {
+                let addr = a.ext_addr(w, l);
+                assert_eq!(addr % SEGMENT_BYTES, 0, "w={w} l={l}");
+                seen.push((addr, a.caps[l] * 4));
+            }
+        }
+        seen.sort_unstable();
+        for pair in seen.windows(2) {
+            assert!(pair[0].0 + pair[0].1 <= pair[1].0, "overlap: {pair:?}");
+        }
+    }
+
+    #[test]
+    fn legacy_slabs_are_misaligned_and_disjoint() {
+        let a = TeArena::new(4, 3, &[16, 32, 48], 0, ExtLayout::Legacy);
+        let mut seen = Vec::new();
+        let mut misaligned = 0;
+        for w in 0..3 {
+            for l in 0..3 {
+                let addr = a.ext_addr(w, l);
+                if addr % SEGMENT_BYTES != 0 {
+                    misaligned += 1;
+                }
+                seen.push((addr, a.caps[l] * 4));
+            }
+        }
+        assert!(misaligned > 6, "legacy layout should rarely be aligned");
+        seen.sort_unstable();
+        for pair in seen.windows(2) {
+            assert!(pair[0].0 + pair[0].1 <= pair[1].0, "overlap: {pair:?}");
+        }
+    }
+
+    #[test]
+    fn for_graph_caps_track_degree_and_vertex_count() {
+        let g = generators::complete(8); // max_degree 7, n 8
+        let a = TeArena::for_graph(&g, 4, 2, ExtLayout::Flat);
+        // true caps min((l+1)*7, 7) = 7, rounded to a warp load
+        assert_eq!(a.caps, vec![32, 32, 32]);
+        assert_eq!(a.memory_bytes(), 2 * 3 * 32 * 4);
+        // the allocation-free size query agrees with the real pool
+        assert_eq!(TeArena::pool_bytes(&g, 4, 2), a.memory_bytes());
+    }
+
+    #[test]
+    fn bind_all_hands_out_working_handles() {
+        let g = generators::complete(6);
+        let mut a = TeArena::for_graph(&g, 4, 2, ExtLayout::Flat);
+        // SAFETY: `a` outlives the handles; single-threaded test.
+        let mut tes = unsafe { a.bind_all() };
+        assert_eq!(tes.len(), 2);
+        tes[0].init_from_seed(&vec![0], &g, false);
+        tes[0].set_ext(0, &[3, 4, 5]);
+        tes[1].init_from_seed(&vec![1], &g, false);
+        tes[1].set_ext(0, &[2]);
+        // disjoint slabs: warp 1's write didn't clobber warp 0
+        assert_eq!(tes[0].ext_vec(0), vec![3, 4, 5]);
+        assert_eq!(tes[0].live_count(0), 3);
+        assert_eq!(tes[1].ext_vec(0), vec![2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "already bound")]
+    fn double_bind_is_rejected() {
+        let g = generators::complete(4);
+        let mut a = TeArena::for_graph(&g, 3, 1, ExtLayout::Flat);
+        // SAFETY: `a` outlives the handles; single-threaded test.
+        let _t = unsafe { a.bind_all() };
+        let _t2 = unsafe { a.bind_all() };
+    }
+}

@@ -9,10 +9,17 @@
 //! - `compact`  (ballot/prefix-sum compaction)               [CP]
 //! - `aggregate_counter` / `aggregate_pattern` / `aggregate_store`
 //!   ([A1] / [A2] / [A3])
+//!
+//! Extensions live in the run's flat arena (Fig 3); every phase that
+//! streams an extensions slab charges coalesced transactions against the
+//! slab's *real* device address (`Te::ext_base_addr`), so the layout —
+//! flat pool vs. the legacy scattered-vector model — shows up directly in
+//! `gld_transactions`.
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::Ordering;
 
+use crate::canon::bitmap::MAX_K;
 use crate::graph::{CsrGraph, VertexId};
 use crate::vgpu::{WarpProfiler, WARP_SIZE};
 
@@ -123,13 +130,41 @@ pub struct WarpContext<'a> {
     pub shared: &'a SharedRun,
     pub scratch: &'a mut ThreadScratch,
     /// Segment-cycle ceiling for this scheduling round (quantum). The
-    /// runner round-robins warps in quanta so all warps of a segment
+    /// scheduler round-robins warps in quanta so all warps of a segment
     /// progress quasi-concurrently, as they would on the GPU; `INFINITY`
     /// disables preemption (unit tests).
     pub quantum_limit: f64,
 }
 
 impl<'a> WarpContext<'a> {
+    /// The written portion of `level`'s slab as a mutable slice, aliasing
+    /// `self.te`'s raw slab pointer.
+    ///
+    /// SAFETY contract (upheld by every caller below): the slice is used
+    /// only within the phase body, the phase holds the warp exclusively,
+    /// and concurrent `&Te` reads touch traversal metadata — never the
+    /// slab memory reachable only through the raw pointer.
+    #[inline]
+    fn ext_items_mut(&self, level: usize) -> &'a mut [VertexId] {
+        let (ptr, len) = self.te.ext_raw(level);
+        unsafe { std::slice::from_raw_parts_mut(ptr, len) }
+    }
+
+    /// Charge the coalesced read of `level`'s written slab: one warp load
+    /// per 32-word chunk, from the slab's real device address. Every
+    /// slab-streaming phase funnels through this so the charging model
+    /// has exactly one definition.
+    fn charge_slab_read(&mut self, level: usize) {
+        let base = self.te.ext_base_addr(level);
+        let len = self.te.ext_len(level);
+        let mut off = 0usize;
+        while off < len {
+            let words = WARP_SIZE.min(len - off);
+            self.prof.gld_contiguous(base + off * 4, words);
+            off += words;
+        }
+    }
+
     // ------------------------------------------------------------------
     // [CT] Control: keep the workflow alive while traversals remain.
     // ------------------------------------------------------------------
@@ -164,7 +199,14 @@ impl<'a> WarpContext<'a> {
         let k = self.te.k();
         if self.te.len() < k - 1 {
             self.prof.sisd(); // branch test
-            if let Some(e) = self.te.cur_ext().pop_valid() {
+            let level = self.te.cur_level();
+            let tail = self.te.ext_len(level);
+            if tail > 0 {
+                // the head-slot read is a real global load from the slab
+                self.prof
+                    .gld_contiguous(self.te.ext_base_addr(level) + (tail - 1) * 4, 1);
+            }
+            if let Some(e) = self.te.pop_valid_cur() {
                 self.prof.sisd(); // pop + tr write
                 self.te.push_vertex(e, self.g, genedges);
                 if genedges {
@@ -184,32 +226,36 @@ impl<'a> WarpContext<'a> {
     // [EX] Extend (paper Alg 2): warp-centric BFS step.
     //
     // Generates the current level's extensions from the adjacency of
-    // tr[start..end]. Candidates already in the traversal or already
-    // generated are rejected. All reads of an adjacency list are
-    // coalesced 32-word warp loads; the traversal/extension membership
-    // scans are lockstep broadcasts charged to the instruction counter.
+    // tr[start..end] straight into the level's arena slab. Candidates
+    // already in the traversal or already generated are rejected. All
+    // reads of an adjacency list are coalesced 32-word warp loads; the
+    // traversal/extension membership scans are lockstep broadcasts
+    // charged to the instruction counter.
     // Returns true when extensions were (newly) generated.
     // ------------------------------------------------------------------
     pub fn extend(&mut self, start: usize, end: usize) -> bool {
         debug_assert!(start < end && end <= self.te.len());
         self.prof.sisd(); // fetch level + generated test (Alg 2 line 2-3)
-        if self.te.cur_ext_ref().generated {
+        let len = self.te.len();
+        let level = len - 1;
+        if self.te.generated(level) {
             return false;
         }
-        let len = self.te.len();
         self.scratch.begin();
-        for p in 0..len {
-            self.scratch.mark(self.te.vertex(p));
+        let mut trav = [INVALID_V; MAX_K];
+        trav[..len].copy_from_slice(self.te.traversal());
+        for &v in &trav[..len] {
+            self.scratch.mark(v);
         }
-        let level = len - 1;
         // Single-source extends (cliques) read one sorted adjacency list:
         // candidates are unique, so the in-extensions lockstep scan of
         // Alg 2 line 7 is skipped (and not charged).
         let multi_source = end - start > 1;
-        let mut out: Vec<VertexId> = std::mem::take(&mut self.te.ext_at(level).items);
-        out.clear();
-        for pos in start..end {
-            let v = self.te.vertex(pos);
+        let (ptr, cap) = self.te.ext_raw_cap(level);
+        // SAFETY: see `ext_items_mut` — exclusive slab, phase-local use.
+        let out = unsafe { std::slice::from_raw_parts_mut(ptr, cap) };
+        let mut n = 0usize;
+        for &v in &trav[start..end] {
             self.prof.sisd(); // broadcast vertex id (Alg 2 line 4)
             let adj = self.g.neighbors(v);
             let mut offset = 0usize;
@@ -222,22 +268,29 @@ impl<'a> WarpContext<'a> {
                 // compare per traversal vertex and per existing extension
                 self.prof.simd_n(len as u64);
                 if multi_source {
-                    self.prof.simd_n((out.len() as u64).max(1));
+                    self.prof.simd_n((n as u64).max(1));
                 }
                 // select + coalesced write (lines 8-9)
                 self.prof.simd(chunk.len());
                 for &e in chunk {
                     if !self.scratch.seen(e) {
                         self.scratch.mark(e);
-                        out.push(e);
+                        assert!(
+                            n < out.len(),
+                            "extension slab overflow at level {level} (cap {}): arena caps \
+                             are degree-derived and cannot overflow, but standalone TEs \
+                             default to a small slab — use Te::standalone(k, cap) sized \
+                             for the graph",
+                            out.len()
+                        );
+                        out[n] = e;
+                        n += 1;
                     }
                 }
                 offset += WARP_SIZE;
             }
         }
-        let lvl = self.te.ext_at(level);
-        lvl.items = out;
-        lvl.generated = true;
+        self.te.finish_ext(level, n);
         self.prof.sisd(); // return flag
         true
     }
@@ -250,27 +303,43 @@ impl<'a> WarpContext<'a> {
     // repeatedly bisect the *same* traversal's adjacency lists across
     // consecutive chunks — those lines are cache-hot, so a probe costs
     // one transaction per chunk (vs. the cold per-lane probes of
-    // Aggregate; see EXPERIMENTS.md §Table V for the calibration).
+    // Aggregate; see EXPERIMENTS.md §Table V for the calibration). The
+    // chunk itself is a coalesced read of the extensions slab, charged
+    // from its actual address.
     // ------------------------------------------------------------------
+    /// `keep` is meant to read the graph and the traversal side of the TE
+    /// (`vertex`/`len`/`traversal`/`edges_bitmap`); all shipped properties
+    /// (`api::properties`) do exactly that. The current level is *hidden*
+    /// (reported empty) while the predicate runs — the same protection the
+    /// pre-arena `mem::take` gave — so a predicate that does peek at
+    /// `ext_slice` sees an empty slab instead of aliasing the slice being
+    /// rewritten underneath it.
     pub fn filter<F>(&mut self, cost: (u64, u64), keep: F)
     where
         F: Fn(&CsrGraph, &Te, VertexId) -> bool,
     {
         self.prof.sisd(); // fetch extensions array
-        let level = self.te.len() - 1;
-        let mut items = std::mem::take(&mut self.te.ext_at(level).items);
+        let level = self.te.cur_level();
+        // coalesced read of the slab + per-chunk property cost + write-back
+        self.charge_slab_read(level);
+        let (ptr, len) = self.te.ext_raw(level);
+        let live = self.te.live_count(level);
+        self.te.set_ext_len(level, 0, 0); // hide from the predicate
+        // SAFETY: see `ext_items_mut` — exclusive slab, phase-local use.
+        let items = unsafe { std::slice::from_raw_parts_mut(ptr, len) };
+        let mut invalidated = 0usize;
         for chunk in items.chunks_mut(WARP_SIZE) {
-            // coalesced read of the chunk + property cost + write-back
             self.prof.simd(chunk.len());
             self.prof.simd_n(cost.0);
             self.prof.gld_raw(cost.1);
             for e in chunk.iter_mut() {
                 if *e != INVALID_V && !keep(self.g, self.te, *e) {
                     *e = INVALID_V;
+                    invalidated += 1;
                 }
             }
         }
-        self.te.ext_at(level).items = items;
+        self.te.set_ext_len(level, len, live - invalidated);
     }
 
     // ------------------------------------------------------------------
@@ -286,8 +355,10 @@ impl<'a> WarpContext<'a> {
         let len = self.te.len();
         let level = len - 1;
         self.scratch.ensure_marked(self.g, self.te);
-        let mut items = std::mem::take(&mut self.te.ext_at(level).items);
+        self.charge_slab_read(level);
+        let items = self.ext_items_mut(level);
         let v0 = self.te.vertex(0);
+        let mut invalidated = 0usize;
         for chunk in items.chunks_mut(WARP_SIZE) {
             self.prof.simd(chunk.len());
             self.prof.simd_n(2 * len as u64);
@@ -304,10 +375,11 @@ impl<'a> WarpContext<'a> {
                 };
                 if !keep {
                     *e = INVALID_V;
+                    invalidated += 1;
                 }
             }
         }
-        self.te.ext_at(level).items = items;
+        self.te.note_invalidated(level, invalidated);
     }
 
     // ------------------------------------------------------------------
@@ -315,23 +387,38 @@ impl<'a> WarpContext<'a> {
     // ------------------------------------------------------------------
     pub fn compact(&mut self) {
         self.prof.sisd();
-        let level = self.te.len() - 1;
-        let items = &mut self.te.ext_at(level).items;
-        // ballot + scan + scatter: ~3 lockstep steps per chunk
+        let level = self.te.cur_level();
+        // ballot + scan + scatter: ~3 lockstep steps per chunk, reading
+        // the slab coalesced
+        self.charge_slab_read(level);
         self.prof
-            .simd_n(3 * (items.len() as u64).div_ceil(WARP_SIZE as u64));
-        items.retain(|&e| e != INVALID_V);
+            .simd_n(3 * (self.te.ext_len(level) as u64).div_ceil(WARP_SIZE as u64));
+        let items = self.ext_items_mut(level);
+        // in-place, order-preserving compaction of the slab
+        let mut w = 0usize;
+        for r in 0..items.len() {
+            let v = items[r];
+            if v != INVALID_V {
+                items[w] = v;
+                w += 1;
+            }
+        }
+        self.te.set_ext_len(level, w, w);
     }
 
     // ------------------------------------------------------------------
     // [A1] aggregate_counter: count valid extensions of a (k-1)-traversal.
+    // The live counter makes the CPU-side count O(1); the charge models
+    // the warp ballot over the slab, which reads it coalesced from its
+    // actual address like every other slab-streaming phase.
     // ------------------------------------------------------------------
     pub fn aggregate_counter(&mut self) {
         debug_assert_eq!(self.te.len(), self.te.k() - 1);
-        let lvl = self.te.cur_ext_ref();
+        let level = self.te.cur_level();
         self.prof
-            .simd_n((lvl.items.len() as u64).div_ceil(WARP_SIZE as u64).max(1));
-        self.agg.count += lvl.valid_count() as u64;
+            .simd_n((self.te.ext_len(level) as u64).div_ceil(WARP_SIZE as u64).max(1));
+        self.charge_slab_read(level);
+        self.agg.count += self.te.live_count(level) as u64;
     }
 
     // ------------------------------------------------------------------
@@ -347,26 +434,31 @@ impl<'a> WarpContext<'a> {
     pub fn aggregate_pattern(&mut self) {
         debug_assert_eq!(self.te.len(), self.te.k() - 1);
         let len = self.te.len();
-        let base = self.te.edges_bitmap();
+        let base_bm = self.te.edges_bitmap();
         let level = len - 1;
-        let items = std::mem::take(&mut self.te.ext_at(level).items);
         // warp-parallel relabeling: 32 extensions per lockstep pass.
         // Instructions are per-chunk (broadcast compares); the relabeling
         // probes for 32 candidates against one prefix vertex's list
         // partially coalesce; the chunk-level charge is the fitted
-        // mid-point (EXPERIMENTS.md §Table V).
-        let valid = items.iter().filter(|&&e| e != INVALID_V).count();
+        // mid-point (EXPERIMENTS.md §Table V). The slab itself is read
+        // coalesced from its actual address.
+        let valid = self.te.live_count(level);
         let chunks = (valid as u64).div_ceil(WARP_SIZE as u64);
         self.prof.simd_n(chunks * (len as u64 + 1));
         self.prof.gld_raw(chunks * (len as u64 + 1));
+        self.charge_slab_read(level);
         // O(1) adjacency probes: the extension's edge bits vs the whole
         // traversal are one masked shift of its adj_bits entry
         self.scratch.ensure_marked(self.g, self.te);
         let shift = crate::canon::bitmap::level_offset(len);
         let mask = (1u16 << len) - 1;
-        for &e in items.iter().filter(|&&e| e != INVALID_V) {
+        for i in 0..self.te.ext_len(level) {
+            let e = self.te.ext_slice(level)[i];
+            if e == INVALID_V {
+                continue;
+            }
             let bits = ((self.scratch.adj_bits[e as usize] & mask) as u64) << shift;
-            let bitmap = base | bits;
+            let bitmap = base_bm | bits;
             match &self.shared.dict {
                 Some(dict) => {
                     let id = dict.pattern_id(bitmap);
@@ -381,7 +473,6 @@ impl<'a> WarpContext<'a> {
                 }
             }
         }
-        self.te.ext_at(level).items = items;
     }
 
     // ------------------------------------------------------------------
@@ -391,26 +482,29 @@ impl<'a> WarpContext<'a> {
     pub fn aggregate_store(&mut self) {
         debug_assert_eq!(self.te.len(), self.te.k() - 1);
         let len = self.te.len();
-        let base = self.te.edges_bitmap();
+        let base_bm = self.te.edges_bitmap();
         let level = len - 1;
-        let items = std::mem::take(&mut self.te.ext_at(level).items);
-        let valid = items.iter().filter(|&&e| e != INVALID_V).count();
+        let valid = self.te.live_count(level);
         let chunks = (valid as u64).div_ceil(WARP_SIZE as u64);
         self.prof.simd_n(chunks * (len as u64 + 1));
         self.prof.gld_raw(chunks * (len as u64 + 1));
+        self.charge_slab_read(level);
         self.scratch.ensure_marked(self.g, self.te);
         let shift = crate::canon::bitmap::level_offset(len);
         let mask = (1u16 << len) - 1;
-        for &e in items.iter().filter(|&&e| e != INVALID_V) {
+        for i in 0..self.te.ext_len(level) {
+            let e = self.te.ext_slice(level)[i];
+            if e == INVALID_V {
+                continue;
+            }
             let bits = ((self.scratch.adj_bits[e as usize] & mask) as u64) << shift;
             let mut vertices = self.te.traversal().to_vec();
             vertices.push(e);
             self.agg.stored.push(StoredSubgraph {
                 vertices,
-                edges_bitmap: base | bits,
+                edges_bitmap: base_bm | bits,
             });
         }
-        self.te.ext_at(level).items = items;
     }
 }
 
@@ -420,7 +514,10 @@ mod tests {
     use crate::engine::runner::SharedRun;
     use crate::graph::generators;
 
-    fn harness(g: &CsrGraph, k: usize) -> (Te, VecDeque<Seed>, WarpProfiler, Aggregators, SharedRun, ThreadScratch) {
+    fn harness(
+        g: &CsrGraph,
+        k: usize,
+    ) -> (Te, VecDeque<Seed>, WarpProfiler, Aggregators, SharedRun, ThreadScratch) {
         (
             Te::new(k),
             VecDeque::new(),
@@ -468,9 +565,11 @@ mod tests {
         c.te.push_vertex(1, &g, false);
         // union of N(0) and N(1) minus {0,1} = {2,3,4,5}
         assert!(c.extend(0, 2));
-        let mut items = c.te.cur_ext_ref().items.clone();
+        let level = c.te.cur_level();
+        let mut items = c.te.ext_vec(level);
         items.sort_unstable();
         assert_eq!(items, vec![2, 3, 4, 5]);
+        assert_eq!(c.te.live_count(level), 4);
         // second call: already generated
         assert!(!c.extend(0, 2));
     }
@@ -483,7 +582,7 @@ mod tests {
         let mut c = ctx!(&g, h);
         assert!(c.control());
         assert!(c.extend(0, 1));
-        let mut items = c.te.cur_ext_ref().items.clone();
+        let mut items = c.te.ext_vec(c.te.cur_level());
         items.sort_unstable();
         assert_eq!(items, vec![1, 3]);
     }
@@ -497,12 +596,12 @@ mod tests {
         assert!(c.control());
         assert!(c.extend(0, 1));
         c.filter((1, 0), |_, te, e| e > te.last_vertex());
-        let valid = c.te.cur_ext_ref().valid_count();
-        assert_eq!(valid, 4); // {4,5,6,7}
-        let before = c.te.cur_ext_ref().items.len();
-        assert_eq!(before, 7);
+        let level = c.te.cur_level();
+        assert_eq!(c.te.live_count(level), 4); // {4,5,6,7}
+        assert_eq!(c.te.ext_len(level), 7);
         c.compact();
-        assert_eq!(c.te.cur_ext_ref().items.len(), 4);
+        assert_eq!(c.te.ext_len(level), 4);
+        assert_eq!(c.te.live_count(level), 4);
     }
 
     #[test]
@@ -526,15 +625,15 @@ mod tests {
         let mut c = ctx!(&g, h);
         assert!(c.control());
         assert!(c.extend(0, 1));
-        let n_ext = c.te.cur_ext_ref().items.len();
-        assert_eq!(n_ext, 4);
+        assert_eq!(c.te.ext_len(0), 4);
         c.move_(false); // forward
         assert_eq!(c.te.len(), 2);
         // exhaust: new level, no extensions generated -> mark empty
-        c.te.cur_ext().generated = true;
+        let l = c.te.cur_level();
+        c.te.set_generated(l, true);
         c.move_(false); // backward (empty ext at level 1)
         assert_eq!(c.te.len(), 1);
-        assert_eq!(c.te.cur_ext_ref().items.len(), 3);
+        assert_eq!(c.te.ext_len(0), 3);
     }
 
     #[test]
@@ -578,5 +677,20 @@ mod tests {
         assert!(!c.control());
         // seed still queued: checkpoint kept work
         assert_eq!(c.queue.len(), 1);
+    }
+
+    #[test]
+    fn slab_reads_charge_real_addresses() {
+        // a filter pass over n extensions must charge at least one slab
+        // transaction per 32-wide chunk (the coalesced read of the chunk)
+        let g = generators::complete(8);
+        let mut h = harness(&g, 4);
+        h.1.push_back(vec![0]);
+        let mut c = ctx!(&g, h);
+        assert!(c.control());
+        assert!(c.extend(0, 1)); // 7 extensions
+        let before = c.prof.gld_transactions;
+        c.filter((1, 0), |_, _, _| true);
+        assert!(c.prof.gld_transactions > before, "filter charged no slab read");
     }
 }

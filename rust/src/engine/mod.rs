@@ -1,21 +1,42 @@
 //! The DuMato engine: DFS-wide subgraph exploration executed by virtual
-//! warps (paper §IV).
+//! warps (paper §IV), structured as three explicit layers.
 //!
-//! - `te.rs` — the Traversal Enumeration state (Fig 3): current traversal,
-//!   per-level extension arrays, induced-edge bitmaps.
+//! Storage:
+//! - `arena.rs` — the flat TE pool (Fig 3): fixed-stride per-level
+//!   extension slabs in one contiguous allocation per run, with real base
+//!   addresses for the vGPU coalescing model.
+//! - `te.rs` — the Traversal Enumeration handle: current traversal,
+//!   per-level slab occupancy (O(1) live counts), induced-edge bitmaps.
+//!
+//! Scheduling:
+//! - `scheduler.rs` — the persistent work-stealing worker pool (spawned
+//!   once per run) and the CPU-side monitor driving kernel segments.
+//! - `segment.rs` — per-worker work queues and segment control types.
+//!
+//! Programming interface:
 //! - `context.rs` — `WarpContext`, implementing the Table II primitives
 //!   (control / move / extend / filter / compact / aggregate_*) with
 //!   warp-centric cost accounting against the vGPU model.
-//! - `runner.rs` — the kernel-launch loop: warps dealt across OS threads,
-//!   segments separated by load-balancing stops, metric aggregation.
+//! - `runner.rs` — run setup (arena, seed deal), the `GpmAlgorithm`
+//!   binding, between-segment LB/accounting, and the final reduction.
+//!
+//! The thread-centric DM_DFS baseline reuses the same scheduler with
+//! lanes as units (warp width 1), so engine and baseline costs come from
+//! one execution layer.
 
+pub mod arena;
 pub mod context;
 pub mod runner;
+pub mod scheduler;
+pub mod segment;
 pub mod te;
 
+pub use arena::{ExtLayout, TeArena};
 pub use context::{Aggregators, ThreadScratch, WarpContext};
 pub use runner::{EngineConfig, RunReport, Runner, SharedRun, WarpState};
-pub use te::{ExtLevel, Te, INVALID_V};
+pub use scheduler::{DriveOutcome, SchedulerConfig, SegmentRunner};
+pub use segment::{SegmentControl, UnitTable};
+pub use te::{Te, INVALID_V};
 
 /// A (possibly partial) traversal used as a unit of work: the initial
 /// seeds are single vertices; the load balancer migrates longer prefixes.

@@ -1,23 +1,29 @@
-//! The engine runner: virtual warps dealt across OS threads, executed in
-//! kernel-launch *segments* separated by load-balancing stops (paper Fig 5).
+//! The engine runner: run setup (arena, seed deal), the glue binding the
+//! persistent scheduler to `GpmAlgorithm`, and the CPU-side reduction.
 //!
+//! The execution loop itself lives in `scheduler.rs` (persistent
+//! work-stealing worker pool) and `segment.rs` (per-worker queues);
+//! storage lives in `arena.rs` (the flat TE pool of paper Fig 3).
 //! Simulated GPU time is derived from the vGPU cost model per segment
 //! (max-warp critical path vs. aggregate throughput; DESIGN.md §2), which
 //! is what the Table IV / VI benches report; wall-clock is kept alongside.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::AtomicBool;
 use std::time::{Duration, Instant};
 
 use crate::api::GpmAlgorithm;
-use crate::balance::{redistribute, LbConfig};
+use crate::balance::{redistribute, LbConfig, LbPolicy};
 use crate::canon::cache::merge_pattern_counts;
 use crate::canon::CanonDict;
 use crate::graph::CsrGraph;
 use crate::util::Timer;
 use crate::vgpu::{CostModel, KernelMetrics, WarpProfiler};
 
+use super::arena::{ExtLayout, TeArena};
 use super::context::{Aggregators, StoredSubgraph, ThreadScratch, WarpContext};
+use super::scheduler::{self, SchedulerConfig, SegmentRunner};
+use super::segment::{SegmentControl, UnitTable};
 use super::te::Te;
 use super::Seed;
 
@@ -54,10 +60,16 @@ pub struct WarpState {
 }
 
 impl WarpState {
+    /// Standalone warp (unit tests, LB fixtures): private TE slabs.
     pub fn new(id: usize, k: usize) -> Self {
+        Self::bound(id, Te::new(k))
+    }
+
+    /// Warp over an arena-bound TE handle (the engine path).
+    pub fn bound(id: usize, te: Te) -> Self {
         Self {
             id,
-            te: Te::new(k),
+            te,
             queue: VecDeque::new(),
             prof: WarpProfiler::new(),
             agg: Aggregators::default(),
@@ -75,7 +87,7 @@ impl WarpState {
 pub struct EngineConfig {
     /// Virtual warps (paper default: 172,032 threads / 32 = 5,376).
     pub warps: usize,
-    /// OS threads executing the warps.
+    /// OS threads executing the warps (spawned once per run).
     pub threads: usize,
     /// Load balancing layer; `None` = DM_WC, `Some` = DM_OPT.
     pub lb: Option<LbConfig>,
@@ -87,6 +99,12 @@ pub struct EngineConfig {
     /// cycles per round before yielding, so all warps of a segment advance
     /// quasi-concurrently (as they would on the device).
     pub quantum_cycles: f64,
+    /// Extensions-pool address model (Flat = the Fig 3 arena; Legacy = the
+    /// pre-refactor scattered-vector model, kept for ablation).
+    pub layout: ExtLayout,
+    /// Work stealing between worker threads within a segment (off =
+    /// static chunk partitioning, kept for ablation).
+    pub steal: bool,
 }
 
 impl Default for EngineConfig {
@@ -98,6 +116,8 @@ impl Default for EngineConfig {
             cost: CostModel::default(),
             time_limit: None,
             quantum_cycles: 2.0e6, // ~1.4 ms of device time per round
+            layout: ExtLayout::Flat,
+            steal: true,
         }
     }
 }
@@ -132,6 +152,47 @@ pub struct RunReport {
     pub timed_out: bool,
 }
 
+/// The scheduler-facing view of an engine run: the warp table in a
+/// [`UnitTable`] so workers claim disjoint warps through `&self` (the
+/// exclusivity unsafety lives in `segment::UnitTable`, not here).
+struct EngineRun<'a, A: GpmAlgorithm> {
+    g: &'a CsrGraph,
+    algo: &'a A,
+    shared: &'a SharedRun,
+    warps: UnitTable<WarpState>,
+    quantum: f64,
+}
+
+impl<A: GpmAlgorithm> SegmentRunner for EngineRun<'_, A> {
+    type Scratch = ThreadScratch;
+
+    fn make_scratch(&self) -> ThreadScratch {
+        ThreadScratch::new(self.g.num_vertices())
+    }
+
+    fn run_quantum(&self, unit: usize, scratch: &mut ThreadScratch) -> bool {
+        // SAFETY: exclusive claim of `unit` per the scheduler contract.
+        let warp = unsafe { self.warps.claim(unit) };
+        let limit = warp.prof.segment_cycles(&self.shared.cost) + self.quantum;
+        let mut ctx = WarpContext {
+            g: self.g,
+            te: &mut warp.te,
+            queue: &mut warp.queue,
+            prof: &mut warp.prof,
+            agg: &mut warp.agg,
+            shared: self.shared,
+            scratch,
+            quantum_limit: limit,
+        };
+        self.algo.run(&mut ctx);
+        let more = warp.has_work();
+        if !more {
+            warp.finished = true;
+        }
+        more
+    }
+}
+
 /// The engine entry point.
 pub struct Runner;
 
@@ -146,7 +207,17 @@ impl Runner {
         let mut shared = SharedRun::new(k, algo.needs_edges(), dict);
         shared.cost = cfg.cost;
         let num_warps = cfg.warps.max(1);
-        let mut warps: Vec<WarpState> = (0..num_warps).map(|i| WarpState::new(i, k)).collect();
+
+        // Storage layer: one flat pool for every warp's extension slabs.
+        let mut arena = TeArena::for_graph(g, k, num_warps, cfg.layout);
+        // SAFETY: `arena` lives (unmoved) to the end of this function and
+        // the handles are dropped before it; per-warp exclusivity is the
+        // scheduler's contract.
+        let mut warps: Vec<WarpState> = unsafe { arena.bind_all() }
+            .into_iter()
+            .enumerate()
+            .map(|(i, te)| WarpState::bound(i, te))
+            .collect();
         // Deal single-vertex seeds round-robin (paper: traversals start at
         // every vertex; isolated vertices can't extend and are skipped).
         for v in 0..g.num_vertices() {
@@ -159,133 +230,75 @@ impl Runner {
                 w.finished = true;
             }
         }
+        let initial: Vec<usize> = warps.iter().filter(|w| !w.finished).map(|w| w.id).collect();
 
         let wall = Timer::start();
-        let deadline = cfg.time_limit.map(|d| Instant::now() + d);
-        let timed_out = AtomicBool::new(false);
         let mut metrics = KernelMetrics {
             warps: num_warps,
             ..Default::default()
         };
-        let finished_count =
-            AtomicUsize::new(warps.iter().filter(|w| w.finished).count());
+        let run = EngineRun {
+            g,
+            algo,
+            shared: &shared,
+            warps: UnitTable::new(warps),
+            quantum: cfg.quantum_cycles,
+        };
+        let sched_cfg = SchedulerConfig {
+            threads: cfg.threads,
+            steal: cfg.steal,
+            deadline: cfg.time_limit.map(|d| Instant::now() + d),
+            ..Default::default()
+        };
+        let policy = cfg.lb.as_ref().map(|l| l as &dyn LbPolicy);
 
-        loop {
-            shared.stop.store(false, Ordering::Relaxed);
-            let workers_done = AtomicUsize::new(0);
-            let nthreads = cfg.threads.clamp(1, num_warps);
-            let chunk = num_warps.div_ceil(nthreads);
-            std::thread::scope(|s| {
-                for slice in warps.chunks_mut(chunk) {
-                    let shared = &shared;
-                    let finished_count = &finished_count;
-                    let workers_done = &workers_done;
-                    let timed_out = &timed_out;
-                    let quantum = cfg.quantum_cycles;
-                    s.spawn(move || {
-                        let mut scratch = ThreadScratch::new(g.num_vertices());
-                        // Round-robin the slice in quanta so every warp of
-                        // the segment advances quasi-concurrently.
-                        'segment: loop {
-                            let mut any_unfinished = false;
-                            for warp in slice.iter_mut() {
-                                if shared.stop.load(Ordering::Relaxed) {
-                                    break 'segment;
-                                }
-                                if let Some(d) = deadline {
-                                    if Instant::now() > d {
-                                        timed_out.store(true, Ordering::Relaxed);
-                                        shared.stop.store(true, Ordering::Relaxed);
-                                        break 'segment;
-                                    }
-                                }
-                                if warp.finished {
-                                    continue;
-                                }
-                                let limit =
-                                    warp.prof.segment_cycles(&shared.cost) + quantum;
-                                let mut ctx = WarpContext {
-                                    g,
-                                    te: &mut warp.te,
-                                    queue: &mut warp.queue,
-                                    prof: &mut warp.prof,
-                                    agg: &mut warp.agg,
-                                    shared,
-                                    scratch: &mut scratch,
-                                    quantum_limit: limit,
-                                };
-                                algo.run(&mut ctx);
-                                if !warp.has_work() {
-                                    warp.finished = true;
-                                    finished_count.fetch_add(1, Ordering::Relaxed);
-                                } else {
-                                    any_unfinished = true;
-                                }
-                            }
-                            if !any_unfinished {
-                                break;
-                            }
-                        }
-                        workers_done.fetch_add(1, Ordering::Relaxed);
-                    });
+        let outcome = scheduler::drive(
+            &run,
+            num_warps,
+            initial,
+            &sched_cfg,
+            policy,
+            &shared.stop,
+            |timed_out| {
+                // SAFETY: the scheduler calls this hook with every worker
+                // parked at the segment barrier.
+                let warps = unsafe { run.warps.all_mut() };
+                // Segment accounting (paper: kernel elapsed = slowest
+                // warp, bounded below by aggregate issue throughput).
+                let mut total_cycles = 0.0f64;
+                let mut max_cycles = 0.0f64;
+                for w in warps.iter_mut() {
+                    let c = w.prof.end_segment(&cfg.cost);
+                    total_cycles += c;
+                    max_cycles = max_cycles.max(c);
                 }
-                // Monitor thread (the paper's CPU-side LB layer, Fig 5
-                // steps 1-3): poll warp activity, raise the stop flag when
-                // the active fraction drops below the threshold.
-                let lb = cfg.lb.as_ref();
-                let n_spawned = num_warps.div_ceil(chunk);
-                while workers_done.load(Ordering::Relaxed) < n_spawned {
-                    std::thread::sleep(
-                        lb.map_or(Duration::from_micros(200), |l| l.poll_interval),
-                    );
-                    if let Some(d) = deadline {
-                        if Instant::now() > d {
-                            timed_out.store(true, Ordering::Relaxed);
-                            shared.stop.store(true, Ordering::Relaxed);
-                        }
-                    }
-                    if let Some(l) = lb {
-                        let fin = finished_count.load(Ordering::Relaxed);
-                        let active = num_warps - fin;
-                        if active > 0 && (active as f64) < l.threshold * num_warps as f64 {
-                            shared.stop.store(true, Ordering::Relaxed);
-                        }
-                    }
+                metrics.sim_seconds += cfg.cost.segment_seconds(total_cycles, max_cycles);
+                if timed_out {
+                    return SegmentControl::Done;
                 }
-            });
-
-            // Segment accounting (paper: kernel elapsed = slowest warp,
-            // bounded below by aggregate issue throughput).
-            let mut total_cycles = 0.0f64;
-            let mut max_cycles = 0.0f64;
-            for w in &mut warps {
-                let c = w.prof.end_segment(&cfg.cost);
-                total_cycles += c;
-                max_cycles = max_cycles.max(c);
-            }
-            metrics.sim_seconds += cfg.cost.segment_seconds(total_cycles, max_cycles);
-            metrics.segments += 1;
-
-            if timed_out.load(Ordering::Relaxed) {
-                break;
-            }
-            if finished_count.load(Ordering::Relaxed) >= num_warps {
-                break;
-            }
-            // Redistribute (paper Fig 5 steps 4-5).
-            let te_bytes: usize = warps.iter().map(|w| w.te.memory_bytes()).sum();
-            let migrated = redistribute(&mut warps);
-            metrics.migrations += migrated;
-            let lb_cost = cfg.cost.rebalance_seconds(te_bytes);
-            metrics.sim_seconds += lb_cost;
-            metrics.lb_overhead_seconds += lb_cost;
-            if migrated > 0 {
-                let fin = warps.iter().filter(|w| w.finished).count();
-                finished_count.store(fin, Ordering::Relaxed);
-            }
-        }
+                if warps.iter().all(|w| w.finished) {
+                    return SegmentControl::Done;
+                }
+                // Redistribute (paper Fig 5 steps 4-5): donate subtrees by
+                // slicing units off the donators' arena ranges.
+                let te_bytes: usize = warps.iter().map(|w| w.te.memory_bytes()).sum();
+                let migrated = redistribute(warps);
+                metrics.migrations += migrated;
+                let lb_cost = cfg.cost.rebalance_seconds(te_bytes);
+                metrics.sim_seconds += lb_cost;
+                metrics.lb_overhead_seconds += lb_cost;
+                SegmentControl::Continue(
+                    warps.iter().filter(|w| !w.finished).map(|w| w.id).collect(),
+                )
+            },
+        );
+        metrics.segments = outcome.segments;
+        metrics.steals = outcome.steals;
+        metrics.idle_worker_segments = outcome.idle_worker_segments;
+        metrics.thread_spawns = outcome.thread_spawns;
 
         // Reduction (CPU side, as in the paper).
+        let mut warps: Vec<WarpState> = run.warps.into_inner();
         let mut count = 0u64;
         let mut stored = Vec::new();
         for w in &mut warps {
@@ -317,6 +330,9 @@ impl Runner {
             }
         };
         metrics.wall_seconds = wall.secs();
+        // The warp handles point into `arena`; drop them before it.
+        drop(warps);
+        drop(arena);
 
         RunReport {
             algorithm: algo.name().to_string(),
@@ -325,7 +341,7 @@ impl Runner {
             patterns,
             stored,
             metrics,
-            timed_out: timed_out.load(Ordering::Relaxed),
+            timed_out: outcome.timed_out,
         }
     }
 }
@@ -373,9 +389,72 @@ mod tests {
     #[test]
     fn warp_count_does_not_change_result() {
         let g = generators::erdos_renyi(40, 0.3, 5);
-        let r1 = Runner::run(&g, &CliqueCount::new(4), &EngineConfig { warps: 1, threads: 1, ..Default::default() });
-        let r64 = Runner::run(&g, &CliqueCount::new(4), &EngineConfig { warps: 64, threads: 8, ..Default::default() });
+        let r1 = Runner::run(
+            &g,
+            &CliqueCount::new(4),
+            &EngineConfig { warps: 1, threads: 1, ..Default::default() },
+        );
+        let r64 = Runner::run(
+            &g,
+            &CliqueCount::new(4),
+            &EngineConfig { warps: 64, threads: 8, ..Default::default() },
+        );
         assert_eq!(r1.count, r64.count);
+    }
+
+    #[test]
+    fn stealing_does_not_change_result() {
+        let g = generators::erdos_renyi(40, 0.3, 9);
+        let on = Runner::run(
+            &g,
+            &CliqueCount::new(4),
+            &EngineConfig { steal: true, ..small_cfg() },
+        );
+        let off = Runner::run(
+            &g,
+            &CliqueCount::new(4),
+            &EngineConfig { steal: false, ..small_cfg() },
+        );
+        assert_eq!(on.count, off.count);
+    }
+
+    #[test]
+    fn layout_does_not_change_result_but_changes_transactions() {
+        let g = generators::erdos_renyi(36, 0.35, 2);
+        let flat = Runner::run(
+            &g,
+            &CliqueCount::new(4),
+            &EngineConfig { layout: ExtLayout::Flat, ..small_cfg() },
+        );
+        let legacy = Runner::run(
+            &g,
+            &CliqueCount::new(4),
+            &EngineConfig { layout: ExtLayout::Legacy, ..small_cfg() },
+        );
+        assert_eq!(flat.count, legacy.count);
+        assert!(
+            flat.metrics.total_gld < legacy.metrics.total_gld,
+            "flat arena must coalesce better: {} vs {}",
+            flat.metrics.total_gld,
+            legacy.metrics.total_gld
+        );
+    }
+
+    #[test]
+    fn workers_spawn_once_across_segments() {
+        let g = generators::ASTROPH.scaled(0.05).generate(3);
+        let cfg = EngineConfig {
+            warps: 64,
+            threads: 4,
+            ..Default::default()
+        }
+        .with_lb(crate::balance::LbConfig {
+            threshold: 0.9,
+            poll_interval: Duration::from_micros(50),
+        });
+        let r = Runner::run(&g, &CliqueCount::new(5), &cfg);
+        assert!(r.metrics.segments >= 2, "expected LB stops");
+        assert_eq!(r.metrics.thread_spawns, 4, "pool must be persistent");
     }
 
     #[test]

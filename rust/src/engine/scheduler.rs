@@ -1,0 +1,386 @@
+//! Persistent work-stealing scheduler (paper Fig 5's kernel/monitor loop,
+//! generalised).
+//!
+//! One worker pool is spawned per run — not per segment — and parked at a
+//! barrier between segments. Within a segment, workers claim *units*
+//! (virtual warps for the engine, lanes for the thread-centric DM_DFS
+//! baseline) from per-worker deques, run them one scheduling quantum at a
+//! time, and requeue them while they still have work; a worker whose
+//! deque drains steals from a victim instead of idling until the
+//! load-balancing stop (`SchedulerConfig::steal` off reproduces the old
+//! static `chunks_mut` partitioning, for ablation).
+//!
+//! The coordinator thread doubles as the paper's CPU-side monitor (Fig 5
+//! steps 1-3): it polls activity and raises the shared stop flag when the
+//! pluggable [`LbPolicy`](crate::balance::LbPolicy) says so or when the
+//! wall-clock deadline passes. Between segments — with every worker
+//! parked, so the barrier provides the happens-before edge — it calls the
+//! runner's hook to account the segment, redistribute work, and plan the
+//! next unit set.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Barrier;
+use std::time::{Duration, Instant};
+
+use crate::balance::LbPolicy;
+
+use super::segment::{SegmentControl, WorkQueues};
+
+/// A unit-granular computation drivable by the scheduler.
+///
+/// Implementations hand out *exclusive* access to per-unit state from
+/// `&self` (keep it in a [`segment::UnitTable`](super::segment::UnitTable)):
+/// the scheduler guarantees a unit id is held by at most one worker at a
+/// time, and that between-segment hooks run only while all workers are
+/// parked.
+pub trait SegmentRunner: Sync {
+    type Scratch: Send;
+
+    /// Per-worker scratch, created once per run (workers are persistent).
+    fn make_scratch(&self) -> Self::Scratch;
+
+    /// Run one scheduling quantum on `unit`. Returns true while the unit
+    /// still has work (the scheduler will requeue it).
+    fn run_quantum(&self, unit: usize, scratch: &mut Self::Scratch) -> bool;
+}
+
+/// Scheduler knobs, derived from `EngineConfig` / `DmDfs` settings.
+pub struct SchedulerConfig {
+    pub threads: usize,
+    /// Work stealing between worker deques (off = static partitioning).
+    pub steal: bool,
+    pub deadline: Option<Instant>,
+    /// Monitor poll period when no LB policy is installed.
+    pub default_poll: Duration,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        Self {
+            threads: std::thread::available_parallelism().map_or(4, |n| n.get()),
+            steal: true,
+            deadline: None,
+            default_poll: Duration::from_micros(200),
+        }
+    }
+}
+
+/// What a full drive reports back, folded into `KernelMetrics`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DriveOutcome {
+    /// Kernel-launch segments executed (1 + number of LB stops).
+    pub segments: usize,
+    /// Units taken from another worker's deque.
+    pub steals: u64,
+    /// (worker, segment) pairs where a worker went idle for the rest of a
+    /// segment while unfinished units remained — the waste static
+    /// partitioning exhibits on skew. Structurally zero with stealing
+    /// (workers then only stop once everything is finished).
+    pub idle_worker_segments: u64,
+    /// OS threads spawned over the whole run (== worker count: the pool
+    /// is persistent, there is no per-segment respawn).
+    pub thread_spawns: u64,
+    pub timed_out: bool,
+}
+
+/// Drive `runner` over `total_units` units, starting from the `initial`
+/// live set, until the between-segment hook returns [`SegmentControl::Done`].
+///
+/// `stop` is the kernel stop flag shared with the units' inner loops
+/// (`SharedRun::stop` for the engine); the monitor raises it, the
+/// coordinator clears it at each segment start. `between` runs after
+/// every segment with all workers parked and must return the unit ids to
+/// schedule next.
+pub fn drive<R, F>(
+    runner: &R,
+    total_units: usize,
+    initial: Vec<usize>,
+    cfg: &SchedulerConfig,
+    policy: Option<&dyn LbPolicy>,
+    stop: &AtomicBool,
+    mut between: F,
+) -> DriveOutcome
+where
+    R: SegmentRunner,
+    F: FnMut(bool) -> SegmentControl,
+{
+    let nworkers = cfg.threads.clamp(1, total_units.max(1));
+    let queues = WorkQueues::new(nworkers);
+    // Units of the current segment that reached the finished state.
+    let finished = AtomicUsize::new(0);
+    // Units scheduled into the current segment.
+    let live_count = AtomicUsize::new(0);
+    let workers_done = AtomicUsize::new(0);
+    let steals = AtomicU64::new(0);
+    let idle_segments = AtomicU64::new(0);
+    let shutdown = AtomicBool::new(false);
+    let timed_out = AtomicBool::new(false);
+    let seg_start = Barrier::new(nworkers + 1);
+    let seg_end = Barrier::new(nworkers + 1);
+
+    let mut outcome = DriveOutcome {
+        thread_spawns: nworkers as u64,
+        ..Default::default()
+    };
+
+    std::thread::scope(|s| {
+        for me in 0..nworkers {
+            let queues = &queues;
+            let finished = &finished;
+            let live_count = &live_count;
+            let workers_done = &workers_done;
+            let steals = &steals;
+            let idle_segments = &idle_segments;
+            let shutdown = &shutdown;
+            let seg_start = &seg_start;
+            let seg_end = &seg_end;
+            s.spawn(move || {
+                let mut scratch = runner.make_scratch();
+                loop {
+                    seg_start.wait();
+                    if shutdown.load(Ordering::Acquire) {
+                        break;
+                    }
+                    let mut went_idle = false;
+                    loop {
+                        if stop.load(Ordering::Relaxed) {
+                            break; // LB/deadline stop: leave units queued
+                        }
+                        let unit = queues.pop(me).or_else(|| {
+                            if cfg.steal {
+                                let u = queues.steal(me);
+                                if u.is_some() {
+                                    steals.fetch_add(1, Ordering::Relaxed);
+                                }
+                                u
+                            } else {
+                                None
+                            }
+                        });
+                        match unit {
+                            Some(u) => {
+                                let more = runner.run_quantum(u, &mut scratch);
+                                if more {
+                                    queues.push(me, u);
+                                } else {
+                                    finished.fetch_add(1, Ordering::SeqCst);
+                                }
+                            }
+                            None => {
+                                if !cfg.steal {
+                                    // Static mode: this worker's share is
+                                    // drained; it idles until the segment
+                                    // ends, exactly like the old
+                                    // chunks_mut partitioning.
+                                    went_idle = finished.load(Ordering::SeqCst)
+                                        < live_count.load(Ordering::SeqCst);
+                                    break;
+                                }
+                                // Retire only on the race-free condition:
+                                // every unit of the segment truly finished
+                                // (a queue-emptiness probe could miss a
+                                // unit another worker is about to requeue).
+                                if finished.load(Ordering::SeqCst)
+                                    >= live_count.load(Ordering::SeqCst)
+                                {
+                                    break; // segment drained
+                                }
+                                // A held unit may be requeued; nap and
+                                // re-probe rather than spin hot.
+                                std::thread::sleep(Duration::from_micros(10));
+                            }
+                        }
+                    }
+                    if went_idle && !stop.load(Ordering::Relaxed) {
+                        idle_segments.fetch_add(1, Ordering::Relaxed);
+                    }
+                    workers_done.fetch_add(1, Ordering::SeqCst);
+                    seg_end.wait();
+                }
+            });
+        }
+
+        // Coordinator: segment loop + monitor (paper Fig 5 steps 1-3).
+        let mut live = initial;
+        loop {
+            outcome.segments += 1;
+            live_count.store(live.len(), Ordering::SeqCst);
+            finished.store(0, Ordering::SeqCst);
+            workers_done.store(0, Ordering::SeqCst);
+            stop.store(false, Ordering::Relaxed);
+            queues.fill(&live);
+            seg_start.wait();
+            let poll = policy.map_or(cfg.default_poll, |p| p.poll_interval());
+            while workers_done.load(Ordering::SeqCst) < nworkers {
+                std::thread::sleep(poll);
+                if let Some(d) = cfg.deadline {
+                    if Instant::now() > d {
+                        timed_out.store(true, Ordering::Relaxed);
+                        stop.store(true, Ordering::Relaxed);
+                    }
+                }
+                if let Some(p) = policy {
+                    let fin_total =
+                        (total_units - live.len()) + finished.load(Ordering::SeqCst);
+                    let active = total_units - fin_total;
+                    if p.should_stop(active, total_units) {
+                        stop.store(true, Ordering::Relaxed);
+                    }
+                }
+            }
+            seg_end.wait();
+            // Workers are parked between seg_end and the next seg_start:
+            // the hook has exclusive access to all unit state. If it
+            // panics, release the parked workers before propagating —
+            // otherwise the scope join deadlocks at the barrier and the
+            // panic never surfaces.
+            let control = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                between(timed_out.load(Ordering::Relaxed))
+            }));
+            match control {
+                Ok(SegmentControl::Done) => break,
+                Ok(SegmentControl::Continue(next)) => live = next,
+                Err(payload) => {
+                    shutdown.store(true, Ordering::Release);
+                    seg_start.wait();
+                    std::panic::resume_unwind(payload);
+                }
+            }
+        }
+        shutdown.store(true, Ordering::Release);
+        seg_start.wait(); // release workers into shutdown
+    });
+
+    outcome.steals = steals.load(Ordering::Relaxed);
+    outcome.idle_worker_segments = idle_segments.load(Ordering::Relaxed);
+    outcome.timed_out = timed_out.load(Ordering::Relaxed);
+    outcome
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::segment::UnitTable;
+    use super::*;
+
+    /// Toy runner: each unit counts down `work[unit]` one tick per
+    /// quantum, state in the shared `UnitTable` like the real runners.
+    struct Countdown {
+        work: UnitTable<u32>,
+        next_worker: AtomicUsize,
+    }
+
+    impl Countdown {
+        fn new(work: Vec<u32>) -> Self {
+            Self {
+                work: UnitTable::new(work),
+                next_worker: AtomicUsize::new(0),
+            }
+        }
+
+        /// Only sound while no worker runs (between segments / after drive).
+        fn remaining(&self, unit: usize) -> u32 {
+            unsafe { *self.work.claim(unit) }
+        }
+
+        fn all_done(&self) -> bool {
+            (0..self.work.len()).all(|i| self.remaining(i) == 0)
+        }
+    }
+
+    impl SegmentRunner for Countdown {
+        type Scratch = usize; // worker id
+        fn make_scratch(&self) -> usize {
+            self.next_worker.fetch_add(1, Ordering::SeqCst)
+        }
+        fn run_quantum(&self, unit: usize, _scratch: &mut usize) -> bool {
+            // SAFETY: exclusive claim of `unit` per the scheduler contract.
+            let w = unsafe { self.work.claim(unit) };
+            *w -= 1;
+            *w > 0
+        }
+    }
+
+    fn run(work: Vec<u32>, threads: usize, steal: bool) -> (Countdown, DriveOutcome) {
+        let n = work.len();
+        let runner = Countdown::new(work);
+        let stop = AtomicBool::new(false);
+        let cfg = SchedulerConfig {
+            threads,
+            steal,
+            ..Default::default()
+        };
+        let outcome = drive(&runner, n, (0..n).collect(), &cfg, None, &stop, |timed_out| {
+            if timed_out || runner.all_done() {
+                SegmentControl::Done
+            } else {
+                SegmentControl::Continue(
+                    (0..n).filter(|&i| runner.remaining(i) > 0).collect(),
+                )
+            }
+        });
+        (runner, outcome)
+    }
+
+    #[test]
+    fn drains_all_units_single_thread() {
+        let (r, o) = run(vec![3, 1, 5, 2], 1, true);
+        assert!(r.all_done());
+        assert_eq!(o.segments, 1);
+        assert_eq!(o.thread_spawns, 1);
+        assert!(!o.timed_out);
+    }
+
+    #[test]
+    fn drains_all_units_multi_thread_with_stealing() {
+        let mut work = vec![1u32; 64];
+        work[0] = 200; // skew
+        let (r, o) = run(work, 4, true);
+        assert!(r.all_done());
+        assert_eq!(o.thread_spawns, 4);
+        // with stealing, nobody idles while the skewed unit still runs
+        assert_eq!(o.idle_worker_segments, 0);
+    }
+
+    #[test]
+    fn static_partitioning_idles_on_skew() {
+        // unit 0 runs ~ms while the other chunks drain in ~µs, so the
+        // other workers reliably break before it finishes
+        let mut work = vec![1u32; 64];
+        work[0] = 300_000; // worker 0's chunk dominates
+        let (_, o) = run(work, 4, false);
+        assert!(o.idle_worker_segments > 0, "static mode should record idle workers");
+        assert_eq!(o.steals, 0);
+    }
+
+    #[test]
+    fn stealing_spreads_a_skewed_unit_set() {
+        // all the work in worker 0's chunk: others must steal to help
+        let mut work = vec![1u32; 16];
+        for w in work.iter_mut().take(4) {
+            *w = 50_000;
+        }
+        let (r, o) = run(work, 4, true);
+        assert!(r.all_done());
+        assert!(o.steals > 0, "expected steals on a skewed deal");
+    }
+
+    #[test]
+    fn deadline_sets_timed_out() {
+        let runner = Countdown::new(vec![u32::MAX; 2]);
+        let stop = AtomicBool::new(false);
+        let cfg = SchedulerConfig {
+            threads: 2,
+            steal: true,
+            deadline: Some(Instant::now() + Duration::from_millis(5)),
+            ..Default::default()
+        };
+        let o = drive(&runner, 2, vec![0, 1], &cfg, None, &stop, |timed_out| {
+            if timed_out {
+                SegmentControl::Done
+            } else {
+                SegmentControl::Continue(vec![0, 1])
+            }
+        });
+        assert!(o.timed_out);
+    }
+}

@@ -1,0 +1,189 @@
+//! Segment-level plumbing for the persistent scheduler: per-worker work
+//! queues with stealing, and the control type the between-segment hook
+//! returns.
+//!
+//! A *segment* is one simulated kernel launch (paper Fig 5): the monitor
+//! may stop it early for load balancing, after which the runner accounts
+//! the segment, redistributes, and plans the next one.
+
+use std::cell::UnsafeCell;
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+/// What the between-segment hook tells the scheduler to do next.
+pub enum SegmentControl {
+    /// Launch another segment over these unit ids.
+    Continue(Vec<usize>),
+    /// The run is over (all units drained, or timed out).
+    Done,
+}
+
+/// Per-unit state table for `SegmentRunner` implementations: each unit in
+/// its own cell, so workers claim disjoint units through `&self` without
+/// ever forming a `&mut` over the table as a whole (which would alias
+/// across workers). This is the single audited home of the scheduler's
+/// exclusivity unsafety — runners should hold their mutable per-unit
+/// state in one of these rather than hand-rolling `UnsafeCell` plumbing.
+pub struct UnitTable<T> {
+    cells: Vec<UnsafeCell<T>>,
+}
+
+// SAFETY: all access goes through the unsafe methods below, whose callers
+// must uphold the scheduler contract — a unit id is held by at most one
+// worker at a time, and whole-table access only happens with every worker
+// parked at the segment barrier (the barrier is the happens-before edge).
+unsafe impl<T: Send> Sync for UnitTable<T> {}
+
+impl<T> UnitTable<T> {
+    pub fn new(items: Vec<T>) -> Self {
+        Self {
+            cells: items.into_iter().map(UnsafeCell::new).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.cells.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
+    }
+
+    /// Exclusive access to one unit's state.
+    ///
+    /// # Safety
+    /// Caller must hold `unit` exclusively: either it claimed the unit
+    /// from the scheduler's queues, or every worker is parked.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn claim(&self, unit: usize) -> &mut T {
+        &mut *self.cells[unit].get()
+    }
+
+    /// The whole table as a mutable slice (between-segment hooks).
+    ///
+    /// # Safety
+    /// Caller must guarantee no worker holds any unit (all parked at the
+    /// segment barrier).
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn all_mut(&self) -> &mut [T] {
+        // UnsafeCell<T> is repr(transparent) over T, so a slice of cells
+        // reinterprets as a slice of T.
+        &mut *(std::ptr::slice_from_raw_parts_mut(
+            self.cells.as_ptr() as *mut T,
+            self.cells.len(),
+        ))
+    }
+
+    /// Reclaim the unit states after the drive is over.
+    pub fn into_inner(self) -> Vec<T> {
+        self.cells.into_iter().map(|c| c.into_inner()).collect()
+    }
+}
+
+/// Per-worker deques of unit ids. Workers pop their own queue from the
+/// front; when `steal` is enabled a worker whose queue drains takes from
+/// the back of a victim's queue instead of idling (the old static
+/// `chunks_mut` partitioning is exactly this structure with stealing
+/// switched off).
+pub struct WorkQueues {
+    locals: Vec<Mutex<VecDeque<usize>>>,
+}
+
+impl WorkQueues {
+    pub fn new(workers: usize) -> Self {
+        Self {
+            locals: (0..workers.max(1)).map(|_| Mutex::new(VecDeque::new())).collect(),
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.locals.len()
+    }
+
+    /// Deal `units` to the workers in contiguous chunks (the same deal as
+    /// the pre-refactor `chunks_mut` partitioning, so stealing-off mode
+    /// reproduces the old static behaviour).
+    pub fn fill(&self, units: &[usize]) {
+        let n = self.locals.len();
+        let chunk = units.len().div_ceil(n).max(1);
+        for (i, q) in self.locals.iter().enumerate() {
+            let mut q = q.lock().unwrap();
+            q.clear();
+            let lo = (i * chunk).min(units.len());
+            let hi = ((i + 1) * chunk).min(units.len());
+            q.extend(units[lo..hi].iter().copied());
+        }
+    }
+
+    /// Pop the next unit from `me`'s own queue.
+    pub fn pop(&self, me: usize) -> Option<usize> {
+        self.locals[me].lock().unwrap().pop_front()
+    }
+
+    /// Requeue a still-live unit at the back of `me`'s queue.
+    pub fn push(&self, me: usize, unit: usize) {
+        self.locals[me].lock().unwrap().push_back(unit);
+    }
+
+    /// Steal one unit from another worker's tail, scanning victims
+    /// round-robin from `me + 1`.
+    pub fn steal(&self, me: usize) -> Option<usize> {
+        let n = self.locals.len();
+        for d in 1..n {
+            let victim = (me + d) % n;
+            if let Some(u) = self.locals[victim].lock().unwrap().pop_back() {
+                return Some(u);
+            }
+        }
+        None
+    }
+
+    pub fn all_empty(&self) -> bool {
+        self.locals.iter().all(|q| q.lock().unwrap().is_empty())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fill_deals_contiguous_chunks() {
+        let q = WorkQueues::new(3);
+        q.fill(&[0, 1, 2, 3, 4, 5, 6]);
+        // chunk = ceil(7/3) = 3 -> [0,1,2], [3,4,5], [6]
+        assert_eq!(q.pop(0), Some(0));
+        assert_eq!(q.pop(1), Some(3));
+        assert_eq!(q.pop(2), Some(6));
+        assert_eq!(q.pop(2), None);
+    }
+
+    #[test]
+    fn steal_takes_from_victim_tail() {
+        let q = WorkQueues::new(2);
+        q.fill(&[10, 11, 12, 13]);
+        // worker 1 owns [12, 13]; worker 0 steals from its tail
+        assert_eq!(q.steal(0), Some(13));
+        assert_eq!(q.pop(1), Some(12));
+        assert_eq!(q.steal(0), None);
+    }
+
+    #[test]
+    fn refill_replaces_leftovers() {
+        let q = WorkQueues::new(2);
+        q.fill(&[1, 2, 3, 4]);
+        q.fill(&[9]);
+        assert_eq!(q.pop(0), Some(9));
+        assert!(q.all_empty());
+    }
+
+    #[test]
+    fn push_requeues_at_back() {
+        let q = WorkQueues::new(1);
+        q.fill(&[1, 2]);
+        let u = q.pop(0).unwrap();
+        q.push(0, u);
+        assert_eq!(q.pop(0), Some(2));
+        assert_eq!(q.pop(0), Some(1));
+    }
+}

@@ -1,71 +1,160 @@
 //! TE — Traversal Enumeration state (paper Fig 3).
 //!
-//! One TE per warp: the current traversal `tr`, one extensions array per
+//! One TE per warp: the current traversal `tr`, one extensions slab per
 //! level (`ext[l]` holds the extensions of the prefix `tr[0..=l]`), and
 //! cumulative induced-edge bitmaps per level for `genedges` algorithms.
 //! Traversals never exceed `k-1` vertices: the k-th vertex is consumed
 //! directly from the last level's extensions by the Aggregate phase.
+//!
+//! Since the arena refactor, `Te` is a *handle*: the extensions live in
+//! fixed-stride slabs of the run-wide [`TeArena`](super::arena::TeArena)
+//! pool (or, for standalone unit-test instances, in a private allocation)
+//! and the handle carries per-level occupancy metadata — written length,
+//! a live (non-tombstone) count maintained incrementally so
+//! `live_count`/`donation_level` are O(1) instead of re-scanning the slab,
+//! the `generated` flag, and the slab's device byte address for the vGPU
+//! coalescing model.
 
 use crate::canon::bitmap::{edge_bit, MAX_K};
 use crate::graph::{CsrGraph, VertexId};
 
+use super::arena::LevelSlab;
 use super::Seed;
 
 /// Invalidated extension sentinel (the paper writes -1).
 pub const INVALID_V: VertexId = VertexId::MAX;
 
-/// One level's extensions array.
-#[derive(Clone, Debug, Default)]
-pub struct ExtLevel {
-    pub items: Vec<VertexId>,
-    /// Whether `items` is populated for the current prefix (paper's
+/// Slab capacity per level for standalone (non-arena) instances.
+const STANDALONE_CAP: usize = 256;
+
+/// One level's slab view plus occupancy metadata.
+#[derive(Clone, Copy, Debug)]
+struct Level {
+    ptr: *mut VertexId,
+    cap: usize,
+    /// Slots written (tombstones included); the slab tail index.
+    len: usize,
+    /// Non-tombstone slots — kept in step by Filter/Compact/pop so
+    /// `valid_count` queries are O(1) (the phases ask per node).
+    live: usize,
+    /// Whether the slab is populated for the current prefix (paper's
     /// "extensions generated" test in Alg 2 line 3).
-    pub generated: bool,
+    generated: bool,
+    /// Device byte address of slot 0 (vGPU coalescing model).
+    base_addr: usize,
 }
 
-impl ExtLevel {
-    /// Pop the next valid extension, skipping invalidated slots.
+impl Level {
+    const EMPTY: Level = Level {
+        ptr: std::ptr::null_mut(),
+        cap: 0,
+        len: 0,
+        live: 0,
+        generated: false,
+        base_addr: 0,
+    };
+
     #[inline]
-    pub fn pop_valid(&mut self) -> Option<VertexId> {
-        while let Some(v) = self.items.pop() {
-            if v != INVALID_V {
-                return Some(v);
-            }
-        }
-        None
-    }
-
-    pub fn valid_count(&self) -> usize {
-        self.items.iter().filter(|&&v| v != INVALID_V).count()
-    }
-
-    pub fn clear(&mut self) {
-        self.items.clear();
+    fn clear(&mut self) {
+        self.len = 0;
+        self.live = 0;
         self.generated = false;
     }
 }
 
+/// Backing allocation of a standalone (non-arena) TE, held as a raw
+/// pointer so that moving the `Te` value never invalidates the slab
+/// pointers derived from it (a `Box` field would be retagged on every
+/// move under Rust's aliasing model, making the cached `Level::ptr`s
+/// dangling in the stacked-borrows sense).
+#[derive(Debug)]
+struct OwnedSlab {
+    ptr: *mut VertexId,
+    words: usize,
+}
+
+impl Drop for OwnedSlab {
+    fn drop(&mut self) {
+        // SAFETY: ptr/words came from Box::into_raw of a boxed slice of
+        // exactly `words` elements, and are freed exactly once here.
+        unsafe {
+            drop(Box::from_raw(std::ptr::slice_from_raw_parts_mut(
+                self.ptr,
+                self.words,
+            )));
+        }
+    }
+}
+
 /// Traversal enumeration state for one warp.
-#[derive(Clone, Debug)]
+#[derive(Debug)]
 pub struct Te {
     k: usize,
     len: usize,
     tr: [VertexId; MAX_K],
-    ext: Vec<ExtLevel>,
     /// `edges[i]`: bitmap of induced edges among `tr[0..=i]` (traversal
     /// encoding; the (0,1) edge implicit). Maintained when genedges.
     edges: [u64; MAX_K],
+    /// Extension levels `0..k-1` (level `l` extends the prefix of l+1
+    /// vertices; a traversal of `k-1` vertices tops out at level `k-2`).
+    levels: [Level; MAX_K],
+    /// Backing storage for standalone instances; arena-bound handles
+    /// point into the run's pool instead and hold `None`.
+    _own: Option<OwnedSlab>,
 }
 
 impl Te {
+    /// Standalone TE with a default per-level slab — unit tests, property
+    /// harnesses, and `WarpState::new`. Engine runs bind arena slabs via
+    /// [`TeArena::bind_all`](super::arena::TeArena::bind_all) instead.
     pub fn new(k: usize) -> Self {
+        Self::standalone(k, STANDALONE_CAP)
+    }
+
+    /// Standalone TE with `cap` words per level slab.
+    pub fn standalone(k: usize, cap: usize) -> Self {
         assert!((3..=MAX_K).contains(&k), "k must be in 3..={MAX_K}");
+        let cap = cap.max(1);
+        let nlevels = k - 1;
+        let words = nlevels * cap;
+        // Leak the allocation to a raw pointer (reclaimed by OwnedSlab's
+        // Drop): the Level pointers derived from it stay valid however
+        // often the returned Te is moved.
+        let base = Box::into_raw(vec![INVALID_V; words].into_boxed_slice()) as *mut VertexId;
+        let mut levels = [Level::EMPTY; MAX_K];
+        for (l, lv) in levels.iter_mut().take(nlevels).enumerate() {
+            // SAFETY: l * cap + cap <= words by construction.
+            lv.ptr = unsafe { base.add(l * cap) };
+            lv.cap = cap;
+            lv.base_addr = l * cap * std::mem::size_of::<VertexId>();
+        }
         Self {
             k,
             len: 0,
             tr: [INVALID_V; MAX_K],
-            ext: (0..k).map(|_| ExtLevel::default()).collect(),
             edges: [0; MAX_K],
+            levels,
+            _own: Some(OwnedSlab { ptr: base, words }),
+        }
+    }
+
+    /// Arena-bound TE over the given slabs (one per level, `k-1` total).
+    pub(crate) fn bound(k: usize, slabs: &[LevelSlab]) -> Self {
+        assert!((3..=MAX_K).contains(&k), "k must be in 3..={MAX_K}");
+        assert_eq!(slabs.len(), k - 1);
+        let mut levels = [Level::EMPTY; MAX_K];
+        for (lv, slab) in levels.iter_mut().zip(slabs) {
+            lv.ptr = slab.ptr;
+            lv.cap = slab.cap;
+            lv.base_addr = slab.addr;
+        }
+        Self {
+            k,
+            len: 0,
+            tr: [INVALID_V; MAX_K],
+            edges: [0; MAX_K],
+            levels,
+            _own: None,
         }
     }
 
@@ -101,22 +190,146 @@ impl Te {
         self.tr[self.len - 1]
     }
 
-    /// Extensions array of the current level (`len - 1`).
+    /// The current level (the one holding extensions of the whole
+    /// traversal): `len - 1`.
     #[inline]
-    pub fn cur_ext(&mut self) -> &mut ExtLevel {
-        let l = self.len - 1;
-        &mut self.ext[l]
+    pub fn cur_level(&self) -> usize {
+        debug_assert!(self.len > 0);
+        self.len - 1
+    }
+
+    // ------------------------------------------------------------------
+    // Extension-slab accessors.
+    // ------------------------------------------------------------------
+
+    #[inline]
+    pub fn generated(&self, level: usize) -> bool {
+        self.levels[level].generated
     }
 
     #[inline]
-    pub fn cur_ext_ref(&self) -> &ExtLevel {
-        &self.ext[self.len - 1]
+    pub fn set_generated(&mut self, level: usize, v: bool) {
+        self.levels[level].generated = v;
+    }
+
+    /// Slots written at `level`, tombstones included.
+    #[inline]
+    pub fn ext_len(&self, level: usize) -> usize {
+        self.levels[level].len
+    }
+
+    /// Valid (non-tombstone) extensions at `level` — O(1).
+    #[inline]
+    pub fn live_count(&self, level: usize) -> usize {
+        self.levels[level].live
     }
 
     #[inline]
-    pub fn ext_at(&mut self, level: usize) -> &mut ExtLevel {
-        &mut self.ext[level]
+    pub fn ext_cap(&self, level: usize) -> usize {
+        self.levels[level].cap
     }
+
+    /// Device byte address of `level`'s slab (coalescing model input).
+    #[inline]
+    pub fn ext_base_addr(&self, level: usize) -> usize {
+        self.levels[level].base_addr
+    }
+
+    /// The written portion of `level`'s slab.
+    #[inline]
+    pub fn ext_slice(&self, level: usize) -> &[VertexId] {
+        let lv = &self.levels[level];
+        // SAFETY: ptr/len describe this handle's exclusive slab region.
+        unsafe { std::slice::from_raw_parts(lv.ptr, lv.len) }
+    }
+
+    /// Raw (pointer, written-length) of `level`'s slab, for the phase
+    /// implementations that mutate the slab while still reading traversal
+    /// metadata through `&Te`. The slab memory is only ever reachable via
+    /// these pointers, so the aliasing is confined to the phase body.
+    #[inline]
+    pub(crate) fn ext_raw(&self, level: usize) -> (*mut VertexId, usize) {
+        let lv = &self.levels[level];
+        (lv.ptr, lv.len)
+    }
+
+    /// Raw (pointer, capacity) of `level`'s slab, for Extend's writer.
+    #[inline]
+    pub(crate) fn ext_raw_cap(&self, level: usize) -> (*mut VertexId, usize) {
+        let lv = &self.levels[level];
+        (lv.ptr, lv.cap)
+    }
+
+    /// Seal an Extend pass: `n` freshly written slots, all valid.
+    #[inline]
+    pub(crate) fn finish_ext(&mut self, level: usize, n: usize) {
+        let lv = &mut self.levels[level];
+        debug_assert!(n <= lv.cap);
+        lv.len = n;
+        lv.live = n;
+        lv.generated = true;
+    }
+
+    /// Record new occupancy after an in-place rewrite (Compact).
+    #[inline]
+    pub(crate) fn set_ext_len(&mut self, level: usize, len: usize, live: usize) {
+        let lv = &mut self.levels[level];
+        debug_assert!(len <= lv.cap && live <= len);
+        lv.len = len;
+        lv.live = live;
+    }
+
+    /// Record `n` extensions tombstoned in place (Filter).
+    #[inline]
+    pub(crate) fn note_invalidated(&mut self, level: usize, n: usize) {
+        let lv = &mut self.levels[level];
+        debug_assert!(n <= lv.live);
+        lv.live -= n;
+    }
+
+    /// Copy `items` into `level`'s slab (tests, benches, LB fixtures).
+    /// Leaves `generated` untouched.
+    pub fn set_ext(&mut self, level: usize, items: &[VertexId]) {
+        let lv = &mut self.levels[level];
+        assert!(items.len() <= lv.cap, "slab overflow: {} > {}", items.len(), lv.cap);
+        // SAFETY: slab region is exclusive to this handle and >= items.len.
+        unsafe {
+            std::ptr::copy_nonoverlapping(items.as_ptr(), lv.ptr, items.len());
+        }
+        lv.len = items.len();
+        lv.live = items.iter().filter(|&&v| v != INVALID_V).count();
+    }
+
+    /// Clone out `level`'s written slots (test convenience).
+    pub fn ext_vec(&self, level: usize) -> Vec<VertexId> {
+        self.ext_slice(level).to_vec()
+    }
+
+    /// Pop the next valid extension at `level`, skipping tombstones.
+    #[inline]
+    pub fn pop_valid(&mut self, level: usize) -> Option<VertexId> {
+        let lv = &mut self.levels[level];
+        while lv.len > 0 {
+            // SAFETY: len - 1 < cap; slab region exclusive to this handle.
+            let v = unsafe { *lv.ptr.add(lv.len - 1) };
+            lv.len -= 1;
+            if v != INVALID_V {
+                lv.live -= 1;
+                return Some(v);
+            }
+        }
+        None
+    }
+
+    /// Pop the next valid extension of the current level.
+    #[inline]
+    pub fn pop_valid_cur(&mut self) -> Option<VertexId> {
+        self.pop_valid(self.len - 1)
+    }
+
+    // ------------------------------------------------------------------
+    // Traversal movement.
+    // ------------------------------------------------------------------
 
     /// Induced-edge bitmap of the current traversal (`tr[0..len]`).
     #[inline]
@@ -136,7 +349,7 @@ impl Te {
         let p = self.len;
         self.tr[p] = v;
         self.len += 1;
-        self.ext[self.len - 1].clear();
+        self.levels[self.len - 1].clear();
         if genedges && p >= 2 {
             let mut bits = 0u64;
             for j in 0..p {
@@ -153,7 +366,7 @@ impl Te {
     /// Move backward: drop the last vertex, clearing the level left.
     pub fn pop_vertex(&mut self) {
         debug_assert!(self.len > 0);
-        self.ext[self.len - 1].clear();
+        self.levels[self.len - 1].clear();
         self.len -= 1;
     }
 
@@ -162,13 +375,13 @@ impl Te {
     /// the donating warp (or don't exist for fresh single-vertex seeds).
     pub fn init_from_seed(&mut self, seed: &Seed, g: &CsrGraph, genedges: bool) {
         debug_assert!(!seed.is_empty() && seed.len() <= self.k - 1);
-        for l in &mut self.ext {
-            l.clear();
+        for lv in self.levels.iter_mut().take(self.k - 1) {
+            lv.clear();
         }
         self.len = seed.len();
         self.tr[..seed.len()].copy_from_slice(seed);
         for l in 0..self.len.saturating_sub(1) {
-            self.ext[l].generated = true; // empty: nothing left at prefix levels
+            self.levels[l].generated = true; // empty: nothing left at prefix levels
         }
         if genedges {
             self.edges = [0; MAX_K];
@@ -184,35 +397,49 @@ impl Te {
         }
     }
 
+    // ------------------------------------------------------------------
+    // Load-balancing hooks.
+    // ------------------------------------------------------------------
+
     /// Shallowest level (<= k-3) holding an unconsumed valid extension —
     /// the donation point for the load balancer. Levels strictly below the
-    /// current one hold whole unexplored subtrees.
+    /// current one hold whole unexplored subtrees. O(k) thanks to the
+    /// per-level live counters.
     pub fn donation_level(&self) -> Option<usize> {
         if self.len == 0 {
             return None;
         }
         (0..self.len.min(self.k - 2))
-            .find(|&l| self.ext[l].generated && self.ext[l].valid_count() > 0)
+            .find(|&l| self.levels[l].generated && self.levels[l].live > 0)
     }
 
-    /// Pop one extension from `level` to form a donated seed.
+    /// Pop one extension from `level` to form a donated seed — the
+    /// redistribute step slicing one unit off this warp's arena range.
     pub fn donate(&mut self, level: usize) -> Option<Seed> {
-        let e = self.ext[level].pop_valid()?;
+        let e = self.pop_valid(level)?;
         let mut seed: Seed = self.tr[..=level].to_vec();
         seed.push(e);
         Some(seed)
     }
 
-    /// Resident bytes of the TE structure (LB copy cost, memory ablation).
+    /// Resident bytes of the TE structure (LB copy cost, memory ablation):
+    /// the handle plus the occupied portion of its slabs.
     pub fn memory_bytes(&self) -> usize {
         std::mem::size_of::<Self>()
             + self
-                .ext
+                .levels
                 .iter()
-                .map(|l| l.items.capacity() * std::mem::size_of::<VertexId>())
+                .take(self.k - 1)
+                .map(|lv| lv.len * std::mem::size_of::<VertexId>())
                 .sum::<usize>()
     }
 }
+
+// SAFETY: the raw slab pointers target either the handle's own boxed
+// allocation or an arena region assigned exclusively to this handle;
+// moving the handle to another thread moves that exclusive access with it
+// (the scheduler guarantees one owner at a time).
+unsafe impl Send for Te {}
 
 #[cfg(test)]
 mod tests {
@@ -252,21 +479,38 @@ mod tests {
         let mut te = Te::new(5);
         te.init_from_seed(&vec![0, 1, 2], &g, true);
         assert_eq!(te.len(), 3);
-        assert!(te.ext_at(0).generated);
-        assert!(te.ext_at(1).generated);
-        assert!(!te.ext_at(2).generated);
+        assert!(te.generated(0));
+        assert!(te.generated(1));
+        assert!(!te.generated(2));
         // edges of the seed prefix recomputed (complete graph)
         assert_eq!(te.edges_bitmap(), 0b11);
     }
 
     #[test]
     fn pop_valid_skips_invalidated() {
-        let mut l = ExtLevel::default();
-        l.items = vec![3, INVALID_V, 7, INVALID_V];
-        assert_eq!(l.pop_valid(), Some(7));
-        assert_eq!(l.pop_valid(), Some(3));
-        assert_eq!(l.pop_valid(), None);
-        assert_eq!(l.valid_count(), 0);
+        let g = generators::complete(4);
+        let mut te = Te::new(3);
+        te.init_from_seed(&vec![0], &g, false);
+        te.set_ext(0, &[3, INVALID_V, 7, INVALID_V]);
+        assert_eq!(te.live_count(0), 2);
+        assert_eq!(te.pop_valid(0), Some(7));
+        assert_eq!(te.pop_valid(0), Some(3));
+        assert_eq!(te.pop_valid(0), None);
+        assert_eq!(te.live_count(0), 0);
+    }
+
+    #[test]
+    fn live_count_is_maintained_not_scanned() {
+        let g = generators::complete(4);
+        let mut te = Te::new(3);
+        te.init_from_seed(&vec![0], &g, false);
+        te.set_ext(0, &[1, 2, 3]);
+        assert_eq!(te.live_count(0), 3);
+        te.note_invalidated(0, 2);
+        assert_eq!(te.live_count(0), 1);
+        te.set_ext_len(0, 1, 1);
+        assert_eq!(te.ext_len(0), 1);
+        assert_eq!(te.live_count(0), 1);
     }
 
     #[test]
@@ -274,15 +518,15 @@ mod tests {
         let g = generators::complete(8);
         let mut te = Te::new(6);
         te.init_from_seed(&vec![0], &g, false);
-        te.ext_at(0).items = vec![5, 6];
-        te.ext_at(0).generated = true;
+        te.set_ext(0, &[5, 6]);
+        te.set_generated(0, true);
         te.push_vertex(1, &g, false);
-        te.ext_at(1).items = vec![7];
-        te.ext_at(1).generated = true;
+        te.set_ext(1, &[7]);
+        te.set_generated(1, true);
         assert_eq!(te.donation_level(), Some(0));
         let seed = te.donate(0).unwrap();
         assert_eq!(seed, vec![0, 6]);
-        assert_eq!(te.ext_at(0).valid_count(), 1);
+        assert_eq!(te.live_count(0), 1);
     }
 
     #[test]
@@ -290,8 +534,18 @@ mod tests {
         let g = generators::complete(8);
         let mut te = Te::new(4); // donations only from levels <= k-3 = 1
         te.init_from_seed(&vec![0, 1, 2], &g, false);
-        te.ext_at(2).items = vec![5];
-        te.ext_at(2).generated = true;
+        te.set_ext(2, &[5]);
+        te.set_generated(2, true);
         assert_eq!(te.donation_level(), None);
+    }
+
+    #[test]
+    fn memory_bytes_tracks_occupancy() {
+        let g = generators::complete(6);
+        let mut te = Te::new(4);
+        let empty = te.memory_bytes();
+        te.init_from_seed(&vec![0], &g, false);
+        te.set_ext(0, &[1, 2, 3, 4]);
+        assert_eq!(te.memory_bytes(), empty + 16);
     }
 }

@@ -1,12 +1,15 @@
 //! DuMato: efficient strategies for graph pattern mining algorithms,
 //! reproduced as a three-layer Rust + JAX/Pallas stack (SBAC-PAD 2022).
 //!
-//! Layer map (see DESIGN.md):
+//! Layer map (see DESIGN.md §1):
 //! - L3 (this crate): DuMato API, DFS-wide engine on a virtual-GPU
-//!   execution model, warp-level load balancing, baselines, benches.
+//!   execution model — an arena-backed flat TE pool (engine::arena), a
+//!   persistent work-stealing segment scheduler (engine::scheduler)
+//!   shared with the DM_DFS baseline, warp-level load balancing behind
+//!   the balance::LbPolicy trait, baselines, benches.
 //! - L2/L1 (python/compile): jax + Pallas kernels, AOT-lowered to HLO text.
 //! - runtime: PJRT CPU client executing the AOT artifacts from the L3 hot
-//!   path.
+//!   path (gated behind the `xla` cargo feature offline).
 
 pub mod api;
 pub mod apps;

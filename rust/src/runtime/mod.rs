@@ -5,17 +5,32 @@
 //! instruction ids which xla_extension 0.5.1 rejects; the text parser
 //! reassigns ids (see /opt/xla-example/README.md and DESIGN.md). Python
 //! never runs at request time — `XlaRuntime` only needs `artifacts/`.
+//!
+//! The PJRT client depends on the external `xla` crate, which is not
+//! available in offline builds; it is gated behind the `xla` cargo
+//! feature. Without the feature, [`XlaRuntime`] is a stub whose
+//! constructor reports the runtime as unavailable, so every caller's
+//! "skip gracefully when PJRT is absent" path still compiles and runs.
 
 pub mod artifact;
+#[cfg(feature = "xla")]
 pub mod offload;
 
 pub use artifact::{Artifact, Manifest};
+#[cfg(feature = "xla")]
 pub use offload::XlaRuntime;
 
 /// Quick probe used by examples/benches to skip XLA paths gracefully when
 /// the PJRT plugin is unavailable.
+#[cfg(feature = "xla")]
 pub fn pjrt_available() -> bool {
     xla::PjRtClient::cpu().is_ok()
+}
+
+/// Without the `xla` feature there is no PJRT client to probe.
+#[cfg(not(feature = "xla"))]
+pub fn pjrt_available() -> bool {
+    false
 }
 
 /// Default artifacts directory, overridable via `DUMATO_ARTIFACTS`.
@@ -23,4 +38,45 @@ pub fn artifacts_dir() -> std::path::PathBuf {
     std::env::var_os("DUMATO_ARTIFACTS")
         .map(Into::into)
         .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}
+
+/// Stub offload runtime for builds without the `xla` feature: the
+/// constructor always errors, so code paths that probe for the runtime
+/// (CLI `--engine xla`, the e2e example, runtime integration tests) fail
+/// soft instead of failing to compile.
+#[cfg(not(feature = "xla"))]
+pub struct XlaRuntime {
+    manifest: Manifest,
+}
+
+#[cfg(not(feature = "xla"))]
+impl XlaRuntime {
+    pub fn new(_artifacts_dir: &std::path::Path) -> anyhow::Result<Self> {
+        anyhow::bail!(
+            "built without the `xla` cargo feature: the PJRT offload runtime is unavailable \
+             (rebuild with `--features xla` and the xla crate vendored)"
+        )
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn triangle_count(&mut self, _g: &crate::graph::CsrGraph) -> anyhow::Result<u64> {
+        anyhow::bail!("xla feature disabled")
+    }
+
+    pub fn motif3_census(&mut self, _g: &crate::graph::CsrGraph) -> anyhow::Result<(u64, u64)> {
+        anyhow::bail!("xla feature disabled")
+    }
+
+    pub fn intersect_count(
+        &mut self,
+        _b: usize,
+        _w: usize,
+        _cur: &[i32],
+        _nbr: &[i32],
+    ) -> anyhow::Result<(Vec<i32>, Vec<i32>)> {
+        anyhow::bail!("xla feature disabled")
+    }
 }

@@ -103,6 +103,18 @@ pub struct KernelMetrics {
     pub migrations: u64,
     /// Simulated seconds spent in LB copies.
     pub lb_overhead_seconds: f64,
+    /// Warp slots taken from another worker's queue (scheduler stealing).
+    pub steals: u64,
+    /// (worker, segment) pairs where a worker went idle for the rest of a
+    /// segment while unfinished warps remained (queued elsewhere or in
+    /// flight) — the waste static partitioning exhibits on skewed work.
+    /// Zero by construction with stealing, where a worker only stops once
+    /// every warp is finished: the metric quantifies exactly what the
+    /// stealing scheduler eliminates.
+    pub idle_worker_segments: u64,
+    /// OS threads spawned for the run (the persistent pool's size; the
+    /// pre-refactor engine respawned `threads` every segment).
+    pub thread_spawns: u64,
 }
 
 impl KernelMetrics {

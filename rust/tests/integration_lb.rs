@@ -120,3 +120,42 @@ fn checkpoint_resume_preserves_deep_state() {
     assert_eq!(r.count, reference);
     assert!(r.metrics.segments >= 2);
 }
+
+#[test]
+fn lb_on_off_counts_invariant_property() {
+    // randomized version of the paper's correctness contract: the LB layer
+    // (any threshold, stealing on or off) must never change exact counts
+    use dumato::util::proptest::{check, Config};
+    check(
+        Config { cases: 10, ..Default::default() },
+        "engine counts invariant under lb Some/None x steal on/off",
+        |rng| {
+            let n = rng.range(16, 40);
+            let p = 0.15 + rng.f64() * 0.3;
+            let g = generators::erdos_renyi(n, p, rng.next_u64());
+            let k = rng.range(3, 6);
+            let base = EngineConfig {
+                warps: 16,
+                threads: 3,
+                ..Default::default()
+            };
+            let reference = Runner::run(&g, &CliqueCount::new(k), &base).count;
+            let threshold = 0.05 + rng.f64() * 0.9;
+            let mut cfg = base.clone().with_lb(
+                LbConfig {
+                    threshold,
+                    poll_interval: std::time::Duration::from_micros(100),
+                },
+            );
+            cfg.steal = rng.chance(0.5);
+            let lb = Runner::run(&g, &CliqueCount::new(k), &cfg);
+            dumato::prop_assert_eq!(
+                reference,
+                lb.count,
+                "n={n} p={p:.2} k={k} thr={threshold:.2} steal={}",
+                cfg.steal
+            );
+            Ok(())
+        },
+    );
+}

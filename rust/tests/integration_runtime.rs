@@ -2,8 +2,11 @@
 //! L2 jax functions) executed through the rust PJRT runtime must agree
 //! with the pure-rust engine on real graphs.
 //!
-//! These tests skip (pass trivially) when `artifacts/` has not been built;
-//! `make test` builds artifacts first so CI always exercises them.
+//! These tests skip (pass trivially) when `artifacts/` has not been built,
+//! and are `#[ignore]`d entirely when the crate is compiled without the
+//! `xla` feature (the PJRT runtime is then a stub whose constructor
+//! errors): `make test` with the feature enabled builds artifacts first
+//! so a full CI run exercises them.
 
 use dumato::apps::CliqueCount;
 use dumato::engine::{EngineConfig, Runner};
@@ -49,6 +52,10 @@ fn manifest_covers_expected_artifacts() {
 }
 
 #[test]
+#[cfg_attr(
+    not(feature = "xla"),
+    ignore = "XLA-artifact-dependent: needs the xla feature, a PJRT plugin, and `make artifacts` (expected failure in offline builds; see DESIGN.md)"
+)]
 fn xla_triangles_match_engine_across_graph_families() {
     let Some(mut rt) = runtime() else { return };
     let graphs = vec![
@@ -66,6 +73,10 @@ fn xla_triangles_match_engine_across_graph_families() {
 }
 
 #[test]
+#[cfg_attr(
+    not(feature = "xla"),
+    ignore = "XLA-artifact-dependent: needs the xla feature, a PJRT plugin, and `make artifacts` (expected failure in offline builds; see DESIGN.md)"
+)]
 fn xla_motif3_closed_form_matches_engine() {
     let Some(mut rt) = runtime() else { return };
     let g = generators::barabasi_albert(400, 3, 17);
@@ -85,6 +96,10 @@ fn xla_motif3_closed_form_matches_engine() {
 }
 
 #[test]
+#[cfg_attr(
+    not(feature = "xla"),
+    ignore = "XLA-artifact-dependent: needs the xla feature, a PJRT plugin, and `make artifacts` (expected failure in offline builds; see DESIGN.md)"
+)]
 fn intersect_kernel_executes_batches_of_every_variant() {
     let Some(mut rt) = runtime() else { return };
     for (b, w) in [(1024, 32), (4096, 32), (1024, 128), (100, 16), (1, 1)] {
@@ -106,6 +121,10 @@ fn intersect_kernel_executes_batches_of_every_variant() {
 }
 
 #[test]
+#[cfg_attr(
+    not(feature = "xla"),
+    ignore = "XLA-artifact-dependent: needs the xla feature, a PJRT plugin, and `make artifacts` (expected failure in offline builds; see DESIGN.md)"
+)]
 fn executables_are_cached_across_calls() {
     let Some(mut rt) = runtime() else { return };
     let g = generators::cycle(100);

@@ -1,0 +1,130 @@
+//! Scheduler-layer acceptance: the worker pool is persistent (one spawn
+//! per run, however many LB segments execute) and dynamic warp-slot
+//! stealing keeps threads busy on skewed seed distributions where the old
+//! static `chunks_mut` partitioning idles.
+
+use dumato::apps::CliqueCount;
+use dumato::balance::LbConfig;
+use dumato::baselines::enumerate::cliques_from;
+use dumato::engine::{EngineConfig, Runner};
+use dumato::graph::{generators, CsrGraph};
+
+/// A deliberately skewed seed distribution for `warps` virtual warps:
+/// seeds are dealt round-robin by vertex id, so a clique laid out on ids
+/// that are all ≡ 0 (mod warps) lands its entire heavy workload in warp
+/// 0's queue while every other warp gets only pendant leaves.
+fn skewed_deal_graph(warps: usize, clique: usize) -> CsrGraph {
+    let n = warps * clique;
+    let mut adj: Vec<Vec<u32>> = vec![Vec::new(); n];
+    let members: Vec<u32> = (0..clique).map(|i| (i * warps) as u32).collect();
+    for (i, &u) in members.iter().enumerate() {
+        for &v in &members[i + 1..] {
+            adj[u as usize].push(v);
+        }
+    }
+    // pendant leaves keep every other vertex a (trivial) seed
+    for v in 0..n as u32 {
+        if v as usize % warps != 0 {
+            adj[v as usize].push(members[v as usize % clique]);
+        }
+    }
+    CsrGraph::from_adjacency(adj, "skewed-deal")
+}
+
+fn brute_reference(g: &CsrGraph, k: usize) -> u64 {
+    (0..g.num_vertices() as u32).map(|v| cliques_from(g, v, k)).sum()
+}
+
+#[test]
+fn stealing_beats_static_partitioning_on_skewed_deal() {
+    // K20 on warp-0 seeds: enough work that warp 0 spans many quanta
+    // while every other warp drains almost immediately
+    let g = skewed_deal_graph(8, 20);
+    let k = 6;
+    let expect = brute_reference(&g, k);
+
+    let base = EngineConfig {
+        warps: 8,
+        threads: 4,
+        ..Default::default()
+    };
+    let stealing = Runner::run(&g, &CliqueCount::new(k), &EngineConfig { steal: true, ..base.clone() });
+    let static_ = Runner::run(&g, &CliqueCount::new(k), &EngineConfig { steal: false, ..base });
+
+    assert_eq!(stealing.count, expect);
+    assert_eq!(static_.count, expect);
+    // the acceptance criterion: stealing shows fewer idle-thread segments
+    // than the static-chunking baseline on a skewed deal
+    assert!(
+        static_.metrics.idle_worker_segments > stealing.metrics.idle_worker_segments,
+        "static idle {} must exceed stealing idle {}",
+        static_.metrics.idle_worker_segments,
+        stealing.metrics.idle_worker_segments
+    );
+    assert_eq!(stealing.metrics.idle_worker_segments, 0);
+}
+
+#[test]
+fn worker_pool_is_spawned_once_per_run() {
+    // force several LB stops; the pool must not respawn per segment
+    let g = generators::ASTROPH.scaled(0.06).generate(3);
+    let cfg = EngineConfig {
+        warps: 64,
+        threads: 3,
+        ..Default::default()
+    }
+    .with_lb(LbConfig {
+        threshold: 0.9,
+        poll_interval: std::time::Duration::from_micros(50),
+    });
+    let r = Runner::run(&g, &CliqueCount::new(5), &cfg);
+    assert!(r.metrics.segments >= 2, "expected LB stops, got 1 segment");
+    assert_eq!(
+        r.metrics.thread_spawns, 3,
+        "threads spawned must equal the pool size regardless of {} segments",
+        r.metrics.segments
+    );
+}
+
+#[test]
+fn one_thread_and_many_threads_agree_with_stealing_on_and_off() {
+    let g = generators::barabasi_albert(70, 4, 11);
+    let reference = Runner::run(
+        &g,
+        &CliqueCount::new(4),
+        &EngineConfig { warps: 1, threads: 1, ..Default::default() },
+    )
+    .count;
+    for steal in [false, true] {
+        for (warps, threads) in [(7, 3), (64, 8)] {
+            let c = Runner::run(
+                &g,
+                &CliqueCount::new(4),
+                &EngineConfig { warps, threads, steal, ..Default::default() },
+            )
+            .count;
+            assert_eq!(c, reference, "steal={steal} warps={warps} threads={threads}");
+        }
+    }
+}
+
+#[test]
+fn dm_dfs_rides_the_same_scheduler() {
+    use dumato::baselines::{App, DmDfs};
+    let g = generators::erdos_renyi(40, 0.25, 17);
+    let engine = Runner::run(
+        &g,
+        &CliqueCount::new(4),
+        &EngineConfig { warps: 16, threads: 3, ..Default::default() },
+    )
+    .count;
+    for steal in [false, true] {
+        let mut d = DmDfs::new(App::Clique, 4);
+        d.lanes = 128;
+        d.threads = 3;
+        d.steal = steal;
+        let r = d.run(&g);
+        assert_eq!(r.count, engine, "steal={steal}");
+        assert_eq!(r.metrics.thread_spawns, 3);
+    }
+}

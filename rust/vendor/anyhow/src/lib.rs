@@ -1,0 +1,205 @@
+//! Offline shim for the subset of the `anyhow` crate this workspace uses:
+//! `Error`, `Result<T>`, `anyhow!`, `bail!`, `ensure!`, and the `Context`
+//! extension trait for `Result` and `Option`. The real crate is not
+//! vendored in this container; the API below is call-compatible for every
+//! use site in the repo (message-carrying errors with a context chain).
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A message-carrying error with an optional chain of causes.
+///
+/// Unlike the real `anyhow::Error` this is not a trait-object wrapper; the
+/// cause chain is flattened to owned frames at construction. It does
+/// implement `std::error::Error`, so the blanket [`Context`] impl covers
+/// `Result<T, Error>` as well.
+#[derive(Debug)]
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Construct from a displayable message (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Self {
+            msg: m.to_string(),
+            source: None,
+        }
+    }
+
+    /// Flatten a standard error and its `source()` chain into frames.
+    pub fn from_std<E: StdError + ?Sized>(e: &E) -> Self {
+        let source = e.source().map(|s| Box::new(Self::from_std(s)));
+        Self {
+            msg: e.to_string(),
+            source,
+        }
+    }
+
+    /// Wrap with an outer context frame.
+    pub fn context<C: fmt::Display>(self, c: C) -> Self {
+        Self {
+            msg: c.to_string(),
+            source: Some(Box::new(self)),
+        }
+    }
+
+    /// Iterate the chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &Error> {
+        std::iter::successors(Some(self), |e| e.source.as_deref())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{:#}` prints the whole context chain, `{}` the outer message
+        // (the real crate's behaviour, relied on by `main.rs`).
+        if f.alternate() {
+            let mut first = true;
+            for frame in self.chain() {
+                if !first {
+                    write!(f, ": ")?;
+                }
+                write!(f, "{}", frame.msg)?;
+                first = false;
+            }
+            Ok(())
+        } else {
+            write!(f, "{}", self.msg)
+        }
+    }
+}
+
+impl StdError for Error {
+    fn source(&self) -> Option<&(dyn StdError + 'static)> {
+        self.source.as_deref().map(|e| e as &(dyn StdError + 'static))
+    }
+}
+
+macro_rules! impl_from_std {
+    ($($ty:ty),+ $(,)?) => {
+        $(impl From<$ty> for Error {
+            fn from(e: $ty) -> Self {
+                Error::from_std(&e)
+            }
+        })+
+    };
+}
+
+impl_from_std!(
+    std::io::Error,
+    std::num::ParseIntError,
+    std::num::ParseFloatError,
+    std::num::TryFromIntError,
+    std::str::Utf8Error,
+    std::string::FromUtf8Error,
+    std::fmt::Error,
+);
+
+/// Attach context to the error branch of a `Result` or to a `None`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::from_std(&e).context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from_std(&e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)+) => {
+        $crate::Error::msg(format!($($arg)+))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return Err($crate::anyhow!($($arg)+))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)+) => {
+        if !$cond {
+            return Err($crate::anyhow!($($arg)+));
+        }
+    };
+    ($cond:expr $(,)?) => {
+        if !$cond {
+            return Err($crate::anyhow!(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<u32> {
+        let v: u32 = s.parse()?; // From<ParseIntError>
+        Ok(v)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert_eq!(parse("7").unwrap(), 7);
+        assert!(parse("x").is_err());
+    }
+
+    #[test]
+    fn context_chains_and_alternate_display() {
+        let e: Result<()> = Err(anyhow!("inner"));
+        let e = e.context("outer").unwrap_err();
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: inner");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing").unwrap_err();
+        assert_eq!(e.to_string(), "missing");
+    }
+
+    #[test]
+    fn ensure_and_bail() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "too big: {x}");
+            if x == 3 {
+                bail!("three is right out");
+            }
+            Ok(x)
+        }
+        assert!(f(2).is_ok());
+        assert!(f(3).is_err());
+        assert!(f(11).is_err());
+    }
+}
