@@ -1,0 +1,120 @@
+//! Multi-device scaling: devices ∈ {1, 2, 4, 8} × {clique, motif} ×
+//! partition policy on the skewed Astro-Ph stand-in, with intra-device LB
+//! at the paper's per-app thresholds and inter-device rebalancing at
+//! fleet epoch barriers. Reports simulated job time (max over device
+//! clocks), speedup over one device, inter-device rebalance traffic, and
+//! the worst per-device idle time — the honest view of partition skew.
+//!
+//! ```
+//! cargo bench --bench scaling
+//! DUMATO_BENCH_SCALE=0.02 cargo bench --bench scaling          # CI smoke
+//! DUMATO_BENCH_JSON=1 cargo bench --bench scaling              # + BENCH_scaling.json
+//! ```
+
+#[path = "support.rs"]
+mod support;
+
+use dumato::apps::{CliqueCount, MotifCount};
+use dumato::balance::LbConfig;
+use dumato::baselines::App;
+use dumato::engine::Runner;
+use dumato::graph::generators;
+use dumato::multi::Partition;
+use dumato::report::Table;
+use dumato::util::fmt_count;
+
+const DEVICES: [usize; 4] = [1, 2, 4, 8];
+
+fn main() {
+    support::print_env_banner("scaling");
+    let g = generators::ASTROPH.scaled(support::scale()).generate(1);
+    println!(
+        "dataset={} |V|={} |E|={} maxdeg={}\n",
+        g.name(),
+        g.num_vertices(),
+        g.num_edges(),
+        g.max_degree()
+    );
+
+    let mut t = Table::new(
+        "Multi-device scaling (simulated seconds; job time = max over device clocks)",
+        &[
+            "app",
+            "partition",
+            "devices",
+            "sim_time",
+            "speedup",
+            "rebal_bytes",
+            "migrations",
+            "idle_max_s",
+        ],
+    );
+    for (name, app, k) in [("clique k=5", App::Clique, 5), ("motif k=4", App::Motif, 4)] {
+        for partition in [Partition::RoundRobin, Partition::DegreeAware] {
+            let mut base_time: Option<f64> = None;
+            for devices in DEVICES {
+                let mut cfg = support::engine_cfg();
+                cfg.devices = devices;
+                cfg.partition = partition;
+                cfg.lb = Some(match app {
+                    App::Clique => LbConfig::clique(),
+                    App::Motif => LbConfig::motif(),
+                });
+                let (timed_out, m) = match app {
+                    App::Clique => {
+                        let r = Runner::run(&g, &CliqueCount::new(k), &cfg);
+                        (r.timed_out, r.metrics)
+                    }
+                    App::Motif => {
+                        let r = Runner::run(&g, &MotifCount::new(k), &cfg);
+                        (r.timed_out, r.metrics)
+                    }
+                };
+                if timed_out {
+                    t.row(vec![
+                        name.to_string(),
+                        format!("{partition:?}"),
+                        devices.to_string(),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                        "-".into(),
+                    ]);
+                    continue;
+                }
+                let sim = m.sim_seconds;
+                // the baseline is strictly the 1-device row: if it timed
+                // out, later rows print '-' rather than silently
+                // rebasing the speedup column
+                if devices == 1 {
+                    base_time = Some(sim);
+                }
+                let speedup = match (devices, base_time) {
+                    (1, _) => "1.00x".to_string(),
+                    (_, Some(base)) => format!("{:.2}x", base / sim.max(1e-12)),
+                    (_, None) => "-".to_string(),
+                };
+                t.row(vec![
+                    name.to_string(),
+                    format!("{partition:?}"),
+                    devices.to_string(),
+                    format!("{sim:.4}"),
+                    speedup,
+                    fmt_count(m.fleet_bytes),
+                    fmt_count(m.fleet_migrations),
+                    format!("{:.4}", m.max_device_idle_seconds()),
+                ]);
+            }
+        }
+    }
+    println!("{}", t.render());
+    println!(
+        "(speedup is vs the 1-device row of the same app x partition; rebalance \
+         traffic is inter-device only — intra-device LB copies are in the time)\n"
+    );
+    if std::env::var("DUMATO_BENCH_JSON").is_ok() {
+        std::fs::write("BENCH_scaling.json", t.to_json()).expect("write BENCH_scaling.json");
+        println!("wrote BENCH_scaling.json");
+    }
+}

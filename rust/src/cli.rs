@@ -26,10 +26,19 @@ impl Args {
                 } else if flag_names.contains(&key) {
                     args.flags.push(key.to_string());
                 } else {
-                    let v = it
-                        .next()
-                        .ok_or_else(|| anyhow!("option --{key} expects a value"))?;
-                    args.options.insert(key.to_string(), v);
+                    // The value must not itself be an option: without this
+                    // check `--devices --steal` silently stored "--steal"
+                    // as the value of --devices. Single-dash tokens stay
+                    // valid values (negative numbers).
+                    let takes_value = matches!(it.peek(), Some(v) if !v.starts_with("--"));
+                    if takes_value {
+                        let v = it.next().expect("peeked Some");
+                        args.options.insert(key.to_string(), v);
+                    } else if let Some(v) = it.peek() {
+                        bail!("option --{key} expects a value, got option '{v}'");
+                    } else {
+                        bail!("option --{key} expects a value");
+                    }
                 }
             } else {
                 args.positionals.push(a);
@@ -107,6 +116,29 @@ mod tests {
     fn missing_value_errors() {
         let r = Args::parse(["--k".to_string()].into_iter(), &[]);
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn option_value_cannot_be_another_option() {
+        // regression: `--devices --steal` used to store "--steal" as the
+        // value of --devices
+        let r = Args::parse(
+            ["--devices".to_string(), "--steal".to_string()].into_iter(),
+            &["steal"],
+        );
+        assert!(r.is_err());
+        let msg = format!("{:#}", r.unwrap_err());
+        assert!(msg.contains("--devices"), "unhelpful error: {msg}");
+        // the `--key=value` form still allows values with leading dashes
+        let a = parse(&["--devices=--weird"], &[]);
+        assert_eq!(a.get("devices"), Some("--weird"));
+    }
+
+    #[test]
+    fn negative_numbers_are_valid_option_values() {
+        let a = parse(&["--delta", "-3", "--bias", "-0.5"], &[]);
+        assert_eq!(a.get("delta"), Some("-3"));
+        assert_eq!(a.get("bias"), Some("-0.5"));
     }
 
     #[test]

@@ -11,6 +11,7 @@ use crate::balance::LbConfig;
 use crate::cli::Args;
 use crate::engine::EngineConfig;
 use crate::graph::{generators, loaders, CsrGraph};
+use crate::multi::{Interconnect, Partition};
 
 /// Resolve a dataset: a Table III stand-in name (citeseer/astroph/mico/
 /// dblp/livejournal), a fixture (`complete:16`, `cycle:30`, `star:64`,
@@ -64,7 +65,9 @@ fn fixture(kind: &str, params: &str, seed: u64) -> Result<CsrGraph> {
 }
 
 /// Build an `EngineConfig` from CLI args:
-/// `--warps N --threads N --lb --lb-threshold F --timeout SECS`.
+/// `--warps N --threads N --lb --lb-threshold F --timeout SECS
+///  --devices N --partition round-robin|degree-aware
+///  --interconnect pcie|nvlink --epoch-segments N`.
 pub fn engine_config(args: &Args, default_lb_threshold: f64) -> Result<EngineConfig> {
     let mut cfg = EngineConfig {
         warps: args.parse_or("warps", 1024usize)?,
@@ -82,6 +85,10 @@ pub fn engine_config(args: &Args, default_lb_threshold: f64) -> Result<EngineCon
     if timeout > 0.0 {
         cfg.time_limit = Some(Duration::from_secs_f64(timeout));
     }
+    cfg.devices = args.parse_or("devices", cfg.devices)?;
+    cfg.partition = args.parse_or("partition", Partition::default())?;
+    cfg.interconnect = args.parse_or("interconnect", Interconnect::default())?;
+    cfg.epoch_segments = args.parse_or("epoch-segments", cfg.epoch_segments)?;
     Ok(cfg)
 }
 
@@ -123,5 +130,24 @@ mod tests {
         let cfg2 = engine_config(&args(&[]), 0.4).unwrap();
         assert!(cfg2.lb.is_none());
         assert!(cfg2.time_limit.is_none());
+        assert_eq!(cfg2.devices, 1);
+    }
+
+    #[test]
+    fn engine_config_multi_device_args() {
+        let raw = &[
+            "--devices",
+            "4",
+            "--partition",
+            "degree-aware",
+            "--interconnect",
+            "nvlink",
+        ];
+        let cfg = engine_config(&args(raw), 0.4).unwrap();
+        assert_eq!(cfg.devices, 4);
+        assert_eq!(cfg.partition, Partition::DegreeAware);
+        assert_eq!(cfg.interconnect, Interconnect::NvLink);
+        assert!(engine_config(&args(&["--partition", "nope"]), 0.4).is_err());
+        assert!(engine_config(&args(&["--interconnect", "nope"]), 0.4).is_err());
     }
 }

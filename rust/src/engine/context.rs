@@ -640,7 +640,11 @@ mod tests {
     fn aggregate_pattern_uses_dict() {
         let g = generators::complete(4); // K4: all 3-subsets are triangles
         let mut h = harness(&g, 3);
-        h.4 = SharedRun::new(3, true, Some(crate::canon::CanonDict::build(3)));
+        h.4 = SharedRun::new(
+            3,
+            true,
+            Some(std::sync::Arc::new(crate::canon::CanonDict::build(3))),
+        );
         h.1.push_back(vec![0]);
         let mut c = ctx!(&g, h);
         assert!(c.control());

@@ -22,7 +22,9 @@
 //!
 //! The thread-centric DM_DFS baseline reuses the same scheduler with
 //! lanes as units (warp width 1), so engine and baseline costs come from
-//! one execution layer.
+//! one execution layer. The multi-device layer (`crate::multi`) drives
+//! one `runner::EngineRun` per virtual device and is entered through
+//! `Runner::run` whenever `EngineConfig::devices > 1`.
 
 pub mod arena;
 pub mod context;

@@ -10,13 +10,15 @@
 
 use std::collections::VecDeque;
 use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::api::GpmAlgorithm;
 use crate::balance::{redistribute, LbConfig, LbPolicy};
 use crate::canon::cache::merge_pattern_counts;
 use crate::canon::CanonDict;
-use crate::graph::CsrGraph;
+use crate::graph::{CsrGraph, VertexId};
+use crate::multi::{DeviceFleet, Interconnect, Partition};
 use crate::util::Timer;
 use crate::vgpu::{CostModel, KernelMetrics, WarpProfiler};
 
@@ -32,13 +34,14 @@ pub struct SharedRun {
     pub k: usize,
     pub genedges: bool,
     pub stop: AtomicBool,
-    pub dict: Option<CanonDict>,
+    /// Pattern dictionary, shared across a fleet's devices (one build).
+    pub dict: Option<Arc<CanonDict>>,
     /// vGPU cost model (quantum accounting in `control`).
     pub cost: CostModel,
 }
 
 impl SharedRun {
-    pub fn new(k: usize, genedges: bool, dict: Option<CanonDict>) -> Self {
+    pub fn new(k: usize, genedges: bool, dict: Option<Arc<CanonDict>>) -> Self {
         Self {
             k,
             genedges,
@@ -105,6 +108,23 @@ pub struct EngineConfig {
     /// Work stealing between worker threads within a segment (off =
     /// static chunk partitioning, kept for ablation).
     pub steal: bool,
+    /// Virtual devices to shard the job across. `1` is the classic
+    /// single-device engine; `> 1` routes through [`DeviceFleet`], with
+    /// `warps` virtual warps *per device*.
+    pub devices: usize,
+    /// Seed-sharding policy across devices (multi-device runs).
+    pub partition: Partition,
+    /// Interconnect model charged for inter-device migrations.
+    pub interconnect: Interconnect,
+    /// Kernel segments each device runs per fleet rebalance epoch
+    /// (multi-device runs; intra-device LB still redistributes at every
+    /// segment stop within an epoch).
+    pub epoch_segments: usize,
+    /// Device-granular rebalance policy: inter-device donation runs at an
+    /// epoch barrier when `should_stop(active_devices, devices)` fires.
+    /// The default threshold of 1.0 rebalances whenever any device has
+    /// drained (`poll_interval` is unused — epochs are barriers).
+    pub fleet_lb: LbConfig,
 }
 
 impl Default for EngineConfig {
@@ -118,6 +138,11 @@ impl Default for EngineConfig {
             quantum_cycles: 2.0e6, // ~1.4 ms of device time per round
             layout: ExtLayout::Flat,
             steal: true,
+            devices: 1,
+            partition: Partition::default(),
+            interconnect: Interconnect::default(),
+            epoch_segments: 2,
+            fleet_lb: LbConfig::default().with_threshold(1.0),
         }
     }
 }
@@ -155,12 +180,13 @@ pub struct RunReport {
 /// The scheduler-facing view of an engine run: the warp table in a
 /// [`UnitTable`] so workers claim disjoint warps through `&self` (the
 /// exclusivity unsafety lives in `segment::UnitTable`, not here).
-struct EngineRun<'a, A: GpmAlgorithm> {
-    g: &'a CsrGraph,
-    algo: &'a A,
-    shared: &'a SharedRun,
-    warps: UnitTable<WarpState>,
-    quantum: f64,
+/// Shared with `multi::fleet`, which drives one of these per device.
+pub(crate) struct EngineRun<'a, A: GpmAlgorithm> {
+    pub(crate) g: &'a CsrGraph,
+    pub(crate) algo: &'a A,
+    pub(crate) shared: &'a SharedRun,
+    pub(crate) warps: UnitTable<WarpState>,
+    pub(crate) quantum: f64,
 }
 
 impl<A: GpmAlgorithm> SegmentRunner for EngineRun<'_, A> {
@@ -193,14 +219,76 @@ impl<A: GpmAlgorithm> SegmentRunner for EngineRun<'_, A> {
     }
 }
 
+/// Deal single-vertex seeds round-robin across a device's warps (paper:
+/// traversals start at every vertex; isolated vertices can't extend and
+/// never appear in `seeds`), then mark workless warps finished. Shared
+/// with `multi::fleet`, which deals each device its partition shard.
+pub(crate) fn deal_seeds(warps: &mut [WarpState], seeds: &[VertexId]) {
+    let n = warps.len().max(1);
+    for (i, &v) in seeds.iter().enumerate() {
+        warps[i % n].queue.push_back(vec![v]);
+    }
+    for w in warps.iter_mut() {
+        if !w.has_work() {
+            w.finished = true;
+        }
+    }
+}
+
+/// CPU-side reduction of one device's warps (the paper reduces on the
+/// host after the kernel drains): fold the [A1]/[A3] aggregators and the
+/// profiler totals into `metrics`, and merge [A2] pattern counts into
+/// (canonical bitmap, count) pairs sorted by bitmap. Shared with
+/// `multi::fleet`, which reduces per device and merges across the fleet.
+pub(crate) fn reduce_device(
+    k: usize,
+    dict: Option<&CanonDict>,
+    warps: &mut [WarpState],
+    metrics: &mut KernelMetrics,
+) -> (u64, Vec<(u64, u64)>, Vec<StoredSubgraph>) {
+    let mut count = 0u64;
+    let mut stored = Vec::new();
+    for w in warps.iter_mut() {
+        count += w.agg.count;
+        stored.append(&mut w.agg.stored);
+        metrics.total_insts += w.prof.insts;
+        metrics.total_gld += w.prof.gld_transactions;
+    }
+    let mut patterns: Vec<(u64, u64)> = match dict {
+        Some(dict) => {
+            let mut dense = vec![0u64; dict.num_patterns()];
+            for w in warps.iter() {
+                for (id, &c) in w.agg.pattern_dense.iter().enumerate() {
+                    dense[id] += c;
+                }
+            }
+            (0..dense.len())
+                .filter(|&i| dense[i] > 0)
+                .map(|i| (dict.representative(i as u32), dense[i]))
+                .collect()
+        }
+        None => {
+            let locals: Vec<_> = warps.iter().map(|w| w.agg.pattern_raw.clone()).collect();
+            let mut v: Vec<(u64, u64)> = merge_pattern_counts(k, &locals).into_iter().collect();
+            v.retain(|&(_, c)| c > 0);
+            v
+        }
+    };
+    patterns.sort_unstable();
+    (count, patterns, stored)
+}
+
 /// The engine entry point.
 pub struct Runner;
 
 impl Runner {
     pub fn run<A: GpmAlgorithm>(g: &CsrGraph, algo: &A, cfg: &EngineConfig) -> RunReport {
+        if cfg.devices > 1 {
+            return DeviceFleet::new(cfg).run(g, algo);
+        }
         let k = algo.k();
         let dict = if algo.needs_dict() && k <= CanonDict::MAX_DICT_K {
-            Some(CanonDict::build(k))
+            Some(Arc::new(CanonDict::build(k)))
         } else {
             None
         };
@@ -218,23 +306,15 @@ impl Runner {
             .enumerate()
             .map(|(i, te)| WarpState::bound(i, te))
             .collect();
-        // Deal single-vertex seeds round-robin (paper: traversals start at
-        // every vertex; isolated vertices can't extend and are skipped).
-        for v in 0..g.num_vertices() {
-            if g.degree(v as u32) > 0 {
-                warps[v % num_warps].queue.push_back(vec![v as u32]);
-            }
-        }
-        for w in &mut warps {
-            if !w.has_work() {
-                w.finished = true;
-            }
-        }
+        let seeds: Vec<VertexId> =
+            (0..g.num_vertices() as VertexId).filter(|&v| g.degree(v) > 0).collect();
+        deal_seeds(&mut warps, &seeds);
         let initial: Vec<usize> = warps.iter().filter(|w| !w.finished).map(|w| w.id).collect();
 
         let wall = Timer::start();
         let mut metrics = KernelMetrics {
             warps: num_warps,
+            devices: 1,
             ..Default::default()
         };
         let run = EngineRun {
@@ -299,36 +379,8 @@ impl Runner {
 
         // Reduction (CPU side, as in the paper).
         let mut warps: Vec<WarpState> = run.warps.into_inner();
-        let mut count = 0u64;
-        let mut stored = Vec::new();
-        for w in &mut warps {
-            count += w.agg.count;
-            stored.append(&mut w.agg.stored);
-            metrics.total_insts += w.prof.insts;
-            metrics.total_gld += w.prof.gld_transactions;
-        }
-        let patterns = match &shared.dict {
-            Some(dict) => {
-                let mut dense = vec![0u64; dict.num_patterns()];
-                for w in &warps {
-                    for (id, &c) in w.agg.pattern_dense.iter().enumerate() {
-                        dense[id] += c;
-                    }
-                }
-                (0..dense.len())
-                    .filter(|&i| dense[i] > 0)
-                    .map(|i| (dict.representative(i as u32), dense[i]))
-                    .collect()
-            }
-            None => {
-                let locals: Vec<_> = warps.iter().map(|w| w.agg.pattern_raw.clone()).collect();
-                let mut v: Vec<(u64, u64)> =
-                    merge_pattern_counts(k, &locals).into_iter().collect();
-                v.retain(|&(_, c)| c > 0);
-                v.sort_unstable();
-                v
-            }
-        };
+        let (count, patterns, stored) =
+            reduce_device(k, shared.dict.as_deref(), &mut warps, &mut metrics);
         metrics.wall_seconds = wall.secs();
         // The warp handles point into `arena`; drop them before it.
         drop(warps);

@@ -6,7 +6,9 @@
 //!   execution model — an arena-backed flat TE pool (engine::arena), a
 //!   persistent work-stealing segment scheduler (engine::scheduler)
 //!   shared with the DM_DFS baseline, warp-level load balancing behind
-//!   the balance::LbPolicy trait, baselines, benches.
+//!   the balance::LbPolicy trait, a multi-device execution layer
+//!   (multi::DeviceFleet: seed sharding + inter-device rebalancing over
+//!   an explicit interconnect model), baselines, benches.
 //! - L2/L1 (python/compile): jax + Pallas kernels, AOT-lowered to HLO text.
 //! - runtime: PJRT CPU client executing the AOT artifacts from the L3 hot
 //!   path (gated behind the `xla` cargo feature offline).
@@ -20,6 +22,7 @@ pub mod cli;
 pub mod config;
 pub mod engine;
 pub mod graph;
+pub mod multi;
 pub mod report;
 pub mod runtime;
 pub mod util;

@@ -37,6 +37,7 @@ fn main() {
 
 const USAGE: &str = "usage: dumato <clique|motif|query|stats|triangles|baseline> [options]
   common: --dataset NAME|FIXTURE|PATH --scale F --seed N --warps N --threads N --lb --timeout SECS
+  multi-device: --devices N --partition round-robin|degree-aware --interconnect pcie|nvlink --epoch-segments N
   clique/motif: --k N
   query: --k N --pattern <3-clique|wedge|4-cycle|4-path|3-star|diamond|tailed-triangle>
   triangles: --engine <engine|xla>
@@ -74,6 +75,17 @@ fn print_run(report: &dumato::engine::RunReport, wall: bool) {
         report.metrics.segments,
         report.metrics.migrations,
     );
+    if report.metrics.devices > 1 {
+        println!(
+            "  devices={}  epochs={}  fleet_migrations={}  fleet_bytes={}  xfer={:.6}s  idle_max={:.4}s",
+            report.metrics.devices,
+            report.metrics.fleet_epochs,
+            fmt_count(report.metrics.fleet_migrations),
+            fmt_count(report.metrics.fleet_bytes),
+            report.metrics.fleet_xfer_seconds,
+            report.metrics.max_device_idle_seconds(),
+        );
+    }
     if wall {
         println!(
             "  insts={}  gld_transactions={}  inst/warp={:.0}",

@@ -1,0 +1,335 @@
+//! `DeviceFleet` — the multi-device orchestrator.
+//!
+//! Each virtual device is a full single-GPU engine instance: its own flat
+//! TE arena, its own `WarpProfiler`s (inside its `WarpState`s), its own
+//! persistent-scheduler drives, its own CPU-side LB monitor. The fleet
+//! runs *epochs*: every device with work drives up to
+//! `EngineConfig::epoch_segments` kernel segments (intra-device LB
+//! redistributes at every segment stop, exactly as the single-device
+//! runner does), accounting simulated time into its **own clock**. At the
+//! epoch barrier the clocks synchronize — job time is the max over device
+//! clocks, so per-device skew shows up as idle time rather than being
+//! averaged away — and, when the device-granular `fleet_lb` policy fires,
+//! [`rebalance_fleet`](super::rebalance::rebalance_fleet) migrates
+//! traversal prefixes from loaded devices to drained ones, charging the
+//! [`Interconnect`](super::Interconnect) for the bytes moved.
+//!
+//! The devices execute sequentially in host wall-clock (they are virtual;
+//! only simulated seconds are claim-bearing). Scheduler worker pools are
+//! per device-epoch, so `KernelMetrics::thread_spawns` accumulates across
+//! drives in fleet runs.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::api::GpmAlgorithm;
+use crate::balance::{redistribute, LbPolicy};
+use crate::canon::CanonDict;
+use crate::engine::runner::{deal_seeds, reduce_device, EngineRun};
+use crate::engine::scheduler::{self, SchedulerConfig};
+use crate::engine::{
+    EngineConfig, RunReport, SegmentControl, SharedRun, TeArena, UnitTable, WarpState,
+};
+use crate::graph::CsrGraph;
+use crate::util::Timer;
+use crate::vgpu::KernelMetrics;
+
+/// One enumeration job across `EngineConfig::devices` virtual GPUs.
+pub struct DeviceFleet {
+    cfg: EngineConfig,
+}
+
+impl DeviceFleet {
+    pub fn new(cfg: &EngineConfig) -> Self {
+        Self { cfg: cfg.clone() }
+    }
+
+    /// The configured device count (>= 1).
+    pub fn devices(&self) -> usize {
+        self.cfg.devices.max(1)
+    }
+
+    pub fn run<A: GpmAlgorithm>(&self, g: &CsrGraph, algo: &A) -> RunReport {
+        let cfg = &self.cfg;
+        let ndev = self.devices();
+        let wpd = cfg.warps.max(1); // virtual warps per device
+        let k = algo.k();
+        // One dictionary build, shared by every device's SharedRun.
+        let dict = if algo.needs_dict() && k <= CanonDict::MAX_DICT_K {
+            Some(Arc::new(CanonDict::build(k)))
+        } else {
+            None
+        };
+        let shareds: Vec<SharedRun> = (0..ndev)
+            .map(|_| {
+                let mut s = SharedRun::new(k, algo.needs_edges(), dict.clone());
+                s.cost = cfg.cost;
+                s
+            })
+            .collect();
+        // Storage: every device replicates the CSR and owns its own flat
+        // TE pool in its own address space.
+        let mut arenas: Vec<TeArena> = (0..ndev)
+            .map(|_| TeArena::for_graph(g, k, wpd, cfg.layout))
+            .collect();
+        // SAFETY: `arenas` is fully built before binding and never grows
+        // or moves afterwards; every warp set is dropped before the
+        // arenas at the end of this function. Per-warp exclusivity is the
+        // scheduler's contract, per-device exclusivity the epoch loop's
+        // (devices drive one at a time).
+        let mut warp_sets: Vec<Vec<WarpState>> = arenas
+            .iter_mut()
+            .map(|a| {
+                unsafe { a.bind_all() }
+                    .into_iter()
+                    .enumerate()
+                    .map(|(i, te)| WarpState::bound(i, te))
+                    .collect()
+            })
+            .collect();
+        // Seed sharding: the partition policy assigns every non-isolated
+        // vertex to exactly one device.
+        let shards = cfg.partition.shard(g, ndev);
+        for (ws, seeds) in warp_sets.iter_mut().zip(&shards) {
+            deal_seeds(ws, seeds);
+        }
+
+        let wall = Timer::start();
+        let mut metrics = KernelMetrics {
+            warps: wpd * ndev,
+            devices: ndev,
+            device_busy_seconds: vec![0.0; ndev],
+            device_idle_seconds: vec![0.0; ndev],
+            ..Default::default()
+        };
+        let deadline = cfg.time_limit.map(|d| Instant::now() + d);
+        let mut clocks = vec![0.0f64; ndev];
+        let mut timed_out = false;
+
+        loop {
+            let mut any_ran = false;
+            for d in 0..ndev {
+                let warps_vec = std::mem::take(&mut warp_sets[d]);
+                let initial: Vec<usize> =
+                    warps_vec.iter().filter(|w| !w.finished).map(|w| w.id).collect();
+                if initial.is_empty() {
+                    warp_sets[d] = warps_vec;
+                    continue;
+                }
+                any_ran = true;
+                let run = EngineRun {
+                    g,
+                    algo,
+                    shared: &shareds[d],
+                    warps: UnitTable::new(warps_vec),
+                    quantum: cfg.quantum_cycles,
+                };
+                let sched_cfg = SchedulerConfig {
+                    threads: cfg.threads,
+                    steal: cfg.steal,
+                    deadline,
+                    ..Default::default()
+                };
+                let policy = cfg.lb.as_ref().map(|l| l as &dyn LbPolicy);
+                let mut segs_this_epoch = 0usize;
+                let mut busy = 0.0f64;
+                let mut lb_overhead = 0.0f64;
+                let mut migrations = 0u64;
+                let outcome = scheduler::drive(
+                    &run,
+                    wpd,
+                    initial,
+                    &sched_cfg,
+                    policy,
+                    &shareds[d].stop,
+                    |seg_timed_out| {
+                        // SAFETY: the scheduler calls this hook with every
+                        // worker parked at the segment barrier.
+                        let warps = unsafe { run.warps.all_mut() };
+                        let mut total_cycles = 0.0f64;
+                        let mut max_cycles = 0.0f64;
+                        for w in warps.iter_mut() {
+                            let c = w.prof.end_segment(&cfg.cost);
+                            total_cycles += c;
+                            max_cycles = max_cycles.max(c);
+                        }
+                        busy += cfg.cost.segment_seconds(total_cycles, max_cycles);
+                        segs_this_epoch += 1;
+                        if seg_timed_out {
+                            return SegmentControl::Done;
+                        }
+                        if warps.iter().all(|w| w.finished) {
+                            return SegmentControl::Done;
+                        }
+                        // Intra-device redistribute at every stop (paper
+                        // Fig 5 steps 4-5), even when about to yield: the
+                        // next epoch restarts from a balanced deal.
+                        let te_bytes: usize =
+                            warps.iter().map(|w| w.te.memory_bytes()).sum();
+                        migrations += redistribute(warps);
+                        let lb_cost = cfg.cost.rebalance_seconds(te_bytes);
+                        busy += lb_cost;
+                        lb_overhead += lb_cost;
+                        if segs_this_epoch >= cfg.epoch_segments.max(1) {
+                            return SegmentControl::Done; // yield to the fleet barrier
+                        }
+                        SegmentControl::Continue(
+                            warps.iter().filter(|w| !w.finished).map(|w| w.id).collect(),
+                        )
+                    },
+                );
+                clocks[d] += busy;
+                metrics.device_busy_seconds[d] += busy;
+                metrics.segments += outcome.segments;
+                metrics.steals += outcome.steals;
+                metrics.idle_worker_segments += outcome.idle_worker_segments;
+                metrics.thread_spawns += outcome.thread_spawns;
+                metrics.migrations += migrations;
+                metrics.lb_overhead_seconds += lb_overhead;
+                timed_out |= outcome.timed_out;
+                warp_sets[d] = run.warps.into_inner();
+            }
+            if !any_ran {
+                break;
+            }
+            metrics.fleet_epochs += 1;
+            // Epoch barrier: stragglers define the epoch, the rest record
+            // idle time — the skew the scaling bench reports.
+            let epoch_max = clocks.iter().cloned().fold(0.0f64, f64::max);
+            for d in 0..ndev {
+                metrics.device_idle_seconds[d] += epoch_max - clocks[d];
+                clocks[d] = epoch_max;
+            }
+            if timed_out {
+                break;
+            }
+            let active = warp_sets
+                .iter()
+                .filter(|ws| ws.iter().any(|w| !w.finished))
+                .count();
+            if active == 0 {
+                break;
+            }
+            // Inter-device redistribute: the LbPolicy stop rule, one
+            // granularity up (devices instead of warps).
+            if LbPolicy::should_stop(&cfg.fleet_lb, active, ndev) {
+                let xfer = super::rebalance::rebalance_fleet(&mut warp_sets);
+                if xfer.migrations > 0 {
+                    let t = cfg.interconnect.transfer_seconds(xfer.bytes, xfer.transfers);
+                    for c in clocks.iter_mut() {
+                        *c += t;
+                    }
+                    metrics.fleet_migrations += xfer.migrations;
+                    metrics.fleet_bytes += xfer.bytes;
+                    metrics.fleet_xfer_seconds += t;
+                }
+            }
+        }
+
+        // Job time: the max over device clocks (all equal after the final
+        // barrier — including each device's idle tail).
+        metrics.sim_seconds = clocks.iter().cloned().fold(0.0f64, f64::max);
+
+        // Reduction: per device, then merged across the fleet. Both dict
+        // and raw paths emit canonical bitmaps, so a BTreeMap sum is the
+        // whole cross-device merge.
+        let mut count = 0u64;
+        let mut stored = Vec::new();
+        let mut merged: BTreeMap<u64, u64> = BTreeMap::new();
+        for ws in warp_sets.iter_mut() {
+            let (c, pats, mut st) = reduce_device(k, dict.as_deref(), ws, &mut metrics);
+            count += c;
+            stored.append(&mut st);
+            for (bm, n) in pats {
+                *merged.entry(bm).or_insert(0) += n;
+            }
+        }
+        let patterns: Vec<(u64, u64)> = merged.into_iter().collect();
+        metrics.wall_seconds = wall.secs();
+        // The warp handles point into the arenas; drop them first.
+        drop(warp_sets);
+        drop(arenas);
+
+        RunReport {
+            algorithm: algo.name().to_string(),
+            k,
+            count,
+            patterns,
+            stored,
+            metrics,
+            timed_out,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::{CliqueCount, MotifCount};
+    use crate::engine::Runner;
+    use crate::graph::generators;
+    use crate::multi::Partition;
+
+    fn fleet_cfg(devices: usize) -> EngineConfig {
+        EngineConfig {
+            warps: 16,
+            threads: 2,
+            devices,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn fleet_counts_match_single_device() {
+        let g = generators::erdos_renyi(36, 0.3, 11);
+        let want = Runner::run(&g, &CliqueCount::new(4), &fleet_cfg(1)).count;
+        for devices in [2, 3, 4] {
+            let r = Runner::run(&g, &CliqueCount::new(4), &fleet_cfg(devices));
+            assert_eq!(r.count, want, "devices={devices}");
+            assert_eq!(r.metrics.devices, devices);
+            assert_eq!(r.metrics.device_idle_seconds.len(), devices);
+        }
+    }
+
+    #[test]
+    fn fleet_patterns_match_single_device() {
+        let g = generators::erdos_renyi(28, 0.3, 5);
+        let want = Runner::run(&g, &MotifCount::new(4), &fleet_cfg(1)).patterns;
+        let mut cfg = fleet_cfg(3);
+        cfg.partition = Partition::DegreeAware;
+        let got = Runner::run(&g, &MotifCount::new(4), &cfg).patterns;
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn more_devices_reduce_simulated_job_time() {
+        // With each device keeping the same warp count, sharding the seed
+        // set shrinks every warp's load, so both the critical-path and the
+        // throughput term of §2.2 drop. Deterministic with lb = None (one
+        // segment per device — no monitor timing involved).
+        let g = generators::erdos_renyi(600, 0.1, 7);
+        let mut one = fleet_cfg(1);
+        one.warps = 64;
+        let mut four = fleet_cfg(4);
+        four.warps = 64;
+        four.partition = Partition::DegreeAware;
+        let t1 = Runner::run(&g, &CliqueCount::new(4), &one);
+        let t4 = Runner::run(&g, &CliqueCount::new(4), &four);
+        assert_eq!(t1.count, t4.count);
+        assert!(
+            t4.metrics.sim_seconds < t1.metrics.sim_seconds,
+            "4 devices not faster: {} vs {}",
+            t4.metrics.sim_seconds,
+            t1.metrics.sim_seconds
+        );
+    }
+
+    #[test]
+    fn empty_graph_fleet_run_terminates() {
+        let g = crate::graph::CsrGraph::from_adjacency(vec![vec![], vec![]], "iso");
+        let r = Runner::run(&g, &CliqueCount::new(3), &fleet_cfg(4));
+        assert_eq!(r.count, 0);
+        assert!(!r.timed_out);
+    }
+}

@@ -1,0 +1,97 @@
+//! Interconnect cost model for inter-device traffic.
+//!
+//! The single-device LB layer charges `2 * te_bytes / pcie_bandwidth` for
+//! its host↔device stop-copy (DESIGN.md §2.2). Inter-device donation is
+//! the same physics one hop out: every migrated traversal prefix crosses
+//! the device interconnect, paying a per-message setup latency plus a
+//! bandwidth term. The fleet synchronizes on the transfer at an epoch
+//! barrier, so the cost lands on every device clock (§2.2 segment-time
+//! analogue).
+
+use std::str::FromStr;
+
+/// Device-to-device link model.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Interconnect {
+    /// PCIe gen3 x16: 12 GB/s effective (the same constant as the LB
+    /// layer's host↔device copies), ~5 µs per transfer setup.
+    #[default]
+    Pcie,
+    /// NVLink (V100 generation, 6 links): 150 GB/s, ~1.3 µs setup.
+    NvLink,
+}
+
+impl Interconnect {
+    /// Effective bandwidth in bytes per second.
+    #[inline]
+    pub fn bytes_per_second(&self) -> f64 {
+        match self {
+            Interconnect::Pcie => 12e9,
+            Interconnect::NvLink => 150e9,
+        }
+    }
+
+    /// Per-message setup latency in seconds.
+    #[inline]
+    pub fn latency_seconds(&self) -> f64 {
+        match self {
+            Interconnect::Pcie => 5e-6,
+            Interconnect::NvLink => 1.3e-6,
+        }
+    }
+
+    /// Simulated seconds to ship `bytes` in `transfers` messages at a
+    /// fleet epoch barrier.
+    pub fn transfer_seconds(&self, bytes: u64, transfers: u64) -> f64 {
+        transfers as f64 * self.latency_seconds() + bytes as f64 / self.bytes_per_second()
+    }
+}
+
+impl FromStr for Interconnect {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "pcie" => Ok(Interconnect::Pcie),
+            "nvlink" => Ok(Interconnect::NvLink),
+            other => Err(anyhow::Error::msg(format!(
+                "unknown interconnect '{other}' (pcie|nvlink)"
+            ))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nvlink_is_cheaper_than_pcie() {
+        let bytes = 1 << 20;
+        assert!(
+            Interconnect::NvLink.transfer_seconds(bytes, 100)
+                < Interconnect::Pcie.transfer_seconds(bytes, 100)
+        );
+    }
+
+    #[test]
+    fn latency_dominates_small_transfers() {
+        let p = Interconnect::Pcie;
+        let t = p.transfer_seconds(8, 1);
+        assert!(t > 0.99 * p.latency_seconds(), "8 bytes is all latency: {t}");
+    }
+
+    #[test]
+    fn bandwidth_dominates_bulk_transfers() {
+        let p = Interconnect::Pcie;
+        let bulk = p.transfer_seconds(1 << 30, 1);
+        assert!(bulk > 100.0 * p.latency_seconds());
+    }
+
+    #[test]
+    fn parses_cli_names() {
+        assert_eq!("pcie".parse::<Interconnect>().unwrap(), Interconnect::Pcie);
+        assert_eq!("nvlink".parse::<Interconnect>().unwrap(), Interconnect::NvLink);
+        assert!("infiniband".parse::<Interconnect>().is_err());
+    }
+}

@@ -1,0 +1,36 @@
+//! Multi-device execution layer: one enumeration job sharded across `N`
+//! virtual GPUs.
+//!
+//! The paper's warp-centric engine and LB layer (Fig 5) are single-GPU;
+//! this module scales them out the way G²Miner scales GPM — seed
+//! partitioning plus work redistribution — with the topology multi-GPU
+//! systems actually use: the CSR is **replicated** on every device, the
+//! seed set is **sharded**, and devices exchange only traversal prefixes
+//! over an explicit interconnect.
+//!
+//! - [`partition`] — seed-sharding policies over the CSR
+//!   ([`Partition::RoundRobin`] / [`Partition::DegreeAware`]);
+//! - [`interconnect`] — the interconnect cost model (PCIe vs NVLink
+//!   bytes + per-message latency) charged for inter-device traffic;
+//! - [`rebalance`] — device-granular work redistribution at fleet epoch
+//!   barriers (the `balance::redistribute` preference order, one
+//!   granularity up: devices instead of warps);
+//! - [`fleet`] — [`DeviceFleet`]: per-device arena / scheduler / profiler
+//!   instances, per-device clocks that advance independently between
+//!   global rebalance epochs, job time = max over device clocks.
+//!
+//! `EngineConfig::devices > 1` routes `Runner::run` through the fleet,
+//! so every `apps/` algorithm runs multi-device unchanged. DESIGN.md
+//! §"Multi-device layer" documents the topology, the interconnect
+//! constants, and the epoch semantics; `benches/scaling.rs` is the
+//! scaling experiment.
+
+pub mod fleet;
+pub mod interconnect;
+pub mod partition;
+pub mod rebalance;
+
+pub use fleet::DeviceFleet;
+pub use interconnect::Interconnect;
+pub use partition::Partition;
+pub use rebalance::{rebalance_fleet, FleetXfer};

@@ -1,0 +1,206 @@
+//! Inter-device redistribute: `balance::redistribute`'s donation rules,
+//! one granularity up.
+//!
+//! At a fleet epoch barrier (every device parked), devices that drained
+//! receive work migrated from loaded devices. The donation preference
+//! order is the intra-device one — an unstarted queued seed first, else
+//! an unexplored subtree sliced off a donor TE's shallowest level — and
+//! the invariant is the same: the expanded work multiset (queued seeds +
+//! live TE extensions, across the whole fleet) is preserved exactly, so
+//! device count can never change exact counts. Unlike the intra-device
+//! step, a migrated unit crosses the interconnect: the caller charges
+//! [`FleetXfer::bytes`]/[`FleetXfer::transfers`] through the
+//! [`Interconnect`](super::Interconnect) model.
+
+use crate::engine::{Seed, WarpState};
+use crate::graph::VertexId;
+
+/// What one fleet rebalance moved (the scaling bench's "rebalance bytes").
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FleetXfer {
+    /// Traversals migrated between devices.
+    pub migrations: u64,
+    /// Payload bytes shipped (each unit is its traversal-prefix seed).
+    pub bytes: u64,
+    /// Interconnect messages (one per migrated unit).
+    pub transfers: u64,
+}
+
+/// Schedulable units a device is still holding: queued seeds plus one per
+/// active mid-enumeration TE.
+fn pending_units(warps: &[WarpState]) -> usize {
+    warps
+        .iter()
+        .map(|w| w.queue.len() + usize::from(!w.te.is_empty()))
+        .sum()
+}
+
+/// Pop one donatable unit off a device, queued seeds first (cheapest to
+/// ship: just the prefix), else a subtree from a donor TE (which always
+/// leaves the TE itself behind). A warp whose last queued unit leaves is
+/// marked finished — legal here because the *device* keeps other work
+/// (the caller only donates from devices holding >= 2 units).
+fn donate_one(warps: &mut [WarpState]) -> Option<Seed> {
+    if let Some(w) = warps
+        .iter_mut()
+        .filter(|w| !w.queue.is_empty())
+        .max_by_key(|w| w.queue.len())
+    {
+        let s = w.queue.pop_back();
+        if !w.has_work() {
+            w.finished = true;
+        }
+        return s;
+    }
+    warps.iter_mut().find_map(|w| {
+        let l = w.te.donation_level()?;
+        w.te.donate(l)
+    })
+}
+
+/// Land a migrated seed on the receiving device: a workless warp when one
+/// exists (waking it), else the shortest queue.
+fn receive(warps: &mut [WarpState], seed: Seed) {
+    let idx = (0..warps.len())
+        .find(|&i| !warps[i].has_work())
+        .or_else(|| (0..warps.len()).min_by_key(|&i| warps[i].queue.len()))
+        .expect("device has at least one warp");
+    warps[idx].queue.push_back(seed);
+    warps[idx].finished = false;
+}
+
+/// Device-granular redistribute at a fleet epoch barrier. Drained devices
+/// are fed up to half a fair share each (enough to stay busy past the
+/// next epoch without thrashing units back and forth); donors are drawn
+/// richest-first and never give their last unit away. Returns what moved
+/// so the caller can charge the interconnect.
+pub fn rebalance_fleet(devices: &mut [Vec<WarpState>]) -> FleetXfer {
+    let mut xfer = FleetXfer::default();
+    if devices.len() < 2 {
+        return xfer;
+    }
+    loop {
+        let mut loads: Vec<usize> = devices.iter().map(|ws| pending_units(ws)).collect();
+        let total: usize = loads.iter().sum();
+        let fair = total.div_ceil(devices.len());
+        let Some(recv) = loads.iter().position(|&l| l == 0) else {
+            return xfer;
+        };
+        let want = fair.div_ceil(2).max(1);
+        let mut got = 0usize;
+        while got < want {
+            // richest donor still above the fair share and holding >= 2
+            let donor = (0..devices.len())
+                .filter(|&d| d != recv && loads[d] >= 2 && loads[d] > fair)
+                .max_by_key(|&d| loads[d]);
+            let Some(don) = donor else { break };
+            let Some(seed) = donate_one(&mut devices[don]) else {
+                // nothing donatable despite pending units (e.g. TEs with
+                // no unexplored subtree): stop considering this donor
+                loads[don] = 0;
+                continue;
+            };
+            xfer.migrations += 1;
+            xfer.transfers += 1;
+            xfer.bytes += (seed.len() * std::mem::size_of::<VertexId>()) as u64;
+            receive(&mut devices[recv], seed);
+            loads[don] = loads[don].saturating_sub(1);
+            got += 1;
+        }
+        if got == 0 {
+            return xfer;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn device_with_seeds(nwarps: usize, seeds: &[Vec<u32>]) -> Vec<WarpState> {
+        let mut ws: Vec<WarpState> = (0..nwarps).map(|i| WarpState::new(i, 4)).collect();
+        for (i, s) in seeds.iter().enumerate() {
+            ws[i % nwarps].queue.push_back(s.clone());
+        }
+        for w in &mut ws {
+            if !w.has_work() {
+                w.finished = true;
+            }
+        }
+        ws
+    }
+
+    fn all_seeds(devices: &[Vec<WarpState>]) -> Vec<Vec<u32>> {
+        let mut v: Vec<Vec<u32>> = devices
+            .iter()
+            .flatten()
+            .flat_map(|w| w.queue.iter().cloned())
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    #[test]
+    fn feeds_a_drained_device_from_the_richest() {
+        let mut devs = vec![
+            device_with_seeds(2, &[vec![1], vec![2], vec![3], vec![4], vec![5], vec![6]]),
+            device_with_seeds(2, &[]),
+        ];
+        let before = all_seeds(&devs);
+        let x = rebalance_fleet(&mut devs);
+        assert!(x.migrations > 0);
+        assert_eq!(x.migrations, x.transfers);
+        assert_eq!(x.bytes, x.migrations * 4, "all seeds here are 1-vertex prefixes");
+        assert!(pending_units(&devs[1]) > 0, "receiver stayed empty");
+        assert_eq!(all_seeds(&devs), before, "seed multiset changed");
+        for w in devs.iter().flatten() {
+            assert!(w.finished || w.has_work(), "warp active without work");
+        }
+    }
+
+    #[test]
+    fn never_strips_a_device_to_zero() {
+        let mut devs = vec![
+            device_with_seeds(1, &[vec![1]]),
+            device_with_seeds(1, &[]),
+        ];
+        let x = rebalance_fleet(&mut devs);
+        assert_eq!(x.migrations, 0, "a 1-unit device is not a donor");
+        assert_eq!(devs[0][0].queue.len(), 1);
+    }
+
+    #[test]
+    fn no_idle_device_no_movement() {
+        let mut devs = vec![
+            device_with_seeds(1, &[vec![1], vec![2]]),
+            device_with_seeds(1, &[vec![3]]),
+        ];
+        let x = rebalance_fleet(&mut devs);
+        assert_eq!(x.migrations, 0);
+    }
+
+    #[test]
+    fn single_device_fleet_is_a_noop() {
+        let mut devs = vec![device_with_seeds(2, &[vec![1], vec![2]])];
+        let x = rebalance_fleet(&mut devs);
+        assert_eq!(x.migrations, 0);
+    }
+
+    #[test]
+    fn spreads_over_multiple_drained_devices() {
+        let seeds: Vec<Vec<u32>> = (0..12u32).map(|v| vec![v]).collect();
+        let mut devs = vec![
+            device_with_seeds(4, &seeds),
+            device_with_seeds(4, &[]),
+            device_with_seeds(4, &[]),
+            device_with_seeds(4, &[]),
+        ];
+        let before = all_seeds(&devs);
+        let x = rebalance_fleet(&mut devs);
+        assert!(x.migrations >= 3, "each drained device should be fed");
+        for d in 1..4 {
+            assert!(pending_units(&devs[d]) > 0, "device {d} stayed empty");
+        }
+        assert_eq!(all_seeds(&devs), before);
+    }
+}

@@ -18,8 +18,19 @@ impl Table {
         }
     }
 
-    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
-        debug_assert_eq!(cells.len(), self.header.len());
+    /// Add a row. Rows shorter than the header are padded with empty
+    /// cells; rows longer than the header are a caller bug and abort with
+    /// a clear message even in release builds (the old `debug_assert_eq!`
+    /// let release benches silently mis-render overlong rows).
+    pub fn row(&mut self, mut cells: Vec<String>) -> &mut Self {
+        assert!(
+            cells.len() <= self.header.len(),
+            "table '{}': row has {} cells but the header has {} columns",
+            self.title,
+            cells.len(),
+            self.header.len()
+        );
+        cells.resize(self.header.len(), String::new());
         self.rows.push(cells);
         self
     }
@@ -52,6 +63,47 @@ impl Table {
             out.push_str(&fmt_row(row));
             out.push('\n');
         }
+        out
+    }
+
+    /// The table as a JSON object —
+    /// `{"title": ..., "rows": [{<column>: <cell>, ...}, ...]}` — so bench
+    /// tables can be dumped as `BENCH_*.json` rows for the perf
+    /// trajectory (no serde offline; cells stay strings).
+    pub fn to_json(&self) -> String {
+        fn esc(s: &str) -> String {
+            let mut out = String::with_capacity(s.len());
+            for c in s.chars() {
+                match c {
+                    '"' => out.push_str("\\\""),
+                    '\\' => out.push_str("\\\\"),
+                    '\n' => out.push_str("\\n"),
+                    '\r' => out.push_str("\\r"),
+                    '\t' => out.push_str("\\t"),
+                    c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+                    c => out.push(c),
+                }
+            }
+            out
+        }
+        let mut out = String::new();
+        out.push_str("{\"title\":\"");
+        out.push_str(&esc(&self.title));
+        out.push_str("\",\"rows\":[");
+        for (i, row) in self.rows.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push('{');
+            for (j, cell) in row.iter().enumerate() {
+                if j > 0 {
+                    out.push(',');
+                }
+                out.push_str(&format!("\"{}\":\"{}\"", esc(&self.header[j]), esc(cell)));
+            }
+            out.push('}');
+        }
+        out.push_str("]}");
         out
     }
 }
@@ -97,6 +149,35 @@ mod tests {
         let lines: Vec<&str> = r.lines().collect();
         assert_eq!(lines.len(), 5);
         assert!(lines[1].starts_with("a      bbbb"));
+    }
+
+    #[test]
+    fn short_rows_are_padded() {
+        let mut t = Table::new("T", &["a", "b", "c"]);
+        t.row(vec!["x".into()]);
+        let r = t.render();
+        assert!(r.lines().count() == 4, "padded row must still render: {r}");
+        let json = t.to_json();
+        assert!(json.contains("\"b\":\"\""), "{json}");
+    }
+
+    #[test]
+    #[should_panic(expected = "row has 3 cells but the header has 2")]
+    fn overlong_rows_abort_with_a_real_error() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into(), "3".into()]);
+    }
+
+    #[test]
+    fn to_json_emits_keyed_rows_with_escaping() {
+        let mut t = Table::new("bench \"x\"", &["app", "time"]);
+        t.row(vec!["clique\nk=5".into(), "0.01".into()]);
+        t.row(vec!["motif".into(), "1.2".into()]);
+        let j = t.to_json();
+        assert!(j.starts_with("{\"title\":\"bench \\\"x\\\"\""), "{j}");
+        assert!(j.contains("{\"app\":\"clique\\nk=5\",\"time\":\"0.01\"}"), "{j}");
+        assert!(j.contains("{\"app\":\"motif\",\"time\":\"1.2\"}"), "{j}");
+        assert!(j.ends_with("]}"), "{j}");
     }
 
     #[test]

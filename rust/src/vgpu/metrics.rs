@@ -112,9 +112,29 @@ pub struct KernelMetrics {
     /// every warp is finished: the metric quantifies exactly what the
     /// stealing scheduler eliminates.
     pub idle_worker_segments: u64,
-    /// OS threads spawned for the run (the persistent pool's size; the
-    /// pre-refactor engine respawned `threads` every segment).
+    /// OS threads spawned for the run. For single-device runs this is the
+    /// persistent pool's size (the pre-refactor engine respawned `threads`
+    /// every segment); fleet runs spawn one pool per device-epoch, so the
+    /// counter accumulates across drives.
     pub thread_spawns: u64,
+    /// Virtual devices the job ran on (1 = single-device engine path;
+    /// `multi::DeviceFleet` sets > 1; baselines leave the default 0).
+    pub devices: usize,
+    /// Fleet epoch barriers executed (multi-device runs only).
+    pub fleet_epochs: usize,
+    /// Traversals migrated between devices at epoch barriers.
+    pub fleet_migrations: u64,
+    /// Bytes shipped across the interconnect by inter-device donation.
+    pub fleet_bytes: u64,
+    /// Simulated seconds every device spent synced on interconnect
+    /// transfers (charged once per rebalancing epoch, to all clocks).
+    pub fleet_xfer_seconds: f64,
+    /// Per-device busy simulated seconds (drive time including
+    /// intra-device LB copies). Empty for single-device runs.
+    pub device_busy_seconds: Vec<f64>,
+    /// Per-device idle seconds accumulated at epoch barriers — the skew
+    /// the fleet could not rebalance away. Empty for single-device runs.
+    pub device_idle_seconds: Vec<f64>,
 }
 
 impl KernelMetrics {
@@ -125,6 +145,11 @@ impl KernelMetrics {
         } else {
             self.total_insts as f64 / self.warps as f64
         }
+    }
+
+    /// Worst per-device idle time of a fleet run (0 for single-device).
+    pub fn max_device_idle_seconds(&self) -> f64 {
+        self.device_idle_seconds.iter().cloned().fold(0.0, f64::max)
     }
 }
 

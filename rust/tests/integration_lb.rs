@@ -4,8 +4,9 @@
 
 use dumato::apps::{CliqueCount, MotifCount};
 use dumato::balance::LbConfig;
-use dumato::engine::{EngineConfig, Runner};
+use dumato::engine::{EngineConfig, Runner, WarpState};
 use dumato::graph::generators;
+use dumato::multi::{rebalance_fleet, Partition};
 
 /// A workload with one huge hub: almost all work lands on a few seeds.
 fn skewed_graph() -> dumato::graph::CsrGraph {
@@ -119,6 +120,160 @@ fn checkpoint_resume_preserves_deep_state() {
     let r = Runner::run(&g, &CliqueCount::new(5), &aggressive);
     assert_eq!(r.count, reference);
     assert!(r.metrics.segments >= 2);
+}
+
+#[test]
+fn device_count_invariance_property() {
+    // the multi-device contract: exact counts from the apps are identical
+    // for devices in {1, 2, 4} x steal on/off x both partition policies
+    // (devices = 1 is the classic single-device path, cross-validating
+    // the fleet against the original engine)
+    use dumato::util::proptest::{check, Config};
+    check(
+        Config { cases: 6, ..Default::default() },
+        "app counts invariant under devices x steal x partition",
+        |rng| {
+            let n = rng.range(16, 36);
+            let p = 0.15 + rng.f64() * 0.3;
+            let g = generators::erdos_renyi(n, p, rng.next_u64());
+            let k = rng.range(3, 6);
+            let base = EngineConfig {
+                warps: 8,
+                threads: 2,
+                ..Default::default()
+            };
+            let want_clique = Runner::run(&g, &CliqueCount::new(k), &base).count;
+            let want_motif = Runner::run(&g, &MotifCount::new(4), &base).patterns;
+            for devices in [1usize, 2, 4] {
+                for steal in [true, false] {
+                    for partition in [Partition::RoundRobin, Partition::DegreeAware] {
+                        let mut cfg = base.clone();
+                        cfg.devices = devices;
+                        cfg.steal = steal;
+                        cfg.partition = partition;
+                        let got = Runner::run(&g, &CliqueCount::new(k), &cfg).count;
+                        dumato::prop_assert_eq!(
+                            want_clique,
+                            got,
+                            "clique n={n} p={p:.2} k={k} devices={devices} steal={steal} {partition:?}"
+                        );
+                        let got_m = Runner::run(&g, &MotifCount::new(4), &cfg).patterns;
+                        dumato::prop_assert_eq!(
+                            &want_motif,
+                            &got_m,
+                            "motif n={n} p={p:.2} devices={devices} steal={steal} {partition:?}"
+                        );
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Every pending unit of work across the whole fleet, as the seed each
+/// unit would become if donated: queued seeds plus each live extension e
+/// at TE level l expanded to `tr[0..=l] ++ [e]` (the same expansion the
+/// intra-device property in `balance::redistribute` uses).
+fn fleet_work_multiset(devices: &[Vec<WarpState>]) -> Vec<Vec<u32>> {
+    let mut units: Vec<Vec<u32>> = Vec::new();
+    for w in devices.iter().flatten() {
+        units.extend(w.queue.iter().cloned());
+        for l in 0..w.te.len() {
+            for &e in w.te.ext_slice(l) {
+                if e != dumato::engine::INVALID_V {
+                    let mut s = w.te.traversal()[..=l].to_vec();
+                    s.push(e);
+                    units.push(s);
+                }
+            }
+        }
+    }
+    units.sort_unstable();
+    units
+}
+
+#[test]
+fn fleet_rebalance_preserves_cross_device_work_multiset() {
+    // inter-device donation must never lose, duplicate, or rewrite a unit
+    // of pending work, across randomized device states
+    use dumato::util::proptest::{check, Config};
+    check(
+        Config { cases: 32, ..Default::default() },
+        "inter-device donation preserves the fleet work multiset",
+        |rng| {
+            let gn = rng.range(12, 30);
+            let g = generators::erdos_renyi(gn, 0.3, rng.next_u64());
+            let k = rng.range(4, 7);
+            let ndev = rng.range(2, 6);
+            let mut devices: Vec<Vec<WarpState>> = (0..ndev)
+                .map(|_| {
+                    let nw = rng.range(1, 5);
+                    (0..nw)
+                        .map(|i| {
+                            let mut w = WarpState::new(i, k);
+                            if rng.chance(0.4) {
+                                w.finished = true;
+                                return w;
+                            }
+                            for _ in 0..rng.range(0, 4) {
+                                w.queue.push_back(vec![rng.range(0, gn) as u32]);
+                            }
+                            if rng.chance(0.5) {
+                                let plen = rng.range(1, k - 1);
+                                let start = rng.range(0, gn);
+                                let seed: Vec<u32> =
+                                    (0..plen).map(|j| ((start + j) % gn) as u32).collect();
+                                w.te.init_from_seed(&seed, &g, false);
+                                for l in 0..plen {
+                                    if rng.chance(0.6) {
+                                        let m = rng.range(0, 5);
+                                        let items: Vec<u32> = (0..m)
+                                            .map(|_| {
+                                                if rng.chance(0.2) {
+                                                    dumato::engine::INVALID_V
+                                                } else {
+                                                    rng.range(0, gn) as u32
+                                                }
+                                            })
+                                            .collect();
+                                        w.te.set_ext(l, &items);
+                                        w.te.set_generated(l, true);
+                                    }
+                                }
+                            }
+                            if !w.has_work() {
+                                w.finished = true;
+                            }
+                            w
+                        })
+                        .collect()
+                })
+                .collect();
+            let before = fleet_work_multiset(&devices);
+            let xfer = rebalance_fleet(&mut devices);
+            let after = fleet_work_multiset(&devices);
+            dumato::prop_assert_eq!(&before, &after, "fleet work multiset changed");
+            for (d, ws) in devices.iter().enumerate() {
+                for w in ws {
+                    dumato::prop_assert!(
+                        w.finished || w.has_work(),
+                        "device {d} warp {} active without work",
+                        w.id
+                    );
+                }
+            }
+            // bytes are consistent with what moved: every migrated unit is
+            // a non-empty prefix, so bytes >= 4 * migrations
+            dumato::prop_assert!(
+                xfer.bytes >= 4 * xfer.migrations,
+                "bytes {} < 4 * migrations {}",
+                xfer.bytes,
+                xfer.migrations
+            );
+            Ok(())
+        },
+    );
 }
 
 #[test]
