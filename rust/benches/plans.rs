@@ -1,0 +1,125 @@
+//! Planned vs unplanned execution: pattern-aware plans (backward-set
+//! intersection + automorphism symmetry breaking, `plan::ExecutionPlan`)
+//! against DuMato's enumerate-and-filter loops, on the sparse Table III
+//! stand-ins where unplanned enumeration materializes orders of magnitude
+//! more candidates than any pattern admits.
+//!
+//! ```
+//! cargo bench --bench plans
+//! DUMATO_BENCH_SCALE=0.02 cargo bench --bench plans          # CI smoke
+//! DUMATO_BENCH_JSON=1 cargo bench --bench plans              # + BENCH_plans.json
+//! ```
+//!
+//! The JSON dump feeds the CI bench-regression gate
+//! (`cargo run --bin bench_check`): a planned-row `sim_time` regressing
+//! more than 10% against `benches/baselines/BENCH_plans.json` fails CI.
+
+#[path = "support.rs"]
+mod support;
+
+use dumato::api::GpmAlgorithm;
+use dumato::apps::{CliqueCount, SubgraphQuery};
+use dumato::engine::Runner;
+use dumato::graph::generators;
+use dumato::report::Table;
+use dumato::util::fmt_count;
+
+use support::UnplannedClique;
+
+struct Cell {
+    timed_out: bool,
+    sim: f64,
+    gld: u64,
+    insts: u64,
+    /// comparable result: clique count, or pattern-match count for queries
+    count: u64,
+}
+
+fn clique_cell<A: GpmAlgorithm>(g: &dumato::graph::CsrGraph, algo: &A) -> Cell {
+    let r = Runner::run(g, algo, &support::engine_cfg());
+    Cell {
+        timed_out: r.timed_out,
+        sim: r.metrics.sim_seconds,
+        gld: r.metrics.total_gld,
+        insts: r.metrics.total_insts,
+        count: r.count,
+    }
+}
+
+fn query_cell(g: &dumato::graph::CsrGraph, q: &SubgraphQuery) -> Cell {
+    let r = Runner::run(g, q, &support::engine_cfg());
+    Cell {
+        timed_out: r.timed_out,
+        sim: r.metrics.sim_seconds,
+        gld: r.metrics.total_gld,
+        insts: r.metrics.total_insts,
+        count: q.matches(&r).len() as u64,
+    }
+}
+
+fn push_rows(t: &mut Table, dataset: &str, app: &str, pattern: &str, pl: Cell, un: Cell) {
+    if !pl.timed_out && !un.timed_out {
+        assert_eq!(pl.count, un.count, "{dataset}/{app}/{pattern}: planned vs unplanned");
+    }
+    let speedup = if pl.timed_out || un.timed_out {
+        "-".to_string()
+    } else {
+        format!("{:.2}x", un.sim / pl.sim.max(1e-12))
+    };
+    for (path, c, sp) in [("planned", &pl, speedup.as_str()), ("unplanned", &un, "1.00x")] {
+        t.row(vec![
+            dataset.to_string(),
+            app.to_string(),
+            pattern.to_string(),
+            path.to_string(),
+            if c.timed_out { "-".into() } else { format!("{:.6}", c.sim) },
+            fmt_count(c.gld),
+            fmt_count(c.insts),
+            if c.timed_out { "-".into() } else { sp.to_string() },
+        ]);
+    }
+}
+
+fn main() {
+    support::print_env_banner("plans");
+    let s = support::scale();
+    let datasets = [
+        generators::CITESEER.scaled(s).generate(1),
+        generators::DBLP.scaled(s).generate(1),
+    ];
+    let queries: [(&str, usize, &[(usize, usize)]); 3] = [
+        ("4-cycle", 4, &[(0, 1), (1, 2), (2, 3), (3, 0)]),
+        ("4-path", 4, &[(0, 1), (1, 2), (2, 3)]),
+        ("diamond", 4, &[(0, 1), (1, 2), (0, 2), (0, 3), (2, 3)]),
+    ];
+    let mut t = Table::new(
+        "Planned vs unplanned execution (simulated seconds; speedup on the planned row)",
+        &["dataset", "app", "pattern", "path", "sim_time", "gld", "insts", "speedup"],
+    );
+    for g in &datasets {
+        println!("dataset={} |V|={} |E|={}", g.name(), g.num_vertices(), g.num_edges());
+        for (pname, k, edges) in queries {
+            let q = SubgraphQuery::new(k, edges);
+            let u = SubgraphQuery::new(k, edges).unplanned();
+            push_rows(&mut t, g.name(), "query", pname, query_cell(g, &q), query_cell(g, &u));
+        }
+        let k = 5;
+        push_rows(
+            &mut t,
+            g.name(),
+            "clique",
+            "5-clique",
+            clique_cell(g, &CliqueCount::new(k)),
+            clique_cell(g, &UnplannedClique { k }),
+        );
+    }
+    println!("{}", t.render());
+    println!(
+        "(both paths produce identical counts — asserted above; the planned rows \
+         charge only intersected adjacency lists, see DESIGN.md §Plan layer)\n"
+    );
+    if std::env::var("DUMATO_BENCH_JSON").is_ok() {
+        std::fs::write("BENCH_plans.json", t.to_json()).expect("write BENCH_plans.json");
+        println!("wrote BENCH_plans.json");
+    }
+}

@@ -12,7 +12,9 @@
 
 use std::time::Duration;
 
-use dumato::engine::EngineConfig;
+use dumato::api::properties::{is_clique, is_clique_cost, lower, lower_cost};
+use dumato::api::GpmAlgorithm;
+use dumato::engine::{EngineConfig, WarpContext};
 use dumato::graph::{generators, CsrGraph};
 
 pub fn scale() -> f64 {
@@ -58,6 +60,41 @@ pub fn engine_cfg() -> EngineConfig {
         warps: warps(),
         time_limit: Some(budget()),
         ..Default::default()
+    }
+}
+
+/// The pre-plan clique pipeline (paper Algorithm 4: extend from N(tr[0]),
+/// `lower`, Compact, `is_clique`), kept as the shared unplanned reference
+/// for `benches/plans.rs` and `tests/integration_plans.rs` — the engine
+/// app itself now runs on the clique plan.
+pub struct UnplannedClique {
+    pub k: usize,
+}
+
+impl GpmAlgorithm for UnplannedClique {
+    fn name(&self) -> &str {
+        "clique_counting_unplanned"
+    }
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn run(&self, ctx: &mut WarpContext) {
+        let k = self.k;
+        while ctx.control() {
+            if ctx.extend(0, 1) {
+                let lc = lower_cost(ctx.te);
+                ctx.filter(lc, lower);
+                ctx.compact();
+                let cc = is_clique_cost(ctx.te);
+                ctx.filter(cc, is_clique);
+                if ctx.te.len() == k - 1 {
+                    ctx.aggregate_counter();
+                }
+            }
+            ctx.move_(false);
+        }
     }
 }
 

@@ -9,6 +9,7 @@
 pub mod properties;
 
 use crate::engine::WarpContext;
+use crate::plan::ExecutionPlan;
 
 /// A GPM algorithm programmed against the DuMato API.
 ///
@@ -31,6 +32,18 @@ pub trait GpmAlgorithm: Sync {
     /// (aggregate_pattern with k <= 7 uses in-kernel relabeling).
     fn needs_dict(&self) -> bool {
         false
+    }
+
+    /// The pattern-aware execution plan this algorithm runs on, if any.
+    ///
+    /// A planned algorithm drives `WarpContext::extend_planned` /
+    /// `filter_plan` from its `run` loop; exposing the plan here lets the
+    /// runner (and the fleet's seed sharding) prune seeds that cannot
+    /// match the plan's root position (`ExecutionPlan::min_seed_degree`).
+    /// Unplanned algorithms keep the default `None` and see every
+    /// non-isolated seed, exactly as before.
+    fn plan(&self) -> Option<&ExecutionPlan> {
+        None
     }
 
     /// The algorithm loop (paper Algorithm 4).

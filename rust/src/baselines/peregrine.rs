@@ -2,6 +2,12 @@
 //! plan per pattern, with automorphism-based symmetry breaking, matched by
 //! backtracking over the data graph.
 //!
+//! The plans themselves come from the shared planner
+//! ([`crate::plan::ExecutionPlan`]) — the same compilation (matching
+//! order, backward intersections, symmetry restrictions) that drives the
+//! engine's planned apps, so baseline and engine cannot drift. This
+//! module only contributes the CPU match loop and the per-pattern sweep.
+//!
 //! The paper's observation — pattern-aware systems are competitive at
 //! small k but pay plan-explosion costs for large-k motifs (853 patterns
 //! at k=7, tens of thousands at k=8) — emerges directly: plan generation
@@ -11,135 +17,14 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-use crate::canon::bitmap::AdjMat;
-use crate::canon::canonical::canonical_form;
-use crate::canon::patterns::{all_patterns, automorphisms};
-use crate::graph::{CsrGraph, VertexId};
+use crate::canon::patterns::all_patterns;
+use crate::graph::CsrGraph;
 use crate::util::Timer;
 
+/// The baseline's plan type is the engine's (one planner, two executors).
+pub use crate::plan::ExecutionPlan as Plan;
+
 use super::App;
-
-/// An exploration plan for one pattern.
-#[derive(Clone, Debug)]
-pub struct Plan {
-    /// pattern adjacency, remapped to the matching order
-    pub pat: AdjMat,
-    /// canonical bitmap of the pattern (report key)
-    pub canonical: u64,
-    /// symmetry-breaking constraints: match[a] < match[b]
-    pub less_than: Vec<(usize, usize)>,
-    /// for each position i >= 1: an earlier neighbor position to draw
-    /// candidates from
-    pub anchor: Vec<usize>,
-}
-
-impl Plan {
-    /// Build a plan: BFS-reorder the pattern so every position connects to
-    /// an earlier one, then derive symmetry-breaking constraints from the
-    /// automorphism group (first-moved-position rule).
-    pub fn build(pat: &AdjMat) -> Plan {
-        let k = pat.k;
-        debug_assert!(pat.is_connected());
-        // BFS order from position 0
-        let mut order = vec![0usize];
-        let mut seen = vec![false; k];
-        seen[0] = true;
-        let mut qi = 0;
-        while order.len() < k {
-            // prefer neighbors of the BFS frontier
-            let u = order[qi.min(order.len() - 1)];
-            let mut advanced = false;
-            for v in 0..k {
-                if !seen[v] && pat.has_edge(u, v) {
-                    seen[v] = true;
-                    order.push(v);
-                    advanced = true;
-                }
-            }
-            if !advanced {
-                qi += 1;
-            }
-        }
-        // remap pattern to matching order: new position i = order[i]
-        let mut inv = vec![0usize; k];
-        for (newp, &oldp) in order.iter().enumerate() {
-            inv[oldp] = newp;
-        }
-        let remapped = pat.permute(&inv);
-        // anchors: for each position, an earlier neighbor (exists by BFS)
-        let anchor = (0..k)
-            .map(|i| {
-                if i == 0 {
-                    0
-                } else {
-                    (0..i)
-                        .find(|&j| remapped.has_edge(j, i))
-                        .expect("BFS order guarantees an earlier neighbor")
-                }
-            })
-            .collect();
-        // symmetry breaking on the remapped pattern
-        let mut less_than = Vec::new();
-        for sigma in automorphisms(&remapped) {
-            if let Some(p) = (0..k).find(|&p| sigma[p] != p) {
-                let pair = (p.min(sigma[p]), p.max(sigma[p]));
-                if !less_than.contains(&pair) {
-                    less_than.push(pair);
-                }
-            }
-        }
-        Plan {
-            pat: remapped,
-            canonical: canonical_form(pat),
-            less_than,
-            anchor,
-        }
-    }
-
-    /// Count induced matches rooted at data vertex `v0` (position 0).
-    pub fn count_from(&self, g: &CsrGraph, v0: VertexId) -> u64 {
-        let mut matched = vec![VertexId::MAX; self.pat.k];
-        matched[0] = v0;
-        let mut acc = 0;
-        self.rec(g, 1, &mut matched, &mut acc);
-        acc
-    }
-
-    fn rec(&self, g: &CsrGraph, pos: usize, matched: &mut Vec<VertexId>, acc: &mut u64) {
-        if pos == self.pat.k {
-            *acc += 1;
-            return;
-        }
-        let anchor_v = matched[self.anchor[pos]];
-        'cand: for &c in g.neighbors(anchor_v) {
-            // distinctness
-            for &m in matched[..pos].iter() {
-                if m == c {
-                    continue 'cand;
-                }
-            }
-            // symmetry-breaking order constraints involving pos
-            for &(a, b) in &self.less_than {
-                if b == pos && matched[a] != VertexId::MAX && matched[a] >= c {
-                    continue 'cand;
-                }
-                if a == pos && matched[b] != VertexId::MAX && c >= matched[b] {
-                    continue 'cand;
-                }
-            }
-            // induced adjacency vs all earlier positions
-            for j in 0..pos {
-                let want = self.pat.has_edge(j, pos);
-                if g.has_edge(matched[j], c) != want {
-                    continue 'cand;
-                }
-            }
-            matched[pos] = c;
-            self.rec(g, pos + 1, matched, acc);
-            matched[pos] = VertexId::MAX;
-        }
-    }
-}
 
 pub struct Peregrine {
     pub app: App,
@@ -174,15 +59,7 @@ impl Peregrine {
     /// systems' plan space explodes beyond that).
     fn plans(&self) -> Option<Vec<Plan>> {
         match self.app {
-            App::Clique => {
-                let mut m = AdjMat::empty(self.k);
-                for a in 0..self.k {
-                    for b in (a + 1)..self.k {
-                        m.set_edge(a, b);
-                    }
-                }
-                Some(vec![Plan::build(&m)])
-            }
+            App::Clique => Some(vec![Plan::clique(self.k)]),
             App::Motif => {
                 if self.k > crate::canon::CanonDict::MAX_DICT_K {
                     return None; // plan space beyond practical envelope

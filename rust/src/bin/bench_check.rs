@@ -1,0 +1,540 @@
+//! `bench_check` — the CI bench-regression gate.
+//!
+//! Compares fresh `BENCH_*.json` dumps (written by the benches under
+//! `DUMATO_BENCH_JSON=1`) against committed baselines in
+//! `benches/baselines/` and fails when a modeled kernel time regresses
+//! more than the tolerance (default 10%).
+//!
+//! ```text
+//! cargo run --bin bench_check                               # gate all known files
+//! cargo run --bin bench_check -- BENCH_plans.json           # gate one file
+//! cargo run --bin bench_check -- --tolerance 0.15           # looser gate
+//! cargo run --bin bench_check -- --write                    # refresh baselines
+//! cargo run --bin bench_check -- --baseline-dir D --fresh-dir D2
+//! ```
+//!
+//! Rows are joined on the file's key columns (dataset/app/pattern/...);
+//! only the metric columns (modeled seconds) are compared. Non-numeric
+//! cells (`-`, i.e. budget timeouts) are skipped with a warning — wall
+//! budgets depend on host speed and must not flap the gate. A baseline
+//! file containing `"bootstrap": true` (or a missing baseline) passes
+//! with a notice: the gate arms once a real run is recorded with
+//! `--write` and committed.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// Per-file comparison schema: which columns identify a row and which
+/// carry modeled time. Files not listed here are rejected — add a spec
+/// when adding a bench dump, so the gate never silently ignores one.
+struct Spec {
+    file: &'static str,
+    key: &'static [&'static str],
+    metrics: &'static [&'static str],
+}
+
+const SPECS: &[Spec] = &[
+    Spec {
+        file: "BENCH_scaling.json",
+        key: &["app", "partition", "devices"],
+        metrics: &["sim_time"],
+    },
+    Spec {
+        file: "BENCH_plans.json",
+        key: &["dataset", "app", "pattern", "path"],
+        metrics: &["sim_time"],
+    },
+];
+
+// ---------------------------------------------------------------------
+// Minimal JSON reader for the exact shape `report::Table::to_json` emits:
+// {"title":"...","rows":[{"col":"cell",...},...]} — string cells only,
+// but the value scanner tolerates numbers/bools/null so bootstrap files
+// parse too.
+// ---------------------------------------------------------------------
+
+type Row = Vec<(String, String)>;
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn new(s: &'a str) -> Self {
+        Self { b: s.as_bytes(), i: 0 }
+    }
+
+    fn err(&self, what: &str) -> String {
+        format!("{what} at byte {}", self.i)
+    }
+
+    fn ws(&mut self) {
+        while self.i < self.b.len() && self.b[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&mut self) -> Option<u8> {
+        self.ws();
+        self.b.get(self.i).copied()
+    }
+
+    fn eat(&mut self, c: u8) -> Result<(), String> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected '{}'", c as char)))
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        loop {
+            let c = *self.b.get(self.i).ok_or_else(|| self.err("unterminated string"))?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let e = *self.b.get(self.i).ok_or_else(|| self.err("bad escape"))?;
+                    self.i += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => {
+                            let hex = self
+                                .b
+                                .get(self.i..self.i + 4)
+                                .ok_or_else(|| self.err("bad \\u"))?;
+                            let code = u32::from_str_radix(
+                                std::str::from_utf8(hex).map_err(|_| self.err("bad \\u"))?,
+                                16,
+                            )
+                            .map_err(|_| self.err("bad \\u"))?;
+                            self.i += 4;
+                            out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                        }
+                        _ => return Err(self.err("unknown escape")),
+                    }
+                }
+                c => out.push(c as char),
+            }
+        }
+    }
+
+    /// Scan any scalar value, returning strings verbatim and everything
+    /// else (numbers, true/false/null) as its raw text.
+    fn scalar(&mut self) -> Result<String, String> {
+        match self.peek() {
+            Some(b'"') => self.string(),
+            Some(_) => {
+                let start = self.i;
+                while self
+                    .b
+                    .get(self.i)
+                    .is_some_and(|&c| !matches!(c, b',' | b'}' | b']') && !c.is_ascii_whitespace())
+                {
+                    self.i += 1;
+                }
+                if self.i == start {
+                    return Err(self.err("expected value"));
+                }
+                Ok(String::from_utf8_lossy(&self.b[start..self.i]).into_owned())
+            }
+            None => Err(self.err("expected value")),
+        }
+    }
+
+    /// One flat `{"k":"v",...}` row object.
+    fn row(&mut self) -> Result<Row, String> {
+        self.eat(b'{')?;
+        let mut row = Row::new();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(row);
+        }
+        loop {
+            let k = self.string()?;
+            self.eat(b':')?;
+            row.push((k, self.scalar()?));
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(row);
+                }
+                _ => return Err(self.err("expected ',' or '}'")),
+            }
+        }
+    }
+}
+
+/// Parse a Table::to_json dump into (title, rows).
+fn parse_table(s: &str) -> Result<(String, Vec<Row>), String> {
+    let mut p = Parser::new(s);
+    p.eat(b'{')?;
+    let mut title = String::new();
+    let mut rows = Vec::new();
+    loop {
+        let key = p.string()?;
+        p.eat(b':')?;
+        match key.as_str() {
+            "rows" => {
+                p.eat(b'[')?;
+                if p.peek() == Some(b']') {
+                    p.i += 1;
+                } else {
+                    loop {
+                        rows.push(p.row()?);
+                        match p.peek() {
+                            Some(b',') => p.i += 1,
+                            Some(b']') => {
+                                p.i += 1;
+                                break;
+                            }
+                            _ => return Err(p.err("expected ',' or ']'")),
+                        }
+                    }
+                }
+            }
+            "title" => title = p.scalar()?,
+            _ => {
+                p.scalar()?; // bootstrap note fields etc.
+            }
+        }
+        match p.peek() {
+            Some(b',') => p.i += 1,
+            Some(b'}') => return Ok((title, rows)),
+            _ => return Err(p.err("expected ',' or '}'")),
+        }
+    }
+}
+
+fn cell<'r>(row: &'r Row, col: &str) -> Option<&'r str> {
+    row.iter().find(|(k, _)| k == col).map(|(_, v)| v.as_str())
+}
+
+fn row_key(row: &Row, key_cols: &[&str]) -> Option<String> {
+    let mut out = String::new();
+    for &c in key_cols {
+        out.push_str(cell(row, c)?);
+        out.push('\u{1f}');
+    }
+    Some(out)
+}
+
+/// Outcome of comparing one fresh dump against its baseline.
+#[derive(Debug, Default)]
+struct Report {
+    regressions: Vec<String>,
+    warnings: Vec<String>,
+    improvements: usize,
+    compared: usize,
+}
+
+fn compare(spec: &Spec, baseline: &[Row], fresh: &[Row], tolerance: f64) -> Report {
+    let mut rep = Report::default();
+    for brow in baseline {
+        let Some(key) = row_key(brow, spec.key) else {
+            rep.warnings
+                .push(format!("{}: baseline row missing a key column", spec.file));
+            continue;
+        };
+        let human_key = key.replace('\u{1f}', "/");
+        let Some(frow) = fresh
+            .iter()
+            .find(|f| row_key(f, spec.key).as_deref() == Some(key.as_str()))
+        else {
+            rep.regressions
+                .push(format!("{}: row [{}] disappeared from the fresh run", spec.file, human_key));
+            continue;
+        };
+        for &m in spec.metrics {
+            let (Some(bv), Some(fv)) = (cell(brow, m), cell(frow, m)) else {
+                rep.warnings
+                    .push(format!("{}: [{}] lacks column '{m}'", spec.file, human_key));
+                continue;
+            };
+            let Ok(bt) = bv.parse::<f64>() else {
+                continue; // baseline cell was a timeout/OOM marker: nothing to gate
+            };
+            let Ok(ft) = fv.parse::<f64>() else {
+                // host-speed-dependent budget timeout: warn, don't flap CI
+                rep.warnings.push(format!(
+                    "{}: [{}] {m} is '{fv}' in the fresh run (baseline {bv}) — skipped",
+                    spec.file, human_key
+                ));
+                continue;
+            };
+            rep.compared += 1;
+            if ft > bt * (1.0 + tolerance) {
+                rep.regressions.push(format!(
+                    "{}: [{}] {m} regressed {:.1}% ({bt:.6} -> {ft:.6})",
+                    spec.file,
+                    human_key,
+                    (ft / bt - 1.0) * 100.0
+                ));
+            } else if ft < bt * (1.0 - tolerance) {
+                rep.improvements += 1;
+            }
+        }
+    }
+    rep
+}
+
+fn is_bootstrap(content: &str) -> bool {
+    let squashed: String = content.chars().filter(|c| !c.is_whitespace()).collect();
+    squashed.contains("\"bootstrap\":true")
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: bench_check [--baseline-dir DIR] [--fresh-dir DIR] \
+         [--tolerance F] [--write] [BENCH_*.json ...]"
+    );
+    std::process::exit(2)
+}
+
+fn main() -> ExitCode {
+    let mut baseline_dir = PathBuf::from("benches/baselines");
+    let mut fresh_dir = PathBuf::from(".");
+    let mut tolerance = 0.10f64;
+    let mut write = false;
+    let mut files: Vec<String> = Vec::new();
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--baseline-dir" => baseline_dir = args.next().unwrap_or_else(|| usage()).into(),
+            "--fresh-dir" => fresh_dir = args.next().unwrap_or_else(|| usage()).into(),
+            "--tolerance" => {
+                tolerance = args
+                    .next()
+                    .and_then(|v| v.parse().ok())
+                    .unwrap_or_else(|| usage())
+            }
+            "--write" => write = true,
+            "--help" | "-h" => usage(),
+            f if !f.starts_with('-') => files.push(f.to_string()),
+            _ => usage(),
+        }
+    }
+    if files.is_empty() {
+        files = SPECS.iter().map(|s| s.file.to_string()).collect();
+    }
+
+    let mut failed = false;
+    for name in &files {
+        let Some(spec) = SPECS.iter().find(|s| s.file == *name) else {
+            eprintln!("bench_check: no comparison spec for '{name}' — add one to SPECS");
+            failed = true;
+            continue;
+        };
+        let fresh_path = fresh_dir.join(name);
+        let Ok(fresh_content) = std::fs::read_to_string(&fresh_path) else {
+            eprintln!(
+                "bench_check: FAIL {name}: fresh dump {} missing — run the bench with \
+                 DUMATO_BENCH_JSON=1 first",
+                fresh_path.display()
+            );
+            failed = true;
+            continue;
+        };
+        let fresh = match parse_table(&fresh_content) {
+            Ok((_, rows)) => rows,
+            Err(e) => {
+                eprintln!("bench_check: FAIL {name}: unparsable fresh dump: {e}");
+                failed = true;
+                continue;
+            }
+        };
+        let baseline_path = baseline_dir.join(name);
+        let baseline_content = std::fs::read_to_string(&baseline_path).ok();
+        let bootstrap = match &baseline_content {
+            None => true,
+            Some(c) => is_bootstrap(c),
+        };
+        if bootstrap {
+            println!(
+                "bench_check: {name}: baseline is {} — gate passes in bootstrap mode \
+                 ({} fresh rows observed)",
+                if baseline_content.is_none() { "missing" } else { "a bootstrap placeholder" },
+                fresh.len()
+            );
+            if write {
+                write_baseline(&baseline_path, &fresh_content);
+            } else {
+                println!(
+                    "bench_check: {name}: commit a recorded run (bench_check --write) to arm \
+                     the gate"
+                );
+            }
+            continue;
+        }
+        let baseline = match parse_table(baseline_content.as_deref().unwrap_or("")) {
+            Ok((_, rows)) => rows,
+            Err(e) => {
+                eprintln!("bench_check: FAIL {name}: unparsable baseline: {e}");
+                failed = true;
+                continue;
+            }
+        };
+        let rep = compare(spec, &baseline, &fresh, tolerance);
+        for w in &rep.warnings {
+            println!("bench_check: warn: {w}");
+        }
+        if rep.regressions.is_empty() {
+            println!(
+                "bench_check: OK {name}: {} cells within {:.0}% of baseline ({} improved)",
+                rep.compared,
+                tolerance * 100.0,
+                rep.improvements
+            );
+            if write {
+                write_baseline(&baseline_path, &fresh_content); // ratchet
+            }
+        } else {
+            for r in &rep.regressions {
+                eprintln!("bench_check: FAIL: {r}");
+            }
+            failed = true;
+        }
+    }
+    if failed {
+        ExitCode::FAILURE
+    } else {
+        ExitCode::SUCCESS
+    }
+}
+
+fn write_baseline(path: &Path, content: &str) {
+    if let Some(dir) = path.parent() {
+        let _ = std::fs::create_dir_all(dir);
+    }
+    match std::fs::write(path, content) {
+        Ok(()) => println!("bench_check: wrote {}", path.display()),
+        Err(e) => eprintln!("bench_check: could not write {}: {e}", path.display()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table(rows: &[&[(&str, &str)]]) -> Vec<Row> {
+        rows.iter()
+            .map(|r| r.iter().map(|&(k, v)| (k.to_string(), v.to_string())).collect())
+            .collect()
+    }
+
+    fn plans_spec() -> &'static Spec {
+        SPECS
+            .iter()
+            .find(|s| s.file == "BENCH_plans.json")
+            .expect("plans spec present")
+    }
+
+    #[test]
+    fn roundtrips_table_to_json() {
+        let mut t = dumato::report::Table::new("plans \"x\"", &["dataset", "sim_time"]);
+        t.row(vec!["cite\nseer".into(), "0.125".into()]);
+        t.row(vec!["dblp".into(), "-".into()]);
+        let (title, rows) = parse_table(&t.to_json()).expect("parse");
+        assert_eq!(title, "plans \"x\"");
+        assert_eq!(rows.len(), 2);
+        assert_eq!(cell(&rows[0], "dataset"), Some("cite\nseer"));
+        assert_eq!(cell(&rows[0], "sim_time"), Some("0.125"));
+        assert_eq!(cell(&rows[1], "sim_time"), Some("-"));
+    }
+
+    #[test]
+    fn parses_bootstrap_placeholders() {
+        let c = "{\"bootstrap\": true, \"note\": \"record me\"}";
+        assert!(is_bootstrap(c));
+        // placeholder also survives the table parser (no rows)
+        let (_, rows) = parse_table(c).expect("parse");
+        assert!(rows.is_empty());
+        assert!(!is_bootstrap("{\"title\":\"t\",\"rows\":[]}"));
+    }
+
+    #[test]
+    fn regression_beyond_tolerance_fails() {
+        let base = table(&[&[
+            ("dataset", "citeseer"),
+            ("app", "query"),
+            ("pattern", "4-cycle"),
+            ("path", "planned"),
+            ("sim_time", "0.100"),
+        ]]);
+        let mut fresh = base.clone();
+        fresh[0].last_mut().unwrap().1 = "0.105".into(); // +5%: fine
+        assert!(compare(plans_spec(), &base, &fresh, 0.10).regressions.is_empty());
+        fresh[0].last_mut().unwrap().1 = "0.125".into(); // +25%: regression
+        let rep = compare(plans_spec(), &base, &fresh, 0.10);
+        assert_eq!(rep.regressions.len(), 1);
+        assert!(rep.regressions[0].contains("4-cycle"), "{:?}", rep.regressions);
+    }
+
+    #[test]
+    fn missing_row_is_a_regression_but_timeout_is_a_warning() {
+        let base = table(&[
+            &[
+                ("dataset", "citeseer"),
+                ("app", "query"),
+                ("pattern", "4-path"),
+                ("path", "planned"),
+                ("sim_time", "0.2"),
+            ],
+            &[
+                ("dataset", "dblp"),
+                ("app", "clique"),
+                ("pattern", "5-clique"),
+                ("path", "planned"),
+                ("sim_time", "0.3"),
+            ],
+        ]);
+        // fresh run lost the dblp row entirely, and the citeseer row timed out
+        let mut fresh = table(&[&[
+            ("dataset", "citeseer"),
+            ("app", "query"),
+            ("pattern", "4-path"),
+            ("path", "planned"),
+            ("sim_time", "-"),
+        ]]);
+        let rep = compare(plans_spec(), &base, &fresh, 0.10);
+        assert_eq!(rep.regressions.len(), 1, "{:?}", rep.regressions);
+        assert!(rep.regressions[0].contains("disappeared"));
+        assert_eq!(rep.warnings.len(), 1, "{:?}", rep.warnings);
+        // a '-' baseline cell gates nothing even when fresh is numeric
+        fresh[0].last_mut().unwrap().1 = "0.4".into();
+        let base2 = {
+            let mut b = fresh.clone();
+            b[0].last_mut().unwrap().1 = "-".into();
+            b
+        };
+        let rep2 = compare(plans_spec(), &base2, &fresh, 0.10);
+        assert!(rep2.regressions.is_empty());
+        assert_eq!(rep2.compared, 0);
+    }
+
+    #[test]
+    fn improvements_are_counted_not_failed() {
+        let base = table(&[&[
+            ("dataset", "dblp"),
+            ("app", "query"),
+            ("pattern", "diamond"),
+            ("path", "planned"),
+            ("sim_time", "1.0"),
+        ]]);
+        let mut fresh = base.clone();
+        fresh[0].last_mut().unwrap().1 = "0.5".into();
+        let rep = compare(plans_spec(), &base, &fresh, 0.10);
+        assert!(rep.regressions.is_empty());
+        assert_eq!(rep.improvements, 1);
+    }
+}

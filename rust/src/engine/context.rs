@@ -296,6 +296,139 @@ impl<'a> WarpContext<'a> {
     }
 
     // ------------------------------------------------------------------
+    // [EX] extend_planned: plan-driven candidate generation.
+    //
+    // Where the unplanned Extend streams the *whole* traversal
+    // neighborhood and leaves pruning to downstream filters, the planned
+    // variant generates exactly the candidates a pattern-aware system
+    // would: the intersection of the matched backward-neighbor adjacency
+    // lists, streamed from the smallest list (the others are cache-hot
+    // bisect probes, the Filter probe calibration), sliced at the
+    // symmetry-breaking lower bound so pruned candidates are never
+    // materialized. The vGPU charge covers only the intersected lists —
+    // this is the plan layer's whole modeled-time win (benches/plans.rs).
+    // Returns true when extensions were (newly) generated.
+    // ------------------------------------------------------------------
+    pub fn extend_planned(&mut self, plan: &crate::plan::ExecutionPlan) -> bool {
+        self.prof.sisd(); // fetch level + generated test
+        let len = self.te.len();
+        debug_assert_eq!(self.te.k(), plan.k());
+        debug_assert!(len >= 1 && len < self.te.k());
+        let level = len - 1;
+        if self.te.generated(level) {
+            return false;
+        }
+        let backward = &plan.backward[len];
+        debug_assert!(!backward.is_empty(), "matching order guarantees an anchor");
+        let mut trav = [INVALID_V; MAX_K];
+        trav[..len].copy_from_slice(self.te.traversal());
+        // source: the matched backward neighbor with the smallest
+        // adjacency list — the one list this phase streams in full
+        let mut src = backward[0];
+        for &b in &backward[1..] {
+            self.prof.sisd(); // broadcast degree compare
+            if self.g.degree(trav[b]) < self.g.degree(trav[src]) {
+                src = b;
+            }
+        }
+        // all `match[a] < match[pos]` restrictions collapse to one lower
+        // bound; the sorted source list is sliced there (one bisect), so
+        // symmetry breaking costs nothing per candidate
+        let mut lb: Option<VertexId> = None;
+        for &(a, b) in &plan.restrictions {
+            if b == len {
+                self.prof.sisd(); // broadcast max
+                lb = Some(lb.map_or(trav[a], |x| x.max(trav[a])));
+            }
+        }
+        self.scratch.begin();
+        for &v in &trav[..len] {
+            self.scratch.mark(v);
+        }
+        let src_v = trav[src];
+        let adj = self.g.neighbors(src_v);
+        let start = match lb {
+            Some(x) => {
+                // one warp bisect of the (cached) source list
+                self.prof.sisd();
+                self.prof.gld_raw(1);
+                adj.partition_point(|&u| u <= x)
+            }
+            None => 0,
+        };
+        let nprobe = (backward.len() - 1) as u64;
+        let (ptr, cap) = self.te.ext_raw_cap(level);
+        // SAFETY: see `ext_items_mut` — exclusive slab, phase-local use.
+        let out = unsafe { std::slice::from_raw_parts_mut(ptr, cap) };
+        let mut n = 0usize;
+        let mut offset = start;
+        while offset < adj.len() {
+            let chunk = &adj[offset..adj.len().min(offset + WARP_SIZE)];
+            // coalesced read of the sliced source list — the only full
+            // adjacency stream this phase charges
+            self.prof
+                .gld_contiguous(self.g.adj_address(src_v, offset), chunk.len());
+            // lockstep traversal-membership scan
+            self.prof.simd_n(len as u64);
+            // lockstep intersection probes into the other backward lists:
+            // one broadcast compare + one cache-hot transaction per list
+            // per chunk (see filter's probe charging note)
+            if nprobe > 0 {
+                self.prof.simd_n(nprobe);
+                self.prof.gld_raw(nprobe);
+            }
+            // select + coalesced write
+            self.prof.simd(chunk.len());
+            'cand: for &e in chunk {
+                if self.scratch.seen(e) {
+                    continue;
+                }
+                for &b in backward.iter() {
+                    if b != src && !self.g.has_edge(trav[b], e) {
+                        continue 'cand;
+                    }
+                }
+                assert!(
+                    n < out.len(),
+                    "extension slab overflow at level {level} (cap {}): planned \
+                     extensions are a subset of one adjacency list and cannot exceed \
+                     degree-derived arena caps — standalone TEs need Te::standalone(k, cap)",
+                    out.len()
+                );
+                out[n] = e;
+                n += 1;
+            }
+            offset += WARP_SIZE;
+        }
+        self.te.finish_ext(level, n);
+        self.prof.sisd(); // return flag
+        true
+    }
+
+    // ------------------------------------------------------------------
+    // [FL] filter_plan: the plan's induced anti-edge constraints.
+    //
+    // Symmetry restrictions are fully enforced at generation time
+    // (extend_planned's lower-bound slice), so this phase only rejects
+    // candidates adjacent to a forbidden (non-pattern-edge) position —
+    // a no-op charged one instruction for patterns without anti-edges
+    // (cliques). Costs mirror the generic Filter: one broadcast compare
+    // plus one cache-hot probe per forbidden position per chunk.
+    // ------------------------------------------------------------------
+    pub fn filter_plan(&mut self, plan: &crate::plan::ExecutionPlan) {
+        let pos = self.te.len();
+        debug_assert_eq!(self.te.k(), plan.k());
+        let nforbidden = plan.forbidden[pos].len() as u64;
+        if nforbidden == 0 {
+            self.prof.sisd(); // fetch empty constraint set
+            return;
+        }
+        self.filter((nforbidden, nforbidden), |g, te, e| {
+            plan.forbidden[te.len()].iter().all(|&j| !g.has_edge(te.vertex(j), e))
+        });
+    }
+
+    // ------------------------------------------------------------------
     // [FL] Filter (paper Alg 3): invalidate extensions violating `keep`.
     //
     // `cost = (insts_per_chunk, probes_per_chunk)`: instructions are
@@ -696,5 +829,66 @@ mod tests {
         let before = c.prof.gld_transactions;
         c.filter((1, 0), |_, _, _| true);
         assert!(c.prof.gld_transactions > before, "filter charged no slab read");
+    }
+
+    #[test]
+    fn extend_planned_intersects_and_slices_at_lower_bound() {
+        // clique plan at len=2 on K6: candidates = N(1) ∩ N(3), > 3
+        let g = generators::complete(6);
+        let plan = crate::plan::ExecutionPlan::clique(4);
+        let mut h = harness(&g, 4);
+        h.1.push_back(vec![1]);
+        let mut c = ctx!(&g, h);
+        assert!(c.control());
+        c.te.push_vertex(3, &g, false);
+        assert!(c.extend_planned(&plan));
+        let mut items = c.te.ext_vec(c.te.cur_level());
+        items.sort_unstable();
+        assert_eq!(items, vec![4, 5]); // 0 and 2 pruned at generation
+        // second call: already generated
+        assert!(!c.extend_planned(&plan));
+    }
+
+    #[test]
+    fn filter_plan_rejects_induced_anti_edges() {
+        // 4-cycle plan: position 2 must NOT touch position 0. On K5 the
+        // intersection survives extend but every candidate violates the
+        // anti-edge, so filter_plan tombstones them all.
+        let g = generators::complete(5);
+        let mut m = crate::canon::bitmap::AdjMat::empty(4);
+        for &(a, b) in &[(0usize, 1usize), (1, 2), (2, 3), (3, 0)] {
+            m.set_edge(a, b);
+        }
+        let plan = crate::plan::ExecutionPlan::build(&m);
+        let mut h = harness(&g, 4);
+        h.1.push_back(vec![0]);
+        let mut c = ctx!(&g, h);
+        assert!(c.control());
+        c.te.push_vertex(1, &g, false);
+        assert!(c.extend_planned(&plan));
+        let level = c.te.cur_level();
+        assert!(c.te.live_count(level) > 0);
+        c.filter_plan(&plan);
+        assert_eq!(c.te.live_count(level), 0, "K5 holds no induced 4-cycle");
+    }
+
+    #[test]
+    fn extend_planned_charges_only_the_intersected_list() {
+        // star: hub 0 with high degree, leaves degree 1. A clique plan at
+        // len=2 must stream the *leaf* list (1 word), not the hub's.
+        let g = generators::star(40);
+        let plan = crate::plan::ExecutionPlan::clique(3);
+        let mut h = harness(&g, 3);
+        h.1.push_back(vec![0]); // hub first (ascending clique order)
+        let mut c = ctx!(&g, h);
+        assert!(c.control());
+        c.te.push_vertex(1, &g, false); // a leaf
+        let before = c.prof.gld_transactions;
+        assert!(c.extend_planned(&plan));
+        let planned_gld = c.prof.gld_transactions - before;
+        // leaf list is 1 word (1 transaction) + 1 probe + 1 bisect: far
+        // below the hub's 40-word stream (2+ transactions of 32 words)
+        assert!(planned_gld <= 3, "charged {planned_gld} transactions");
+        assert_eq!(c.te.live_count(c.te.cur_level()), 0); // no triangle in a star
     }
 }

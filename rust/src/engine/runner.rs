@@ -306,8 +306,12 @@ impl Runner {
             .enumerate()
             .map(|(i, te)| WarpState::bound(i, te))
             .collect();
+        // Pattern-aware seed pruning: a seed matched at the plan's root
+        // position needs at least the root's pattern degree; unplanned
+        // algorithms keep the every-non-isolated-vertex deal.
+        let min_deg = algo.plan().map_or(1, |p| p.min_seed_degree()).max(1);
         let seeds: Vec<VertexId> =
-            (0..g.num_vertices() as VertexId).filter(|&v| g.degree(v) > 0).collect();
+            (0..g.num_vertices() as VertexId).filter(|&v| g.degree(v) >= min_deg).collect();
         deal_seeds(&mut warps, &seeds);
         let initial: Vec<usize> = warps.iter().filter(|w| !w.finished).map(|w| w.id).collect();
 

@@ -8,7 +8,10 @@
 //!   shared with the DM_DFS baseline, warp-level load balancing behind
 //!   the balance::LbPolicy trait, a multi-device execution layer
 //!   (multi::DeviceFleet: seed sharding + inter-device rebalancing over
-//!   an explicit interconnect model), baselines, benches.
+//!   an explicit interconnect model), a pattern-aware plan compiler
+//!   (plan::ExecutionPlan: matching orders, backward intersections,
+//!   automorphism symmetry breaking) shared by engine apps and the
+//!   Peregrine-like baseline, baselines, benches.
 //! - L2/L1 (python/compile): jax + Pallas kernels, AOT-lowered to HLO text.
 //! - runtime: PJRT CPU client executing the AOT artifacts from the L3 hot
 //!   path (gated behind the `xla` cargo feature offline).
@@ -23,6 +26,7 @@ pub mod config;
 pub mod engine;
 pub mod graph;
 pub mod multi;
+pub mod plan;
 pub mod report;
 pub mod runtime;
 pub mod util;

@@ -21,7 +21,7 @@ use dumato::graph::{generators, GraphStats};
 use dumato::report::Table;
 use dumato::util::fmt_count;
 
-const FLAGS: &[&str] = &["lb", "wall"];
+const FLAGS: &[&str] = &["lb", "wall", "unplanned"];
 
 fn main() {
     let raw: Vec<String> = std::env::args().skip(1).collect();
@@ -40,6 +40,7 @@ const USAGE: &str = "usage: dumato <clique|motif|query|stats|triangles|baseline>
   multi-device: --devices N --partition round-robin|degree-aware --interconnect pcie|nvlink --epoch-segments N
   clique/motif: --k N
   query: --k N --pattern <3-clique|wedge|4-cycle|4-path|3-star|diamond|tailed-triangle>
+         or --pattern a-b,b-c,... (edge list over 0..k; k inferred) [--unplanned]
   triangles: --engine <engine|xla>
   baseline: --system <dfs|pangolin|fractal|peregrine> --app <clique|motif> --k N";
 
@@ -140,19 +141,54 @@ fn known_pattern(k: usize, name: &str) -> Result<Vec<(usize, usize)>> {
     Ok(edges)
 }
 
+/// `--pattern` accepts built-in names ("4-cycle") and raw edge lists
+/// ("0-1,1-2,2-3,3-0"). An edge list is all digits/dashes/commas; names
+/// always contain a letter.
+fn is_edge_list(spec: &str) -> bool {
+    !spec.is_empty()
+        && spec
+            .chars()
+            .all(|c| c.is_ascii_digit() || c == '-' || c == ',' || c.is_whitespace())
+}
+
 fn cmd_query(args: &Args) -> Result<()> {
     let g = graph_from(args)?;
-    let k: usize = args.parse_or("k", 3)?;
     let pattern = args.get_or("pattern", "3-clique");
-    let edges = known_pattern(k, pattern)?;
-    let q = SubgraphQuery::new(k, &edges);
+    let (k, edges) = if is_edge_list(pattern) {
+        let (pk, edges) = dumato::plan::parse_pattern(pattern)?;
+        if let Some(explicit) = args.get("k") {
+            let ek: usize = explicit
+                .parse()
+                .map_err(|_| anyhow!("bad value '{explicit}' for --k"))?;
+            if ek != pk {
+                bail!("--k {ek} contradicts the edge list (max vertex id implies k={pk})");
+            }
+        }
+        (pk, edges)
+    } else {
+        let k: usize = args.parse_or("k", 3)?;
+        (k, known_pattern(k, pattern)?)
+    };
+    let mut q = SubgraphQuery::new(k, &edges);
+    if args.flag("unplanned") {
+        q = q.unplanned();
+    } else {
+        let p = q.execution_plan();
+        println!(
+            "plan: order={:?} restrictions={:?} min_seed_degree={}",
+            p.order,
+            p.restrictions,
+            p.min_seed_degree()
+        );
+    }
     let cfg = engine_config(args, 0.10)?;
     let r = Runner::run(&g, &q, &cfg);
     let matches = q.matches(&r);
     println!(
-        "dataset={} pattern={pattern} matches={}",
+        "dataset={} pattern={pattern} matches={}  sim_time={:.4}s",
         g.name(),
-        fmt_count(matches.len() as u64)
+        fmt_count(matches.len() as u64),
+        r.metrics.sim_seconds,
     );
     for m in matches.iter().take(args.parse_or("limit", 10usize)?) {
         println!("  {m:?}");

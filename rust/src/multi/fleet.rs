@@ -89,8 +89,10 @@ impl DeviceFleet {
             })
             .collect();
         // Seed sharding: the partition policy assigns every non-isolated
-        // vertex to exactly one device.
-        let shards = cfg.partition.shard(g, ndev);
+        // vertex to exactly one device (pruned to the plan's root-degree
+        // floor for planned algorithms, matching the single-device deal).
+        let min_deg = algo.plan().map_or(1, |p| p.min_seed_degree()).max(1);
+        let shards = cfg.partition.shard_filtered(g, ndev, min_deg);
         for (ws, seeds) in warp_sets.iter_mut().zip(&shards) {
             deal_seeds(ws, seeds);
         }

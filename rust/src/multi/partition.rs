@@ -42,19 +42,34 @@ impl Partition {
     /// device. Every non-isolated vertex appears on exactly one device;
     /// isolated vertices are skipped (a degree-0 seed cannot extend).
     pub fn shard(&self, g: &CsrGraph, devices: usize) -> Vec<Vec<VertexId>> {
+        self.shard_filtered(g, devices, 1)
+    }
+
+    /// [`Partition::shard`] with a minimum-degree seed filter — the
+    /// fleet's half of the pattern-aware seed pruning
+    /// ([`crate::plan::ExecutionPlan::min_seed_degree`]): a vertex whose
+    /// degree cannot match the plan's root position roots no traversal on
+    /// any device.
+    pub fn shard_filtered(
+        &self,
+        g: &CsrGraph,
+        devices: usize,
+        min_degree: usize,
+    ) -> Vec<Vec<VertexId>> {
         let ndev = devices.max(1);
+        let min_degree = min_degree.max(1);
         let mut shards: Vec<Vec<VertexId>> = vec![Vec::new(); ndev];
         match self {
             Partition::RoundRobin => {
                 for v in 0..g.num_vertices() {
-                    if g.degree(v as VertexId) > 0 {
+                    if g.degree(v as VertexId) >= min_degree {
                         shards[v % ndev].push(v as VertexId);
                     }
                 }
             }
             Partition::DegreeAware => {
                 let mut seeds: Vec<VertexId> = (0..g.num_vertices() as VertexId)
-                    .filter(|&v| g.degree(v) > 0)
+                    .filter(|&v| g.degree(v) >= min_degree)
                     .collect();
                 seeds.sort_by_key(|&v| (std::cmp::Reverse(g.degree(v)), v));
                 let mut load = vec![0u64; ndev];
@@ -148,6 +163,21 @@ mod tests {
             let want =
                 (0..g.num_vertices() as VertexId).filter(|&v| g.degree(v) > 0).count();
             assert_eq!(shards[0].len(), want);
+        }
+    }
+
+    #[test]
+    fn shard_filtered_drops_below_floor_on_every_policy() {
+        let g = generators::ASTROPH.scaled(0.03).generate(1);
+        for p in [Partition::RoundRobin, Partition::DegreeAware] {
+            let shards = p.shard_filtered(&g, 3, 4);
+            let mut all: Vec<VertexId> = shards.iter().flatten().copied().collect();
+            all.sort_unstable();
+            let want: Vec<VertexId> =
+                (0..g.num_vertices() as VertexId).filter(|&v| g.degree(v) >= 4).collect();
+            assert_eq!(all, want, "{p:?}");
+            // floor 1 == the classic shard
+            assert_eq!(p.shard_filtered(&g, 3, 1), p.shard(&g, 3), "{p:?}");
         }
     }
 

@@ -1,0 +1,440 @@
+//! Pattern-aware execution plans (G²Miner / Peregrine-style planning).
+//!
+//! DuMato's unplanned engine enumerates *every* connected k-subgraph and
+//! filters by canonicality — the bulk of warp work is spent generating
+//! extensions a pattern-aware system would never materialize. An
+//! [`ExecutionPlan`] compiles one connected pattern into a per-level
+//! recipe the warp-centric engine executes directly:
+//!
+//! 1. **Matching order** — pattern positions reordered by a
+//!    connectivity/degree heuristic (root = max degree; then most
+//!    already-placed neighbors, ties by degree) so every position extends
+//!    an earlier one and intersections shrink early.
+//! 2. **Backward sets** — for position `i`, the earlier positions
+//!    adjacent in the pattern. Candidates for `i` are the intersection of
+//!    the matched backward adjacency lists, streamed from the *smallest*
+//!    list (`WarpContext::extend_planned` charges only the intersected
+//!    lists, not the whole traversal neighborhood).
+//! 3. **Symmetry-breaking restrictions** — `match[a] < match[b]`
+//!    constraints derived from the pattern's automorphism group
+//!    (first-moved-position rule over `canon::patterns::automorphisms`).
+//!    All restrictions targeting position `i` collapse to one lower
+//!    bound, applied by *slicing* the sorted source list at candidate
+//!    generation time — pruned candidates are never generated. The rule
+//!    is complete: exactly one assignment per vertex set survives
+//!    (property-tested in `tests/integration_plans.rs`).
+//! 4. **Forbidden sets** — earlier positions with *no* pattern edge to
+//!    `i`; `WarpContext::filter_plan` rejects candidates adjacent to any
+//!    of them, giving induced-subgraph semantics.
+//!
+//! The same plan drives the engine apps (`apps::clique`, `apps::query`),
+//! the Peregrine-like CPU baseline (`baselines::peregrine`), and the
+//! planner-correctness property tests — one planner, three consumers.
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::canon::bitmap::{AdjMat, MAX_PATTERN_K};
+use crate::canon::canonical::canonical_form;
+use crate::canon::patterns::{automorphism_count, automorphisms};
+use crate::graph::{CsrGraph, VertexId};
+
+/// A compiled per-level execution plan for one connected pattern.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ExecutionPlan {
+    /// Pattern adjacency remapped to the matching order (position `i` is
+    /// the i-th vertex matched).
+    pub pat: AdjMat,
+    /// Canonical bitmap of the original pattern (report key).
+    pub canonical: u64,
+    /// `order[i]` = the original pattern position matched at level `i`.
+    pub order: Vec<usize>,
+    /// `backward[i]` = earlier positions adjacent to `i` in the remapped
+    /// pattern (non-empty for `i >= 1`; `backward[0]` is empty).
+    pub backward: Vec<Vec<usize>>,
+    /// `forbidden[i]` = earlier positions *not* adjacent to `i` (induced
+    /// anti-edges; `forbidden[0]` is empty).
+    pub forbidden: Vec<Vec<usize>>,
+    /// Symmetry-breaking constraints `match[a] < match[b]` with `a < b`,
+    /// one per automorphism (first-moved-position rule), deduplicated.
+    pub restrictions: Vec<(usize, usize)>,
+}
+
+impl ExecutionPlan {
+    /// Compile a plan for a connected pattern.
+    ///
+    /// The matching order roots at the max-degree position and greedily
+    /// appends the unplaced position with the most already-placed
+    /// neighbors (ties: higher pattern degree, then lower index), so the
+    /// order is deterministic and every position has a backward anchor.
+    pub fn build(pat: &AdjMat) -> ExecutionPlan {
+        let k = pat.k;
+        assert!(pat.is_connected(), "execution plans need a connected pattern");
+        let mut order: Vec<usize> = Vec::with_capacity(k);
+        let mut placed = vec![false; k];
+        let root = (0..k)
+            .max_by_key(|&v| (pat.degree(v), std::cmp::Reverse(v)))
+            .expect("k >= 2");
+        order.push(root);
+        placed[root] = true;
+        while order.len() < k {
+            let next = (0..k)
+                .filter(|&v| !placed[v])
+                .max_by_key(|&v| {
+                    let back = order.iter().filter(|&&u| pat.has_edge(u, v)).count();
+                    (back, pat.degree(v), std::cmp::Reverse(v))
+                })
+                .expect("unplaced position exists");
+            // connected pattern => some unplaced vertex touches the cut
+            debug_assert!(order.iter().any(|&u| pat.has_edge(u, next)));
+            order.push(next);
+            placed[next] = true;
+        }
+        // remap pattern to the matching order: old position order[i] -> i
+        let mut inv = vec![0usize; k];
+        for (newp, &oldp) in order.iter().enumerate() {
+            inv[oldp] = newp;
+        }
+        let remapped = pat.permute(&inv);
+        let backward: Vec<Vec<usize>> = (0..k)
+            .map(|i| (0..i).filter(|&j| remapped.has_edge(j, i)).collect())
+            .collect();
+        let forbidden: Vec<Vec<usize>> = (0..k)
+            .map(|i| (0..i).filter(|&j| !remapped.has_edge(j, i)).collect())
+            .collect();
+        debug_assert!(backward.iter().skip(1).all(|b| !b.is_empty()));
+        // Symmetry breaking on the remapped pattern: for each automorphism
+        // σ ≠ id, constrain match[p] < match[σ(p)] at σ's first moved
+        // position p (σ(p) > p always — σ(p) is itself moved). The
+        // resulting constraint set admits exactly the lexicographically
+        // minimal assignment of each orbit: complete and sound.
+        let mut restrictions = Vec::new();
+        for sigma in automorphisms(&remapped) {
+            if let Some(p) = (0..k).find(|&p| sigma[p] != p) {
+                let pair = (p.min(sigma[p]), p.max(sigma[p]));
+                if !restrictions.contains(&pair) {
+                    restrictions.push(pair);
+                }
+            }
+        }
+        restrictions.sort_unstable();
+        ExecutionPlan {
+            pat: remapped,
+            canonical: canonical_form(pat),
+            order,
+            backward,
+            forbidden,
+            restrictions,
+        }
+    }
+
+    /// The k-clique plan: all-backward-neighbors intersection with the
+    /// full `v0 < v1 < … < v_{k-1}` restriction chain.
+    ///
+    /// Built directly rather than through [`ExecutionPlan::build`]: S_k's
+    /// k! automorphisms are known to collapse to the all-pairs chain, and
+    /// clique counting reaches k = 12 where enumerating them (and the
+    /// k = 12 pattern bitmap, which overflows `u64`) is off the table.
+    /// Equality with `build` is asserted by tests for dictionary-sized k.
+    pub fn clique(k: usize) -> ExecutionPlan {
+        assert!((2..=crate::canon::bitmap::MAX_K).contains(&k));
+        let mut m = AdjMat::empty(k);
+        for a in 0..k {
+            for b in (a + 1)..k {
+                m.set_edge(a, b);
+            }
+        }
+        let canonical = if k <= MAX_PATTERN_K {
+            (1u64 << crate::canon::bitmap::bits_for(k)) - 1
+        } else {
+            u64::MAX // k = 12: beyond pattern-bitmap range; never relabeled
+        };
+        ExecutionPlan {
+            pat: m,
+            canonical,
+            order: (0..k).collect(),
+            backward: (0..k).map(|i| (0..i).collect()).collect(),
+            forbidden: vec![Vec::new(); k],
+            restrictions: (0..k)
+                .flat_map(|a| ((a + 1)..k).map(move |b| (a, b)))
+                .collect(),
+        }
+    }
+
+    /// Pattern size.
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.pat.k
+    }
+
+    /// Number of automorphisms of the pattern — the per-vertex-set
+    /// embedding multiplicity a plan *without* restrictions counts.
+    pub fn automorphism_factor(&self) -> u64 {
+        automorphism_count(&self.pat) as u64
+    }
+
+    /// The same plan with symmetry breaking stripped: counts every
+    /// embedding (`matches × automorphism_factor`). Test/diagnostic tool.
+    pub fn without_restrictions(&self) -> ExecutionPlan {
+        ExecutionPlan {
+            restrictions: Vec::new(),
+            ..self.clone()
+        }
+    }
+
+    /// Minimum data-graph degree a vertex needs to match position 0 —
+    /// the runner prunes seeds below this before dealing.
+    #[inline]
+    pub fn min_seed_degree(&self) -> usize {
+        self.pat.degree(0) as usize
+    }
+
+    /// The symmetry lower bound for position `pos`: candidates must
+    /// exceed `matched[a]` for every restriction `(a, pos)`; the bounds
+    /// collapse to the max. `None` when `pos` is unrestricted.
+    #[inline]
+    pub fn lower_bound(&self, pos: usize, matched: &[VertexId]) -> Option<VertexId> {
+        self.restrictions
+            .iter()
+            .filter(|&&(_, b)| b == pos)
+            .map(|&(a, _)| matched[a])
+            .max()
+    }
+
+    /// Count induced matches rooted at data vertex `v0` (position 0) —
+    /// the CPU reference matcher shared with the Peregrine-like baseline.
+    pub fn count_from(&self, g: &CsrGraph, v0: VertexId) -> u64 {
+        if g.degree(v0) < self.min_seed_degree() {
+            return 0;
+        }
+        let mut matched = vec![VertexId::MAX; self.k()];
+        matched[0] = v0;
+        let mut acc = 0;
+        self.rec(g, 1, &mut matched, &mut acc);
+        acc
+    }
+
+    fn rec(&self, g: &CsrGraph, pos: usize, matched: &mut [VertexId], acc: &mut u64) {
+        if pos == self.k() {
+            *acc += 1;
+            return;
+        }
+        // stream the smallest matched backward list, probe the others
+        let src = self.backward[pos]
+            .iter()
+            .copied()
+            .min_by_key(|&b| g.degree(matched[b]))
+            .expect("matching order guarantees a backward neighbor");
+        let lb = self.lower_bound(pos, matched);
+        'cand: for &c in g.neighbors(matched[src]) {
+            if lb.is_some_and(|x| c <= x) {
+                continue;
+            }
+            for &m in matched[..pos].iter() {
+                if m == c {
+                    continue 'cand;
+                }
+            }
+            for &b in &self.backward[pos] {
+                if b != src && !g.has_edge(matched[b], c) {
+                    continue 'cand;
+                }
+            }
+            for &j in &self.forbidden[pos] {
+                if g.has_edge(matched[j], c) {
+                    continue 'cand;
+                }
+            }
+            matched[pos] = c;
+            self.rec(g, pos + 1, matched, acc);
+            matched[pos] = VertexId::MAX;
+        }
+    }
+}
+
+/// Largest pattern the edge-list parser admits: plan compilation
+/// enumerates all k! permutations for the automorphism group, which is
+/// instant through k = 8 (40,320) and minutes by k = 11 (~40M) — keep
+/// interactive CLI queries on the instant side of that cliff.
+pub const MAX_PARSE_K: usize = 8;
+
+/// Parse `a-b,b-c,...` edge-list pattern syntax (CLI `--pattern`).
+///
+/// Vertex ids must be `0..k` with `k = max id + 1`; the pattern must be
+/// connected (an unused id below the max is an isolated position and is
+/// rejected for the same reason), and `k <= MAX_PARSE_K` so the plan
+/// compiles interactively.
+pub fn parse_pattern(spec: &str) -> Result<(usize, Vec<(usize, usize)>)> {
+    let mut edges: Vec<(usize, usize)> = Vec::new();
+    let mut maxv = 0usize;
+    for part in spec.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            bail!("empty edge in pattern '{spec}'");
+        }
+        let (a, b) = part
+            .split_once('-')
+            .ok_or_else(|| anyhow!("bad edge '{part}' in pattern '{spec}' (want a-b)"))?;
+        let a: usize = a
+            .trim()
+            .parse()
+            .map_err(|_| anyhow!("bad vertex '{}' in edge '{part}'", a.trim()))?;
+        let b: usize = b
+            .trim()
+            .parse()
+            .map_err(|_| anyhow!("bad vertex '{}' in edge '{part}'", b.trim()))?;
+        ensure!(a != b, "self-loop '{part}' in pattern '{spec}'");
+        maxv = maxv.max(a).max(b);
+        edges.push((a.min(b), a.max(b)));
+    }
+    let k = maxv + 1;
+    ensure!(
+        (3..=MAX_PARSE_K).contains(&k),
+        "pattern '{spec}' has {k} vertices (supported: 3..={MAX_PARSE_K}; larger \
+         plans pay k! automorphism enumeration)"
+    );
+    edges.sort_unstable();
+    edges.dedup();
+    let mut m = AdjMat::empty(k);
+    for &(a, b) in &edges {
+        m.set_edge(a, b);
+    }
+    ensure!(
+        m.is_connected(),
+        "pattern '{spec}' is disconnected (every vertex id in 0..{k} must connect)"
+    );
+    Ok((k, edges))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    fn mat(k: usize, edges: &[(usize, usize)]) -> AdjMat {
+        let mut m = AdjMat::empty(k);
+        for &(a, b) in edges {
+            m.set_edge(a, b);
+        }
+        m
+    }
+
+    #[test]
+    fn clique_plan_is_all_backward_with_full_order() {
+        for k in 3..=6 {
+            let p = ExecutionPlan::clique(k);
+            for i in 1..k {
+                assert_eq!(p.backward[i], (0..i).collect::<Vec<_>>(), "k={k} i={i}");
+                assert!(p.forbidden[i].is_empty());
+            }
+            let want: Vec<(usize, usize)> =
+                (0..k).flat_map(|a| ((a + 1)..k).map(move |b| (a, b))).collect();
+            assert_eq!(p.restrictions, want, "k={k}");
+            assert_eq!(p.min_seed_degree(), k - 1);
+            // the direct construction matches the generic planner
+            let mut m = AdjMat::empty(k);
+            for a in 0..k {
+                for b in (a + 1)..k {
+                    m.set_edge(a, b);
+                }
+            }
+            assert_eq!(p, ExecutionPlan::build(&m), "k={k}");
+        }
+    }
+
+    #[test]
+    fn four_cycle_plan_closes_with_two_backward_neighbors() {
+        let p = ExecutionPlan::build(&mat(4, &[(0, 1), (1, 2), (2, 3), (3, 0)]));
+        // last position intersects two adjacency lists; mid positions one
+        assert_eq!(p.backward[1].len(), 1);
+        assert_eq!(p.backward[2].len(), 1);
+        assert_eq!(p.backward[3].len(), 2);
+        // the skipped diagonal is an induced anti-edge
+        assert_eq!(p.forbidden[2].len(), 1);
+        assert_eq!(p.forbidden[3].len(), 1);
+        // D4 collapses to four first-moved constraints
+        assert_eq!(p.restrictions, vec![(0, 1), (0, 2), (0, 3), (1, 3)]);
+        assert_eq!(p.automorphism_factor(), 8);
+    }
+
+    #[test]
+    fn matching_order_roots_at_max_degree() {
+        // wedge 0-1-2 with center 1: the plan must match the center first
+        let p = ExecutionPlan::build(&mat(3, &[(0, 1), (1, 2)]));
+        assert_eq!(p.order[0], 1);
+        assert_eq!(p.pat.degree(0), 2);
+        // 3-star: hub first, then three leaves
+        let s = ExecutionPlan::build(&mat(4, &[(0, 1), (0, 2), (0, 3)]));
+        assert_eq!(s.order[0], 0);
+        assert!(s.backward.iter().skip(1).all(|b| b == &[0]));
+    }
+
+    #[test]
+    fn lower_bound_is_max_over_restrictions() {
+        let p = ExecutionPlan::clique(4);
+        let matched = [5u32, 9, 2, VertexId::MAX];
+        assert_eq!(p.lower_bound(3, &matched), Some(9));
+        let wedge = ExecutionPlan::build(&mat(3, &[(0, 1), (1, 2)]));
+        // wedge restrictions: leaves ordered, root unconstrained
+        assert_eq!(wedge.restrictions, vec![(1, 2)]);
+        assert_eq!(wedge.lower_bound(1, &matched), None);
+        assert_eq!(wedge.lower_bound(2, &matched), Some(9));
+    }
+
+    #[test]
+    fn count_from_triangle_on_k5_sums_to_ten() {
+        let g = generators::complete(5);
+        let p = ExecutionPlan::clique(3);
+        let total: u64 = (0..5).map(|v| p.count_from(&g, v)).sum();
+        assert_eq!(total, 10); // C(5,3), each clique once
+    }
+
+    #[test]
+    fn without_restrictions_counts_every_embedding() {
+        let g = generators::erdos_renyi(14, 0.4, 9);
+        for edges in [
+            vec![(0usize, 1usize), (1, 2)], // wedge
+            vec![(0, 1), (1, 2), (0, 2)], // triangle
+            vec![(0, 1), (1, 2), (2, 3), (3, 0)], // 4-cycle
+        ] {
+            let k = edges.iter().map(|&(a, b)| a.max(b)).max().unwrap() + 1;
+            let p = ExecutionPlan::build(&mat(k, &edges));
+            let free = p.without_restrictions();
+            let matches: u64 =
+                (0..g.num_vertices() as VertexId).map(|v| p.count_from(&g, v)).sum();
+            let embeddings: u64 =
+                (0..g.num_vertices() as VertexId).map(|v| free.count_from(&g, v)).sum();
+            assert_eq!(embeddings, matches * p.automorphism_factor());
+        }
+    }
+
+    #[test]
+    fn build_is_deterministic() {
+        let m = mat(5, &[(0, 1), (1, 2), (2, 3), (3, 4), (4, 0), (1, 3)]);
+        assert_eq!(ExecutionPlan::build(&m), ExecutionPlan::build(&m));
+    }
+
+    #[test]
+    fn parse_pattern_accepts_edge_lists() {
+        let (k, edges) = parse_pattern("0-1,1-2,2-3,3-0").unwrap();
+        assert_eq!(k, 4);
+        assert_eq!(edges, vec![(0, 1), (0, 3), (1, 2), (2, 3)]);
+        // whitespace + duplicate + reversed edges normalize
+        let (k2, edges2) = parse_pattern(" 1-0 , 2-1 , 0-1 ").unwrap();
+        assert_eq!(k2, 3);
+        assert_eq!(edges2, vec![(0, 1), (1, 2)]);
+    }
+
+    #[test]
+    fn parse_pattern_rejects_malformed_and_disconnected() {
+        assert!(parse_pattern("0-1,2-3").is_err()); // disconnected
+        assert!(parse_pattern("0-1,1-1").is_err()); // self-loop
+        assert!(parse_pattern("0-1,x-2").is_err()); // not a vertex
+        assert!(parse_pattern("0-2").is_err()); // vertex 1 unused => isolated
+        assert!(parse_pattern("0-1").is_err()); // k=2 below engine minimum
+        assert!(parse_pattern("").is_err());
+        // k = 9 path: beyond the interactive k! cliff (MAX_PARSE_K = 8)
+        let big: Vec<String> = (0..8).map(|i| format!("{i}-{}", i + 1)).collect();
+        assert!(parse_pattern(&big.join(",")).is_err());
+        assert!(parse_pattern("0-1,1-2,2-3,3-4,4-5,5-6,6-7").is_ok()); // k=8 ok
+    }
+}

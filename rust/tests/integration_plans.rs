@@ -1,0 +1,227 @@
+//! Planner correctness and modeled-cost guarantees, end to end:
+//!
+//! - planned and unplanned enumeration agree on random G(n,p) graphs ×
+//!   random connected patterns (k <= 5), as vertex-set lists;
+//! - stripping the symmetry restrictions multiplies the count by exactly
+//!   the pattern's automorphism-orbit factor (so the first-moved-position
+//!   rule is complete: one surviving assignment per vertex set);
+//! - plans survive `devices > 1` (fleet sharding + rebalancing);
+//! - the planned path's modeled kernel time beats the unplanned path by
+//!   the margin the plan layer exists for.
+
+use dumato::api::GpmAlgorithm;
+use dumato::apps::{CliqueCount, SubgraphQuery};
+use dumato::balance::LbConfig;
+use dumato::canon::bitmap::AdjMat;
+use dumato::engine::{EngineConfig, Runner, WarpContext};
+use dumato::graph::generators;
+use dumato::multi::Partition;
+use dumato::plan::ExecutionPlan;
+use dumato::prop_assert_eq;
+use dumato::util::proptest::{check, Config};
+use dumato::util::Rng;
+
+/// Bench-shared helpers, including the unplanned clique reference
+/// pipeline (one copy for the bench and this test).
+#[path = "../benches/support.rs"]
+mod support;
+use support::UnplannedClique;
+
+fn cfg() -> EngineConfig {
+    EngineConfig {
+        warps: 8,
+        threads: 2,
+        ..Default::default()
+    }
+}
+
+/// Minimal planned counter: runs an arbitrary `ExecutionPlan` through the
+/// engine primitives and counts full matches with [A1]. Used to exercise
+/// plans the shipped apps never build (e.g. restriction-stripped ones).
+struct PlanCounter {
+    plan: ExecutionPlan,
+}
+
+impl GpmAlgorithm for PlanCounter {
+    fn name(&self) -> &str {
+        "plan_counter"
+    }
+
+    fn k(&self) -> usize {
+        self.plan.k()
+    }
+
+    fn plan(&self) -> Option<&ExecutionPlan> {
+        Some(&self.plan)
+    }
+
+    fn run(&self, ctx: &mut WarpContext) {
+        let k = self.plan.k();
+        while ctx.control() {
+            if ctx.extend_planned(&self.plan) {
+                ctx.filter_plan(&self.plan);
+                if ctx.te.len() == k - 1 {
+                    ctx.aggregate_counter();
+                }
+            }
+            ctx.move_(false);
+        }
+    }
+}
+
+/// Random connected pattern on k vertices: random spanning tree + extras.
+fn random_pattern(rng: &mut Rng, k: usize) -> AdjMat {
+    let mut m = AdjMat::empty(k);
+    for i in 1..k {
+        m.set_edge(rng.range(0, i), i);
+    }
+    for a in 0..k {
+        for b in (a + 1)..k {
+            if rng.chance(0.35) {
+                m.set_edge(a, b);
+            }
+        }
+    }
+    m
+}
+
+fn edges_of(m: &AdjMat) -> Vec<(usize, usize)> {
+    let mut edges = Vec::new();
+    for a in 0..m.k {
+        for b in (a + 1)..m.k {
+            if m.has_edge(a, b) {
+                edges.push((a, b));
+            }
+        }
+    }
+    edges
+}
+
+#[test]
+fn property_planned_equals_unplanned_and_orbit_factor_holds() {
+    check(
+        Config { cases: 20, ..Default::default() },
+        "planned == unplanned; embeddings == matches x |Aut|",
+        |rng| {
+            let n = rng.range(10, 22);
+            let p = 0.2 + rng.f64() * 0.25;
+            let g = generators::erdos_renyi(n, p, rng.next_u64());
+            let k = rng.range(3, 6); // 3..=5
+            let pat = random_pattern(rng, k);
+            let edges = edges_of(&pat);
+
+            let q = SubgraphQuery::new(k, &edges);
+            let u = SubgraphQuery::new(k, &edges).unplanned();
+            let mut planned = q.matches(&Runner::run(&g, &q, &cfg()));
+            let mut unplanned = u.matches(&Runner::run(&g, &u, &cfg()));
+            planned.sort_unstable();
+            unplanned.sort_unstable();
+            prop_assert_eq!(&planned, &unplanned, "n={n} p={p:.2} k={k} edges={edges:?}");
+
+            // completeness of the symmetry restrictions: without them the
+            // engine counts every embedding, |Aut| per vertex set
+            let plan = ExecutionPlan::build(&pat);
+            let free = PlanCounter { plan: plan.without_restrictions() };
+            let embeddings = Runner::run(&g, &free, &cfg()).count;
+            prop_assert_eq!(
+                embeddings,
+                planned.len() as u64 * plan.automorphism_factor(),
+                "orbit factor, k={k} edges={edges:?}"
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn planned_apps_survive_multiple_devices() {
+    let g = generators::ASTROPH.scaled(0.02).generate(7);
+    let multi = |devices: usize| EngineConfig {
+        warps: 16,
+        threads: 2,
+        devices,
+        partition: Partition::DegreeAware,
+        lb: Some(LbConfig::default().with_threshold(0.4)),
+        ..Default::default()
+    };
+
+    let clique1 = Runner::run(&g, &CliqueCount::new(4), &multi(1));
+    let clique3 = Runner::run(&g, &CliqueCount::new(4), &multi(3));
+    assert_eq!(clique1.count, clique3.count, "planned clique across devices");
+
+    let q = SubgraphQuery::new(4, &[(0, 1), (1, 2), (2, 3), (3, 0)]);
+    let r1 = Runner::run(&g, &q, &multi(1));
+    let r3 = Runner::run(&g, &q, &multi(3));
+    let mut m1 = q.matches(&r1);
+    let mut m3 = q.matches(&r3);
+    m1.sort_unstable();
+    m3.sort_unstable();
+    assert_eq!(m1, m3, "planned query across devices");
+    assert!(r3.metrics.fleet_epochs >= 1);
+}
+
+#[test]
+fn seed_pruning_matches_the_plan_floor_on_the_fleet() {
+    // a star has one vertex of degree >= 2: a triangle plan must root
+    // nowhere else, on one device or many
+    let g = generators::star(12);
+    for devices in [1, 3] {
+        let mut c = cfg();
+        c.devices = devices;
+        let r = Runner::run(&g, &CliqueCount::new(3), &c);
+        assert_eq!(r.count, 0, "devices={devices}");
+    }
+}
+
+#[test]
+fn planned_query_is_at_least_5x_faster_modeled() {
+    // sparse skewed stand-in: unplanned querying enumerates (and stores)
+    // every connected 4-subgraph; the plan generates only 4-cycles
+    let g = generators::barabasi_albert(600, 3, 5);
+    let q = SubgraphQuery::new(4, &[(0, 1), (1, 2), (2, 3), (3, 0)]);
+    let u = SubgraphQuery::new(4, &[(0, 1), (1, 2), (2, 3), (3, 0)]).unplanned();
+    let rp = Runner::run(&g, &q, &cfg());
+    let ru = Runner::run(&g, &u, &cfg());
+    let mut mp = q.matches(&rp);
+    let mut mu = u.matches(&ru);
+    mp.sort_unstable();
+    mu.sort_unstable();
+    assert_eq!(mp, mu);
+    let (planned, unplanned) = (rp.metrics.sim_seconds, ru.metrics.sim_seconds);
+    assert!(
+        planned * 5.0 <= unplanned,
+        "planned {planned:.6}s vs unplanned {unplanned:.6}s: below the 5x bar"
+    );
+}
+
+#[test]
+fn planned_clique_beats_the_unplanned_pipeline_modeled() {
+    let g = generators::ASTROPH.scaled(0.05).generate(1);
+    let k = 5;
+    let rp = Runner::run(&g, &CliqueCount::new(k), &cfg());
+    let ru = Runner::run(&g, &UnplannedClique { k }, &cfg());
+    assert_eq!(rp.count, ru.count);
+    let (planned, unplanned) = (rp.metrics.sim_seconds, ru.metrics.sim_seconds);
+    assert!(
+        planned * 2.0 <= unplanned,
+        "planned {planned:.6}s vs unplanned {unplanned:.6}s: the plan must win clearly"
+    );
+    assert!(
+        rp.metrics.total_gld * 2 <= ru.metrics.total_gld,
+        "planned clique must cut transactions: {} vs {}",
+        rp.metrics.total_gld,
+        ru.metrics.total_gld
+    );
+}
+
+#[test]
+fn parse_pattern_feeds_the_query_app() {
+    let (k, edges) = dumato::plan::parse_pattern("0-1,1-2,2-3,3-0").unwrap();
+    assert_eq!(k, 4);
+    let g = generators::grid(3, 3);
+    let q = SubgraphQuery::new(k, &edges);
+    let r = Runner::run(&g, &q, &cfg());
+    assert_eq!(q.matches(&r).len(), 4); // the four unit squares
+    // disconnected edge lists error before any engine work
+    assert!(dumato::plan::parse_pattern("0-1,2-3").is_err());
+}
