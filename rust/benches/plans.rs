@@ -96,12 +96,19 @@ fn main() {
         "Planned vs unplanned execution (simulated seconds; speedup on the planned row)",
         &["dataset", "app", "pattern", "path", "sim_time", "gld", "insts", "speedup"],
     );
+    // planned 4-cycle counts per dataset, reused by the labeled L=1
+    // identity assertion below (no second unlabeled engine run)
+    let mut cyc4_counts: Vec<Option<u64>> = Vec::new();
     for g in &datasets {
         println!("dataset={} |V|={} |E|={}", g.name(), g.num_vertices(), g.num_edges());
         for (pname, k, edges) in queries {
             let q = SubgraphQuery::new(k, edges);
             let u = SubgraphQuery::new(k, edges).unplanned();
-            push_rows(&mut t, g.name(), "query", pname, query_cell(g, &q), query_cell(g, &u));
+            let pl = query_cell(g, &q);
+            if pname == "4-cycle" {
+                cyc4_counts.push((!pl.timed_out).then_some(pl.count));
+            }
+            push_rows(&mut t, g.name(), "query", pname, pl, query_cell(g, &u));
         }
         let k = 5;
         push_rows(
@@ -112,6 +119,52 @@ fn main() {
             clique_cell(g, &CliqueCount::new(k)),
             clique_cell(g, &UnplannedClique { k }),
         );
+    }
+    // Labeled rows: the 4-cycle at label cardinality 1/4/16 over the same
+    // topologies. Each engine count is asserted against the label-aware
+    // CPU oracle (ExecutionPlan::count_from), the L=1 run additionally
+    // against the unlabeled planned query; the speedup column is relative
+    // to the L=1 run — the label-selectivity win the layer exists for.
+    let cyc4: [(usize, usize); 4] = [(0, 1), (1, 2), (2, 3), (3, 0)];
+    for (di, g) in datasets.iter().enumerate() {
+        let mut base_sim: Option<f64> = None;
+        for card in [1usize, 4, 16] {
+            let gl = generators::with_random_labels(g.clone(), card, 7);
+            let labels: Vec<dumato::graph::Label> =
+                (0..4).map(|p| (p % card) as dumato::graph::Label).collect();
+            let q = SubgraphQuery::labeled_for(4, &cyc4, &labels, &gl);
+            let c = query_cell(&gl, &q);
+            if !c.timed_out {
+                let oracle: u64 = (0..gl.num_vertices() as u32)
+                    .map(|v| q.execution_plan().count_from(&gl, v))
+                    .sum();
+                assert_eq!(c.count, oracle, "{}/L={card}: engine vs CPU oracle", gl.name());
+                if card == 1 {
+                    if let Some(plain) = cyc4_counts[di] {
+                        assert_eq!(
+                            c.count, plain,
+                            "{}: cardinality-1 must reproduce the unlabeled count",
+                            gl.name()
+                        );
+                    }
+                    base_sim = Some(c.sim);
+                }
+            }
+            let speedup = match (base_sim, c.timed_out) {
+                (Some(b), false) => format!("{:.2}x", b / c.sim.max(1e-12)),
+                _ => "-".to_string(),
+            };
+            t.row(vec![
+                g.name().to_string(),
+                "query-labeled".to_string(),
+                format!("4-cycle/L={card}"),
+                "planned".to_string(),
+                if c.timed_out { "-".into() } else { format!("{:.6}", c.sim) },
+                fmt_count(c.gld),
+                fmt_count(c.insts),
+                speedup,
+            ]);
+        }
     }
     println!("{}", t.render());
     println!(

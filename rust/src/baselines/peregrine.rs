@@ -31,6 +31,10 @@ pub struct Peregrine {
     pub k: usize,
     pub threads: usize,
     pub time_limit: Option<std::time::Duration>,
+    /// Single-pattern query mode ([`Peregrine::for_plan`]): match one
+    /// shared plan — possibly labeled — instead of an app's pattern
+    /// sweep. `None` = the classic clique/motif sweeps.
+    pattern: Option<Plan>,
 }
 
 #[derive(Debug)]
@@ -51,13 +55,28 @@ impl Peregrine {
             k,
             threads: std::thread::available_parallelism().map_or(4, |n| n.get()),
             time_limit: None,
+            pattern: None,
         }
+    }
+
+    /// Single-pattern query baseline over an already compiled plan —
+    /// including *labeled* plans, since the match loop is the shared
+    /// label-aware `ExecutionPlan::count_from`. This is the independent
+    /// CPU system the labeled differential suite compares the engine
+    /// against (the `app` field is vestigial in this mode).
+    pub fn for_plan(plan: Plan) -> Self {
+        let mut p = Self::new(App::Clique, plan.k());
+        p.pattern = Some(plan);
+        p
     }
 
     /// Pattern set for the app. Motifs need every connected k-pattern,
     /// which requires the k <= 7 dictionary (the paper notes pattern-aware
     /// systems' plan space explodes beyond that).
     fn plans(&self) -> Option<Vec<Plan>> {
+        if let Some(p) = &self.pattern {
+            return Some(vec![p.clone()]);
+        }
         match self.app {
             App::Clique => Some(vec![Plan::clique(self.k)]),
             App::Motif => {
@@ -212,5 +231,26 @@ mod tests {
         let p = peregrine(App::Motif, 3).run(&g).unwrap();
         assert_eq!(p.count, 15); // C(6,2) wedges, no triangles
         assert_eq!(p.patterns.len(), 1);
+    }
+
+    #[test]
+    fn for_plan_matches_a_single_labeled_pattern() {
+        // K4 labeled [0,0,1,1], triangle wanting labels {0,0,1}: two
+        // matches (the labeled differential suite sweeps this at volume)
+        let g = generators::complete(4).with_labels(vec![0, 0, 1, 1]).unwrap();
+        let mut m = crate::canon::bitmap::AdjMat::empty(3);
+        m.set_edge(0, 1);
+        m.set_edge(1, 2);
+        m.set_edge(0, 2);
+        let plan = Plan::build_labeled(&m, &[0, 0, 1], Some(&g.label_frequencies()));
+        let mut per = Peregrine::for_plan(plan);
+        per.threads = 2;
+        let r = per.run(&g).unwrap();
+        assert_eq!(r.count, 2);
+        assert_eq!(r.num_plans, 1);
+        // the unlabeled plan sees all four triangles of K4
+        let mut per_u = Peregrine::for_plan(Plan::build(&m));
+        per_u.threads = 2;
+        assert_eq!(per_u.run(&g).unwrap().count, 4);
     }
 }

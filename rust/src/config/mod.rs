@@ -64,6 +64,38 @@ fn fixture(kind: &str, params: &str, seed: u64) -> Result<CsrGraph> {
     }
 }
 
+/// Apply the CLI's labeling options to a loaded graph:
+/// `--labels FILE` attaches a label file (one numeric label per line,
+/// vertex order; errors on wrong length or non-numeric entries), and
+/// `--label-cardinality L` draws uniform random labels over `0..L`
+/// (deterministic per `--seed`) — the way synthetic stand-ins get
+/// labeled for the labeled benches and the CI smoke row. The two are
+/// mutually exclusive.
+pub fn apply_labels(g: &mut CsrGraph, args: &Args) -> Result<()> {
+    match (args.get("labels"), args.get("label-cardinality")) {
+        (Some(_), Some(_)) => Err(anyhow!(
+            "--labels and --label-cardinality are mutually exclusive"
+        )),
+        (Some(path), None) => {
+            let labels = loaders::load_labels(Path::new(path), g.num_vertices())?;
+            g.set_labels(labels)
+        }
+        (None, None) => Ok(()),
+        (None, Some(card)) => {
+            let c: usize = card
+                .parse()
+                .map_err(|_| anyhow!("bad value '{card}' for --label-cardinality"))?;
+            if c == 0 {
+                return Err(anyhow!(
+                    "--label-cardinality must be >= 1 (labels are drawn over 0..L)"
+                ));
+            }
+            let seed: u64 = args.parse_or("seed", 1)?;
+            g.set_labels(generators::random_labels(g.num_vertices(), c, seed))
+        }
+    }
+}
+
 /// Build an `EngineConfig` from CLI args:
 /// `--warps N --threads N --lb --lb-threshold F --timeout SECS
 ///  --devices N --partition round-robin|degree-aware
@@ -118,6 +150,39 @@ mod tests {
     fn rejects_unknown() {
         assert!(load_graph("not-a-thing", 1.0, 1).is_err());
         assert!(load_graph("grid:bad", 1.0, 1).is_err());
+    }
+
+    #[test]
+    fn apply_labels_from_cardinality_and_file() {
+        let mut g = load_graph("er:30,0.2", 1.0, 7).unwrap();
+        apply_labels(&mut g, &args(&["--label-cardinality", "4", "--seed", "7"])).unwrap();
+        assert!(g.is_labeled());
+        assert!(g.labels().unwrap().iter().all(|&l| l < 4));
+        // identical to the generator's labeling at the same seed
+        let base = load_graph("er:30,0.2", 1.0, 7).unwrap();
+        let reference = generators::with_random_labels(base, 4, 7);
+        assert_eq!(g.labels(), reference.labels());
+        // file path
+        let dir = std::env::temp_dir().join("dumato_config_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("three.labels");
+        std::fs::write(&p, "1\n0\n2\n").unwrap();
+        let mut g3 = load_graph("cycle:3", 1.0, 1).unwrap();
+        apply_labels(&mut g3, &args(&["--labels", p.to_str().unwrap()])).unwrap();
+        assert_eq!(g3.labels(), Some(&[1, 0, 2][..]));
+        // wrong length errors; both options together error; explicit
+        // cardinality 0 errors (not silently unlabeled); no-op default
+        let mut g4 = load_graph("cycle:4", 1.0, 1).unwrap();
+        assert!(apply_labels(&mut g4, &args(&["--labels", p.to_str().unwrap()])).is_err());
+        assert!(apply_labels(
+            &mut g4,
+            &args(&["--labels", p.to_str().unwrap(), "--label-cardinality", "2"])
+        )
+        .is_err());
+        assert!(apply_labels(&mut g4, &args(&["--label-cardinality", "0"])).is_err());
+        assert!(apply_labels(&mut g4, &args(&["--label-cardinality", "x"])).is_err());
+        apply_labels(&mut g4, &args(&[])).unwrap();
+        assert!(!g4.is_labeled());
     }
 
     #[test]

@@ -357,6 +357,12 @@ impl<'a> WarpContext<'a> {
             None => 0,
         };
         let nprobe = (backward.len() - 1) as u64;
+        // labeled plans filter candidates by the level's label at
+        // generation time: one broadcast compare per chunk plus one
+        // label-array read per candidate lane (the labels array is
+        // indexed by candidate id, so the lanes' reads don't coalesce —
+        // DESIGN.md §Label layer). Unlabeled plans charge nothing here.
+        let want_label = plan.position_label(len);
         let (ptr, cap) = self.te.ext_raw_cap(level);
         // SAFETY: see `ext_items_mut` — exclusive slab, phase-local use.
         let out = unsafe { std::slice::from_raw_parts_mut(ptr, cap) };
@@ -377,10 +383,17 @@ impl<'a> WarpContext<'a> {
                 self.prof.simd_n(nprobe);
                 self.prof.gld_raw(nprobe);
             }
+            if want_label.is_some() {
+                self.prof.simd_n(1); // broadcast label compare
+                self.prof.gld_raw(chunk.len() as u64); // one label read per candidate
+            }
             // select + coalesced write
             self.prof.simd(chunk.len());
             'cand: for &e in chunk {
                 if self.scratch.seen(e) {
+                    continue;
+                }
+                if want_label.is_some_and(|l| self.g.label(e) != l) {
                     continue;
                 }
                 for &b in backward.iter() {
@@ -870,6 +883,50 @@ mod tests {
         assert!(c.te.live_count(level) > 0);
         c.filter_plan(&plan);
         assert_eq!(c.te.live_count(level), 0, "K5 holds no induced 4-cycle");
+    }
+
+    #[test]
+    fn extend_planned_filters_labels_at_generation() {
+        // K6 labeled alternately; a triangle plan demanding label 1 at
+        // level 1 must only materialize label-1 candidates
+        let g = generators::complete(6).with_labels(vec![0, 1, 0, 1, 0, 1]).unwrap();
+        let mut m = crate::canon::bitmap::AdjMat::empty(3);
+        m.set_edge(0, 1);
+        m.set_edge(1, 2);
+        m.set_edge(0, 2);
+        let plan =
+            crate::plan::ExecutionPlan::build_labeled(&m, &[0, 1, 1], Some(&g.label_frequencies()));
+        let mut h = harness(&g, 3);
+        h.1.push_back(vec![0]); // label-0 root
+        let mut c = ctx!(&g, h);
+        assert!(c.control());
+        let before = c.prof.gld_transactions;
+        assert!(c.extend_planned(&plan));
+        assert!(c.prof.gld_transactions > before);
+        let mut items = c.te.ext_vec(c.te.cur_level());
+        items.sort_unstable();
+        assert_eq!(items, vec![1, 3, 5], "only label-1 candidates materialize");
+    }
+
+    #[test]
+    fn unlabeled_plan_charges_are_unchanged_on_labeled_graphs() {
+        // an unlabeled plan must generate identical candidates and charge
+        // identical transactions whether or not the graph carries labels
+        let plain = generators::complete(6);
+        let labeled = generators::complete(6).with_labels(vec![3, 1, 2, 0, 1, 2]).unwrap();
+        let plan = crate::plan::ExecutionPlan::clique(3);
+        let mut counts = Vec::new();
+        for g in [&plain, &labeled] {
+            let mut h = harness(g, 3);
+            h.1.push_back(vec![1]);
+            let mut c = ctx!(g, h);
+            assert!(c.control());
+            assert!(c.extend_planned(&plan));
+            let mut items = c.te.ext_vec(c.te.cur_level());
+            items.sort_unstable();
+            counts.push((items, c.prof.gld_transactions, c.prof.insts));
+        }
+        assert_eq!(counts[0], counts[1]);
     }
 
     #[test]

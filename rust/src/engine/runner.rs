@@ -307,11 +307,15 @@ impl Runner {
             .map(|(i, te)| WarpState::bound(i, te))
             .collect();
         // Pattern-aware seed pruning: a seed matched at the plan's root
-        // position needs at least the root's pattern degree; unplanned
-        // algorithms keep the every-non-isolated-vertex deal.
-        let min_deg = algo.plan().map_or(1, |p| p.min_seed_degree()).max(1);
-        let seeds: Vec<VertexId> =
-            (0..g.num_vertices() as VertexId).filter(|&v| g.degree(v) >= min_deg).collect();
+        // position needs at least the root's pattern degree and (on
+        // labeled plans) the root's label; unplanned algorithms keep the
+        // every-non-isolated-vertex deal.
+        let seeds: Vec<VertexId> = match algo.plan() {
+            Some(p) => {
+                (0..g.num_vertices() as VertexId).filter(|&v| p.seed_matches(g, v)).collect()
+            }
+            None => (0..g.num_vertices() as VertexId).filter(|&v| g.degree(v) >= 1).collect(),
+        };
         deal_seeds(&mut warps, &seeds);
         let initial: Vec<usize> = warps.iter().filter(|w| !w.finished).map(|w| w.id).collect();
 

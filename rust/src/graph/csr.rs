@@ -4,7 +4,7 @@
 //! `adj` array plus per-vertex offsets, with each adjacency list sorted so
 //! warp-chunked reads are coalesced and membership tests can bisect.
 
-use super::VertexId;
+use super::{Label, VertexId};
 
 #[derive(Clone, Debug)]
 pub struct CsrGraph {
@@ -12,6 +12,9 @@ pub struct CsrGraph {
     offsets: Vec<usize>,
     /// Concatenated sorted adjacency lists.
     adj: Vec<VertexId>,
+    /// Optional per-vertex labels (`labels[v]`). `None` = unlabeled,
+    /// which every reader treats as cardinality 1 (all vertices label 0).
+    labels: Option<Vec<Label>>,
     /// Cached maximum degree.
     max_degree: usize,
     /// Optional dataset name (for reports).
@@ -50,9 +53,86 @@ impl CsrGraph {
         Self {
             offsets,
             adj,
+            labels: None,
             max_degree,
             name: name.into(),
         }
+    }
+
+    /// Attach per-vertex labels. Errors (instead of truncating or
+    /// padding) when the array length does not match the vertex count —
+    /// a silently misaligned label file corrupts every labeled count —
+    /// and when any id exceeds [`super::MAX_LABEL`] (frequency arrays
+    /// are `O(max label)`; a sparse huge id would OOM them).
+    pub fn set_labels(&mut self, labels: Vec<Label>) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            labels.len() == self.num_vertices(),
+            "label array has {} entries but graph '{}' has {} vertices",
+            labels.len(),
+            self.name,
+            self.num_vertices()
+        );
+        if let Some(&big) = labels.iter().find(|&&l| l > super::MAX_LABEL) {
+            anyhow::bail!(
+                "label {big} exceeds MAX_LABEL ({}) — labels are dense class ids, \
+                 not arbitrary attribute values",
+                super::MAX_LABEL
+            );
+        }
+        self.labels = Some(labels);
+        Ok(())
+    }
+
+    /// Builder-style [`CsrGraph::set_labels`].
+    pub fn with_labels(mut self, labels: Vec<Label>) -> anyhow::Result<Self> {
+        self.set_labels(labels)?;
+        Ok(self)
+    }
+
+    /// Drop the label array (back to the unlabeled view of the graph).
+    pub fn clear_labels(&mut self) {
+        self.labels = None;
+    }
+
+    /// The label of `v`: 0 on unlabeled graphs (the cardinality-1 view).
+    #[inline]
+    pub fn label(&self, v: VertexId) -> Label {
+        self.labels.as_ref().map_or(0, |ls| ls[v as usize])
+    }
+
+    /// The raw label array, if any.
+    #[inline]
+    pub fn labels(&self) -> Option<&[Label]> {
+        self.labels.as_deref()
+    }
+
+    #[inline]
+    pub fn is_labeled(&self) -> bool {
+        self.labels.is_some()
+    }
+
+    /// Label cardinality: `max label + 1` (1 for unlabeled graphs).
+    pub fn num_labels(&self) -> usize {
+        match &self.labels {
+            Some(ls) => ls.iter().max().map_or(1, |&m| m as usize + 1),
+            None => 1,
+        }
+    }
+
+    /// `freq[l]` = number of vertices carrying label `l` (length
+    /// [`CsrGraph::num_labels`]). The planner's rarest-label-first
+    /// ordering and the per-level selectivity tiebreak read this.
+    pub fn label_frequencies(&self) -> Vec<u64> {
+        let mut freq = vec![0u64; self.num_labels()];
+        match &self.labels {
+            Some(ls) => {
+                for &l in ls {
+                    freq[l as usize] += 1;
+                }
+            }
+            None => freq[0] = self.num_vertices() as u64,
+        }
+        freq
     }
 
     #[inline]
@@ -111,10 +191,25 @@ impl CsrGraph {
         self.name = name.into();
     }
 
-    /// Estimated resident bytes (offsets + adjacency).
+    /// Raw CSR offsets array (`len == num_vertices + 1`) — exposed so
+    /// loader round-trip tests can assert bit-identical layout.
+    #[inline]
+    pub fn offsets(&self) -> &[usize] {
+        &self.offsets
+    }
+
+    /// The full concatenated adjacency array (companion to
+    /// [`CsrGraph::offsets`] for layout-identity assertions).
+    #[inline]
+    pub fn adjacency(&self) -> &[VertexId] {
+        &self.adj
+    }
+
+    /// Estimated resident bytes (offsets + adjacency + labels).
     pub fn memory_bytes(&self) -> usize {
         self.offsets.len() * std::mem::size_of::<usize>()
             + self.adj.len() * std::mem::size_of::<VertexId>()
+            + self.labels.as_ref().map_or(0, |ls| ls.len() * std::mem::size_of::<Label>())
     }
 
     /// Iterate all undirected edges (u < v).
@@ -183,6 +278,62 @@ mod tests {
         let g = triangle_plus_leaf();
         let edges: Vec<_> = g.edges().collect();
         assert_eq!(edges, vec![(0, 1), (0, 2), (0, 3), (1, 2)]);
+    }
+
+    #[test]
+    fn unlabeled_graph_reads_as_cardinality_one() {
+        let g = triangle_plus_leaf();
+        assert!(!g.is_labeled());
+        assert_eq!(g.num_labels(), 1);
+        for v in 0..4 {
+            assert_eq!(g.label(v), 0);
+        }
+        assert_eq!(g.label_frequencies(), vec![4]);
+        assert!(g.labels().is_none());
+    }
+
+    #[test]
+    fn labels_attach_and_report_frequencies() {
+        let g = triangle_plus_leaf().with_labels(vec![2, 0, 0, 1]).unwrap();
+        assert!(g.is_labeled());
+        assert_eq!(g.num_labels(), 3);
+        assert_eq!(g.label(0), 2);
+        assert_eq!(g.label(3), 1);
+        assert_eq!(g.label_frequencies(), vec![2, 1, 1]);
+        assert_eq!(g.labels(), Some(&[2, 0, 0, 1][..]));
+    }
+
+    #[test]
+    fn wrong_length_label_array_is_rejected() {
+        assert!(triangle_plus_leaf().with_labels(vec![0, 1]).is_err());
+        assert!(triangle_plus_leaf().with_labels(vec![0; 5]).is_err());
+        let mut g = triangle_plus_leaf();
+        assert!(g.set_labels(vec![0; 4]).is_ok());
+        g.clear_labels();
+        assert!(!g.is_labeled());
+    }
+
+    #[test]
+    fn oversized_label_ids_are_rejected_not_allocated() {
+        // a sparse huge id would make label_frequencies/num_labels
+        // allocate O(id) memory — must error at attach time instead
+        let err = triangle_plus_leaf()
+            .with_labels(vec![0, u32::MAX, 1, 0])
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("MAX_LABEL"));
+        // the bound itself is admissible
+        let g = triangle_plus_leaf()
+            .with_labels(vec![0, crate::graph::MAX_LABEL, 0, 0])
+            .unwrap();
+        assert_eq!(g.num_labels(), crate::graph::MAX_LABEL as usize + 1);
+    }
+
+    #[test]
+    fn memory_bytes_counts_labels() {
+        let g0 = triangle_plus_leaf();
+        let base = g0.memory_bytes();
+        let g1 = g0.with_labels(vec![0; 4]).unwrap();
+        assert_eq!(g1.memory_bytes(), base + 4 * std::mem::size_of::<Label>());
     }
 
     #[test]

@@ -261,6 +261,35 @@ pub fn erdos_renyi(n: usize, p: f64, seed: u64) -> CsrGraph {
     builder.build()
 }
 
+/// Attach uniform random labels over `0..num_labels` to any graph
+/// (deterministic per seed; label streams are independent of the
+/// topology stream, so the same seed labels the same topology
+/// identically across calls). `num_labels == 1` labels every vertex 0 —
+/// the view the cardinality-1 differential tests compare against the
+/// unlabeled graph.
+pub fn with_random_labels(g: CsrGraph, num_labels: usize, seed: u64) -> CsrGraph {
+    let labels = random_labels(g.num_vertices(), num_labels, seed);
+    g.with_labels(labels).expect("label array sized to the graph")
+}
+
+/// The label stream behind [`with_random_labels`], exposed so the CLI's
+/// `--label-cardinality` path labels a graph identically to the benches.
+pub fn random_labels(n: usize, num_labels: usize, seed: u64) -> Vec<super::Label> {
+    assert!(num_labels >= 1, "label cardinality must be >= 1");
+    let mut rng = Rng::new(seed ^ 0x1ABE1ED);
+    (0..n).map(|_| rng.below(num_labels as u64) as super::Label).collect()
+}
+
+/// Labeled Erdős–Rényi `G(n, p, L)`: ER topology with uniform labels of
+/// cardinality `L`. The topology is exactly [`erdos_renyi`]`(n, p, seed)`
+/// — only the label array differs — so labeled/unlabeled differential
+/// tests run on identical structure.
+pub fn labeled_erdos_renyi(n: usize, p: f64, num_labels: usize, seed: u64) -> CsrGraph {
+    let mut g = with_random_labels(erdos_renyi(n, p, seed), num_labels, seed);
+    g.set_name(format!("er_{n}_{p}_l{num_labels}"));
+    g
+}
+
 /// Barabási–Albert preferential attachment with `m` edges per new vertex.
 pub fn barabasi_albert(n: usize, m: usize, seed: u64) -> CsrGraph {
     assert!(n > m && m >= 1);
@@ -365,6 +394,34 @@ mod tests {
         assert!(g.num_edges() >= 3 * (200 - 4));
         // preferential attachment should produce a hub above the mean
         assert!(g.max_degree() > 10);
+    }
+
+    #[test]
+    fn labeled_er_matches_unlabeled_topology() {
+        let plain = erdos_renyi(40, 0.15, 9);
+        let labeled = labeled_erdos_renyi(40, 0.15, 4, 9);
+        assert_eq!(plain.offsets(), labeled.offsets());
+        assert_eq!(plain.adjacency(), labeled.adjacency());
+        assert!(labeled.labels().unwrap().iter().all(|&l| l < 4));
+        // deterministic per seed
+        assert_eq!(
+            labeled.labels(),
+            labeled_erdos_renyi(40, 0.15, 4, 9).labels()
+        );
+        // at 200 vertices every class is populated (uniform over 4)
+        let big = labeled_erdos_renyi(200, 0.05, 4, 9);
+        let freq = big.label_frequencies();
+        assert_eq!(big.num_labels(), 4);
+        assert_eq!(freq.iter().sum::<u64>(), 200);
+        assert!(freq.iter().all(|&f| f > 0), "freq={freq:?}");
+    }
+
+    #[test]
+    fn cardinality_one_labels_are_all_zero() {
+        let g = labeled_erdos_renyi(20, 0.2, 1, 3);
+        assert!(g.is_labeled());
+        assert_eq!(g.num_labels(), 1);
+        assert!(g.labels().unwrap().iter().all(|&l| l == 0));
     }
 
     #[test]

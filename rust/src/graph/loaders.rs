@@ -10,7 +10,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use super::{CsrGraph, GraphBuilder};
+use super::{CsrGraph, GraphBuilder, Label};
 
 /// Load a SNAP-style edge list: one `u v` pair per line, `#` comments.
 pub fn load_edge_list(path: &Path) -> Result<CsrGraph> {
@@ -99,6 +99,48 @@ pub fn save_edge_list(g: &CsrGraph, path: &Path) -> Result<()> {
     Ok(())
 }
 
+/// Load a label file: one numeric label per line, line `i` labeling
+/// vertex `i`. `#`/`%` comments and blank lines are skipped; leading and
+/// trailing whitespace around a label is tolerated (gMatch-style dumps
+/// often carry it). The entry count must equal `num_vertices` — a short
+/// or long file *errors* rather than silently truncating or padding,
+/// and so does any non-numeric entry.
+pub fn load_labels(path: &Path, num_vertices: usize) -> Result<Vec<Label>> {
+    let file = File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut labels: Vec<Label> = Vec::with_capacity(num_vertices);
+    for (lineno, line) in BufReader::new(file).lines().enumerate() {
+        let line = line?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() || trimmed.starts_with('#') || trimmed.starts_with('%') {
+            continue;
+        }
+        let l: Label = trimmed.parse().with_context(|| {
+            format!("{}:{}: bad label '{trimmed}'", path.display(), lineno + 1)
+        })?;
+        labels.push(l);
+    }
+    if labels.len() != num_vertices {
+        bail!(
+            "{}: {} labels for a graph with {num_vertices} vertices",
+            path.display(),
+            labels.len()
+        );
+    }
+    Ok(labels)
+}
+
+/// Write a label file in the format [`load_labels`] reads (one label per
+/// line, vertex order), with a leading comment for the round trip.
+pub fn save_labels(labels: &[Label], path: &Path) -> Result<()> {
+    use std::io::Write;
+    let mut f = std::io::BufWriter::new(File::create(path)?);
+    writeln!(f, "# {} vertex labels", labels.len())?;
+    for l in labels {
+        writeln!(f, "{l}")?;
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -148,6 +190,63 @@ mod tests {
         for (u, v) in g0.edges() {
             assert!(g1.has_edge(u, v));
         }
+    }
+
+    #[test]
+    fn full_roundtrip_is_csr_identical() {
+        // comment lines + duplicate + reversed edges collapse on load;
+        // a second save/load cycle must reproduce the CSR bit for bit
+        let p0 = tmpfile(
+            "rt_full.txt",
+            "# header comment\n0 1\n1 0\n% alt comment\n0 1\n2 1\n0 3\n\n3 0\n",
+        );
+        let g0 = load_edge_list(&p0).unwrap();
+        assert_eq!(g0.num_edges(), 3); // dups and reverses collapsed
+        let p1 = tmpfile("rt_full_out.txt", "");
+        save_edge_list(&g0, &p1).unwrap();
+        let g1 = load_edge_list(&p1).unwrap();
+        assert_eq!(g0.offsets(), g1.offsets());
+        assert_eq!(g0.adjacency(), g1.adjacency());
+    }
+
+    #[test]
+    fn labels_roundtrip_with_comments_and_whitespace() {
+        let p = tmpfile("l.labels", "# four labels\n2\n 0 \n1\t\n\n0  \n");
+        let labels = load_labels(&p, 4).unwrap();
+        assert_eq!(labels, vec![2, 0, 1, 0]);
+        // save -> load -> identical, attached to a roundtripped graph
+        let g0 = CsrGraph::from_adjacency(vec![vec![1, 2], vec![0, 3], vec![0], vec![1]], "lrt")
+            .with_labels(labels.clone())
+            .unwrap();
+        let pe = tmpfile("lrt.txt", "");
+        let pl = tmpfile("lrt.labels", "");
+        save_edge_list(&g0, &pe).unwrap();
+        save_labels(g0.labels().unwrap(), &pl).unwrap();
+        let g1 = load_edge_list(&pe)
+            .unwrap()
+            .with_labels(load_labels(&pl, g0.num_vertices()).unwrap())
+            .unwrap();
+        assert_eq!(g0.offsets(), g1.offsets());
+        assert_eq!(g0.adjacency(), g1.adjacency());
+        assert_eq!(g0.labels(), g1.labels());
+    }
+
+    #[test]
+    fn malformed_label_files_error_not_truncate() {
+        // wrong length (short and long)
+        let short = tmpfile("short.labels", "0\n1\n");
+        assert!(load_labels(&short, 3).is_err());
+        let long = tmpfile("long.labels", "0\n1\n2\n0\n");
+        assert!(load_labels(&long, 3).is_err());
+        // non-numeric entry
+        let alpha = tmpfile("alpha.labels", "0\nx\n2\n");
+        let err = format!("{:#}", load_labels(&alpha, 3).unwrap_err());
+        assert!(err.contains("bad label"), "unhelpful error: {err}");
+        // negative labels are not representable
+        let neg = tmpfile("neg.labels", "0\n-1\n2\n");
+        assert!(load_labels(&neg, 3).is_err());
+        // missing file
+        assert!(load_labels(Path::new("/nonexistent/x.labels"), 3).is_err());
     }
 
     #[test]

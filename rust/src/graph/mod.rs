@@ -14,3 +14,17 @@ pub use stats::GraphStats;
 
 /// Vertex identifier. Graphs up to 2^32 vertices (paper max: 3.9M).
 pub type VertexId = u32;
+
+/// Vertex label. Labeled workloads (gMatch-style subgraph matching,
+/// G²Miner labeled plans) carry one label per vertex; an *unlabeled*
+/// graph behaves exactly like a labeled one of cardinality 1 (every
+/// vertex reads label 0), which is what the label differential tests
+/// pin down.
+pub type Label = u32;
+
+/// Largest admissible label id. Labels are dense class ids: the planner
+/// and `stats::label_stats` allocate `O(max label)` frequency arrays, so
+/// a sparse 32-bit attribute id smuggled in through a label file would
+/// OOM them — `CsrGraph::set_labels` rejects anything above this bound
+/// (2^20 classes is far beyond any labeled-matching workload).
+pub const MAX_LABEL: Label = (1 << 20) - 1;

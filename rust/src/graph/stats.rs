@@ -1,7 +1,8 @@
 //! Graph statistics — regenerates Table III (|V|, |E|, avg/max degree,
-//! density) for any loaded or generated graph.
+//! density) for any loaded or generated graph, plus per-label degree
+//! stats for labeled workloads (the planner's selectivity inputs).
 
-use super::CsrGraph;
+use super::{CsrGraph, Label};
 
 #[derive(Clone, Debug, PartialEq)]
 pub struct GraphStats {
@@ -11,6 +12,8 @@ pub struct GraphStats {
     pub avg_degree: f64,
     pub density: f64,
     pub max_degree: usize,
+    /// Label cardinality (1 for unlabeled graphs).
+    pub num_labels: usize,
 }
 
 impl GraphStats {
@@ -30,6 +33,7 @@ impl GraphStats {
             avg_degree: avg,
             density,
             max_degree: g.max_degree(),
+            num_labels: g.num_labels(),
         }
     }
 
@@ -48,6 +52,45 @@ impl GraphStats {
             "Dataset", "|V(G)|", "|E(G)|", "AvgDeg", "Density", "MaxDeg"
         )
     }
+}
+
+/// Degree statistics for one label class: how many vertices carry the
+/// label and how heavy they are. Rarest-label-first plan ordering and the
+/// labeled-bench methodology (EXPERIMENTS.md) read these.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LabelStats {
+    pub label: Label,
+    pub vertices: usize,
+    pub avg_degree: f64,
+    pub max_degree: usize,
+}
+
+/// Per-label degree stats, one entry per label in `0..num_labels()`.
+/// Unlabeled graphs report a single cardinality-1 class covering every
+/// vertex, so callers never special-case the unlabeled view.
+pub fn label_stats(g: &CsrGraph) -> Vec<LabelStats> {
+    let mut counts = vec![0usize; g.num_labels()];
+    let mut deg_sum = vec![0usize; g.num_labels()];
+    let mut deg_max = vec![0usize; g.num_labels()];
+    for v in 0..g.num_vertices() {
+        let l = g.label(v as u32) as usize;
+        let d = g.degree(v as u32);
+        counts[l] += 1;
+        deg_sum[l] += d;
+        deg_max[l] = deg_max[l].max(d);
+    }
+    (0..counts.len())
+        .map(|l| LabelStats {
+            label: l as Label,
+            vertices: counts[l],
+            avg_degree: if counts[l] == 0 {
+                0.0
+            } else {
+                deg_sum[l] as f64 / counts[l] as f64
+            },
+            max_degree: deg_max[l],
+        })
+        .collect()
 }
 
 /// Degree distribution histogram (log-2 buckets) — used by the generators'
@@ -103,6 +146,32 @@ mod tests {
         let low: usize = h.iter().filter(|&&(d, _)| d <= 4).map(|&(_, c)| c).sum();
         let high: usize = h.iter().filter(|&&(d, _)| d > 64).map(|&(_, c)| c).sum();
         assert!(low > high * 5, "low={low} high={high}");
+    }
+
+    #[test]
+    fn label_stats_cover_every_class() {
+        let g = generators::star(4)
+            .with_labels(vec![3, 0, 0, 1, 1])
+            .unwrap();
+        let s = label_stats(&g);
+        assert_eq!(s.len(), 4); // labels 0..=3, label 2 empty
+        assert_eq!(s[0].vertices, 2);
+        assert_eq!(s[0].max_degree, 1);
+        assert_eq!(s[2].vertices, 0);
+        assert_eq!(s[2].avg_degree, 0.0);
+        assert_eq!(s[3].vertices, 1);
+        assert_eq!(s[3].max_degree, 4); // the hub
+        assert_eq!(GraphStats::of(&g).num_labels, 4);
+    }
+
+    #[test]
+    fn unlabeled_label_stats_are_one_class() {
+        let g = generators::cycle(6);
+        let s = label_stats(&g);
+        assert_eq!(s.len(), 1);
+        assert_eq!(s[0].vertices, 6);
+        assert!((s[0].avg_degree - 2.0).abs() < 1e-9);
+        assert_eq!(GraphStats::of(&g).num_labels, 1);
     }
 
     #[test]

@@ -37,10 +37,15 @@ fn main() {
 
 const USAGE: &str = "usage: dumato <clique|motif|query|stats|triangles|baseline> [options]
   common: --dataset NAME|FIXTURE|PATH --scale F --seed N --warps N --threads N --lb --timeout SECS
+  labels: --labels FILE (one numeric label per line, vertex order)
+          or --label-cardinality L (uniform random labels over 0..L, seeded by --seed)
   multi-device: --devices N --partition round-robin|degree-aware --interconnect pcie|nvlink --epoch-segments N
   clique/motif: --k N
   query: --k N --pattern <3-clique|wedge|4-cycle|4-path|3-star|diamond|tailed-triangle>
          or --pattern a-b,b-c,... (edge list over 0..k; k inferred) [--unplanned]
+         or --pattern a:La-b:Lb,... (labeled edge list: vertex:label endpoints)
+  labeled quickstart:
+         dumato query --dataset er:500,0.05 --label-cardinality 4 --pattern 0:0-1:1,1:1-2:2
   triangles: --engine <engine|xla>
   baseline: --system <dfs|pangolin|fractal|peregrine> --app <clique|motif> --k N";
 
@@ -62,7 +67,9 @@ fn graph_from(args: &Args) -> Result<dumato::graph::CsrGraph> {
     let dataset = args.get_or("dataset", "citeseer");
     let scale: f64 = args.parse_or("scale", 1.0)?;
     let seed: u64 = args.parse_or("seed", 1)?;
-    load_graph(dataset, scale, seed)
+    let mut g = load_graph(dataset, scale, seed)?;
+    dumato::config::apply_labels(&mut g, args)?;
+    Ok(g)
 }
 
 fn print_run(report: &dumato::engine::RunReport, wall: bool) {
@@ -142,43 +149,61 @@ fn known_pattern(k: usize, name: &str) -> Result<Vec<(usize, usize)>> {
 }
 
 /// `--pattern` accepts built-in names ("4-cycle") and raw edge lists
-/// ("0-1,1-2,2-3,3-0"). An edge list is all digits/dashes/commas; names
-/// always contain a letter.
+/// ("0-1,1-2,2-3,3-0", labeled "0:0-1:1,..."). An edge list is all
+/// digits/dashes/commas/colons; names always contain a letter.
 fn is_edge_list(spec: &str) -> bool {
     !spec.is_empty()
         && spec
             .chars()
-            .all(|c| c.is_ascii_digit() || c == '-' || c == ',' || c.is_whitespace())
+            .all(|c| c.is_ascii_digit() || c == '-' || c == ',' || c == ':' || c.is_whitespace())
 }
 
 fn cmd_query(args: &Args) -> Result<()> {
     let g = graph_from(args)?;
     let pattern = args.get_or("pattern", "3-clique");
-    let (k, edges) = if is_edge_list(pattern) {
-        let (pk, edges) = dumato::plan::parse_pattern(pattern)?;
+    let (k, edges, plabels) = if is_edge_list(pattern) {
+        let parsed = dumato::plan::parse_pattern(pattern)?;
         if let Some(explicit) = args.get("k") {
             let ek: usize = explicit
                 .parse()
                 .map_err(|_| anyhow!("bad value '{explicit}' for --k"))?;
-            if ek != pk {
-                bail!("--k {ek} contradicts the edge list (max vertex id implies k={pk})");
+            if ek != parsed.k {
+                bail!("--k {ek} contradicts the edge list (max vertex id implies k={})", parsed.k);
             }
         }
-        (pk, edges)
+        (parsed.k, parsed.edges, parsed.labels)
     } else {
         let k: usize = args.parse_or("k", 3)?;
-        (k, known_pattern(k, pattern)?)
+        (k, known_pattern(k, pattern)?, None)
     };
-    let mut q = SubgraphQuery::new(k, &edges);
+    let mut q = match &plabels {
+        Some(ls) => {
+            if !g.is_labeled() {
+                println!(
+                    "note: pattern is labeled but the graph carries no labels \
+                     (every vertex reads label 0) — pass --labels or --label-cardinality"
+                );
+            }
+            SubgraphQuery::labeled_for(k, &edges, ls, &g)
+        }
+        None => SubgraphQuery::new(k, &edges),
+    };
     if args.flag("unplanned") {
+        if q.is_labeled() {
+            bail!("--unplanned has no labeled path (labeled queries are plan-driven)");
+        }
         q = q.unplanned();
     } else {
         let p = q.execution_plan();
         println!(
-            "plan: order={:?} restrictions={:?} min_seed_degree={}",
+            "plan: order={:?} restrictions={:?} min_seed_degree={}{}",
             p.order,
             p.restrictions,
-            p.min_seed_degree()
+            p.min_seed_degree(),
+            match &p.labels {
+                Some(ls) => format!(" labels={ls:?} root_label={}", ls[0]),
+                None => String::new(),
+            }
         );
     }
     let cfg = engine_config(args, 0.10)?;

@@ -88,11 +88,11 @@ impl DeviceFleet {
                     .collect()
             })
             .collect();
-        // Seed sharding: the partition policy assigns every non-isolated
-        // vertex to exactly one device (pruned to the plan's root-degree
-        // floor for planned algorithms, matching the single-device deal).
-        let min_deg = algo.plan().map_or(1, |p| p.min_seed_degree()).max(1);
-        let shards = cfg.partition.shard_filtered(g, ndev, min_deg);
+        // Seed sharding: the partition policy assigns every admissible
+        // vertex to exactly one device, using the same `seed_matches`
+        // predicate (degree floor + root label for labeled plans) as the
+        // single-device runner's deal.
+        let shards = cfg.partition.shard_for_plan(g, ndev, algo.plan());
         for (ws, seeds) in warp_sets.iter_mut().zip(&shards) {
             deal_seeds(ws, seeds);
         }

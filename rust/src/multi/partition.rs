@@ -45,32 +45,57 @@ impl Partition {
         self.shard_filtered(g, devices, 1)
     }
 
-    /// [`Partition::shard`] with a minimum-degree seed filter — the
-    /// fleet's half of the pattern-aware seed pruning
-    /// ([`crate::plan::ExecutionPlan::min_seed_degree`]): a vertex whose
-    /// degree cannot match the plan's root position roots no traversal on
-    /// any device.
+    /// [`Partition::shard`] with a minimum-degree seed filter: a vertex
+    /// whose degree cannot match a plan's root position roots no
+    /// traversal on any device.
     pub fn shard_filtered(
         &self,
         g: &CsrGraph,
         devices: usize,
         min_degree: usize,
     ) -> Vec<Vec<VertexId>> {
-        let ndev = devices.max(1);
         let min_degree = min_degree.max(1);
+        self.shard_admitted(g, devices, |v| g.degree(v) >= min_degree)
+    }
+
+    /// [`Partition::shard`] restricted to the seeds a plan admits —
+    /// degree floor *and* root label come from the one predicate the
+    /// single-device runner also uses
+    /// ([`crate::plan::ExecutionPlan::seed_matches`]), so a future seed
+    /// criterion cannot desync fleet deals from single-device deals.
+    /// `None` keeps the unplanned every-non-isolated-vertex deal.
+    pub fn shard_for_plan(
+        &self,
+        g: &CsrGraph,
+        devices: usize,
+        plan: Option<&crate::plan::ExecutionPlan>,
+    ) -> Vec<Vec<VertexId>> {
+        match plan {
+            Some(p) => self.shard_admitted(g, devices, |v| p.seed_matches(g, v)),
+            None => self.shard_admitted(g, devices, |v| g.degree(v) >= 1),
+        }
+    }
+
+    /// Core sharding loop over an arbitrary seed-admission predicate.
+    fn shard_admitted(
+        &self,
+        g: &CsrGraph,
+        devices: usize,
+        admits: impl Fn(VertexId) -> bool,
+    ) -> Vec<Vec<VertexId>> {
+        let ndev = devices.max(1);
         let mut shards: Vec<Vec<VertexId>> = vec![Vec::new(); ndev];
         match self {
             Partition::RoundRobin => {
                 for v in 0..g.num_vertices() {
-                    if g.degree(v as VertexId) >= min_degree {
+                    if admits(v as VertexId) {
                         shards[v % ndev].push(v as VertexId);
                     }
                 }
             }
             Partition::DegreeAware => {
-                let mut seeds: Vec<VertexId> = (0..g.num_vertices() as VertexId)
-                    .filter(|&v| g.degree(v) >= min_degree)
-                    .collect();
+                let mut seeds: Vec<VertexId> =
+                    (0..g.num_vertices() as VertexId).filter(|&v| admits(v)).collect();
                 seeds.sort_by_key(|&v| (std::cmp::Reverse(g.degree(v)), v));
                 let mut load = vec![0u64; ndev];
                 for v in seeds {
@@ -178,6 +203,33 @@ mod tests {
             assert_eq!(all, want, "{p:?}");
             // floor 1 == the classic shard
             assert_eq!(p.shard_filtered(&g, 3, 1), p.shard(&g, 3), "{p:?}");
+        }
+    }
+
+    #[test]
+    fn shard_for_plan_respects_the_plan_seed_filter_on_every_policy() {
+        let g =
+            generators::with_random_labels(generators::ASTROPH.scaled(0.03).generate(1), 3, 5);
+        // uniformly labeled triangle: root label 1, degree floor 2
+        let mut m = crate::canon::bitmap::AdjMat::empty(3);
+        for &(a, b) in &[(0usize, 1usize), (1, 2), (0, 2)] {
+            m.set_edge(a, b);
+        }
+        let plan = crate::plan::ExecutionPlan::build_labeled(&m, &[1, 1, 1], None);
+        assert_eq!(plan.root_label(), Some(1));
+        assert_eq!(plan.min_seed_degree(), 2);
+        for p in [Partition::RoundRobin, Partition::DegreeAware] {
+            let shards = p.shard_for_plan(&g, 4, Some(&plan));
+            let mut all: Vec<VertexId> = shards.iter().flatten().copied().collect();
+            all.sort_unstable();
+            // exactly the runner's seed_matches predicate, by construction
+            let want: Vec<VertexId> = (0..g.num_vertices() as VertexId)
+                .filter(|&v| plan.seed_matches(&g, v))
+                .collect();
+            assert_eq!(all, want, "{p:?}");
+            assert!(all.iter().all(|&v| g.degree(v) >= 2 && g.label(v) == 1), "{p:?}");
+            // no plan == the classic every-non-isolated shard
+            assert_eq!(p.shard_for_plan(&g, 3, None), p.shard(&g, 3), "{p:?}");
         }
     }
 

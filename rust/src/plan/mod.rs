@@ -36,7 +36,7 @@ use anyhow::{anyhow, bail, ensure, Result};
 use crate::canon::bitmap::{AdjMat, MAX_PATTERN_K};
 use crate::canon::canonical::canonical_form;
 use crate::canon::patterns::{automorphism_count, automorphisms};
-use crate::graph::{CsrGraph, VertexId};
+use crate::graph::{CsrGraph, Label, VertexId};
 
 /// A compiled per-level execution plan for one connected pattern.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -56,7 +56,13 @@ pub struct ExecutionPlan {
     pub forbidden: Vec<Vec<usize>>,
     /// Symmetry-breaking constraints `match[a] < match[b]` with `a < b`,
     /// one per automorphism (first-moved-position rule), deduplicated.
+    /// For labeled plans the group is the *label-preserving* subgroup.
     pub restrictions: Vec<(usize, usize)>,
+    /// Per-position label constraints in matching order (`labels[i]` is
+    /// the label a candidate for level `i` must carry). `None` for
+    /// unlabeled plans — the engine then charges no label reads and
+    /// behaves exactly as before the label layer existed.
+    pub labels: Option<Vec<Label>>,
 }
 
 impl ExecutionPlan {
@@ -67,12 +73,50 @@ impl ExecutionPlan {
     /// neighbors (ties: higher pattern degree, then lower index), so the
     /// order is deterministic and every position has a backward anchor.
     pub fn build(pat: &AdjMat) -> ExecutionPlan {
+        Self::compile(pat, None, None)
+    }
+
+    /// Compile a *labeled* plan: `labels[p]` is the label of pattern
+    /// position `p`, and `freq` (when given — typically
+    /// [`CsrGraph::label_frequencies`] of the target data graph) feeds
+    /// the selectivity heuristic:
+    ///
+    /// - **rarest-label-first root** — the root position minimizes the
+    ///   data-graph frequency of its label *before* the degree heuristic
+    ///   applies, so enumeration starts from the smallest candidate set;
+    /// - **label-selectivity tiebreak** — among positions with equal
+    ///   backward-neighbor counts, the rarer label is matched earlier.
+    ///
+    /// Symmetry restrictions come from the label-preserving automorphism
+    /// subgroup (an automorphism mapping position `p` to a differently
+    /// labeled position is not a symmetry of the labeled pattern). With
+    /// uniform labels (cardinality 1) and/or uniform frequencies the
+    /// compilation is identical to [`ExecutionPlan::build`] apart from
+    /// the attached `labels` array — the cardinality-1 bit-identity the
+    /// differential tests enforce.
+    pub fn build_labeled(pat: &AdjMat, labels: &[Label], freq: Option<&[u64]>) -> ExecutionPlan {
+        Self::compile(pat, Some(labels), freq)
+    }
+
+    fn compile(pat: &AdjMat, plabels: Option<&[Label]>, freq: Option<&[u64]>) -> ExecutionPlan {
         let k = pat.k;
         assert!(pat.is_connected(), "execution plans need a connected pattern");
+        if let Some(ls) = plabels {
+            assert_eq!(ls.len(), k, "one label per pattern position");
+        }
+        // Estimated candidate-set size for a position: the data-graph
+        // frequency of its label. Constant (no effect on the order) for
+        // unlabeled plans or when no frequencies are supplied.
+        let sel = |v: usize| -> u64 {
+            match (plabels, freq) {
+                (Some(ls), Some(fr)) => fr.get(ls[v] as usize).copied().unwrap_or(0),
+                _ => 1,
+            }
+        };
         let mut order: Vec<usize> = Vec::with_capacity(k);
         let mut placed = vec![false; k];
         let root = (0..k)
-            .max_by_key(|&v| (pat.degree(v), std::cmp::Reverse(v)))
+            .max_by_key(|&v| (std::cmp::Reverse(sel(v)), pat.degree(v), std::cmp::Reverse(v)))
             .expect("k >= 2");
         order.push(root);
         placed[root] = true;
@@ -81,7 +125,7 @@ impl ExecutionPlan {
                 .filter(|&v| !placed[v])
                 .max_by_key(|&v| {
                     let back = order.iter().filter(|&&u| pat.has_edge(u, v)).count();
-                    (back, pat.degree(v), std::cmp::Reverse(v))
+                    (back, std::cmp::Reverse(sel(v)), pat.degree(v), std::cmp::Reverse(v))
                 })
                 .expect("unplaced position exists");
             // connected pattern => some unplaced vertex touches the cut
@@ -95,6 +139,8 @@ impl ExecutionPlan {
             inv[oldp] = newp;
         }
         let remapped = pat.permute(&inv);
+        let rlabels: Option<Vec<Label>> =
+            plabels.map(|ls| order.iter().map(|&oldp| ls[oldp]).collect());
         let backward: Vec<Vec<usize>> = (0..k)
             .map(|i| (0..i).filter(|&j| remapped.has_edge(j, i)).collect())
             .collect();
@@ -106,9 +152,18 @@ impl ExecutionPlan {
         // σ ≠ id, constrain match[p] < match[σ(p)] at σ's first moved
         // position p (σ(p) > p always — σ(p) is itself moved). The
         // resulting constraint set admits exactly the lexicographically
-        // minimal assignment of each orbit: complete and sound.
+        // minimal assignment of each orbit: complete and sound. The
+        // argument only needs the σ to form a group, so restricting to
+        // the label-preserving subgroup keeps both properties for
+        // labeled plans (two matches of one vertex set differ by a
+        // label-preserving automorphism).
         let mut restrictions = Vec::new();
         for sigma in automorphisms(&remapped) {
+            if let Some(ls) = &rlabels {
+                if (0..k).any(|p| ls[sigma[p]] != ls[p]) {
+                    continue; // not a symmetry of the labeled pattern
+                }
+            }
             if let Some(p) = (0..k).find(|&p| sigma[p] != p) {
                 let pair = (p.min(sigma[p]), p.max(sigma[p]));
                 if !restrictions.contains(&pair) {
@@ -124,6 +179,7 @@ impl ExecutionPlan {
             backward,
             forbidden,
             restrictions,
+            labels: rlabels,
         }
     }
 
@@ -157,6 +213,7 @@ impl ExecutionPlan {
             restrictions: (0..k)
                 .flat_map(|a| ((a + 1)..k).map(move |b| (a, b)))
                 .collect(),
+            labels: None,
         }
     }
 
@@ -167,9 +224,40 @@ impl ExecutionPlan {
     }
 
     /// Number of automorphisms of the pattern — the per-vertex-set
-    /// embedding multiplicity a plan *without* restrictions counts.
+    /// embedding multiplicity a plan *without* restrictions counts. For
+    /// labeled plans this is the label-preserving subgroup's order (the
+    /// group the restrictions were derived from).
     pub fn automorphism_factor(&self) -> u64 {
-        automorphism_count(&self.pat) as u64
+        match &self.labels {
+            None => automorphism_count(&self.pat) as u64,
+            Some(ls) => automorphisms(&self.pat)
+                .iter()
+                .filter(|sigma| (0..self.pat.k).all(|p| ls[sigma[p]] == ls[p]))
+                .count() as u64,
+        }
+    }
+
+    /// The label constraint for matching level `pos` (`None` on
+    /// unlabeled plans).
+    #[inline]
+    pub fn position_label(&self, pos: usize) -> Option<Label> {
+        self.labels.as_ref().map(|ls| ls[pos])
+    }
+
+    /// The label a seed (position-0) vertex must carry, if any.
+    #[inline]
+    pub fn root_label(&self) -> Option<Label> {
+        self.position_label(0)
+    }
+
+    /// Whether data vertex `v` can match position 0: the degree floor
+    /// plus the root label. The runner and the fleet's seed sharding
+    /// both consult this, so single- and multi-device deals prune
+    /// identically.
+    #[inline]
+    pub fn seed_matches(&self, g: &CsrGraph, v: VertexId) -> bool {
+        g.degree(v) >= self.min_seed_degree().max(1)
+            && !self.root_label().is_some_and(|l| g.label(v) != l)
     }
 
     /// The same plan with symmetry breaking stripped: counts every
@@ -202,8 +290,14 @@ impl ExecutionPlan {
 
     /// Count induced matches rooted at data vertex `v0` (position 0) —
     /// the CPU reference matcher shared with the Peregrine-like baseline.
+    /// Label-aware: on labeled plans every position's candidate must
+    /// carry the position's label, so this is the independent CPU oracle
+    /// the labeled engine path is differential-tested against.
     pub fn count_from(&self, g: &CsrGraph, v0: VertexId) -> u64 {
         if g.degree(v0) < self.min_seed_degree() {
+            return 0;
+        }
+        if self.root_label().is_some_and(|l| g.label(v0) != l) {
             return 0;
         }
         let mut matched = vec![VertexId::MAX; self.k()];
@@ -225,8 +319,12 @@ impl ExecutionPlan {
             .min_by_key(|&b| g.degree(matched[b]))
             .expect("matching order guarantees a backward neighbor");
         let lb = self.lower_bound(pos, matched);
+        let want_label = self.position_label(pos);
         'cand: for &c in g.neighbors(matched[src]) {
             if lb.is_some_and(|x| c <= x) {
+                continue;
+            }
+            if want_label.is_some_and(|l| g.label(c) != l) {
                 continue;
             }
             for &m in matched[..pos].iter() {
@@ -257,15 +355,62 @@ impl ExecutionPlan {
 /// interactive CLI queries on the instant side of that cliff.
 pub const MAX_PARSE_K: usize = 8;
 
-/// Parse `a-b,b-c,...` edge-list pattern syntax (CLI `--pattern`).
+/// A parsed `--pattern` spec: size, edge list, and (for labeled specs)
+/// one label per vertex id.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ParsedPattern {
+    pub k: usize,
+    pub edges: Vec<(usize, usize)>,
+    /// `labels[v]` for `v in 0..k` when the spec used `v:label` syntax;
+    /// `None` for plain `a-b` specs.
+    pub labels: Option<Vec<Label>>,
+}
+
+/// One endpoint of a pattern edge: `v` or `v:label`.
+fn parse_endpoint(tok: &str, part: &str) -> Result<(usize, Option<Label>)> {
+    let tok = tok.trim();
+    match tok.split_once(':') {
+        Some((id, lab)) => {
+            let id: usize = id
+                .trim()
+                .parse()
+                .map_err(|_| anyhow!("bad vertex '{}' in edge '{part}'", id.trim()))?;
+            let lab = lab.trim();
+            ensure!(
+                !lab.is_empty(),
+                "missing label after ':' in '{tok}' (labeled endpoints are v:label)"
+            );
+            let l: Label = lab
+                .parse()
+                .map_err(|_| anyhow!("bad label '{lab}' in '{tok}' (labels are numeric)"))?;
+            Ok((id, Some(l)))
+        }
+        None => {
+            let id: usize = tok
+                .parse()
+                .map_err(|_| anyhow!("bad vertex '{tok}' in edge '{part}'"))?;
+            Ok((id, None))
+        }
+    }
+}
+
+/// Parse `a-b,b-c,...` edge-list pattern syntax (CLI `--pattern`), with
+/// optional per-vertex labels: `0:0-1:1,1:1-2:0` matches a wedge whose
+/// center carries label 1 and whose leaves carry labels 0.
 ///
 /// Vertex ids must be `0..k` with `k = max id + 1`; the pattern must be
 /// connected (an unused id below the max is an isolated position and is
 /// rejected for the same reason), and `k <= MAX_PARSE_K` so the plan
-/// compiles interactively.
-pub fn parse_pattern(spec: &str) -> Result<(usize, Vec<(usize, usize)>)> {
+/// compiles interactively. Labeled specs must label *every* endpoint
+/// (mixed specs are rejected — a silently defaulted label would match
+/// the wrong thing), label every vertex consistently, and — like plain
+/// specs — contain no self-loops.
+pub fn parse_pattern(spec: &str) -> Result<ParsedPattern> {
     let mut edges: Vec<(usize, usize)> = Vec::new();
     let mut maxv = 0usize;
+    let mut vlabels: std::collections::BTreeMap<usize, Label> = std::collections::BTreeMap::new();
+    let mut seen_labeled = false;
+    let mut seen_unlabeled = false;
     for part in spec.split(',') {
         let part = part.trim();
         if part.is_empty() {
@@ -274,18 +419,31 @@ pub fn parse_pattern(spec: &str) -> Result<(usize, Vec<(usize, usize)>)> {
         let (a, b) = part
             .split_once('-')
             .ok_or_else(|| anyhow!("bad edge '{part}' in pattern '{spec}' (want a-b)"))?;
-        let a: usize = a
-            .trim()
-            .parse()
-            .map_err(|_| anyhow!("bad vertex '{}' in edge '{part}'", a.trim()))?;
-        let b: usize = b
-            .trim()
-            .parse()
-            .map_err(|_| anyhow!("bad vertex '{}' in edge '{part}'", b.trim()))?;
+        let (a, la) = parse_endpoint(a, part)?;
+        let (b, lb) = parse_endpoint(b, part)?;
+        for (v, l) in [(a, la), (b, lb)] {
+            match l {
+                Some(l) => {
+                    seen_labeled = true;
+                    if let Some(&prev) = vlabels.get(&v) {
+                        ensure!(
+                            prev == l,
+                            "vertex {v} has conflicting labels {prev} and {l} in pattern '{spec}'"
+                        );
+                    }
+                    vlabels.insert(v, l);
+                }
+                None => seen_unlabeled = true,
+            }
+        }
         ensure!(a != b, "self-loop '{part}' in pattern '{spec}'");
         maxv = maxv.max(a).max(b);
         edges.push((a.min(b), a.max(b)));
     }
+    ensure!(
+        !(seen_labeled && seen_unlabeled),
+        "pattern '{spec}' mixes labeled and unlabeled vertices (label all or none)"
+    );
     let k = maxv + 1;
     ensure!(
         (3..=MAX_PARSE_K).contains(&k),
@@ -302,7 +460,14 @@ pub fn parse_pattern(spec: &str) -> Result<(usize, Vec<(usize, usize)>)> {
         m.is_connected(),
         "pattern '{spec}' is disconnected (every vertex id in 0..{k} must connect)"
     );
-    Ok((k, edges))
+    // connectivity guarantees every id in 0..k appeared in an edge, and a
+    // fully-labeled spec therefore labeled all of them
+    let labels = if seen_labeled {
+        Some((0..k).map(|v| vlabels[&v]).collect())
+    } else {
+        None
+    };
+    Ok(ParsedPattern { k, edges, labels })
 }
 
 #[cfg(test)]
@@ -414,14 +579,145 @@ mod tests {
     }
 
     #[test]
+    fn uniform_labels_compile_identically_to_unlabeled() {
+        // cardinality 1: same order, backward sets, and restrictions —
+        // the only difference is the attached label array
+        for edges in [
+            vec![(0usize, 1usize), (1, 2)],
+            vec![(0, 1), (1, 2), (2, 3), (3, 0)],
+            vec![(0, 1), (1, 2), (0, 2), (0, 3), (2, 3)],
+        ] {
+            let k = edges.iter().map(|&(a, b)| a.max(b)).max().unwrap() + 1;
+            let m = mat(k, &edges);
+            let plain = ExecutionPlan::build(&m);
+            let labeled = ExecutionPlan::build_labeled(&m, &vec![0; k], Some(&[100]));
+            assert_eq!(plain.order, labeled.order, "{edges:?}");
+            assert_eq!(plain.backward, labeled.backward, "{edges:?}");
+            assert_eq!(plain.forbidden, labeled.forbidden, "{edges:?}");
+            assert_eq!(plain.restrictions, labeled.restrictions, "{edges:?}");
+            assert_eq!(labeled.labels, Some(vec![0; k]));
+            assert_eq!(plain.automorphism_factor(), labeled.automorphism_factor());
+        }
+    }
+
+    #[test]
+    fn rarest_label_first_overrides_the_degree_root() {
+        // wedge 0-1-2, center 1 (degree 2). With leaf label 7 rare and
+        // center label 3 common, the plan must root at a leaf instead.
+        let m = mat(3, &[(0, 1), (1, 2)]);
+        let labels = [7, 3, 3];
+        let mut freq = vec![0u64; 8];
+        freq[3] = 500;
+        freq[7] = 2;
+        let p = ExecutionPlan::build_labeled(&m, &labels, Some(&freq));
+        assert_eq!(p.order[0], 0, "root must carry the rare label");
+        assert_eq!(p.labels.as_deref(), Some(&[7, 3, 3][..]));
+        assert_eq!(p.root_label(), Some(7));
+        // without frequencies the degree heuristic still wins
+        let q = ExecutionPlan::build_labeled(&m, &labels, None);
+        assert_eq!(q.order[0], 1);
+        assert_eq!(q.root_label(), Some(3));
+    }
+
+    #[test]
+    fn restrictions_come_from_label_preserving_automorphisms_only() {
+        // wedge with equal leaf labels keeps the leaf-swap restriction;
+        // distinct leaf labels kill it (the swap is no longer a symmetry)
+        let m = mat(3, &[(0, 1), (1, 2)]);
+        let same = ExecutionPlan::build_labeled(&m, &[4, 9, 4], None);
+        assert_eq!(same.restrictions, vec![(1, 2)]);
+        assert_eq!(same.automorphism_factor(), 2);
+        let diff = ExecutionPlan::build_labeled(&m, &[4, 9, 5], None);
+        assert!(diff.restrictions.is_empty());
+        assert_eq!(diff.automorphism_factor(), 1);
+        // triangle with one odd label: only the swap of the equal pair
+        let t = mat(3, &[(0, 1), (1, 2), (0, 2)]);
+        let lt = ExecutionPlan::build_labeled(&t, &[1, 1, 2], None);
+        assert_eq!(lt.automorphism_factor(), 2);
+        assert_eq!(lt.restrictions.len(), 1);
+    }
+
+    #[test]
+    fn labeled_count_from_filters_every_position() {
+        // K4 labeled [0, 0, 1, 1]: triangles needing labels {0,0,1}
+        // are {0,1,2} and {0,1,3} — one match each, counted once
+        let g = generators::complete(4).with_labels(vec![0, 0, 1, 1]).unwrap();
+        let m = mat(3, &[(0, 1), (1, 2), (0, 2)]);
+        let p = ExecutionPlan::build_labeled(&m, &[0, 0, 1], Some(&g.label_frequencies()));
+        let total: u64 = (0..4).map(|v| p.count_from(&g, v)).sum();
+        assert_eq!(total, 2);
+        // seeds with the wrong root label contribute nothing
+        for v in 0..4 {
+            if g.label(v) != p.root_label().unwrap() {
+                assert_eq!(p.count_from(&g, v), 0, "v={v}");
+            }
+        }
+        // cardinality-1 labels reproduce the unlabeled count
+        let g1 = generators::complete(4).with_labels(vec![0; 4]).unwrap();
+        let p1 = ExecutionPlan::build_labeled(&m, &[0, 0, 0], Some(&g1.label_frequencies()));
+        let u = ExecutionPlan::build(&m);
+        let labeled1: u64 = (0..4).map(|v| p1.count_from(&g1, v)).sum();
+        let plain: u64 = (0..4).map(|v| u.count_from(&g1, v)).sum();
+        assert_eq!(labeled1, plain);
+        assert_eq!(labeled1, 4); // C(4,3) triangles in K4
+    }
+
+    #[test]
+    fn seed_matches_checks_degree_and_root_label() {
+        let g = generators::star(5).with_labels(vec![2, 1, 1, 1, 1, 1]).unwrap();
+        let m = mat(3, &[(0, 1), (1, 2)]);
+        // center position labeled 2 => only the hub seeds
+        let p = ExecutionPlan::build_labeled(&m, &[1, 2, 1], Some(&g.label_frequencies()));
+        assert_eq!(p.root_label(), Some(2)); // rarest label roots
+        assert!(p.seed_matches(&g, 0));
+        for v in 1..6 {
+            assert!(!p.seed_matches(&g, v), "leaf {v} must not seed");
+        }
+        // unlabeled plans ignore labels: the hub seeds despite its label,
+        // leaves still fail the degree floor (center degree 2)
+        let u = ExecutionPlan::build(&m);
+        assert!(u.seed_matches(&g, 0));
+        assert!(!u.seed_matches(&g, 1));
+    }
+
+    #[test]
     fn parse_pattern_accepts_edge_lists() {
-        let (k, edges) = parse_pattern("0-1,1-2,2-3,3-0").unwrap();
-        assert_eq!(k, 4);
-        assert_eq!(edges, vec![(0, 1), (0, 3), (1, 2), (2, 3)]);
+        let p = parse_pattern("0-1,1-2,2-3,3-0").unwrap();
+        assert_eq!(p.k, 4);
+        assert_eq!(p.edges, vec![(0, 1), (0, 3), (1, 2), (2, 3)]);
+        assert_eq!(p.labels, None);
         // whitespace + duplicate + reversed edges normalize
-        let (k2, edges2) = parse_pattern(" 1-0 , 2-1 , 0-1 ").unwrap();
-        assert_eq!(k2, 3);
-        assert_eq!(edges2, vec![(0, 1), (1, 2)]);
+        let p2 = parse_pattern(" 1-0 , 2-1 , 0-1 ").unwrap();
+        assert_eq!(p2.k, 3);
+        assert_eq!(p2.edges, vec![(0, 1), (1, 2)]);
+    }
+
+    #[test]
+    fn parse_pattern_accepts_labeled_edge_lists() {
+        let p = parse_pattern("0:0-1:1,1:1-2:0").unwrap();
+        assert_eq!(p.k, 3);
+        assert_eq!(p.edges, vec![(0, 1), (1, 2)]);
+        assert_eq!(p.labels, Some(vec![0, 1, 0]));
+        // whitespace + repeated consistent labels are fine
+        let p2 = parse_pattern(" 1:5 - 0:7 , 2:5-1:5 ").unwrap();
+        assert_eq!(p2.labels, Some(vec![7, 5, 5]));
+    }
+
+    #[test]
+    fn parse_pattern_rejects_labeled_malformed() {
+        // each failure mode carries its own distinct message (the fuzz
+        // suite in tests/fuzz_parse_pattern.rs sweeps these at volume)
+        let cases: [(&str, &str); 5] = [
+            ("0:0-0:0,0:0-1:1,1:1-2:2", "self-loop"),
+            ("0:-1:1,1:1-2:0", "missing label"),
+            ("0:x-1:1,1:1-2:0", "bad label"),
+            ("0:0-1,1-2", "mixes labeled and unlabeled"),
+            ("0:0-1:1,1:2-2:0", "conflicting labels"),
+        ];
+        for (spec, want) in cases {
+            let err = format!("{:#}", parse_pattern(spec).unwrap_err());
+            assert!(err.contains(want), "spec '{spec}': got '{err}', want '{want}'");
+        }
     }
 
     #[test]

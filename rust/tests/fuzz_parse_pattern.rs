@@ -1,0 +1,172 @@
+//! Fuzz-style hardening of `plan::parse_pattern` — table-driven over
+//! ~250 generated malformed specs (deterministic `util::Rng` streams),
+//! five corruption categories, each rejected with its own distinct
+//! error message:
+//!
+//! | category            | example         | message marker                  |
+//! |---------------------|-----------------|---------------------------------|
+//! | self-loop           | `1-1`, `2:0-2:0`| "self-loop"                     |
+//! | missing label       | `0:-1:1`        | "missing label"                 |
+//! | non-numeric label   | `0:x-1:1`       | "bad label"                     |
+//! | mixed labeled/plain | `0:0-1,1-2`     | "mixes labeled and unlabeled"   |
+//! | conflicting labels  | `0:0-1:1,1:2-2:0`| "conflicting labels"           |
+//!
+//! Plus a valid-spec sweep: randomly generated well-formed labeled and
+//! unlabeled specs must parse, with labels recovered exactly.
+
+use dumato::plan::parse_pattern;
+use dumato::util::Rng;
+
+/// A random connected edge list over `0..k` (path spine + extras),
+/// shuffled so corruption sites land anywhere in the spec.
+fn random_edges(rng: &mut Rng, k: usize) -> Vec<(usize, usize)> {
+    let mut edges: Vec<(usize, usize)> = (0..k - 1).map(|i| (i, i + 1)).collect();
+    for a in 0..k {
+        for b in (a + 2)..k {
+            if rng.chance(0.3) {
+                edges.push((a, b));
+            }
+        }
+    }
+    rng.shuffle(&mut edges);
+    edges
+}
+
+/// Render an edge list with labels (`labels[v]` per endpoint) or plain.
+fn render(edges: &[(usize, usize)], labels: Option<&[u32]>) -> Vec<String> {
+    edges
+        .iter()
+        .map(|&(a, b)| match labels {
+            Some(ls) => format!("{a}:{}-{b}:{}", ls[a], ls[b]),
+            None => format!("{a}-{b}"),
+        })
+        .collect()
+}
+
+fn assert_rejected(spec: &str, marker: &str, category: &str) {
+    match parse_pattern(spec) {
+        Ok(p) => panic!("{category}: spec '{spec}' parsed as {p:?}, expected rejection"),
+        Err(e) => {
+            let msg = format!("{e:#}");
+            assert!(
+                msg.contains(marker),
+                "{category}: spec '{spec}' rejected with '{msg}', expected marker '{marker}'"
+            );
+        }
+    }
+}
+
+#[test]
+fn fuzz_malformed_specs_each_reject_with_a_distinct_error() {
+    let mut rng = Rng::new(0xFA22);
+    let mut total = 0usize;
+    for _ in 0..50 {
+        let k = rng.range(3, 7);
+        let edges = random_edges(&mut rng, k);
+        let labels: Vec<u32> = (0..k).map(|_| rng.below(5) as u32).collect();
+
+        // 1. self-loop, in both plain and labeled form
+        {
+            let mut parts = render(&edges, None);
+            let v = rng.range(0, k);
+            parts.insert(rng.range(0, parts.len() + 1), format!("{v}-{v}"));
+            assert_rejected(&parts.join(","), "self-loop", "plain self-loop");
+            let mut lparts = render(&edges, Some(&labels));
+            let lv = rng.range(0, k);
+            lparts.insert(
+                rng.range(0, lparts.len() + 1),
+                format!("{lv}:{l}-{lv}:{l}", l = labels[lv]),
+            );
+            assert_rejected(&lparts.join(","), "self-loop", "labeled self-loop");
+            total += 2;
+        }
+
+        // 2. missing label after ':' on one random endpoint
+        {
+            let mut parts = render(&edges, Some(&labels));
+            let i = rng.range(0, parts.len());
+            let (a, b) = edges[i];
+            parts[i] = if rng.chance(0.5) {
+                format!("{a}:-{b}:{}", labels[b])
+            } else {
+                format!("{a}:{}-{b}:", labels[a])
+            };
+            assert_rejected(&parts.join(","), "missing label", "missing label");
+            total += 1;
+        }
+
+        // 3. non-numeric label on one random endpoint (no '-' in the
+        // junk: the edge splits at the first dash, so a negative label
+        // reads as a malformed vertex instead — a different rejection)
+        {
+            let junk = ["x", "abc", "1a", "l0", "_", "?"][rng.range(0, 6)];
+            let mut parts = render(&edges, Some(&labels));
+            let i = rng.range(0, parts.len());
+            let (a, b) = edges[i];
+            parts[i] = format!("{a}:{junk}-{b}:{}", labels[b]);
+            assert_rejected(&parts.join(","), "bad label", "non-numeric label");
+            total += 1;
+        }
+
+        // 4. mixed labeled/unlabeled: strip the label from one endpoint
+        {
+            let mut parts = render(&edges, Some(&labels));
+            let i = rng.range(0, parts.len());
+            let (a, b) = edges[i];
+            parts[i] = format!("{a}-{b}:{}", labels[b]);
+            assert_rejected(
+                &parts.join(","),
+                "mixes labeled and unlabeled",
+                "mixed spec",
+            );
+            total += 1;
+        }
+
+        // 5. conflicting labels: relabel one endpoint occurrence of a
+        // vertex that appears in >= 2 edges (the path spine guarantees
+        // vertex 1 does)
+        {
+            let mut parts = render(&edges, Some(&labels));
+            let i = parts
+                .iter()
+                .position(|p| p.starts_with("1:"))
+                .or_else(|| parts.iter().position(|p| p.contains("-1:")))
+                .expect("vertex 1 appears in the spine");
+            let (a, b) = edges[i];
+            let bump = |l: u32| l + 1 + rng.below(3) as u32;
+            parts[i] = if a == 1 {
+                format!("{a}:{}-{b}:{}", bump(labels[1]), labels[b])
+            } else {
+                format!("{a}:{}-{b}:{}", labels[a], bump(labels[b]))
+            };
+            assert_rejected(&parts.join(","), "conflicting labels", "conflicting labels");
+            total += 1;
+        }
+    }
+    assert!(total >= 250, "fuzz volume regressed: {total} specs");
+}
+
+#[test]
+fn fuzz_valid_specs_parse_and_recover_labels() {
+    let mut rng = Rng::new(0x600D);
+    for _ in 0..60 {
+        let k = rng.range(3, 7);
+        let edges = random_edges(&mut rng, k);
+        // plain
+        let plain = render(&edges, None).join(",");
+        let p = parse_pattern(&plain).unwrap_or_else(|e| panic!("'{plain}': {e:#}"));
+        assert_eq!(p.k, k, "'{plain}'");
+        assert_eq!(p.labels, None);
+        let mut want: Vec<(usize, usize)> = edges.clone();
+        want.sort_unstable();
+        want.dedup();
+        assert_eq!(p.edges, want, "'{plain}'");
+        // labeled
+        let labels: Vec<u32> = (0..k).map(|_| rng.below(4) as u32).collect();
+        let spec = render(&edges, Some(&labels)).join(",");
+        let lp = parse_pattern(&spec).unwrap_or_else(|e| panic!("'{spec}': {e:#}"));
+        assert_eq!(lp.k, k, "'{spec}'");
+        assert_eq!(lp.edges, want, "'{spec}'");
+        assert_eq!(lp.labels, Some(labels), "'{spec}'");
+    }
+}

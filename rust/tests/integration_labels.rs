@@ -1,0 +1,202 @@
+//! Labeled-matching differential suite — the lockdown for the label
+//! layer, end to end:
+//!
+//! - the labeled planned engine, the label-aware CPU oracle
+//!   (`ExecutionPlan::count_from`), and the Peregrine-like baseline agree
+//!   on random `G(n,p)` graphs × random connected k <= 5 patterns ×
+//!   random labelings of cardinality {1, 2, 4};
+//! - cardinality-1 labelings reproduce the pre-label unlabeled counts
+//!   exactly for every app (clique, motif, query) — labels of
+//!   cardinality 1 are the unlabeled system, bit for bit;
+//! - labeled queries survive `devices > 1` (fleet seed sharding must
+//!   respect the plan's root label).
+
+use dumato::apps::{CliqueCount, MotifCount, SubgraphQuery};
+use dumato::baselines::Peregrine;
+use dumato::canon::bitmap::AdjMat;
+use dumato::engine::{EngineConfig, Runner};
+use dumato::graph::{generators, Label};
+use dumato::multi::Partition;
+use dumato::prop_assert_eq;
+use dumato::util::proptest::{check, Config};
+use dumato::util::Rng;
+
+fn cfg() -> EngineConfig {
+    EngineConfig {
+        warps: 8,
+        threads: 2,
+        ..Default::default()
+    }
+}
+
+/// Random connected pattern on k vertices: random spanning tree + extras.
+fn random_pattern(rng: &mut Rng, k: usize) -> AdjMat {
+    let mut m = AdjMat::empty(k);
+    for i in 1..k {
+        m.set_edge(rng.range(0, i), i);
+    }
+    for a in 0..k {
+        for b in (a + 1)..k {
+            if rng.chance(0.35) {
+                m.set_edge(a, b);
+            }
+        }
+    }
+    m
+}
+
+fn edges_of(m: &AdjMat) -> Vec<(usize, usize)> {
+    let mut edges = Vec::new();
+    for a in 0..m.k {
+        for b in (a + 1)..m.k {
+            if m.has_edge(a, b) {
+                edges.push((a, b));
+            }
+        }
+    }
+    edges
+}
+
+#[test]
+fn property_labeled_engine_equals_oracle_equals_peregrine() {
+    check(
+        Config { cases: 18, ..Default::default() },
+        "labeled planned engine == count_from oracle == Peregrine",
+        |rng| {
+            let n = rng.range(10, 20);
+            let p = 0.2 + rng.f64() * 0.25;
+            let card = *rng.pick(&[1usize, 2, 4]);
+            let g = generators::with_random_labels(
+                generators::erdos_renyi(n, p, rng.next_u64()),
+                card,
+                rng.next_u64(),
+            );
+            let k = rng.range(3, 6); // 3..=5
+            let pat = random_pattern(rng, k);
+            let edges = edges_of(&pat);
+            let labels: Vec<Label> = (0..k).map(|_| rng.below(card as u64) as Label).collect();
+
+            // engine: labeled plan through extend_planned's label filter
+            let q = SubgraphQuery::labeled_for(k, &edges, &labels, &g);
+            let engine = q.matches(&Runner::run(&g, &q, &cfg())).len() as u64;
+
+            // CPU oracle: the label-aware reference matcher
+            let plan = q.execution_plan();
+            let oracle: u64 =
+                (0..g.num_vertices() as u32).map(|v| plan.count_from(&g, v)).sum();
+            prop_assert_eq!(
+                engine,
+                oracle,
+                "engine vs oracle: n={n} p={p:.2} k={k} card={card} labels={labels:?}"
+            );
+
+            // independent CPU system: the Peregrine-like threaded sweep
+            let mut per = Peregrine::for_plan(plan.clone());
+            per.threads = 2;
+            let peregrine = per.run(&g).expect("single-plan mode always runs").count;
+            prop_assert_eq!(
+                engine,
+                peregrine,
+                "engine vs peregrine: n={n} p={p:.2} k={k} card={card} labels={labels:?}"
+            );
+
+            // cardinality 1: the labeled path must reproduce the
+            // unlabeled system exactly (same matches, not just counts)
+            if card == 1 {
+                let u = SubgraphQuery::new(k, &edges);
+                let mut mu = u.matches(&Runner::run(&g, &u, &cfg()));
+                let mut ml = q.matches(&Runner::run(&g, &q, &cfg()));
+                mu.sort_unstable();
+                ml.sort_unstable();
+                prop_assert_eq!(&ml, &mu, "cardinality-1 vs unlabeled: n={n} k={k}");
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn cardinality_one_reproduces_every_unlabeled_count() {
+    // clique, motif, and query — the acceptance bar: attaching an
+    // all-zero label array must not move any pre-label result
+    let g = generators::erdos_renyi(26, 0.3, 11);
+    let gl = generators::with_random_labels(g.clone(), 1, 5);
+    assert!(gl.is_labeled());
+
+    for k in 3..=5 {
+        let want = Runner::run(&g, &CliqueCount::new(k), &cfg()).count;
+        let got = Runner::run(&gl, &CliqueCount::new(k), &cfg()).count;
+        assert_eq!(got, want, "clique k={k}");
+    }
+
+    for k in 3..=4 {
+        let want = Runner::run(&g, &MotifCount::new(k), &cfg()).patterns;
+        let got = Runner::run(&gl, &MotifCount::new(k), &cfg()).patterns;
+        assert_eq!(got, want, "motif k={k}");
+    }
+
+    let edges = [(0, 1), (1, 2), (2, 3), (3, 0)];
+    let plain = SubgraphQuery::new(4, &edges);
+    let labeled = SubgraphQuery::labeled_for(4, &edges, &[0, 0, 0, 0], &gl);
+    let mut want = plain.matches(&Runner::run(&g, &plain, &cfg()));
+    let mut got = labeled.matches(&Runner::run(&gl, &labeled, &cfg()));
+    want.sort_unstable();
+    got.sort_unstable();
+    assert_eq!(got, want, "query 4-cycle");
+}
+
+#[test]
+fn labeled_query_agrees_across_devices() {
+    // fleet seed sharding must respect the plan's root label: every
+    // device count (and the match sets) must equal the single-device run
+    let g = generators::with_random_labels(generators::erdos_renyi(80, 0.12, 3), 3, 9);
+    let edges = [(0, 1), (1, 2)];
+    let labels: [Label; 3] = [0, 1, 2];
+    let multi = |devices: usize| EngineConfig {
+        warps: 16,
+        threads: 2,
+        devices,
+        partition: Partition::DegreeAware,
+        ..Default::default()
+    };
+    let q = SubgraphQuery::labeled_for(3, &edges, &labels, &g);
+    let r1 = Runner::run(&g, &q, &multi(1));
+    let mut m1 = q.matches(&r1);
+    m1.sort_unstable();
+    // the oracle anchors the whole device sweep
+    let oracle: u64 =
+        (0..g.num_vertices() as u32).map(|v| q.execution_plan().count_from(&g, v)).sum();
+    assert_eq!(m1.len() as u64, oracle, "single-device vs oracle");
+    for devices in [2, 3] {
+        let r = Runner::run(&g, &q, &multi(devices));
+        let mut m = q.matches(&r);
+        m.sort_unstable();
+        assert_eq!(m, m1, "devices={devices}");
+    }
+}
+
+#[test]
+fn labeled_counts_shrink_with_cardinality() {
+    // monotonicity sanity: summing a labeled pattern's matches over all
+    // label assignments recovers the unlabeled count (wedge, card 2)
+    let g = generators::with_random_labels(generators::erdos_renyi(24, 0.25, 6), 2, 4);
+    let edges = [(0, 1), (1, 2)];
+    let unlabeled = {
+        let q = SubgraphQuery::new(3, &edges);
+        q.matches(&Runner::run(&g, &q, &cfg())).len() as u64
+    };
+    let mut labeled_total = 0u64;
+    for l0 in 0..2u32 {
+        for l1 in 0..2u32 {
+            for l2 in l0..2u32 {
+                // leaves are symmetric: (l0, l2) unordered to avoid
+                // double-counting the wedge's leaf swap
+                let q = SubgraphQuery::labeled_for(3, &edges, &[l0, l1, l2], &g);
+                let count = q.matches(&Runner::run(&g, &q, &cfg())).len() as u64;
+                assert!(count <= unlabeled);
+                labeled_total += count;
+            }
+        }
+    }
+    assert_eq!(labeled_total, unlabeled, "label classes partition the match set");
+}

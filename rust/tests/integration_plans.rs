@@ -216,7 +216,8 @@ fn planned_clique_beats_the_unplanned_pipeline_modeled() {
 
 #[test]
 fn parse_pattern_feeds_the_query_app() {
-    let (k, edges) = dumato::plan::parse_pattern("0-1,1-2,2-3,3-0").unwrap();
+    let parsed = dumato::plan::parse_pattern("0-1,1-2,2-3,3-0").unwrap();
+    let (k, edges) = (parsed.k, parsed.edges);
     assert_eq!(k, 4);
     let g = generators::grid(3, 3);
     let q = SubgraphQuery::new(k, &edges);

@@ -1,0 +1,100 @@
+//! Integration coverage for `apps::quasi_clique` — previously the only
+//! app with zero integration tests. Pins down determinism across engine
+//! configurations, multi-device agreement, and known counts on the
+//! fixture generators.
+
+use dumato::apps::{CliqueCount, QuasiCliqueCount};
+use dumato::engine::{EngineConfig, Runner};
+use dumato::graph::generators;
+use dumato::multi::Partition;
+
+fn cfg() -> EngineConfig {
+    EngineConfig {
+        warps: 8,
+        threads: 2,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn determinism_across_engine_configurations() {
+    // warp count, thread count, stealing, and layout must never move a
+    // count — quasi-clique runs the unplanned enumerate-and-filter loop,
+    // so this exercises the whole generic pipeline. gamma = 0.5 admits
+    // every connected 4-subgraph (>= 3 of 6 edges), so the count is
+    // guaranteed nonzero on the sparse skewed stand-in.
+    let g = generators::CITESEER.scaled(0.1).generate(7);
+    let algo = QuasiCliqueCount::new(4, 0.5);
+    let want = Runner::run(&g, &algo, &cfg()).count;
+    assert!(want > 0, "fixture too sparse to exercise anything");
+    for (warps, threads, steal) in [(1, 1, true), (64, 4, true), (16, 2, false)] {
+        let c = EngineConfig {
+            warps,
+            threads,
+            steal,
+            ..Default::default()
+        };
+        let got = Runner::run(&g, &algo, &c).count;
+        assert_eq!(got, want, "warps={warps} threads={threads} steal={steal}");
+    }
+    // and the run is reproducible wholesale
+    assert_eq!(Runner::run(&g, &algo, &cfg()).count, want);
+}
+
+#[test]
+fn devices_agree_with_single_device() {
+    let g = generators::erdos_renyi(60, 0.18, 13);
+    let algo = QuasiCliqueCount::new(4, 0.5);
+    let want = Runner::run(&g, &algo, &cfg()).count;
+    for devices in [2, 3, 4] {
+        for partition in [Partition::RoundRobin, Partition::DegreeAware] {
+            let c = EngineConfig {
+                warps: 16,
+                threads: 2,
+                devices,
+                partition,
+                ..Default::default()
+            };
+            let got = Runner::run(&g, &algo, &c).count;
+            assert_eq!(got, want, "devices={devices} partition={partition:?}");
+        }
+    }
+}
+
+#[test]
+fn known_counts_on_generators() {
+    // complete graph: every k-subset has density 1, any gamma counts all
+    let k7 = generators::complete(7);
+    assert_eq!(Runner::run(&k7, &QuasiCliqueCount::new(4, 1.0), &cfg()).count, 35);
+    assert_eq!(Runner::run(&k7, &QuasiCliqueCount::new(3, 0.7), &cfg()).count, 35);
+
+    // cycle: connected 3-subgraphs are the n paths (2 of 3 edges, 0.667)
+    let c12 = generators::cycle(12);
+    assert_eq!(Runner::run(&c12, &QuasiCliqueCount::new(3, 0.6), &cfg()).count, 12);
+    assert_eq!(Runner::run(&c12, &QuasiCliqueCount::new(3, 0.7), &cfg()).count, 0);
+
+    // star: connected 3-subgraphs are the C(n,2) wedges
+    let s8 = generators::star(8);
+    assert_eq!(Runner::run(&s8, &QuasiCliqueCount::new(3, 0.0), &cfg()).count, 28);
+    assert_eq!(Runner::run(&s8, &QuasiCliqueCount::new(3, 1.0), &cfg()).count, 0);
+
+    // grid 2x3: 4-subgraph quasi-cliques at gamma 0.5 need >= 3 of 6
+    // edges; the two unit squares have 4 edges, and gamma 0.7 (>= 5)
+    // excludes everything (the grid is triangle-free)
+    let g23 = generators::grid(2, 3);
+    assert!(Runner::run(&g23, &QuasiCliqueCount::new(4, 0.5), &cfg()).count >= 2);
+    assert_eq!(Runner::run(&g23, &QuasiCliqueCount::new(4, 0.7), &cfg()).count, 0);
+}
+
+#[test]
+fn gamma_one_equals_planned_clique_on_a_standin() {
+    // gamma = 1 quasi-cliques are cliques: the unplanned quasi-clique
+    // pipeline must agree with the planned clique app on a Table III
+    // stand-in (cross-path, cross-plan invariant)
+    let g = generators::CITESEER.scaled(0.04).generate(2);
+    for k in 3..=4 {
+        let qc = Runner::run(&g, &QuasiCliqueCount::new(k, 1.0), &cfg()).count;
+        let cl = Runner::run(&g, &CliqueCount::new(k), &cfg()).count;
+        assert_eq!(qc, cl, "k={k}");
+    }
+}
