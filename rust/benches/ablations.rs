@@ -9,6 +9,13 @@
 //!   (the §IV-B complexity argument, measured).
 //! - `warps`        — occupancy sweep around the paper's 172k-thread
 //!   configuration.
+//! - `intersect`    — the intersection-strategy × vertex-ordering matrix
+//!   (merge/bisect/bitmap/auto × none/degree/degeneracy/random) plus the
+//!   oriented-clique row; counts asserted equal across every cell, the
+//!   `auto` strategy held to ≤ 1.05× the best fixed strategy per row
+//!   group, the oriented row held to ≤ the unoriented planned row.
+//!   `DUMATO_BENCH_JSON=1` dumps BENCH_intersect.json for the
+//!   `bench_check` CI gate.
 //!
 //! ```
 //! cargo bench --bench ablations                 # all
@@ -18,11 +25,12 @@
 #[path = "support.rs"]
 mod support;
 
-use dumato::apps::{CliqueCount, MotifCount};
+use dumato::apps::{CliqueCount, MotifCount, SubgraphQuery};
 use dumato::balance::LbConfig;
 use dumato::baselines::{App, PangolinBfs, PangolinError};
-use dumato::engine::{EngineConfig, ExtLayout, Runner, TeArena};
-use dumato::graph::generators;
+use dumato::engine::{EngineConfig, ExtLayout, IntersectStrategy, Runner, TeArena};
+use dumato::graph::ordering::{self, OrderingKind};
+use dumato::graph::{generators, CsrGraph};
 use dumato::report::Table;
 use dumato::util::fmt_count;
 
@@ -173,6 +181,174 @@ fn warps_sweep() {
     println!("{}", t.render());
 }
 
+/// One matrix cell: run the app under a strategy on an (ordered) graph.
+struct ICell {
+    timed_out: bool,
+    faulted: bool,
+    sim: f64,
+    gld: u64,
+    insts: u64,
+    count: u64,
+}
+
+fn intersect_cell(g: &CsrGraph, app: &str, strategy: IntersectStrategy, oriented: bool) -> ICell {
+    let mut cfg = support::engine_cfg();
+    cfg.intersect = strategy;
+    let (r, count) = match app {
+        "5-clique" => {
+            let algo = if oriented { CliqueCount::oriented(5) } else { CliqueCount::new(5) };
+            let r = Runner::run(g, &algo, &cfg);
+            let c = r.count;
+            (r, c)
+        }
+        _ => {
+            assert!(!oriented, "only the clique app has an oriented mode");
+            let q = SubgraphQuery::new(4, &[(0, 1), (1, 2), (2, 3), (3, 0)]);
+            let r = Runner::run(g, &q, &cfg);
+            let c = q.matches(&r).len() as u64;
+            (r, c)
+        }
+    };
+    ICell {
+        timed_out: r.timed_out,
+        faulted: r.fault.is_some(),
+        sim: r.metrics.sim_seconds,
+        gld: r.metrics.total_gld,
+        insts: r.metrics.total_insts,
+        count,
+    }
+}
+
+fn push_intersect_row(
+    t: &mut Table,
+    dataset: &str,
+    app: &str,
+    ordering: &str,
+    strategy: &str,
+    c: &ICell,
+) {
+    t.row(vec![
+        dataset.to_string(),
+        app.to_string(),
+        ordering.to_string(),
+        strategy.to_string(),
+        if c.timed_out { "-".into() } else { format!("{:.6}", c.sim) },
+        fmt_count(c.gld),
+        fmt_count(c.insts),
+        if c.timed_out { "-".into() } else { fmt_count(c.count) },
+    ]);
+}
+
+fn intersect_matrix() {
+    let s = support::scale();
+    let datasets = [
+        generators::CITESEER.scaled(s).generate(1),
+        generators::MICO.scaled(s).generate(1),
+    ];
+    let orderings = [
+        ("none", OrderingKind::None),
+        ("degree", OrderingKind::Degree),
+        ("degeneracy", OrderingKind::Degeneracy),
+        ("random", OrderingKind::Random),
+    ];
+    let strategies = [
+        ("bisect", IntersectStrategy::Bisect),
+        ("merge", IntersectStrategy::Merge),
+        ("bitmap", IntersectStrategy::Bitmap),
+        ("auto", IntersectStrategy::Auto),
+    ];
+    let mut t = Table::new(
+        "Intersection strategy x vertex ordering (planned 5-clique and 4-cycle query; \
+         identical counts asserted across every cell, auto <= 1.05x best fixed per \
+         ordering, oriented <= unoriented planned)",
+        &["dataset", "app", "ordering", "strategy", "sim_time", "gld", "insts", "count"],
+    );
+    for g0 in &datasets {
+        for app in ["5-clique", "4-cycle"] {
+            // one reference count per (dataset, app): every matrix cell —
+            // any ordering, any strategy, oriented or not — must agree
+            let mut reference: Option<u64> = None;
+            let mut degen_auto_sim: Option<f64> = None;
+            for (oname, okind) in orderings {
+                let g = ordering::apply(g0, okind, 1);
+                let mut best_fixed: Option<f64> = None;
+                let mut auto_sim: Option<f64> = None;
+                for (sname, strategy) in strategies {
+                    let c = intersect_cell(&g, app, strategy, false);
+                    assert!(!c.faulted, "{}/{app}/{oname}/{sname} faulted", g0.name());
+                    if !c.timed_out {
+                        match reference {
+                            None => reference = Some(c.count),
+                            Some(want) => assert_eq!(
+                                c.count,
+                                want,
+                                "{}/{app}/{oname}/{sname}: count diverged across the matrix",
+                                g0.name()
+                            ),
+                        }
+                        if sname == "auto" {
+                            auto_sim = Some(c.sim);
+                        } else {
+                            best_fixed =
+                                Some(best_fixed.map_or(c.sim, |b: f64| b.min(c.sim)));
+                        }
+                        if sname == "auto" && oname == "degeneracy" {
+                            degen_auto_sim = Some(c.sim);
+                        }
+                    }
+                    push_intersect_row(&mut t, g0.name(), app, oname, sname, &c);
+                }
+                // the acceptance bar: plan-time auto must track the best
+                // fixed kernel within 5% on every completed row group
+                if let (Some(auto), Some(best)) = (auto_sim, best_fixed) {
+                    assert!(
+                        auto <= best * 1.05 + 1e-9,
+                        "{}/{app}/{oname}: auto {auto:.6}s vs best fixed {best:.6}s \
+                         (> 1.05x)",
+                        g0.name()
+                    );
+                }
+            }
+            // oriented-clique row: degeneracy relabel + low->high orient;
+            // symmetry folds into the orientation and lists shrink to the
+            // core bound, so modeled time must not exceed the unoriented
+            // planned row on the same (dataset, ordering)
+            if app == "5-clique" {
+                let gd = ordering::apply(g0, OrderingKind::Degeneracy, 1);
+                let go = ordering::orient(&gd);
+                let c = intersect_cell(&go, app, IntersectStrategy::Auto, true);
+                assert!(!c.faulted, "{}/oriented faulted", g0.name());
+                if !c.timed_out {
+                    if let Some(want) = reference {
+                        assert_eq!(c.count, want, "{}: oriented count diverged", g0.name());
+                    }
+                    if let Some(unoriented) = degen_auto_sim {
+                        assert!(
+                            c.sim <= unoriented,
+                            "{}: oriented {:.6}s slower than unoriented planned {:.6}s",
+                            g0.name(),
+                            c.sim,
+                            unoriented
+                        );
+                    }
+                }
+                push_intersect_row(&mut t, g0.name(), app, "degeneracy+orient", "auto", &c);
+                println!(
+                    "[{}] planned TE pool: {} unordered vs {} oriented (core-bounded caps)",
+                    g0.name(),
+                    fmt_count(TeArena::plan_pool_bytes(g0, 5, support::warps()) as u64),
+                    fmt_count(TeArena::plan_pool_bytes(&go, 5, support::warps()) as u64),
+                );
+            }
+        }
+    }
+    println!("{}", t.render());
+    if std::env::var("DUMATO_BENCH_JSON").is_ok() {
+        std::fs::write("BENCH_intersect.json", t.to_json()).expect("write BENCH_intersect.json");
+        println!("wrote BENCH_intersect.json");
+    }
+}
+
 fn main() {
     support::print_env_banner("ablations");
     // cargo passes a trailing `--bench` flag to harness=false binaries;
@@ -196,5 +372,8 @@ fn main() {
     }
     if want("warps") {
         warps_sweep();
+    }
+    if want("intersect") {
+        intersect_matrix();
     }
 }

@@ -36,6 +36,20 @@ impl CliqueCount {
         }
     }
 
+    /// Oriented-mode counter: runs [`ExecutionPlan::clique_oriented`] on
+    /// an [`ordering::orient`](crate::graph::ordering::orient)ed directed
+    /// CSR (the runner asserts the pairing). Candidates stream
+    /// core-bounded out-lists, symmetry breaking is folded into the
+    /// orientation, and the TE pool shrinks to the out-degree caps.
+    pub fn oriented(k: usize) -> Self {
+        assert!(k >= 3, "clique counting needs k >= 3");
+        Self {
+            k,
+            plan: ExecutionPlan::clique_oriented(k),
+            compact: false,
+        }
+    }
+
     /// Re-enable the Compact phase (ablation measurement only).
     pub fn with_compact(mut self) -> Self {
         self.compact = true;
@@ -45,7 +59,11 @@ impl CliqueCount {
 
 impl GpmAlgorithm for CliqueCount {
     fn name(&self) -> &str {
-        "clique_counting"
+        if self.plan.oriented {
+            "clique_counting_oriented"
+        } else {
+            "clique_counting"
+        }
     }
 
     fn k(&self) -> usize {
@@ -150,6 +168,25 @@ mod tests {
         let g = generators::grid(4, 4); // max degree 4, many degree-2 corners
         let r = Runner::run(&g, &q, &cfg());
         assert_eq!(r.count, brute_cliques(&g, 4));
+    }
+
+    #[test]
+    fn oriented_matches_brute_force_under_any_relabel() {
+        use crate::graph::ordering;
+        for seed in 0..4 {
+            let g = generators::erdos_renyi(28, 0.35, seed);
+            for k in 3..=5 {
+                let want = brute_cliques(&g, k);
+                for relabeled in
+                    [g.clone(), ordering::degeneracy_order(&g), ordering::degree_order(&g)]
+                {
+                    let o = ordering::orient(&relabeled);
+                    let r = Runner::run(&o, &CliqueCount::oriented(k), &cfg());
+                    assert_eq!(r.count, want, "seed={seed} k={k} {}", o.name());
+                    assert!(r.fault.is_none());
+                }
+            }
+        }
     }
 
     #[test]

@@ -44,6 +44,11 @@ const SPECS: &[Spec] = &[
         key: &["dataset", "app", "pattern", "path"],
         metrics: &["sim_time"],
     },
+    Spec {
+        file: "BENCH_intersect.json",
+        key: &["dataset", "app", "ordering", "strategy"],
+        metrics: &["sim_time"],
+    },
 ];
 
 // ---------------------------------------------------------------------

@@ -9,7 +9,8 @@ use anyhow::{anyhow, Result};
 
 use crate::balance::LbConfig;
 use crate::cli::Args;
-use crate::engine::EngineConfig;
+use crate::engine::{EngineConfig, IntersectStrategy};
+use crate::graph::ordering::{self, OrderingKind};
 use crate::graph::{generators, loaders, CsrGraph};
 use crate::multi::{Interconnect, Partition};
 
@@ -96,8 +97,28 @@ pub fn apply_labels(g: &mut CsrGraph, args: &Args) -> Result<()> {
     }
 }
 
+/// Apply the CLI's `--ordering none|degree|degeneracy|random` relabel to
+/// a loaded graph (`random` is seeded by `--seed`). Orderings permute
+/// vertex ids (labels travel with their vertices), so every subgraph
+/// count is invariant — property-tested in
+/// `tests/integration_orderings.rs`. Unknown values are a parse error
+/// carrying the ordering vocabulary, distinct from `--intersect`'s.
+pub fn apply_ordering(g: &mut CsrGraph, args: &Args) -> Result<()> {
+    let kind: OrderingKind = match args.get("ordering") {
+        None => return Ok(()),
+        Some(v) => v.parse()?,
+    };
+    if kind == OrderingKind::None {
+        return Ok(());
+    }
+    let seed: u64 = args.parse_or("seed", 1)?;
+    *g = ordering::apply(g, kind, seed);
+    Ok(())
+}
+
 /// Build an `EngineConfig` from CLI args:
 /// `--warps N --threads N --lb --lb-threshold F --timeout SECS
+///  --intersect auto|merge|bisect|bitmap
 ///  --devices N --partition round-robin|degree-aware
 ///  --interconnect pcie|nvlink --epoch-segments N`.
 pub fn engine_config(args: &Args, default_lb_threshold: f64) -> Result<EngineConfig> {
@@ -117,6 +138,12 @@ pub fn engine_config(args: &Args, default_lb_threshold: f64) -> Result<EngineCon
     if timeout > 0.0 {
         cfg.time_limit = Some(Duration::from_secs_f64(timeout));
     }
+    // parsed explicitly (not parse_or) so the strategy vocabulary reaches
+    // the user instead of a generic bad-value message
+    cfg.intersect = match args.get("intersect") {
+        None => IntersectStrategy::default(),
+        Some(v) => v.parse()?,
+    };
     cfg.devices = args.parse_or("devices", cfg.devices)?;
     cfg.partition = args.parse_or("partition", Partition::default())?;
     cfg.interconnect = args.parse_or("interconnect", Interconnect::default())?;
@@ -196,6 +223,47 @@ mod tests {
         assert!(cfg2.lb.is_none());
         assert!(cfg2.time_limit.is_none());
         assert_eq!(cfg2.devices, 1);
+    }
+
+    #[test]
+    fn engine_config_intersect_args() {
+        assert_eq!(engine_config(&args(&[]), 0.4).unwrap().intersect, IntersectStrategy::Auto);
+        for (v, want) in [
+            ("auto", IntersectStrategy::Auto),
+            ("merge", IntersectStrategy::Merge),
+            ("bisect", IntersectStrategy::Bisect),
+            ("bitmap", IntersectStrategy::Bitmap),
+        ] {
+            assert_eq!(engine_config(&args(&["--intersect", v]), 0.4).unwrap().intersect, want);
+        }
+        let err = format!("{:#}", engine_config(&args(&["--intersect", "zipper"]), 0.4).unwrap_err());
+        assert!(err.contains("unknown intersect strategy"), "{err}");
+    }
+
+    #[test]
+    fn apply_ordering_relabels_and_rejects_unknown() {
+        let base = load_graph("ba:80,3", 1.0, 7).unwrap();
+        // none / absent: untouched
+        let mut g = base.clone();
+        apply_ordering(&mut g, &args(&[])).unwrap();
+        assert_eq!(g.adjacency(), base.adjacency());
+        apply_ordering(&mut g, &args(&["--ordering", "none"])).unwrap();
+        assert_eq!(g.adjacency(), base.adjacency());
+        // degeneracy: structure-preserving relabel
+        let mut gd = base.clone();
+        apply_ordering(&mut gd, &args(&["--ordering", "degeneracy"])).unwrap();
+        assert_eq!(gd.num_edges(), base.num_edges());
+        // random is seeded by --seed: same seed, same relabel
+        let mut r1 = base.clone();
+        let mut r2 = base.clone();
+        apply_ordering(&mut r1, &args(&["--ordering", "random", "--seed", "9"])).unwrap();
+        apply_ordering(&mut r2, &args(&["--ordering", "random", "--seed", "9"])).unwrap();
+        assert_eq!(r1.adjacency(), r2.adjacency());
+        // unknown value: the ordering vocabulary, not --intersect's
+        let mut gx = base.clone();
+        let err =
+            format!("{:#}", apply_ordering(&mut gx, &args(&["--ordering", "zorder"])).unwrap_err());
+        assert!(err.contains("unknown ordering"), "{err}");
     }
 
     #[test]

@@ -62,17 +62,27 @@ pub struct TeArena {
 }
 
 impl TeArena {
-    /// Slab capacities for a run on `g`, warp-load rounded: level `l`
-    /// extends a prefix of `l + 1` vertices, so its extensions are at
-    /// most the union of `l + 1` neighborhoods — bounded by
-    /// `(l+1) * max_degree` and by `|V| - 1` (extensions exclude the
-    /// traversal itself). Single source of truth for both the real
-    /// allocation and the allocation-free size query.
-    fn run_level_caps(g: &CsrGraph, k: usize) -> Vec<usize> {
+    /// Slab capacities for a run on `g`, warp-load rounded.
+    ///
+    /// Unplanned (`planned = false`): level `l` extends a prefix of
+    /// `l + 1` vertices, so its extensions are at most the union of
+    /// `l + 1` neighborhoods — bounded by `(l+1) * max_degree` and by
+    /// `|V| - 1` (extensions exclude the traversal itself).
+    ///
+    /// Planned (`planned = true`): `extend_planned` candidates are a
+    /// subset of *one* adjacency list (the streamed source), so every
+    /// level is bounded by `max_degree` alone. On an `orient()`ed
+    /// directed CSR that is the max *out*-degree — core-bounded after a
+    /// degeneracy relabel — which is what shrinks the oriented TE pool.
+    ///
+    /// Single source of truth for both the real allocation and the
+    /// allocation-free size queries.
+    fn run_level_caps(g: &CsrGraph, k: usize, planned: bool) -> Vec<usize> {
         let n = g.num_vertices();
         (0..k.saturating_sub(1))
             .map(|l| {
-                ((l + 1) * g.max_degree())
+                let lists = if planned { 1 } else { l + 1 };
+                (lists * g.max_degree())
                     .min(n.saturating_sub(1))
                     .max(1)
                     .div_ceil(WARP_SIZE)
@@ -81,11 +91,47 @@ impl TeArena {
             .collect()
     }
 
+    /// Device byte address right after `g`'s CSR arrays, segment-aligned —
+    /// where the pool sits in the flat device address space.
+    fn pool_base(g: &CsrGraph) -> usize {
+        g.memory_bytes().div_ceil(SEGMENT_BYTES) * SEGMENT_BYTES
+    }
+
+    /// Arena for an *unplanned* run (union-of-neighborhoods slab caps).
     pub fn for_graph(g: &CsrGraph, k: usize, num_warps: usize, layout: ExtLayout) -> Self {
-        // The pool sits right after the CSR arrays in the flat device
-        // address space, aligned to a transaction segment.
-        let base_addr = g.memory_bytes().div_ceil(SEGMENT_BYTES) * SEGMENT_BYTES;
-        Self::new(k, num_warps, &Self::run_level_caps(g, k), base_addr, layout)
+        Self::new(k, num_warps, &Self::run_level_caps(g, k, false), Self::pool_base(g), layout)
+    }
+
+    /// Arena for a *planned* run: one-list slab caps (see
+    /// [`run_level_caps`](Self::run_level_caps)).
+    pub fn for_plan(g: &CsrGraph, k: usize, num_warps: usize, layout: ExtLayout) -> Self {
+        Self::new(k, num_warps, &Self::run_level_caps(g, k, true), Self::pool_base(g), layout)
+    }
+
+    /// The arena for one engine run: planned or unplanned slab caps per
+    /// [`run_level_caps`](Self::run_level_caps), optionally clamped by
+    /// the `EngineConfig::ext_slab_cap` **ceiling** (`derived.min(cap)`
+    /// per level — a generous ceiling never inflates the pool). A
+    /// ceiling too small for the graph surfaces as
+    /// `EngineError::SlabOverflow` through `RunReport::fault` instead of
+    /// a mid-phase panic. Single construction path for `Runner::run` and
+    /// `DeviceFleet`, so single- and multi-device slab sizing cannot
+    /// drift apart.
+    pub fn for_run(
+        g: &CsrGraph,
+        k: usize,
+        num_warps: usize,
+        layout: ExtLayout,
+        ext_slab_cap: Option<usize>,
+        planned: bool,
+    ) -> Self {
+        let mut caps = Self::run_level_caps(g, k, planned);
+        if let Some(cap) = ext_slab_cap {
+            for c in caps.iter_mut() {
+                *c = (*c).min(cap.max(1));
+            }
+        }
+        Self::new(k, num_warps, &caps, Self::pool_base(g), layout)
     }
 
     pub fn new(
@@ -170,11 +216,21 @@ impl TeArena {
         self.buf.len() * std::mem::size_of::<VertexId>()
     }
 
-    /// What [`memory_bytes`](Self::memory_bytes) would be for this run
-    /// shape, without allocating the pool (memory ablations sweep k at
-    /// paper-scale warp counts — hundreds of MB — just to read the size).
+    /// What [`memory_bytes`](Self::memory_bytes) would be for an
+    /// *unplanned* run shape, without allocating the pool (memory
+    /// ablations sweep k at paper-scale warp counts — hundreds of MB —
+    /// just to read the size).
     pub fn pool_bytes(g: &CsrGraph, k: usize, num_warps: usize) -> usize {
-        Self::run_level_caps(g, k).iter().sum::<usize>()
+        Self::run_level_caps(g, k, false).iter().sum::<usize>()
+            * num_warps
+            * std::mem::size_of::<VertexId>()
+    }
+
+    /// [`pool_bytes`](Self::pool_bytes) for a *planned* run shape —
+    /// one-list caps; on an oriented CSR this is the core-bounded pool
+    /// the intersect ablation reports.
+    pub fn plan_pool_bytes(g: &CsrGraph, k: usize, num_warps: usize) -> usize {
+        Self::run_level_caps(g, k, true).iter().sum::<usize>()
             * num_warps
             * std::mem::size_of::<VertexId>()
     }
@@ -266,6 +322,41 @@ mod tests {
         assert_eq!(a.memory_bytes(), 2 * 3 * 32 * 4);
         // the allocation-free size query agrees with the real pool
         assert_eq!(TeArena::pool_bytes(&g, 4, 2), a.memory_bytes());
+    }
+
+    #[test]
+    fn planned_caps_are_one_list_bounded() {
+        // BA(120,4): hub degrees well above the mean, so the one-list
+        // planned bound undercuts the union-of-neighborhoods bound at
+        // the deeper levels (where unplanned caps scale with l + 1)
+        let g = generators::barabasi_albert(120, 4, 2);
+        let planned = TeArena::for_plan(&g, 5, 2, ExtLayout::Flat);
+        let unplanned = TeArena::for_graph(&g, 5, 2, ExtLayout::Flat);
+        let one_list = g.max_degree().min(g.num_vertices() - 1).max(1).div_ceil(WARP_SIZE) * WARP_SIZE;
+        assert!(planned.caps.iter().all(|&c| c == one_list), "{:?}", planned.caps);
+        assert!(planned.memory_bytes() < unplanned.memory_bytes());
+        assert_eq!(TeArena::plan_pool_bytes(&g, 5, 2), planned.memory_bytes());
+        // oriented CSR: caps shrink again with the core-bounded out-degree
+        let o = crate::graph::ordering::orient(&crate::graph::ordering::degeneracy_order(&g));
+        assert!(o.max_degree() < g.max_degree());
+        assert!(TeArena::plan_pool_bytes(&o, 5, 2) <= planned.memory_bytes());
+    }
+
+    #[test]
+    fn for_run_cap_is_a_ceiling_not_an_override() {
+        let g = generators::star(200); // hub degree 200: derived planned cap 224
+        let derived = TeArena::for_run(&g, 4, 2, ExtLayout::Flat, None, true);
+        // a generous ceiling leaves the derived caps untouched
+        let roomy = TeArena::for_run(&g, 4, 2, ExtLayout::Flat, Some(1 << 20), true);
+        assert_eq!(roomy.caps, derived.caps);
+        assert_eq!(roomy.memory_bytes(), derived.memory_bytes());
+        // a tight ceiling clamps every level (then warp-load rounds)
+        let tight = TeArena::for_run(&g, 4, 2, ExtLayout::Flat, Some(40), true);
+        assert!(tight.caps.iter().all(|&c| c == 64), "{:?}", tight.caps);
+        assert!(tight.memory_bytes() < derived.memory_bytes());
+        // planned=false reproduces the unplanned derivation
+        let unplanned = TeArena::for_run(&g, 4, 2, ExtLayout::Flat, None, false);
+        assert_eq!(unplanned.caps, TeArena::for_graph(&g, 4, 2, ExtLayout::Flat).caps);
     }
 
     #[test]

@@ -23,9 +23,10 @@ use crate::canon::bitmap::MAX_K;
 use crate::graph::{CsrGraph, VertexId};
 use crate::vgpu::{WarpProfiler, WARP_SIZE};
 
+use super::intersect::{bisect_steps, IntersectChoice};
 use super::runner::SharedRun;
 use super::te::{Te, INVALID_V};
-use super::Seed;
+use super::{EngineError, Seed};
 
 /// Per-thread scratch: an epoch-stamped membership array over vertex ids,
 /// used by Extend for dedup/traversal-exclusion in O(1) per candidate.
@@ -165,6 +166,27 @@ impl<'a> WarpContext<'a> {
         }
     }
 
+    /// Charge the coalesced read of `v`'s whole adjacency list: one warp
+    /// load per 32-word chunk from its real CSR address (the merge and
+    /// bitmap-build streams of the intersection layer).
+    fn charge_adj_stream(&mut self, v: VertexId) {
+        let deg = self.g.degree(v);
+        let mut off = 0usize;
+        while off < deg {
+            let words = WARP_SIZE.min(deg - off);
+            self.prof.gld_contiguous(self.g.adj_address(v, off), words);
+            off += words;
+        }
+    }
+
+    /// Record the run's slab-overflow fault and raise the stop flag so
+    /// every warp parks at its next `control()`; the runner surfaces the
+    /// fault as `RunReport::fault` / an `Err` from `Runner::try_run`.
+    fn raise_slab_fault(&mut self, level: usize, cap: usize) {
+        let _ = self.shared.fault.set(EngineError::SlabOverflow { level, cap });
+        self.shared.stop.store(true, Ordering::Relaxed);
+    }
+
     // ------------------------------------------------------------------
     // [CT] Control: keep the workflow alive while traversals remain.
     // ------------------------------------------------------------------
@@ -255,7 +277,7 @@ impl<'a> WarpContext<'a> {
         // SAFETY: see `ext_items_mut` — exclusive slab, phase-local use.
         let out = unsafe { std::slice::from_raw_parts_mut(ptr, cap) };
         let mut n = 0usize;
-        for &v in &trav[start..end] {
+        'sources: for &v in &trav[start..end] {
             self.prof.sisd(); // broadcast vertex id (Alg 2 line 4)
             let adj = self.g.neighbors(v);
             let mut offset = 0usize;
@@ -275,14 +297,10 @@ impl<'a> WarpContext<'a> {
                 for &e in chunk {
                     if !self.scratch.seen(e) {
                         self.scratch.mark(e);
-                        assert!(
-                            n < out.len(),
-                            "extension slab overflow at level {level} (cap {}): arena caps \
-                             are degree-derived and cannot overflow, but standalone TEs \
-                             default to a small slab — use Te::standalone(k, cap) sized \
-                             for the graph",
-                            out.len()
-                        );
+                        if n >= out.len() {
+                            self.raise_slab_fault(level, out.len());
+                            break 'sources;
+                        }
                         out[n] = e;
                         n += 1;
                     }
@@ -302,11 +320,16 @@ impl<'a> WarpContext<'a> {
     // neighborhood and leaves pruning to downstream filters, the planned
     // variant generates exactly the candidates a pattern-aware system
     // would: the intersection of the matched backward-neighbor adjacency
-    // lists, streamed from the smallest list (the others are cache-hot
-    // bisect probes, the Filter probe calibration), sliced at the
+    // lists, streamed from the smallest list and sliced at the
     // symmetry-breaking lower bound so pruned candidates are never
-    // materialized. The vGPU charge covers only the intersected lists —
-    // this is the plan layer's whole modeled-time win (benches/plans.rs).
+    // materialized. How the *other* backward lists are intersected is the
+    // level's `IntersectChoice` (engine/intersect.rs), resolved at plan
+    // time: cache-hot bisect probes (the incumbent), coalesced lockstep
+    // merge streams, or a per-warp bitmap LUT of the densest list. The
+    // candidate set is identical under every choice — only the charged
+    // traffic differs (the ablations bench asserts both halves). The
+    // vGPU charge covers only the intersected lists — this is the plan
+    // layer's whole modeled-time win (benches/plans.rs).
     // Returns true when extensions were (newly) generated.
     // ------------------------------------------------------------------
     pub fn extend_planned(&mut self, plan: &crate::plan::ExecutionPlan) -> bool {
@@ -323,17 +346,24 @@ impl<'a> WarpContext<'a> {
         let mut trav = [INVALID_V; MAX_K];
         trav[..len].copy_from_slice(self.te.traversal());
         // source: the matched backward neighbor with the smallest
-        // adjacency list — the one list this phase streams in full
+        // adjacency list — the one list this phase streams in full.
+        // Degrees are a device array: the compare loop charges one
+        // cache-hot transaction per compared list on top of the broadcast
+        // compares (the running min stays in a register).
         let mut src = backward[0];
-        for &b in &backward[1..] {
-            self.prof.sisd(); // broadcast degree compare
-            if self.g.degree(trav[b]) < self.g.degree(trav[src]) {
-                src = b;
+        if backward.len() > 1 {
+            self.prof.gld_raw(backward.len() as u64);
+            for &b in &backward[1..] {
+                self.prof.sisd(); // broadcast degree compare
+                if self.g.degree(trav[b]) < self.g.degree(trav[src]) {
+                    src = b;
+                }
             }
         }
         // all `match[a] < match[pos]` restrictions collapse to one lower
         // bound; the sorted source list is sliced there (one bisect), so
-        // symmetry breaking costs nothing per candidate
+        // symmetry breaking costs nothing per candidate. Oriented plans
+        // carry no restrictions at all — the orientation is the bound.
         let mut lb: Option<VertexId> = None;
         for &(a, b) in &plan.restrictions {
             if b == len {
@@ -357,6 +387,70 @@ impl<'a> WarpContext<'a> {
             None => 0,
         };
         let nprobe = (backward.len() - 1) as u64;
+        // Per-level intersection strategy (plan-time choice; single-list
+        // levels have nothing to intersect and skip all of this). The
+        // per-chunk probe charges and any per-entry stream/build charges
+        // are derived here once. An empty sliced source generates no
+        // candidates, so the merge/bitmap per-entry streams are skipped
+        // too — a warp knows the slice is empty before fetching anything.
+        let mut probe_insts = 0u64; // lockstep probe steps per chunk
+        let mut probe_glds = 0u64; // cache-hot transactions per chunk
+        if nprobe > 0 && start < adj.len() {
+            match self.shared.intersect.choice(len) {
+                // one cache-hot transaction + one lockstep bisect
+                // (bisect_steps(d) compare steps) per remaining list per
+                // chunk — the Filter probe calibration
+                IntersectChoice::Bisect => {
+                    for &b in backward.iter() {
+                        if b != src {
+                            probe_insts += bisect_steps(self.g.degree(trav[b]));
+                        }
+                    }
+                    probe_glds = nprobe;
+                }
+                // stream every remaining list once, coalesced, and
+                // two-pointer-merge it against the sliced source; chunk
+                // probes are then register ANDs of the merged flags
+                IntersectChoice::Merge => {
+                    let sliced = adj.len() - start;
+                    for &b in backward.iter() {
+                        if b != src {
+                            self.charge_adj_stream(trav[b]);
+                            self.prof.simd_n(
+                                ((sliced + self.g.degree(trav[b])) as u64)
+                                    .div_ceil(WARP_SIZE as u64)
+                                    .max(1),
+                            );
+                        }
+                    }
+                    probe_insts = nprobe;
+                }
+                // build the binary-encoded neighborhood of the densest
+                // remaining list into shared memory once per level entry
+                // (coalesced stream + one set-bit step per chunk); its
+                // probes cost one instruction and zero transactions, the
+                // other lists stay bisect probes
+                IntersectChoice::Bitmap => {
+                    let dense = backward
+                        .iter()
+                        .copied()
+                        .filter(|&b| b != src)
+                        .max_by_key(|&b| self.g.degree(trav[b]))
+                        .expect("nprobe > 0");
+                    self.charge_adj_stream(trav[dense]);
+                    self.prof.simd_n(
+                        (self.g.degree(trav[dense]) as u64).div_ceil(WARP_SIZE as u64).max(1),
+                    );
+                    probe_insts = 1;
+                    for &b in backward.iter() {
+                        if b != src && b != dense {
+                            probe_insts += bisect_steps(self.g.degree(trav[b]));
+                        }
+                    }
+                    probe_glds = nprobe - 1;
+                }
+            }
+        }
         // labeled plans filter candidates by the level's label at
         // generation time: one broadcast compare per chunk plus one
         // label-array read per candidate lane (the labels array is
@@ -368,20 +462,21 @@ impl<'a> WarpContext<'a> {
         let out = unsafe { std::slice::from_raw_parts_mut(ptr, cap) };
         let mut n = 0usize;
         let mut offset = start;
-        while offset < adj.len() {
+        'chunks: while offset < adj.len() {
             let chunk = &adj[offset..adj.len().min(offset + WARP_SIZE)];
             // coalesced read of the sliced source list — the only full
-            // adjacency stream this phase charges
+            // adjacency stream the per-chunk loop charges
             self.prof
                 .gld_contiguous(self.g.adj_address(src_v, offset), chunk.len());
             // lockstep traversal-membership scan
             self.prof.simd_n(len as u64);
-            // lockstep intersection probes into the other backward lists:
-            // one broadcast compare + one cache-hot transaction per list
-            // per chunk (see filter's probe charging note)
+            // lockstep intersection of the other backward lists, charged
+            // per the level's resolved strategy (derived above)
             if nprobe > 0 {
-                self.prof.simd_n(nprobe);
-                self.prof.gld_raw(nprobe);
+                self.prof.simd_n(probe_insts);
+                if probe_glds > 0 {
+                    self.prof.gld_raw(probe_glds);
+                }
             }
             if want_label.is_some() {
                 self.prof.simd_n(1); // broadcast label compare
@@ -401,13 +496,13 @@ impl<'a> WarpContext<'a> {
                         continue 'cand;
                     }
                 }
-                assert!(
-                    n < out.len(),
-                    "extension slab overflow at level {level} (cap {}): planned \
-                     extensions are a subset of one adjacency list and cannot exceed \
-                     degree-derived arena caps — standalone TEs need Te::standalone(k, cap)",
-                    out.len()
-                );
+                if n >= out.len() {
+                    // structured fault instead of a mid-phase panic: the
+                    // tight planned/oriented caps (or an explicit
+                    // ext_slab_cap ceiling) must surface as Err
+                    self.raise_slab_fault(level, out.len());
+                    break 'chunks;
+                }
                 out[n] = e;
                 n += 1;
             }
@@ -943,9 +1038,128 @@ mod tests {
         let before = c.prof.gld_transactions;
         assert!(c.extend_planned(&plan));
         let planned_gld = c.prof.gld_transactions - before;
-        // leaf list is 1 word (1 transaction) + 1 probe + 1 bisect: far
-        // below the hub's 40-word stream (2+ transactions of 32 words)
-        assert!(planned_gld <= 3, "charged {planned_gld} transactions");
+        // Exact breakdown — far below the hub's 40-word stream:
+        //   2  source selection: one cache-hot degree read per compared
+        //      list (the device degree array is read, so it is charged)
+        //   1  lower-bound bisect of the cached source list
+        //   0  stream/probes: the leaf list sliced at lb > 1 is empty
+        assert_eq!(planned_gld, 3, "charged {planned_gld} transactions");
         assert_eq!(c.te.live_count(c.te.cur_level()), 0); // no triangle in a star
+    }
+
+    #[test]
+    fn intersect_strategies_share_candidates_but_not_charges() {
+        use crate::engine::intersect::{IntersectPlan, IntersectStrategy};
+        // skewed triangle closure: probing the 199-word hub list costs 1
+        // cache-hot transaction per source chunk under bisect, while
+        // merge (and the bitmap build) must stream it coalesced —
+        // ceil(199/32) = 7 transactions, by design
+        let g = {
+            // hub 0 adjacent to everyone; the 1-2 edge closes one triangle
+            let mut lists = vec![(1..200).collect::<Vec<u32>>()];
+            for v in 1..200u32 {
+                let mut l = vec![0];
+                if v == 1 {
+                    l.push(2);
+                }
+                if v == 2 {
+                    l.push(1);
+                }
+                lists.push(l);
+            }
+            CsrGraph::from_adjacency(lists, "hub")
+        };
+        let plan = crate::plan::ExecutionPlan::clique(3);
+        let mut results = Vec::new();
+        for strategy in [
+            IntersectStrategy::Bisect,
+            IntersectStrategy::Merge,
+            IntersectStrategy::Bitmap,
+            IntersectStrategy::Auto,
+        ] {
+            let mut h = harness(&g, 3);
+            h.4.intersect =
+                IntersectPlan::build(&plan, &g, &crate::vgpu::CostModel::default(), strategy);
+            h.1.push_back(vec![0]);
+            let mut c = ctx!(&g, h);
+            assert!(c.control());
+            c.te.push_vertex(1, &g, false);
+            assert!(c.extend_planned(&plan));
+            let mut items = c.te.ext_vec(c.te.cur_level());
+            items.sort_unstable();
+            assert_eq!(items, vec![2], "{strategy:?}: candidate sets are strategy-invariant");
+            results.push((strategy, c.prof.gld_transactions, c.prof.insts));
+        }
+        let gld = |i: usize| results[i].1;
+        // bisect: 1-chunk sliced source, 1 cache-hot hub probe. merge:
+        // the full hub stream replaces the probe — strictly more traffic
+        // on skew (this is exactly what `auto`'s size-biased mean avoids)
+        assert!(gld(1) > gld(0), "merge must stream the hub list: {results:?}");
+        // bitmap builds its LUT from the same hub stream and drops the
+        // probe transaction; with one probe list its total equals merge's
+        assert_eq!(gld(1), gld(2), "{results:?}");
+    }
+
+    #[test]
+    fn bitmap_lut_trades_probe_instructions_for_a_build_stream() {
+        use crate::engine::intersect::{IntersectPlan, IntersectStrategy};
+        // balanced 79-word lists: bisect pays bisect_steps(79) = 7 lockstep
+        // compare steps per chunk to probe the other list; the LUT pays a
+        // one-time build (stream + set-bit steps) and then 1 instruction
+        // per chunk with zero probe transactions
+        let g = generators::complete(80);
+        let plan = crate::plan::ExecutionPlan::clique(3);
+        let mut per_strategy = Vec::new();
+        for strategy in [IntersectStrategy::Bisect, IntersectStrategy::Bitmap] {
+            let mut h = harness(&g, 3);
+            h.4.intersect =
+                IntersectPlan::build(&plan, &g, &crate::vgpu::CostModel::default(), strategy);
+            h.1.push_back(vec![0]);
+            let mut c = ctx!(&g, h);
+            assert!(c.control());
+            c.te.push_vertex(1, &g, false);
+            assert!(c.extend_planned(&plan));
+            assert_eq!(c.te.live_count(c.te.cur_level()), 78);
+            per_strategy.push((c.prof.insts, c.prof.gld_transactions));
+        }
+        let (bisect, bitmap) = (per_strategy[0], per_strategy[1]);
+        assert!(
+            bitmap.0 < bisect.0,
+            "LUT probes must undercut repeated deep bisects: {per_strategy:?}"
+        );
+        assert_ne!(bitmap.1, bisect.1, "build stream vs probe transactions must differ");
+    }
+
+    #[test]
+    fn slab_overflow_faults_instead_of_panicking() {
+        // a standalone TE sized far below the candidate count: the planned
+        // extend must record the structured fault, raise stop, and return
+        // without panicking
+        let g = generators::complete(60);
+        let plan = crate::plan::ExecutionPlan::clique(3);
+        let mut h = harness(&g, 3);
+        h.0 = Te::standalone(3, 8);
+        h.1.push_back(vec![0]);
+        let mut c = ctx!(&g, h);
+        assert!(c.control());
+        c.te.push_vertex(1, &g, false);
+        assert!(c.extend_planned(&plan));
+        assert_eq!(
+            c.shared.fault.get(),
+            Some(&crate::engine::EngineError::SlabOverflow { level: 1, cap: 8 })
+        );
+        assert!(c.shared.stop.load(Ordering::Relaxed), "fault must raise the stop flag");
+        assert!(!c.control(), "stopped warp must park at control()");
+        // the unplanned extend faults through the same path
+        let mut h2 = harness(&g, 3);
+        h2.0 = Te::standalone(3, 8);
+        h2.1.push_back(vec![0]);
+        let mut c2 = ctx!(&g, h2);
+        assert!(c2.control());
+        assert!(c2.extend(0, 1));
+        assert!(matches!(
+            c2.shared.fault.get(),
+            Some(crate::engine::EngineError::SlabOverflow { .. })
+        ));
     }
 }

@@ -1,0 +1,342 @@
+//! Adaptive set-intersection strategies for planned candidate generation
+//! (G²Miner's per-level kernel selection, gMatch's fine-grained strategy
+//! choice, mapped onto the vGPU charge model).
+//!
+//! `WarpContext::extend_planned` generates the candidates of a level as
+//! the intersection of the matched backward adjacency lists. The
+//! *candidate set* is strategy-invariant — what changes is the memory
+//! traffic a GPU would pay to compute it, and that is exactly what the
+//! vGPU model charges. Three strategies are modeled:
+//!
+//! - **merge** — coalesced lockstep merge: every backward list is
+//!   streamed in full (32-word warp loads from its real CSR address) and
+//!   two-pointer-merged against the sliced source. Per-chunk probes then
+//!   cost one register AND. Pays `ceil(d/32)` transactions per probed
+//!   list once per level entry; wins when the lists are balanced and the
+//!   source has many chunks to probe.
+//! - **bisect** — the incumbent: stream only the smallest list, charge
+//!   one cache-hot transaction plus `floor(log2 d) + 1` lockstep compare
+//!   steps per remaining list per 32-candidate chunk (the Filter probe
+//!   calibration, EXPERIMENTS.md §Table V). Wins on skewed lists, where
+//!   streaming a hub-sized list to save per-chunk probes is a bad trade.
+//! - **bitmap** — a per-warp binary-encoded neighborhood LUT of the
+//!   *densest* backward vertex, built once per level entry (stream the
+//!   list + one set-bit step per chunk into shared memory); its probes
+//!   then cost one instruction and zero transactions. The remaining
+//!   lists stay bisect probes. Wins when the deepest bisect is repeated
+//!   over many source chunks.
+//!
+//! `auto` resolves a per-level [`IntersectChoice`] at **plan time** from
+//! degree statistics and the [`CostModel`] constants — the choice is a
+//! table lookup per level entry, never a per-candidate branch. The
+//! estimator evaluates the same three charge formulas the engine applies,
+//! at expected list sizes: probed lists use the size-biased mean degree
+//! `Σd²/Σd` (a probed vertex is a traversal member, and traversal
+//! membership is degree-biased — on power-law graphs this is what makes
+//! `auto` keep bisect instead of streaming hubs), the streamed source
+//! uses the plain mean, halved when the level carries a symmetry
+//! lower-bound slice.
+
+use std::str::FromStr;
+
+use crate::graph::CsrGraph;
+use crate::plan::ExecutionPlan;
+use crate::vgpu::{CostModel, WARP_SIZE};
+
+/// CLI/engine-facing strategy selector (`--intersect`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum IntersectStrategy {
+    /// Per-level cost-model choice resolved at plan time (the default).
+    #[default]
+    Auto,
+    /// Lockstep merge: coalesced streams of every backward list.
+    Merge,
+    /// Stream the smallest list, cache-hot bisect probes into the rest.
+    Bisect,
+    /// Shared-memory neighborhood LUT of the densest backward vertex.
+    Bitmap,
+}
+
+impl FromStr for IntersectStrategy {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "auto" => Ok(IntersectStrategy::Auto),
+            "merge" => Ok(IntersectStrategy::Merge),
+            "bisect" => Ok(IntersectStrategy::Bisect),
+            "bitmap" => Ok(IntersectStrategy::Bitmap),
+            other => Err(anyhow::Error::msg(format!(
+                "unknown intersect strategy '{other}' (auto|merge|bisect|bitmap)"
+            ))),
+        }
+    }
+}
+
+/// The resolved intersection kernel for one matching level.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IntersectChoice {
+    Merge,
+    Bisect,
+    Bitmap,
+}
+
+/// Per-level intersection choices for one (plan, graph, cost model)
+/// binding, computed once per run by [`IntersectPlan::build`] and read by
+/// `extend_planned` as `choice(level)`. The empty default resolves every
+/// level to [`IntersectChoice::Bisect`] — the pre-intersect-layer
+/// behavior, which is what standalone `WarpContext` unit harnesses get.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct IntersectPlan {
+    choices: Vec<IntersectChoice>,
+}
+
+/// Lockstep bisect depth of a sorted list of `len` words: the warp's 32
+/// lanes each binary-search, divergence unions to `floor(log2 len) + 1`
+/// broadcast compare steps (>= 1) — the list's bit width.
+#[inline]
+pub fn bisect_steps(len: usize) -> u64 {
+    (usize::BITS - len.max(1).leading_zeros()) as u64
+}
+
+/// Expected list sizes feeding the `auto` estimator, derived once per
+/// graph. All in adjacency words.
+#[derive(Clone, Copy, Debug)]
+struct DegreeStats {
+    /// Plain mean degree (expected streamed-source size).
+    mean: f64,
+    /// Size-biased mean `Σd²/Σd` (expected degree of a traversal member,
+    /// i.e. of a probed / merged / LUT-encoded backward list).
+    biased: f64,
+}
+
+impl DegreeStats {
+    fn of(g: &CsrGraph) -> Self {
+        let n = g.num_vertices();
+        if n == 0 {
+            return Self { mean: 1.0, biased: 1.0 };
+        }
+        let mut sum = 0u64;
+        let mut sum2 = 0u64;
+        for v in 0..n {
+            let d = g.degree(v as u32) as u64;
+            sum += d;
+            sum2 += d * d;
+        }
+        let mean = (sum as f64 / n as f64).max(1.0);
+        let biased = if sum == 0 { 1.0 } else { (sum2 as f64 / sum as f64).max(1.0) };
+        Self { mean, biased }
+    }
+}
+
+#[inline]
+fn chunks(words: f64) -> f64 {
+    (words / WARP_SIZE as f64).ceil().max(1.0)
+}
+
+/// Estimated per-level-entry cycles of one strategy, mirroring the
+/// charges `extend_planned` applies (DESIGN.md §Intersection layer lists
+/// the derivation). `s` = expected sliced source words, `nprobe` =
+/// backward lists besides the source.
+fn estimate(
+    choice: IntersectChoice,
+    s: f64,
+    stats: &DegreeStats,
+    nprobe: usize,
+    cost: &CostModel,
+) -> f64 {
+    let np = nprobe as f64;
+    let c = chunks(s); // source chunks per level entry
+    let d = stats.biased; // probed/merged list size
+    let od = chunks(d);
+    let depth = bisect_steps(d as usize) as f64;
+    let (m, i) = (cost.mem_cycles, cost.cpi);
+    // streamed lists start at arbitrary CSR word offsets, so a 32-word
+    // chunk usually straddles two 128-byte segments: streams pay one
+    // extra transaction per list on top of their chunk count
+    match choice {
+        // per chunk: one cache-hot transaction + one lockstep bisect per list
+        IntersectChoice::Bisect => c * np * (m + depth * i),
+        // per entry: stream + two-pointer merge of every other list; per
+        // chunk: one register AND per list
+        IntersectChoice::Merge => np * ((od + 1.0) * m + chunks(s + d) * i) + c * np * i,
+        // per entry: stream + encode the densest list (expected max of
+        // `nprobe` size-biased draws ~ d * (1 + ln nprobe)); per chunk:
+        // one LUT instruction + bisect probes for the remaining lists
+        IntersectChoice::Bitmap => {
+            let dense = d * (1.0 + np.ln());
+            let bd = chunks(dense);
+            (bd + 1.0) * m + bd * i + c * (i + (np - 1.0) * (m + depth * i))
+        }
+    }
+}
+
+impl IntersectPlan {
+    /// Resolve the per-level choices for `plan` on `g`. Fixed strategies
+    /// map every multi-list level to themselves; `Auto` picks the
+    /// cheapest estimated strategy per level. Levels with a single
+    /// backward list have nothing to intersect and always resolve to
+    /// `Bisect` (all strategies degenerate to the plain source stream
+    /// there, so the choice is charge-neutral).
+    pub fn build(
+        plan: &ExecutionPlan,
+        g: &CsrGraph,
+        cost: &CostModel,
+        strategy: IntersectStrategy,
+    ) -> IntersectPlan {
+        let stats = DegreeStats::of(g);
+        let choices = (0..plan.k())
+            .map(|pos| {
+                let nb = plan.backward[pos].len();
+                if nb <= 1 {
+                    return IntersectChoice::Bisect;
+                }
+                match strategy {
+                    IntersectStrategy::Merge => IntersectChoice::Merge,
+                    IntersectStrategy::Bisect => IntersectChoice::Bisect,
+                    IntersectStrategy::Bitmap => IntersectChoice::Bitmap,
+                    IntersectStrategy::Auto => Self::auto_choice(plan, pos, nb, &stats, cost),
+                }
+            })
+            .collect();
+        IntersectPlan { choices }
+    }
+
+    fn auto_choice(
+        plan: &ExecutionPlan,
+        pos: usize,
+        nb: usize,
+        stats: &DegreeStats,
+        cost: &CostModel,
+    ) -> IntersectChoice {
+        // expected streamed-source size: the smallest of `nb` backward
+        // lists, halved again when a symmetry lower bound slices it
+        let mut s = (stats.mean / nb as f64).max(1.0);
+        if plan.restrictions.iter().any(|&(_, b)| b == pos) {
+            s = (s / 2.0).max(1.0);
+        }
+        let nprobe = nb - 1;
+        // deterministic preference on exact ties: Bisect, then Bitmap
+        [IntersectChoice::Bisect, IntersectChoice::Bitmap, IntersectChoice::Merge]
+            .into_iter()
+            .min_by(|&a, &b| {
+                estimate(a, s, stats, nprobe, cost)
+                    .partial_cmp(&estimate(b, s, stats, nprobe, cost))
+                    .expect("estimates are finite")
+            })
+            .expect("three candidates")
+    }
+
+    /// The choice for matching level `pos` (`Bisect` beyond the resolved
+    /// range — the default standalone-harness behavior).
+    #[inline]
+    pub fn choice(&self, pos: usize) -> IntersectChoice {
+        self.choices.get(pos).copied().unwrap_or(IntersectChoice::Bisect)
+    }
+
+    /// The resolved per-level table (diagnostics, the ablation banner).
+    pub fn choices(&self) -> &[IntersectChoice] {
+        &self.choices
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn parses_cli_names_with_distinct_errors() {
+        assert_eq!("auto".parse::<IntersectStrategy>().unwrap(), IntersectStrategy::Auto);
+        assert_eq!("merge".parse::<IntersectStrategy>().unwrap(), IntersectStrategy::Merge);
+        assert_eq!("bisect".parse::<IntersectStrategy>().unwrap(), IntersectStrategy::Bisect);
+        assert_eq!("bitmap".parse::<IntersectStrategy>().unwrap(), IntersectStrategy::Bitmap);
+        let err = "quadtree".parse::<IntersectStrategy>().unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("unknown intersect strategy"), "{msg}");
+        assert!(msg.contains("quadtree"), "{msg}");
+    }
+
+    #[test]
+    fn fixed_strategies_map_multi_list_levels_only() {
+        let g = generators::erdos_renyi(40, 0.3, 1);
+        let plan = ExecutionPlan::clique(4);
+        let cost = CostModel::default();
+        for (strategy, want) in [
+            (IntersectStrategy::Merge, IntersectChoice::Merge),
+            (IntersectStrategy::Bitmap, IntersectChoice::Bitmap),
+            (IntersectStrategy::Bisect, IntersectChoice::Bisect),
+        ] {
+            let ip = IntersectPlan::build(&plan, &g, &cost, strategy);
+            // levels 0 and 1 have <= 1 backward list: charge-neutral Bisect
+            assert_eq!(ip.choice(0), IntersectChoice::Bisect, "{strategy:?}");
+            assert_eq!(ip.choice(1), IntersectChoice::Bisect, "{strategy:?}");
+            assert_eq!(ip.choice(2), want, "{strategy:?}");
+            assert_eq!(ip.choice(3), want, "{strategy:?}");
+            // out-of-range reads fall back to Bisect
+            assert_eq!(ip.choice(9), IntersectChoice::Bisect, "{strategy:?}");
+        }
+    }
+
+    #[test]
+    fn auto_is_the_per_level_argmin_of_the_estimates() {
+        let cost = CostModel::default();
+        for g in [
+            generators::erdos_renyi(60, 0.2, 3),
+            generators::ASTROPH.scaled(0.02).generate(1),
+            generators::complete(24),
+        ] {
+            let plan = ExecutionPlan::clique(5);
+            let auto = IntersectPlan::build(&plan, &g, &cost, IntersectStrategy::Auto);
+            let stats = DegreeStats::of(&g);
+            for pos in 2..5 {
+                let nb = plan.backward[pos].len();
+                let mut s = (stats.mean / nb as f64).max(1.0);
+                if plan.restrictions.iter().any(|&(_, b)| b == pos) {
+                    s = (s / 2.0).max(1.0);
+                }
+                let got = estimate(auto.choice(pos), s, &stats, nb - 1, &cost);
+                for c in [IntersectChoice::Merge, IntersectChoice::Bisect, IntersectChoice::Bitmap]
+                {
+                    assert!(
+                        got <= estimate(c, s, &stats, nb - 1, &cost),
+                        "{}: pos {pos}: auto picked {:?}, {c:?} estimates cheaper",
+                        g.name(),
+                        auto.choice(pos)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn auto_is_deterministic() {
+        let g = generators::ASTROPH.scaled(0.02).generate(1);
+        let plan = ExecutionPlan::clique(6);
+        let cost = CostModel::default();
+        let a = IntersectPlan::build(&plan, &g, &cost, IntersectStrategy::Auto);
+        let b = IntersectPlan::build(&plan, &g, &cost, IntersectStrategy::Auto);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn size_biased_mean_exceeds_plain_mean_on_skew() {
+        // star: mean ~ 2, but a probed (edge-incident) vertex is the hub
+        // half the time — the biased mean must see it
+        let s = DegreeStats::of(&generators::star(40));
+        assert!(s.biased > 10.0 * s.mean.min(3.0), "biased {} mean {}", s.biased, s.mean);
+        // regular graph: no skew, the two coincide
+        let r = DegreeStats::of(&generators::cycle(30));
+        assert!((r.biased - r.mean).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bisect_steps_is_log2_ceilinged() {
+        assert_eq!(bisect_steps(0), 1);
+        assert_eq!(bisect_steps(1), 1);
+        assert_eq!(bisect_steps(2), 2);
+        assert_eq!(bisect_steps(31), 5);
+        assert_eq!(bisect_steps(32), 6);
+        assert_eq!(bisect_steps(1000), 10);
+    }
+}

@@ -28,6 +28,7 @@
 
 pub mod arena;
 pub mod context;
+pub mod intersect;
 pub mod runner;
 pub mod scheduler;
 pub mod segment;
@@ -35,10 +36,40 @@ pub mod te;
 
 pub use arena::{ExtLayout, TeArena};
 pub use context::{Aggregators, ThreadScratch, WarpContext};
+pub use intersect::{IntersectChoice, IntersectPlan, IntersectStrategy};
 pub use runner::{EngineConfig, RunReport, Runner, SharedRun, WarpState};
 pub use scheduler::{DriveOutcome, SchedulerConfig, SegmentRunner};
 pub use segment::{SegmentControl, UnitTable};
 pub use te::{Te, INVALID_V};
+
+/// Structured engine faults. Recorded once per run (`SharedRun::fault`),
+/// surfaced through `RunReport::fault` / [`Runner::try_run`] so a
+/// mis-sized extensions arena aborts the run with an `Err` instead of
+/// panicking mid-phase on a worker thread.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum EngineError {
+    /// An Extend outgrew its extensions slab. Arena caps derived by
+    /// `TeArena::for_graph`/`for_plan` cannot overflow; this fires for
+    /// an explicit `EngineConfig::ext_slab_cap` ceiling set too small,
+    /// or a standalone `Te` that needed `Te::standalone(k, cap)` sized
+    /// for the graph.
+    SlabOverflow { level: usize, cap: usize },
+}
+
+impl std::fmt::Display for EngineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EngineError::SlabOverflow { level, cap } => write!(
+                f,
+                "extension slab overflow at level {level} (cap {cap} words): the \
+                 extensions pool is smaller than the run needs — raise (or drop) \
+                 ext_slab_cap, or size standalone TEs with Te::standalone(k, cap)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
 
 /// A (possibly partial) traversal used as a unit of work: the initial
 /// seeds are single vertices; the load balancer migrates longer prefixes.

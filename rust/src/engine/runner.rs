@@ -10,7 +10,7 @@
 
 use std::collections::VecDeque;
 use std::sync::atomic::AtomicBool;
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 use std::time::{Duration, Instant};
 
 use crate::api::GpmAlgorithm;
@@ -24,10 +24,11 @@ use crate::vgpu::{CostModel, KernelMetrics, WarpProfiler};
 
 use super::arena::{ExtLayout, TeArena};
 use super::context::{Aggregators, StoredSubgraph, ThreadScratch, WarpContext};
+use super::intersect::{IntersectPlan, IntersectStrategy};
 use super::scheduler::{self, SchedulerConfig, SegmentRunner};
 use super::segment::{SegmentControl, UnitTable};
 use super::te::Te;
-use super::Seed;
+use super::{EngineError, Seed};
 
 /// State shared (read-only or atomically) by all warps of a run.
 pub struct SharedRun {
@@ -38,6 +39,13 @@ pub struct SharedRun {
     pub dict: Option<Arc<CanonDict>>,
     /// vGPU cost model (quantum accounting in `control`).
     pub cost: CostModel,
+    /// Per-level intersection choices for planned extends, resolved once
+    /// per run from (plan, graph, cost model, `EngineConfig::intersect`).
+    /// The empty default is Bisect everywhere (standalone harnesses).
+    pub intersect: IntersectPlan,
+    /// First structured fault of the run (slab overflow); raising it also
+    /// raises `stop`, and the runner surfaces it as `RunReport::fault`.
+    pub fault: OnceLock<EngineError>,
 }
 
 impl SharedRun {
@@ -48,6 +56,8 @@ impl SharedRun {
             stop: AtomicBool::new(false),
             dict,
             cost: CostModel::default(),
+            intersect: IntersectPlan::default(),
+            fault: OnceLock::new(),
         }
     }
 }
@@ -105,6 +115,18 @@ pub struct EngineConfig {
     /// Extensions-pool address model (Flat = the Fig 3 arena; Legacy = the
     /// pre-refactor scattered-vector model, kept for ablation).
     pub layout: ExtLayout,
+    /// Set-intersection strategy for planned extends (`--intersect`):
+    /// `Auto` resolves a per-level `IntersectChoice` at plan time from
+    /// degree statistics and the cost model; the fixed strategies pin
+    /// every multi-list level (ablation cells).
+    pub intersect: IntersectStrategy,
+    /// Per-level extensions-slab word **ceiling**: the graph-derived
+    /// caps are clamped to `derived.min(cap)` (`TeArena::for_run`), so a
+    /// generous value never inflates the pool. `None` (default) keeps
+    /// the derived caps, which cannot overflow; a ceiling set too small
+    /// surfaces as `EngineError::SlabOverflow` through
+    /// `RunReport::fault` / [`Runner::try_run`].
+    pub ext_slab_cap: Option<usize>,
     /// Work stealing between worker threads within a segment (off =
     /// static chunk partitioning, kept for ablation).
     pub steal: bool,
@@ -137,6 +159,8 @@ impl Default for EngineConfig {
             time_limit: None,
             quantum_cycles: 2.0e6, // ~1.4 ms of device time per round
             layout: ExtLayout::Flat,
+            intersect: IntersectStrategy::default(),
+            ext_slab_cap: None,
             steal: true,
             devices: 1,
             partition: Partition::default(),
@@ -175,6 +199,10 @@ pub struct RunReport {
     pub stored: Vec<StoredSubgraph>,
     pub metrics: KernelMetrics,
     pub timed_out: bool,
+    /// First structured engine fault of the run (`None` = clean). A
+    /// faulted run's counts are partial; [`Runner::try_run`] converts
+    /// this into an `Err`.
+    pub fault: Option<super::EngineError>,
 }
 
 /// The scheduler-facing view of an engine run: the warp table in a
@@ -283,6 +311,16 @@ pub struct Runner;
 
 impl Runner {
     pub fn run<A: GpmAlgorithm>(g: &CsrGraph, algo: &A, cfg: &EngineConfig) -> RunReport {
+        // Oriented plans enumerate over out-arcs: running one on an
+        // undirected graph double-counts, running a restricted plan on a
+        // directed CSR undercounts — both are wiring bugs, not data bugs.
+        if let Some(p) = algo.plan() {
+            assert_eq!(
+                p.oriented,
+                g.is_directed(),
+                "oriented plans take an ordering::orient()ed graph (and only them)"
+            );
+        }
         if cfg.devices > 1 {
             return DeviceFleet::new(cfg).run(g, algo);
         }
@@ -294,10 +332,23 @@ impl Runner {
         };
         let mut shared = SharedRun::new(k, algo.needs_edges(), dict);
         shared.cost = cfg.cost;
+        if let Some(p) = algo.plan() {
+            shared.intersect = IntersectPlan::build(p, g, &cfg.cost, cfg.intersect);
+        }
         let num_warps = cfg.warps.max(1);
 
         // Storage layer: one flat pool for every warp's extension slabs.
-        let mut arena = TeArena::for_graph(g, k, num_warps, cfg.layout);
+        // Planned runs generate subsets of one adjacency list per level,
+        // so their slabs shrink to the one-list bound (core-bounded on an
+        // oriented CSR); `ext_slab_cap` is a per-level ceiling on top.
+        let mut arena = TeArena::for_run(
+            g,
+            k,
+            num_warps,
+            cfg.layout,
+            cfg.ext_slab_cap,
+            algo.plan().is_some(),
+        );
         // SAFETY: `arena` lives (unmoved) to the end of this function and
         // the handles are dropped before it; per-warp exclusivity is the
         // scheduler's contract.
@@ -364,6 +415,11 @@ impl Runner {
                 if timed_out {
                     return SegmentControl::Done;
                 }
+                if shared.fault.get().is_some() {
+                    // faulted run: stop is re-cleared at each segment
+                    // start, so end the drive here instead of spinning
+                    return SegmentControl::Done;
+                }
                 if warps.iter().all(|w| w.finished) {
                     return SegmentControl::Done;
                 }
@@ -402,6 +458,22 @@ impl Runner {
             stored,
             metrics,
             timed_out: outcome.timed_out,
+            fault: shared.fault.get().cloned(),
+        }
+    }
+
+    /// [`Runner::run`] with structured faults turned into an `Err`: a
+    /// mis-sized extensions arena (`EngineConfig::ext_slab_cap`) aborts
+    /// with [`EngineError`] instead of returning partial counts.
+    pub fn try_run<A: GpmAlgorithm>(
+        g: &CsrGraph,
+        algo: &A,
+        cfg: &EngineConfig,
+    ) -> Result<RunReport, EngineError> {
+        let report = Self::run(g, algo, cfg);
+        match report.fault {
+            Some(f) => Err(f),
+            None => Ok(report),
         }
     }
 }
@@ -515,6 +587,65 @@ mod tests {
         let r = Runner::run(&g, &CliqueCount::new(5), &cfg);
         assert!(r.metrics.segments >= 2, "expected LB stops");
         assert_eq!(r.metrics.thread_spawns, 4, "pool must be persistent");
+    }
+
+    #[test]
+    fn intersect_strategy_does_not_change_counts() {
+        let g = generators::erdos_renyi(40, 0.3, 13);
+        let want = Runner::run(&g, &CliqueCount::new(4), &small_cfg()).count;
+        for strategy in [
+            IntersectStrategy::Merge,
+            IntersectStrategy::Bisect,
+            IntersectStrategy::Bitmap,
+            IntersectStrategy::Auto,
+        ] {
+            let cfg = EngineConfig { intersect: strategy, ..small_cfg() };
+            let r = Runner::run(&g, &CliqueCount::new(4), &cfg);
+            assert_eq!(r.count, want, "{strategy:?}");
+            assert!(r.fault.is_none(), "{strategy:?}");
+        }
+    }
+
+    #[test]
+    fn oriented_clique_runs_on_the_oriented_csr() {
+        use crate::graph::ordering;
+        let g = generators::erdos_renyi(36, 0.3, 5);
+        let want = Runner::run(&g, &CliqueCount::new(4), &small_cfg()).count;
+        let o = ordering::orient(&ordering::degeneracy_order(&g));
+        let r = Runner::run(&o, &CliqueCount::oriented(4), &small_cfg());
+        assert_eq!(r.count, want);
+        assert!(r.fault.is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "oriented plans take an ordering::orient()ed graph")]
+    fn oriented_plan_on_undirected_graph_is_rejected() {
+        let g = generators::complete(6);
+        let _ = Runner::run(&g, &CliqueCount::oriented(3), &small_cfg());
+    }
+
+    #[test]
+    fn undersized_slab_cap_faults_instead_of_panicking() {
+        // the 8-word cap rounds up to one 32-word warp load — still far
+        // below K64's 63 level-0 candidates, so the planned extend faults
+        let g = generators::complete(64);
+        let cfg = EngineConfig { ext_slab_cap: Some(8), ..small_cfg() };
+        let r = Runner::run(&g, &CliqueCount::new(4), &cfg);
+        assert!(
+            matches!(r.fault, Some(crate::engine::EngineError::SlabOverflow { .. })),
+            "fault missing: {:?}",
+            r.fault
+        );
+        let err = Runner::try_run(&g, &CliqueCount::new(4), &cfg).unwrap_err();
+        assert!(err.to_string().contains("slab overflow"), "{err}");
+        // a sufficient cap runs clean through the same override path
+        let ok = Runner::try_run(
+            &g,
+            &CliqueCount::new(4),
+            &EngineConfig { ext_slab_cap: Some(64), ..small_cfg() },
+        )
+        .unwrap();
+        assert_eq!(ok.count, Runner::run(&g, &CliqueCount::new(4), &small_cfg()).count);
     }
 
     #[test]

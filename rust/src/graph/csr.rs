@@ -1,8 +1,17 @@
-//! Compressed sparse row (CSR) undirected graph.
+//! Compressed sparse row (CSR) graph — undirected by default, with a
+//! *directed* (oriented out-CSR) variant for planned clique enumeration.
 //!
 //! The layout mirrors what the paper's GPU kernels read: one contiguous
 //! `adj` array plus per-vertex offsets, with each adjacency list sorted so
 //! warp-chunked reads are coalesced and membership tests can bisect.
+//!
+//! A directed CSR (built by [`CsrGraph::from_out_adjacency`], normally
+//! through `ordering::orient`) stores only out-arcs: `neighbors(v)` is
+//! `v`'s out-neighborhood, `degree(v)`/`max_degree()` are out-degrees,
+//! `num_edges()` counts arcs, and `has_edge(u, v)` is the *arc* test
+//! `u -> v` (no list swap) — which is exactly what oriented enumeration
+//! needs: a candidate must carry an arc from every matched vertex, so
+//! only ascending traversals survive and symmetry breaking is free.
 
 use super::{Label, VertexId};
 
@@ -17,6 +26,9 @@ pub struct CsrGraph {
     labels: Option<Vec<Label>>,
     /// Cached maximum degree.
     max_degree: usize,
+    /// Directed out-CSR (adjacency lists are out-neighborhoods; `has_edge`
+    /// is the arc test). Built only by [`CsrGraph::from_out_adjacency`].
+    directed: bool,
     /// Optional dataset name (for reports).
     name: String,
 }
@@ -55,8 +67,54 @@ impl CsrGraph {
             adj,
             labels: None,
             max_degree,
+            directed: false,
             name: name.into(),
         }
+    }
+
+    /// Build a *directed* out-CSR from per-vertex out-neighbor lists: no
+    /// symmetrization — `lists[v]` is exactly `v`'s out-neighborhood
+    /// (sorted and deduped here; self-loops dropped). Every arc must
+    /// **ascend** (`u -> v` implies `u < v`, asserted): this is the
+    /// low->high orientation invariant the whole oriented machinery —
+    /// `edges()`, the arc-test `has_edge`, `ExecutionPlan::
+    /// clique_oriented`'s once-per-clique argument — is built on.
+    /// Produced by `ordering::orient`; see the module docs for the
+    /// reader contract.
+    pub fn from_out_adjacency(mut lists: Vec<Vec<VertexId>>, name: impl Into<String>) -> Self {
+        let n = lists.len();
+        let mut offsets = Vec::with_capacity(n + 1);
+        offsets.push(0);
+        let mut adj = Vec::new();
+        let mut max_degree = 0;
+        for (u, list) in lists.iter_mut().enumerate() {
+            debug_assert!(list.iter().all(|&v| (v as usize) < n), "vertex out of range");
+            list.sort_unstable();
+            list.dedup();
+            list.retain(|&v| v as usize != u); // drop self-loops
+            assert!(
+                list.iter().all(|&v| v as usize > u),
+                "directed out-CSR arcs must ascend (vertex {u} lists a lower neighbor); \
+                 relabel first, then orient low->high"
+            );
+            max_degree = max_degree.max(list.len());
+            adj.extend_from_slice(list);
+            offsets.push(adj.len());
+        }
+        Self {
+            offsets,
+            adj,
+            labels: None,
+            max_degree,
+            directed: true,
+            name: name.into(),
+        }
+    }
+
+    /// Whether this is a directed out-CSR (oriented enumeration input).
+    #[inline]
+    pub fn is_directed(&self) -> bool {
+        self.directed
     }
 
     /// Attach per-vertex labels. Errors (instead of truncating or
@@ -140,10 +198,14 @@ impl CsrGraph {
         self.offsets.len() - 1
     }
 
-    /// Number of undirected edges.
+    /// Number of undirected edges (arcs on a directed out-CSR).
     #[inline]
     pub fn num_edges(&self) -> usize {
-        self.adj.len() / 2
+        if self.directed {
+            self.adj.len()
+        } else {
+            self.adj.len() / 2
+        }
     }
 
     #[inline]
@@ -168,11 +230,17 @@ impl CsrGraph {
         (self.offsets[v as usize] + i) * std::mem::size_of::<VertexId>()
     }
 
-    /// O(log deg) membership test on the sorted adjacency list.
+    /// O(log deg) membership test on the sorted adjacency list. On a
+    /// directed out-CSR this is the **arc** test `u -> v` (only `u`'s
+    /// out-list is searched): oriented enumeration relies on arcs to
+    /// lower-id vertices *not* existing, so there is no list swap.
     #[inline]
     pub fn has_edge(&self, u: VertexId, v: VertexId) -> bool {
         if u == v {
             return false;
+        }
+        if self.directed {
+            return self.neighbors(u).binary_search(&v).is_ok();
         }
         // Bisect the shorter list.
         let (a, b) = if self.degree(u) <= self.degree(v) {
@@ -212,7 +280,9 @@ impl CsrGraph {
             + self.labels.as_ref().map_or(0, |ls| ls.len() * std::mem::size_of::<Label>())
     }
 
-    /// Iterate all undirected edges (u < v).
+    /// Iterate all undirected edges (u < v). On a directed out-CSR this
+    /// yields the low->high arcs, which under the `ordering::orient`
+    /// invariant (all arcs ascend) is every arc.
     pub fn edges(&self) -> impl Iterator<Item = (VertexId, VertexId)> + '_ {
         (0..self.num_vertices() as VertexId).flat_map(move |u| {
             self.neighbors(u)
@@ -334,6 +404,42 @@ mod tests {
         let base = g0.memory_bytes();
         let g1 = g0.with_labels(vec![0; 4]).unwrap();
         assert_eq!(g1.memory_bytes(), base + 4 * std::mem::size_of::<Label>());
+    }
+
+    #[test]
+    fn directed_out_csr_is_not_symmetrized_and_tests_arcs() {
+        // triangle oriented 0->1, 0->2, 1->2 plus a leaf arc 0->3
+        let g = CsrGraph::from_out_adjacency(
+            vec![vec![1, 2, 3], vec![2], vec![], vec![]],
+            "dag",
+        );
+        assert!(g.is_directed());
+        assert_eq!(g.num_edges(), 4); // arcs, not halved
+        assert_eq!(g.degree(0), 3); // out-degree
+        assert_eq!(g.degree(2), 0);
+        assert_eq!(g.max_degree(), 3);
+        // arc semantics: no reverse membership
+        assert!(g.has_edge(0, 1) && !g.has_edge(1, 0));
+        assert!(g.has_edge(1, 2) && !g.has_edge(2, 1));
+        assert!(!g.has_edge(2, 3) && !g.has_edge(3, 2));
+        // ascending arcs are exactly what edges() yields
+        let arcs: Vec<_> = g.edges().collect();
+        assert_eq!(arcs, vec![(0, 1), (0, 2), (0, 3), (1, 2)]);
+    }
+
+    #[test]
+    fn directed_out_csr_sorts_dedups_and_drops_self_loops() {
+        let g = CsrGraph::from_out_adjacency(vec![vec![2, 1, 1, 0], vec![], vec![]], "d2");
+        assert_eq!(g.neighbors(0), &[1, 2]);
+        assert_eq!(g.num_edges(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "arcs must ascend")]
+    fn directed_out_csr_rejects_descending_arcs() {
+        // a descending arc would be invisible to edges() while still
+        // counted by num_edges() — rejected at construction instead
+        let _ = CsrGraph::from_out_adjacency(vec![vec![1], vec![0]], "bad");
     }
 
     #[test]

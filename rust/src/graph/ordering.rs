@@ -1,11 +1,61 @@
-//! Vertex orderings.
+//! Vertex orderings and graph orientation.
 //!
-//! GPM engines are sensitive to vertex order: degree (degeneracy-like)
-//! ordering bounds the orientation out-degree for clique counting, and the
-//! initial-task order controls load skew across warps. These relabelings
-//! are applied once at load time.
+//! GPM engines are sensitive to vertex order: degree and degeneracy
+//! (k-core) orderings bound the orientation out-degree for clique
+//! counting, and the initial-task order controls load skew across warps.
+//! These relabelings are applied once at load time; subgraph counts are
+//! relabel-invariant (property-tested in `tests/integration_orderings.rs`).
+//!
+//! [`orient`] turns a relabeled undirected graph into the low->high
+//! directed out-CSR ([`CsrGraph::from_out_adjacency`]). After
+//! [`degeneracy_order`], every out-degree is bounded by the graph's core
+//! number — the Danisch et al. orientation trick — so oriented clique
+//! plans stream core-bounded lists and the TE arena's planned slab caps
+//! shrink with them (`TeArena::for_plan`).
+
+use std::str::FromStr;
 
 use super::{CsrGraph, VertexId};
+
+/// CLI-facing ordering selector (`--ordering`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum OrderingKind {
+    /// Keep the load-time labeling.
+    #[default]
+    None,
+    /// Ascending-degree relabel ([`degree_order`]).
+    Degree,
+    /// k-core elimination order ([`degeneracy_order`]).
+    Degeneracy,
+    /// Seeded random shuffle ([`random_order`]) — order-sensitivity ablation.
+    Random,
+}
+
+impl FromStr for OrderingKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "none" => Ok(OrderingKind::None),
+            "degree" => Ok(OrderingKind::Degree),
+            "degeneracy" => Ok(OrderingKind::Degeneracy),
+            "random" => Ok(OrderingKind::Random),
+            other => Err(anyhow::Error::msg(format!(
+                "unknown ordering '{other}' (none|degree|degeneracy|random)"
+            ))),
+        }
+    }
+}
+
+/// Apply an ordering by kind (`seed` feeds only [`OrderingKind::Random`]).
+pub fn apply(g: &CsrGraph, kind: OrderingKind, seed: u64) -> CsrGraph {
+    match kind {
+        OrderingKind::None => g.clone(),
+        OrderingKind::Degree => degree_order(g),
+        OrderingKind::Degeneracy => degeneracy_order(g),
+        OrderingKind::Random => random_order(g, seed),
+    }
+}
 
 /// Relabel so vertices are sorted by ascending degree (stable by id).
 /// After this, `v`'s higher-numbered neighbors form the clique-extension
@@ -17,7 +67,82 @@ pub fn degree_order(g: &CsrGraph) -> CsrGraph {
     relabel(g, &perm)
 }
 
-/// Relabel with an explicit permutation: `perm[new_id] = old_id`.
+/// Relabel by the degeneracy (k-core elimination) order: repeatedly
+/// remove a minimum-degree vertex, removal order becoming ascending ids.
+/// Every vertex then has at most `degeneracy(g)` higher-numbered
+/// neighbors — the tightest out-degree bound an [`orient`] pass can get
+/// from a relabeling.
+pub fn degeneracy_order(g: &CsrGraph) -> CsrGraph {
+    relabel(g, &degeneracy_peel(g).0)
+}
+
+/// The graph's degeneracy (core number): the largest minimum degree seen
+/// while peeling — equivalently the max out-degree after
+/// `orient(&degeneracy_order(g))`.
+pub fn degeneracy(g: &CsrGraph) -> usize {
+    degeneracy_peel(g).1
+}
+
+/// Bucket-queue peeling, O(V + E): returns the elimination permutation
+/// (`perm[new_id] = old_id`) and the core number.
+pub fn degeneracy_peel(g: &CsrGraph) -> (Vec<VertexId>, usize) {
+    let n = g.num_vertices();
+    let mut deg: Vec<usize> = (0..n).map(|v| g.degree(v as VertexId)).collect();
+    let mut buckets: Vec<Vec<VertexId>> = vec![Vec::new(); g.max_degree() + 1];
+    for (v, &d) in deg.iter().enumerate() {
+        buckets[d].push(v as VertexId);
+    }
+    let mut removed = vec![false; n];
+    let mut order = Vec::with_capacity(n);
+    let mut core = 0usize;
+    let mut cur = 0usize;
+    for _ in 0..n {
+        // pop the next live minimum-degree vertex; bucket entries go
+        // stale when a degree drops, so skip mismatches
+        let v = loop {
+            match buckets[cur].pop() {
+                Some(v) if !removed[v as usize] && deg[v as usize] == cur => break v,
+                Some(_) => {}
+                None => cur += 1,
+            }
+        };
+        removed[v as usize] = true;
+        core = core.max(cur);
+        order.push(v);
+        for &u in g.neighbors(v) {
+            let u = u as usize;
+            if !removed[u] {
+                deg[u] -= 1;
+                buckets[deg[u]].push(u as VertexId);
+                cur = cur.min(deg[u]);
+            }
+        }
+    }
+    (order, core)
+}
+
+/// Orient an undirected (already relabeled) graph into the low->high
+/// directed out-CSR: `neighbors(v)` keeps only `v`'s higher-numbered
+/// neighbors. Labels carry over unchanged (ids are preserved). The
+/// output is what `ExecutionPlan::clique_oriented` enumerates over —
+/// every clique appears exactly once as its ascending tuple, so the
+/// symmetry-breaking restriction chain collapses into the orientation.
+pub fn orient(g: &CsrGraph) -> CsrGraph {
+    assert!(!g.is_directed(), "orient() takes an undirected graph");
+    let n = g.num_vertices();
+    let lists: Vec<Vec<VertexId>> = (0..n as VertexId)
+        .map(|u| g.neighbors(u).iter().copied().filter(|&v| v > u).collect())
+        .collect();
+    let mut h = CsrGraph::from_out_adjacency(lists, format!("{}+oriented", g.name()));
+    if let Some(ls) = g.labels() {
+        h.set_labels(ls.to_vec()).expect("orient preserves the vertex count");
+    }
+    h
+}
+
+/// Relabel with an explicit permutation: `perm[new_id] = old_id`. Labels
+/// (when present) are carried through the same permutation, so labeled
+/// counts are relabel-invariant too.
 pub fn relabel(g: &CsrGraph, perm: &[VertexId]) -> CsrGraph {
     let n = g.num_vertices();
     assert_eq!(perm.len(), n);
@@ -34,7 +159,12 @@ pub fn relabel(g: &CsrGraph, perm: &[VertexId]) -> CsrGraph {
                 .collect()
         })
         .collect();
-    CsrGraph::from_adjacency(lists, g.name().to_string())
+    let mut h = CsrGraph::from_adjacency(lists, g.name().to_string());
+    if let Some(ls) = g.labels() {
+        let permuted: Vec<_> = perm.iter().map(|&old_id| ls[old_id as usize]).collect();
+        h.set_labels(permuted).expect("relabel preserves the vertex count");
+    }
+    h
 }
 
 /// Random shuffle relabeling (ablation: order sensitivity).
@@ -63,6 +193,21 @@ mod tests {
     }
 
     #[test]
+    fn relabel_carries_labels_through_the_permutation() {
+        let g = generators::cycle(6).with_labels(vec![0, 1, 2, 3, 4, 5]).unwrap();
+        let perm: Vec<VertexId> = (0..6).rev().collect();
+        let h = relabel(&g, &perm);
+        assert_eq!(h.labels(), Some(&[5, 4, 3, 2, 1, 0][..]));
+        // every ordering keeps per-vertex labels attached to structure
+        for kind in [OrderingKind::Degree, OrderingKind::Degeneracy, OrderingKind::Random] {
+            let o = apply(&g, kind, 9);
+            let mut freq = o.label_frequencies();
+            freq.sort_unstable();
+            assert_eq!(freq, vec![1; 6], "{kind:?}");
+        }
+    }
+
+    #[test]
     fn degree_order_is_monotone() {
         let g = generators::barabasi_albert(100, 3, 5);
         let h = degree_order(&g);
@@ -87,6 +232,52 @@ mod tests {
     }
 
     #[test]
+    fn degeneracy_matches_known_cores() {
+        assert_eq!(degeneracy(&generators::complete(7)), 6); // K7 is a 6-core
+        assert_eq!(degeneracy(&generators::cycle(12)), 2);
+        assert_eq!(degeneracy(&generators::star(9)), 1); // trees are 1-degenerate
+        assert_eq!(degeneracy(&generators::grid(4, 5)), 2);
+    }
+
+    #[test]
+    fn degeneracy_order_bounds_out_degree_by_core_number() {
+        for g in [
+            generators::barabasi_albert(200, 3, 7),
+            generators::ASTROPH.scaled(0.03).generate(1),
+        ] {
+            let core = degeneracy(&g);
+            let h = degeneracy_order(&g);
+            assert_eq!(g.num_edges(), h.num_edges());
+            let o = orient(&h);
+            assert!(o.is_directed());
+            assert_eq!(o.num_edges(), g.num_edges()); // one arc per edge
+            assert!(
+                o.max_degree() <= core,
+                "{}: out-degree {} exceeds core number {core}",
+                g.name(),
+                o.max_degree()
+            );
+            // the bound is tight somewhere: some vertex peels at `core`
+            assert!(
+                (0..o.num_vertices() as VertexId).any(|v| o.degree(v) == core)
+                    || core == 0
+            );
+        }
+    }
+
+    #[test]
+    fn orient_splits_each_edge_into_one_ascending_arc() {
+        let g = generators::erdos_renyi(30, 0.2, 4);
+        let o = orient(&g);
+        assert_eq!(o.num_edges(), g.num_edges());
+        for (u, v) in g.edges() {
+            let (a, b) = (u.min(v), u.max(v));
+            assert!(o.has_edge(a, b), "arc {a}->{b} missing");
+            assert!(!o.has_edge(b, a), "reverse arc {b}->{a} present");
+        }
+    }
+
+    #[test]
     fn random_order_is_permutation() {
         let g = generators::cycle(30);
         let h = random_order(&g, 9);
@@ -94,5 +285,16 @@ mod tests {
         for v in 0..30 {
             assert_eq!(h.degree(v), 2);
         }
+    }
+
+    #[test]
+    fn ordering_kind_parses_with_distinct_errors() {
+        assert_eq!("none".parse::<OrderingKind>().unwrap(), OrderingKind::None);
+        assert_eq!("degree".parse::<OrderingKind>().unwrap(), OrderingKind::Degree);
+        assert_eq!("degeneracy".parse::<OrderingKind>().unwrap(), OrderingKind::Degeneracy);
+        assert_eq!("random".parse::<OrderingKind>().unwrap(), OrderingKind::Random);
+        let msg = format!("{:#}", "bfs".parse::<OrderingKind>().unwrap_err());
+        assert!(msg.contains("unknown ordering"), "{msg}");
+        assert!(msg.contains("bfs"), "{msg}");
     }
 }

@@ -21,7 +21,7 @@ use dumato::graph::{generators, GraphStats};
 use dumato::report::Table;
 use dumato::util::fmt_count;
 
-const FLAGS: &[&str] = &["lb", "wall", "unplanned"];
+const FLAGS: &[&str] = &["lb", "wall", "unplanned", "orient"];
 
 fn main() {
     let raw: Vec<String> = std::env::args().skip(1).collect();
@@ -37,21 +37,29 @@ fn main() {
 
 const USAGE: &str = "usage: dumato <clique|motif|query|stats|triangles|baseline> [options]
   common: --dataset NAME|FIXTURE|PATH --scale F --seed N --warps N --threads N --lb --timeout SECS
+  intersection: --intersect auto|merge|bisect|bitmap (planned extends; auto = per-level cost-model choice)
+  ordering: --ordering none|degree|degeneracy|random (relabel at load; counts are invariant)
   labels: --labels FILE (one numeric label per line, vertex order)
           or --label-cardinality L (uniform random labels over 0..L, seeded by --seed)
   multi-device: --devices N --partition round-robin|degree-aware --interconnect pcie|nvlink --epoch-segments N
   clique/motif: --k N
+  clique: --orient (enumerate the oriented out-CSR; pair with --ordering degeneracy for core-bounded lists)
   query: --k N --pattern <3-clique|wedge|4-cycle|4-path|3-star|diamond|tailed-triangle>
          or --pattern a-b,b-c,... (edge list over 0..k; k inferred) [--unplanned]
          or --pattern a:La-b:Lb,... (labeled edge list: vertex:label endpoints)
   labeled quickstart:
          dumato query --dataset er:500,0.05 --label-cardinality 4 --pattern 0:0-1:1,1:1-2:2
+  oriented quickstart:
+         dumato clique --dataset mico --k 5 --ordering degeneracy --orient
   triangles: --engine <engine|xla>
   baseline: --system <dfs|pangolin|fractal|peregrine> --app <clique|motif> --k N";
 
 fn dispatch(raw: Vec<String>) -> Result<()> {
     let cmd = raw[0].clone();
     let args = Args::parse(raw.into_iter().skip(1), FLAGS)?;
+    if args.flag("orient") && cmd != "clique" {
+        bail!("--orient only applies to the clique command (oriented enumeration is clique-only)");
+    }
     match cmd.as_str() {
         "clique" => cmd_clique(&args),
         "motif" => cmd_motif(&args),
@@ -69,6 +77,7 @@ fn graph_from(args: &Args) -> Result<dumato::graph::CsrGraph> {
     let seed: u64 = args.parse_or("seed", 1)?;
     let mut g = load_graph(dataset, scale, seed)?;
     dumato::config::apply_labels(&mut g, args)?;
+    dumato::config::apply_ordering(&mut g, args)?;
     Ok(g)
 }
 
@@ -105,13 +114,22 @@ fn print_run(report: &dumato::engine::RunReport, wall: bool) {
     if report.timed_out {
         println!("  ** timed out — counts are partial **");
     }
+    if let Some(f) = &report.fault {
+        println!("  ** engine fault — counts are partial: {f} **");
+    }
 }
 
 fn cmd_clique(args: &Args) -> Result<()> {
-    let g = graph_from(args)?;
+    let mut g = graph_from(args)?;
     let k: usize = args.parse_or("k", 4)?;
     let cfg = engine_config(args, 0.40)?;
-    let r = Runner::run(&g, &CliqueCount::new(k), &cfg);
+    let algo = if args.flag("orient") {
+        g = dumato::graph::ordering::orient(&g);
+        CliqueCount::oriented(k)
+    } else {
+        CliqueCount::new(k)
+    };
+    let r = Runner::run(&g, &algo, &cfg);
     println!("dataset={} |V|={} |E|={}", g.name(), g.num_vertices(), g.num_edges());
     print_run(&r, args.flag("wall"));
     Ok(())

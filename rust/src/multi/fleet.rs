@@ -61,17 +61,27 @@ impl DeviceFleet {
         } else {
             None
         };
+        // One intersection-choice resolution, replicated to every device:
+        // the fleet passes `--intersect` through unchanged, so per-level
+        // choices (and therefore charges) match the single-device engine.
+        let intersect = algo
+            .plan()
+            .map(|p| crate::engine::IntersectPlan::build(p, g, &cfg.cost, cfg.intersect))
+            .unwrap_or_default();
         let shareds: Vec<SharedRun> = (0..ndev)
             .map(|_| {
                 let mut s = SharedRun::new(k, algo.needs_edges(), dict.clone());
                 s.cost = cfg.cost;
+                s.intersect = intersect.clone();
                 s
             })
             .collect();
         // Storage: every device replicates the CSR and owns its own flat
-        // TE pool in its own address space.
+        // TE pool in its own address space — sized through the same
+        // `TeArena::for_run` path as the single-device runner, so slab
+        // caps cannot drift with the device count.
         let mut arenas: Vec<TeArena> = (0..ndev)
-            .map(|_| TeArena::for_graph(g, k, wpd, cfg.layout))
+            .map(|_| TeArena::for_run(g, k, wpd, cfg.layout, cfg.ext_slab_cap, algo.plan().is_some()))
             .collect();
         // SAFETY: `arenas` is fully built before binding and never grows
         // or moves afterwards; every warp set is dropped before the
@@ -161,6 +171,9 @@ impl DeviceFleet {
                         if seg_timed_out {
                             return SegmentControl::Done;
                         }
+                        if run.shared.fault.get().is_some() {
+                            return SegmentControl::Done; // faulted device
+                        }
                         if warps.iter().all(|w| w.finished) {
                             return SegmentControl::Done;
                         }
@@ -205,6 +218,9 @@ impl DeviceFleet {
             }
             if timed_out {
                 break;
+            }
+            if shareds.iter().any(|s| s.fault.get().is_some()) {
+                break; // a faulted device aborts the whole job
             }
             let active = warp_sets
                 .iter()
@@ -261,6 +277,7 @@ impl DeviceFleet {
             stored,
             metrics,
             timed_out,
+            fault: shareds.iter().find_map(|s| s.fault.get().cloned()),
         }
     }
 }
@@ -324,6 +341,42 @@ mod tests {
             "4 devices not faster: {} vs {}",
             t4.metrics.sim_seconds,
             t1.metrics.sim_seconds
+        );
+    }
+
+    #[test]
+    fn fleet_passes_intersect_strategy_through_unchanged() {
+        use crate::engine::IntersectStrategy;
+        use crate::graph::ordering;
+        let g = generators::erdos_renyi(40, 0.3, 3);
+        let want = Runner::run(&g, &CliqueCount::new(4), &fleet_cfg(1)).count;
+        for strategy in [
+            IntersectStrategy::Auto,
+            IntersectStrategy::Merge,
+            IntersectStrategy::Bisect,
+            IntersectStrategy::Bitmap,
+        ] {
+            let mut cfg = fleet_cfg(3);
+            cfg.intersect = strategy;
+            assert_eq!(Runner::run(&g, &CliqueCount::new(4), &cfg).count, want, "{strategy:?}");
+        }
+        // the oriented path shards and rebalances like any planned run
+        let o = ordering::orient(&ordering::degeneracy_order(&g));
+        let r = Runner::run(&o, &CliqueCount::oriented(4), &fleet_cfg(3));
+        assert_eq!(r.count, want);
+        assert!(r.fault.is_none());
+    }
+
+    #[test]
+    fn fleet_surfaces_slab_faults_in_the_report() {
+        let g = generators::complete(64);
+        let mut cfg = fleet_cfg(2);
+        cfg.ext_slab_cap = Some(8);
+        let r = Runner::run(&g, &CliqueCount::new(4), &cfg);
+        assert!(
+            matches!(r.fault, Some(crate::engine::EngineError::SlabOverflow { .. })),
+            "{:?}",
+            r.fault
         );
     }
 

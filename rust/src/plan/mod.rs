@@ -63,6 +63,11 @@ pub struct ExecutionPlan {
     /// unlabeled plans — the engine then charges no label reads and
     /// behaves exactly as before the label layer existed.
     pub labels: Option<Vec<Label>>,
+    /// Oriented-enumeration plan: must run on an `ordering::orient`ed
+    /// directed out-CSR (asserted by the runner). Adjacency probes become
+    /// arc tests, so only ascending traversals survive — symmetry
+    /// breaking folds into the orientation and `restrictions` is empty.
+    pub oriented: bool,
 }
 
 impl ExecutionPlan {
@@ -180,6 +185,7 @@ impl ExecutionPlan {
             forbidden,
             restrictions,
             labels: rlabels,
+            oriented: false,
         }
     }
 
@@ -214,6 +220,25 @@ impl ExecutionPlan {
                 .flat_map(|a| ((a + 1)..k).map(move |b| (a, b)))
                 .collect(),
             labels: None,
+            oriented: false,
+        }
+    }
+
+    /// The oriented k-clique plan: enumerate over the out-neighborhoods
+    /// of an [`orient`](crate::graph::ordering::orient)ed directed CSR.
+    ///
+    /// Every arc ascends, so a candidate carrying arcs from all matched
+    /// positions is automatically greater than each of them: each clique
+    /// is generated exactly once, as its ascending tuple. The
+    /// `v0 < v1 < … < v_{k-1}` restriction chain (and its per-level
+    /// lower-bound slice) therefore collapses into the orientation —
+    /// `restrictions` is empty and candidate generation streams
+    /// core-bounded out-lists instead of sliced full lists.
+    pub fn clique_oriented(k: usize) -> ExecutionPlan {
+        ExecutionPlan {
+            restrictions: Vec::new(),
+            oriented: true,
+            ..Self::clique(k)
         }
     }
 
@@ -503,6 +528,27 @@ mod tests {
                 }
             }
             assert_eq!(p, ExecutionPlan::build(&m), "k={k}");
+        }
+    }
+
+    #[test]
+    fn oriented_clique_plan_counts_once_per_clique() {
+        use crate::graph::ordering;
+        let p = ExecutionPlan::clique_oriented(4);
+        assert!(p.oriented);
+        assert!(p.restrictions.is_empty(), "orientation subsumes symmetry breaking");
+        assert_eq!(p.backward, ExecutionPlan::clique(4).backward);
+        for seed in 0..4u64 {
+            let g = generators::erdos_renyi(20, 0.35, seed);
+            let want: u64 = {
+                let plain = ExecutionPlan::clique(4);
+                (0..20).map(|v| plain.count_from(&g, v)).sum()
+            };
+            for relabeled in [ordering::degeneracy_order(&g), ordering::degree_order(&g), g] {
+                let h = ordering::orient(&relabeled);
+                let got: u64 = (0..20).map(|v| p.count_from(&h, v)).sum();
+                assert_eq!(got, want, "seed={seed} on {}", h.name());
+            }
         }
     }
 

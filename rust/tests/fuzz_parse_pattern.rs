@@ -13,7 +13,14 @@
 //!
 //! Plus a valid-spec sweep: randomly generated well-formed labeled and
 //! unlabeled specs must parse, with labels recovered exactly.
+//!
+//! The same treatment covers the engine-config flags `--intersect` and
+//! `--ordering`: generated junk values must each be rejected through
+//! their own vocabulary error ("unknown intersect strategy ..." vs
+//! "unknown ordering ..."), never silently defaulted, while the valid
+//! vocabularies round-trip.
 
+use dumato::cli::Args;
 use dumato::plan::parse_pattern;
 use dumato::util::Rng;
 
@@ -144,6 +151,89 @@ fn fuzz_malformed_specs_each_reject_with_a_distinct_error() {
         }
     }
     assert!(total >= 250, "fuzz volume regressed: {total} specs");
+}
+
+/// Random flag value that is NOT in the valid vocabulary: random ASCII
+/// junk, case-flipped valid words, and truncations/extensions.
+fn junk_value(rng: &mut Rng, valid: &[&str]) -> String {
+    let v = loop {
+        let s = match rng.below(4) {
+            0 => {
+                // random short ASCII word
+                let len = rng.range(1, 10);
+                (0..len)
+                    .map(|_| (b'a' + rng.below(26) as u8) as char)
+                    .collect::<String>()
+            }
+            1 => {
+                // case-flipped valid word (parsing is case-sensitive)
+                let w = valid[rng.range(0, valid.len())];
+                w.to_uppercase()
+            }
+            2 => {
+                // truncated valid word
+                let w = valid[rng.range(0, valid.len())];
+                w[..rng.range(1, w.len())].to_string()
+            }
+            _ => {
+                // extended valid word
+                let w = valid[rng.range(0, valid.len())];
+                format!("{w}{}", (b'a' + rng.below(26) as u8) as char)
+            }
+        };
+        if !valid.contains(&s.as_str()) {
+            break s;
+        }
+    };
+    v
+}
+
+fn flag_args(flag: &str, value: &str) -> Args {
+    Args::parse(
+        [format!("--{flag}"), value.to_string()].into_iter(),
+        &["lb"],
+    )
+    .unwrap()
+}
+
+#[test]
+fn fuzz_intersect_and_ordering_flags_reject_junk_with_distinct_errors() {
+    const INTERSECT: &[&str] = &["auto", "merge", "bisect", "bitmap"];
+    const ORDERING: &[&str] = &["none", "degree", "degeneracy", "random"];
+    let mut rng = Rng::new(0x1A7E);
+    for _ in 0..100 {
+        let junk = junk_value(&mut rng, INTERSECT);
+        let err = dumato::config::engine_config(&flag_args("intersect", &junk), 0.4)
+            .expect_err(&format!("--intersect {junk} must not default"));
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("unknown intersect strategy") && msg.contains(&junk),
+            "--intersect {junk}: got '{msg}'"
+        );
+        assert!(!msg.contains("unknown ordering"), "vocabularies must stay distinct: {msg}");
+
+        let junk = junk_value(&mut rng, ORDERING);
+        let mut g = dumato::graph::generators::cycle(6);
+        let err = dumato::config::apply_ordering(&mut g, &flag_args("ordering", &junk))
+            .expect_err(&format!("--ordering {junk} must not default"));
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("unknown ordering") && msg.contains(&junk),
+            "--ordering {junk}: got '{msg}'"
+        );
+        assert!(
+            !msg.contains("unknown intersect strategy"),
+            "vocabularies must stay distinct: {msg}"
+        );
+    }
+    // the valid vocabularies pass through both paths
+    for v in INTERSECT {
+        assert!(dumato::config::engine_config(&flag_args("intersect", v), 0.4).is_ok(), "{v}");
+    }
+    for v in ORDERING {
+        let mut g = dumato::graph::generators::cycle(6);
+        assert!(dumato::config::apply_ordering(&mut g, &flag_args("ordering", v)).is_ok(), "{v}");
+    }
 }
 
 #[test]

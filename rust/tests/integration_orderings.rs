@@ -1,0 +1,203 @@
+//! Ordering / orientation invariance, end to end:
+//!
+//! - planned counts are invariant under relabeling — for random G(n,p) ×
+//!   random connected k <= 5 patterns, the `degree`/`degeneracy`/`random`
+//!   relabels reproduce the identity-order count, across devices 1 and 2;
+//! - for cliques the oriented path (degeneracy relabel + low->high
+//!   orient + `CliqueCount::oriented`) reproduces the same count, also
+//!   across devices;
+//! - every intersection strategy produces the same counts (charges are
+//!   the only thing that may differ);
+//! - the oriented TE pool shrinks to the core-bounded out-degree caps;
+//! - a mis-sized extensions arena surfaces as `EngineError::SlabOverflow`
+//!   through `Runner::try_run` instead of panicking mid-phase.
+
+use dumato::apps::{CliqueCount, SubgraphQuery};
+use dumato::canon::bitmap::AdjMat;
+use dumato::engine::{EngineConfig, EngineError, IntersectStrategy, Runner, TeArena};
+use dumato::graph::ordering::{self, OrderingKind};
+use dumato::graph::{generators, VertexId};
+use dumato::prop_assert_eq;
+use dumato::util::proptest::{check, Config};
+use dumato::util::Rng;
+
+fn cfg(devices: usize) -> EngineConfig {
+    EngineConfig {
+        warps: 8,
+        threads: 2,
+        devices,
+        ..Default::default()
+    }
+}
+
+/// Random connected pattern on k vertices: random spanning tree + extras.
+fn random_pattern(rng: &mut Rng, k: usize) -> Vec<(usize, usize)> {
+    let mut m = AdjMat::empty(k);
+    for i in 1..k {
+        m.set_edge(rng.range(0, i), i);
+    }
+    for a in 0..k {
+        for b in (a + 1)..k {
+            if rng.chance(0.35) {
+                m.set_edge(a, b);
+            }
+        }
+    }
+    let mut edges = Vec::new();
+    for a in 0..k {
+        for b in (a + 1)..k {
+            if m.has_edge(a, b) {
+                edges.push((a, b));
+            }
+        }
+    }
+    edges
+}
+
+#[test]
+fn property_planned_counts_are_relabel_invariant() {
+    check(
+        Config { cases: 10, ..Default::default() },
+        "planned counts invariant under degree/degeneracy/random relabels x devices",
+        |rng| {
+            let n = rng.range(10, 22);
+            let p = 0.2 + rng.f64() * 0.25;
+            let g = generators::erdos_renyi(n, p, rng.next_u64());
+            let k = rng.range(3, 6); // 3..=5
+            let edges = random_pattern(rng, k);
+            let q = SubgraphQuery::new(k, &edges);
+            let want = q.matches(&Runner::run(&g, &q, &cfg(1))).len();
+            for kind in [OrderingKind::Degree, OrderingKind::Degeneracy, OrderingKind::Random] {
+                let h = ordering::apply(&g, kind, rng.next_u64());
+                for devices in [1usize, 2] {
+                    let got = q.matches(&Runner::run(&h, &q, &cfg(devices))).len();
+                    prop_assert_eq!(
+                        got,
+                        want,
+                        "n={n} p={p:.2} k={k} edges={edges:?} {kind:?} devices={devices}"
+                    );
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn property_oriented_clique_reproduces_identity_counts() {
+    check(
+        Config { cases: 10, ..Default::default() },
+        "oriented clique == identity-order planned clique x orderings x devices",
+        |rng| {
+            let n = rng.range(12, 26);
+            let p = 0.25 + rng.f64() * 0.25;
+            let g = generators::erdos_renyi(n, p, rng.next_u64());
+            let k = rng.range(3, 6);
+            let want = Runner::run(&g, &CliqueCount::new(k), &cfg(1)).count;
+            for kind in [OrderingKind::None, OrderingKind::Degeneracy, OrderingKind::Random] {
+                let o = ordering::orient(&ordering::apply(&g, kind, rng.next_u64()));
+                for devices in [1usize, 2] {
+                    let r = Runner::run(&o, &CliqueCount::oriented(k), &cfg(devices));
+                    prop_assert_eq!(
+                        r.count,
+                        want,
+                        "n={n} p={p:.2} k={k} {kind:?} devices={devices}"
+                    );
+                    dumato::prop_assert!(r.fault.is_none(), "unexpected fault: {:?}", r.fault);
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn intersect_strategies_agree_on_counts_across_orderings() {
+    let g = generators::ASTROPH.scaled(0.02).generate(7);
+    let q = SubgraphQuery::new(4, &[(0, 1), (1, 2), (2, 3), (3, 0)]);
+    let want_cycles = q.matches(&Runner::run(&g, &q, &cfg(1))).len();
+    let want_cliques = Runner::run(&g, &CliqueCount::new(4), &cfg(1)).count;
+    for kind in [OrderingKind::None, OrderingKind::Degeneracy] {
+        let h = ordering::apply(&g, kind, 1);
+        for strategy in [
+            IntersectStrategy::Auto,
+            IntersectStrategy::Merge,
+            IntersectStrategy::Bisect,
+            IntersectStrategy::Bitmap,
+        ] {
+            let mut c = cfg(1);
+            c.intersect = strategy;
+            assert_eq!(
+                q.matches(&Runner::run(&h, &q, &c)).len(),
+                want_cycles,
+                "{kind:?}/{strategy:?}"
+            );
+            assert_eq!(
+                Runner::run(&h, &CliqueCount::new(4), &c).count,
+                want_cliques,
+                "{kind:?}/{strategy:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn labeled_counts_survive_reordering() {
+    // labels must travel with their vertices through a relabel
+    let g = generators::with_random_labels(generators::erdos_renyi(24, 0.3, 9), 3, 5);
+    let edges = [(0usize, 1usize), (1, 2), (0, 2)];
+    let labels = [0u32, 1, 2];
+    let q = SubgraphQuery::labeled_for(3, &edges, &labels, &g);
+    let want = q.matches(&Runner::run(&g, &q, &cfg(1))).len();
+    for kind in [OrderingKind::Degree, OrderingKind::Degeneracy, OrderingKind::Random] {
+        let h = ordering::apply(&g, kind, 4);
+        let qh = SubgraphQuery::labeled_for(3, &edges, &labels, &h);
+        assert_eq!(qh.matches(&Runner::run(&h, &qh, &cfg(1))).len(), want, "{kind:?}");
+    }
+}
+
+#[test]
+fn oriented_pool_shrinks_to_core_bounded_caps() {
+    let g = generators::barabasi_albert(400, 4, 11);
+    let core = ordering::degeneracy(&g);
+    let o = ordering::orient(&ordering::degeneracy_order(&g));
+    assert!(o.max_degree() <= core);
+    let full = TeArena::pool_bytes(&g, 5, 64);
+    let planned = TeArena::plan_pool_bytes(&g, 5, 64);
+    let oriented = TeArena::plan_pool_bytes(&o, 5, 64);
+    assert!(planned < full, "planned {planned} vs unplanned {full}");
+    assert!(oriented < planned, "oriented {oriented} vs planned {planned}");
+}
+
+#[test]
+fn mis_sized_arena_is_an_err_not_a_panic() {
+    let g = generators::complete(64);
+    let tiny = EngineConfig { ext_slab_cap: Some(8), ..cfg(1) };
+    let err = Runner::try_run(&g, &CliqueCount::new(4), &tiny).unwrap_err();
+    assert!(matches!(err, EngineError::SlabOverflow { .. }), "{err:?}");
+    assert!(err.to_string().contains("slab overflow"), "{err}");
+    // the fleet surfaces the same fault
+    let tiny2 = EngineConfig { ext_slab_cap: Some(8), ..cfg(2) };
+    let r = Runner::run(&g, &CliqueCount::new(4), &tiny2);
+    assert!(matches!(r.fault, Some(EngineError::SlabOverflow { .. })), "{:?}", r.fault);
+    // an adequate explicit cap is equivalent to the derived caps
+    let roomy = EngineConfig { ext_slab_cap: Some(64), ..cfg(1) };
+    let ok = Runner::try_run(&g, &CliqueCount::new(4), &roomy).unwrap();
+    assert_eq!(ok.count, Runner::run(&g, &CliqueCount::new(4), &cfg(1)).count);
+}
+
+#[test]
+fn seeded_orderings_are_deterministic_end_to_end() {
+    // the bench matrix joins rows on (dataset, ordering, strategy): the
+    // relabeled graphs must be reproducible run to run
+    let g = generators::MICO.scaled(0.02).generate(1);
+    for kind in [OrderingKind::Degree, OrderingKind::Degeneracy, OrderingKind::Random] {
+        let a = ordering::apply(&g, kind, 1);
+        let b = ordering::apply(&g, kind, 1);
+        assert_eq!(a.offsets(), b.offsets(), "{kind:?}");
+        assert_eq!(a.adjacency(), b.adjacency(), "{kind:?}");
+    }
+    let va: Vec<VertexId> = ordering::degeneracy_peel(&g).0;
+    let vb: Vec<VertexId> = ordering::degeneracy_peel(&g).0;
+    assert_eq!(va, vb);
+}
