@@ -18,13 +18,39 @@
 mod support;
 
 use dumato::api::GpmAlgorithm;
-use dumato::apps::{CliqueCount, SubgraphQuery};
-use dumato::engine::Runner;
+use dumato::apps::{CliqueCount, MotifCount, SubgraphQuery, SubgraphQuerySet};
+use dumato::engine::{Runner, WarpContext};
 use dumato::graph::generators;
+use dumato::plan::trie::PlanTrie;
 use dumato::report::Table;
 use dumato::util::fmt_count;
 
 use support::UnplannedClique;
+
+/// One member pattern run through the same trie machinery as the fused
+/// path (a 1-pattern trie): the sequential side of the fused-vs-
+/// sequential rows, so the comparison isolates prefix sharing.
+struct TrieJob {
+    trie: PlanTrie,
+}
+
+impl GpmAlgorithm for TrieJob {
+    fn name(&self) -> &str {
+        "trie_job"
+    }
+
+    fn k(&self) -> usize {
+        self.trie.k()
+    }
+
+    fn trie(&self) -> Option<&PlanTrie> {
+        Some(&self.trie)
+    }
+
+    fn run(&self, ctx: &mut WarpContext) {
+        ctx.run_trie(&self.trie);
+    }
+}
 
 struct Cell {
     timed_out: bool,
@@ -78,6 +104,95 @@ fn push_rows(t: &mut Table, dataset: &str, app: &str, pattern: &str, pl: Cell, u
             if c.timed_out { "-".into() } else { sp.to_string() },
         ]);
     }
+}
+
+/// One fused-vs-sequential row pair: the fused job's one-traversal run
+/// against the summed per-member 1-pattern trie runs. Asserts (when no
+/// side timed out) per-leaf count equality, total equality, and that the
+/// fused modeled time never loses to sequential — with a hard 2x floor
+/// where `require_2x` is set (the k=4 motif acceptance gate). Returns
+/// the fused census for callers that hold an external count reference.
+fn fused_group<A: GpmAlgorithm>(
+    t: &mut Table,
+    g: &dumato::graph::CsrGraph,
+    app: &str,
+    pattern: &str,
+    fused: &A,
+    require_2x: bool,
+) -> Option<Vec<(u64, u64)>> {
+    let members: Vec<dumato::plan::ExecutionPlan> =
+        fused.trie().expect("fused_group needs a trie job").plans().to_vec();
+    let fr = Runner::run(g, fused, &support::engine_cfg());
+    let fc = Cell {
+        timed_out: fr.timed_out,
+        sim: fr.metrics.sim_seconds,
+        gld: fr.metrics.total_gld,
+        insts: fr.metrics.total_insts,
+        count: fr.count,
+    };
+    let mut seq = Cell { timed_out: false, sim: 0.0, gld: 0, insts: 0, count: 0 };
+    let mut member_counts: Vec<Option<u64>> = Vec::new();
+    for pl in &members {
+        let job = TrieJob {
+            trie: PlanTrie::build(std::slice::from_ref(pl)).expect("1-pattern trie"),
+        };
+        let r = Runner::run(g, &job, &support::engine_cfg());
+        seq.timed_out |= r.timed_out;
+        seq.sim += r.metrics.sim_seconds;
+        seq.gld += r.metrics.total_gld;
+        seq.insts += r.metrics.total_insts;
+        seq.count += r.count;
+        member_counts.push((!r.timed_out).then_some(r.count));
+    }
+    if !fc.timed_out {
+        for (i, want) in member_counts.iter().enumerate() {
+            if let Some(w) = want {
+                assert_eq!(
+                    fr.leaf_counts[i],
+                    *w,
+                    "{}/{app}/{pattern}: leaf {i} fused vs sequential",
+                    g.name()
+                );
+            }
+        }
+    }
+    if !fc.timed_out && !seq.timed_out {
+        assert_eq!(fc.count, seq.count, "{}/{app}/{pattern}: totals", g.name());
+        assert!(
+            fc.sim <= seq.sim,
+            "{}/{app}/{pattern}: fused must not lose to sequential ({:.6} vs {:.6})",
+            g.name(),
+            fc.sim,
+            seq.sim
+        );
+        if require_2x {
+            assert!(
+                fc.sim * 2.0 <= seq.sim,
+                "{}/{app}/{pattern}: fused must beat sequential by >= 2x ({:.6} vs {:.6})",
+                g.name(),
+                fc.sim,
+                seq.sim
+            );
+        }
+    }
+    let speedup = if fc.timed_out || seq.timed_out {
+        "-".to_string()
+    } else {
+        format!("{:.2}x", seq.sim / fc.sim.max(1e-12))
+    };
+    for (path, c, sp) in [("fused", &fc, speedup.as_str()), ("sequential", &seq, "1.00x")] {
+        t.row(vec![
+            g.name().to_string(),
+            app.to_string(),
+            pattern.to_string(),
+            path.to_string(),
+            if c.timed_out { "-".into() } else { format!("{:.6}", c.sim) },
+            fmt_count(c.gld),
+            fmt_count(c.insts),
+            if c.timed_out { "-".into() } else { sp.to_string() },
+        ]);
+    }
+    (!fc.timed_out).then_some(fr.patterns)
 }
 
 fn main() {
@@ -166,10 +281,52 @@ fn main() {
             ]);
         }
     }
+    // Fused vs sequential (plan-trie rows, EXPERIMENTS.md §Fused vs
+    // sequential): the same pattern set answered by one prefix-sharing
+    // trie traversal versus one 1-pattern trie run per member, summed —
+    // the sequential side runs the identical walk machinery, so the gap
+    // is prefix sharing alone. Leaf counts are asserted equal per
+    // member, the fused motif census against the unplanned Algorithm-4
+    // reference, fused modeled time <= sequential everywhere, and the
+    // k=4 motif group must win by >= 2x (the acceptance floor).
+    for g in &datasets {
+        for k in [4usize, 5] {
+            let census = fused_group(
+                &mut t,
+                g,
+                "motif-fused",
+                &format!("motifs/k={k}"),
+                &MotifCount::planned(k),
+                k == 4,
+            );
+            if let Some(census) = census {
+                let un = Runner::run(g, &MotifCount::new(k), &support::engine_cfg());
+                if !un.timed_out {
+                    assert_eq!(
+                        census,
+                        un.patterns,
+                        "{}: fused census vs unplanned motif k={k}",
+                        g.name()
+                    );
+                }
+            }
+        }
+        let specs: Vec<String> = queries
+            .iter()
+            .map(|(_, _, edges)| {
+                edges.iter().map(|(a, b)| format!("{a}-{b}")).collect::<Vec<_>>().join(",")
+            })
+            .collect();
+        let parsed = dumato::plan::parse_pattern_set(&specs).expect("bench pattern set");
+        let qs = SubgraphQuerySet::for_graph(&parsed, g).expect("bench query-set plans");
+        fused_group(&mut t, g, "query-batch", "4cycle+4path+diamond", &qs, false);
+    }
     println!("{}", t.render());
     println!(
         "(both paths produce identical counts — asserted above; the planned rows \
-         charge only intersected adjacency lists, see DESIGN.md §Plan layer)\n"
+         charge only intersected adjacency lists, see DESIGN.md §Plan layer; the \
+         fused rows share candidate generation across the pattern set, see \
+         DESIGN.md §Plan trie)\n"
     );
     if std::env::var("DUMATO_BENCH_JSON").is_ok() {
         std::fs::write("BENCH_plans.json", t.to_json()).expect("write BENCH_plans.json");

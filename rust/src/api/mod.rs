@@ -46,6 +46,17 @@ pub trait GpmAlgorithm: Sync {
         None
     }
 
+    /// The prefix-sharing plan trie this algorithm runs on, if any — the
+    /// multi-pattern analogue of [`GpmAlgorithm::plan`]. A trie algorithm
+    /// drives `WarpContext::run_trie`; exposing the trie here routes the
+    /// runner and the fleet through the union seed-admission predicate
+    /// ([`crate::plan::trie::PlanTrie::seed_matches`]) and restricts load
+    /// balancing to whole-seed donation (a TE subtree's walk position
+    /// cannot be reconstructed from its vertices alone).
+    fn trie(&self) -> Option<&crate::plan::trie::PlanTrie> {
+        None
+    }
+
     /// The algorithm loop (paper Algorithm 4).
     fn run(&self, ctx: &mut WarpContext);
 }

@@ -8,4 +8,4 @@ pub mod query;
 pub use clique::CliqueCount;
 pub use motif::MotifCount;
 pub use quasi_clique::QuasiCliqueCount;
-pub use query::SubgraphQuery;
+pub use query::{SubgraphQuery, SubgraphQuerySet};

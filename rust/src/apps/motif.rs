@@ -7,21 +7,45 @@
 
 use crate::api::GpmAlgorithm;
 use crate::engine::WarpContext;
+use crate::plan::trie::PlanTrie;
 
 pub struct MotifCount {
     k: usize,
+    /// `Some` = fused planned mode: one trie over the full connected
+    /// k-pattern dictionary, leaf identity replacing the canonical-bitmap
+    /// classification. `None` = the unplanned Algorithm-4 path, kept as
+    /// the differential reference.
+    trie: Option<PlanTrie>,
 }
 
 impl MotifCount {
     pub fn new(k: usize) -> Self {
         assert!(k >= 3, "motif counting needs k >= 3");
-        Self { k }
+        Self { k, trie: None }
+    }
+
+    /// Fused planned motif counting: compile every connected k-pattern to
+    /// an [`crate::plan::ExecutionPlan`] (cliques through the oriented-
+    /// aware direct construction), merge them into one [`PlanTrie`], and
+    /// count all patterns in a single traversal. Needs the pattern
+    /// dictionary to be enumerable (`k <= 7`).
+    pub fn planned(k: usize) -> Self {
+        assert!(
+            (3..=crate::canon::CanonDict::MAX_DICT_K).contains(&k),
+            "planned motif counting needs 3 <= k <= {} (got {k})",
+            crate::canon::CanonDict::MAX_DICT_K
+        );
+        Self { k, trie: Some(PlanTrie::motifs(k)) }
     }
 }
 
 impl GpmAlgorithm for MotifCount {
     fn name(&self) -> &str {
-        "motif_counting"
+        if self.trie.is_some() {
+            "motif_counting_fused"
+        } else {
+            "motif_counting"
+        }
     }
 
     fn k(&self) -> usize {
@@ -29,14 +53,24 @@ impl GpmAlgorithm for MotifCount {
     }
 
     fn needs_edges(&self) -> bool {
-        true
+        // the trie's backward/forbidden checks replace the edge buffer
+        self.trie.is_none()
     }
 
     fn needs_dict(&self) -> bool {
-        true
+        // leaf identity replaces canonical relabeling
+        self.trie.is_none()
+    }
+
+    fn trie(&self) -> Option<&PlanTrie> {
+        self.trie.as_ref()
     }
 
     fn run(&self, ctx: &mut WarpContext) {
+        if let Some(t) = &self.trie {
+            ctx.run_trie(t);
+            return;
+        }
         let k = self.k;
         while ctx.control() {
             let len = ctx.te.len();
@@ -173,6 +207,59 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn fused_census_matches_unplanned_on_fixed_graphs() {
+        for (g, k) in [
+            (generators::complete(6), 3),
+            (generators::star(10), 3),
+            (generators::grid(4, 4), 4),
+            (generators::cycle(12), 4),
+        ] {
+            let want = report_as_map(&Runner::run(&g, &MotifCount::new(k), &cfg()));
+            let fused = Runner::run(&g, &MotifCount::planned(k), &cfg());
+            assert_eq!(fused.algorithm, "motif_counting_fused");
+            assert_eq!(report_as_map(&fused), want, "{} k={k}", g.name());
+            assert_eq!(
+                fused.count,
+                fused.leaf_counts.iter().sum::<u64>(),
+                "count must be the leaves' sum"
+            );
+        }
+    }
+
+    #[test]
+    fn property_fused_census_matches_unplanned() {
+        // the differential pair: one trie traversal vs the Algorithm-4
+        // canonical-filter path, pattern-by-pattern
+        crate::util::proptest::check(
+            crate::util::proptest::Config { cases: 12, ..Default::default() },
+            "fused motif census == unplanned census on random graphs",
+            |rng| {
+                let n = rng.range(8, 16);
+                let p = 0.2 + rng.f64() * 0.3;
+                let g = generators::erdos_renyi(n, p, rng.next_u64());
+                let k = rng.range(3, 5);
+                let got = report_as_map(&Runner::run(&g, &MotifCount::planned(k), &cfg()));
+                let want = report_as_map(&Runner::run(&g, &MotifCount::new(k), &cfg()));
+                crate::prop_assert_eq!(got, want, "n={n} p={p:.2} k={k}");
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn fused_leaf_counts_line_up_with_the_trie_pattern_order() {
+        let g = generators::erdos_renyi(14, 0.35, 9);
+        let r = Runner::run(&g, &MotifCount::planned(4), &cfg());
+        let trie = crate::plan::trie::PlanTrie::motifs(4);
+        assert_eq!(r.leaf_counts.len(), trie.num_patterns());
+        let brute = brute_motifs(&g, 4);
+        for (i, &c) in r.leaf_counts.iter().enumerate() {
+            let bm = trie.plan(i).canonical;
+            assert_eq!(c, brute.get(&bm).copied().unwrap_or(0), "leaf {i}");
+        }
     }
 
     #[test]

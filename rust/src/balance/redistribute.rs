@@ -31,10 +31,15 @@ pub fn redistribute(warps: &mut [WarpState]) -> u64 {
             // never strip a warp's last unit of work. A queued seed may be
             // donated when the warp keeps an active TE or another seed; a
             // TE subtree donation always leaves the TE itself behind.
+            // Trie warps (`seed_only`) never donate TE subtrees: a
+            // donated prefix's trie-walk position is not reconstructible
+            // from its vertices, so only whole queued seeds may move.
             let seed = if !warps[d].queue.is_empty()
                 && (!warps[d].te.is_empty() || warps[d].queue.len() >= 2)
             {
                 warps[d].queue.pop_back()
+            } else if warps[d].seed_only {
+                None
             } else if let Some(level) = warps[d].te.donation_level() {
                 warps[d].te.donate(level)
             } else {
@@ -129,6 +134,29 @@ mod tests {
         assert_eq!(n, 1);
         assert_eq!(warps[1].queue.front().unwrap(), &vec![0, 5]);
         assert_eq!(warps[0].te.live_count(0), 1);
+    }
+
+    #[test]
+    fn seed_only_warps_keep_their_te_subtrees() {
+        // same fixture as donates_te_subtree_when_queue_empty, but the
+        // donor is a trie warp: the subtree must stay put (its walk
+        // position would be lost), while queued seeds still move
+        let g = generators::complete(8);
+        let mut donor = WarpState::new(0, 5);
+        donor.seed_only = true;
+        donor.te.init_from_seed(&vec![0], &g, false);
+        donor.te.set_ext(0, &[4, 5]);
+        donor.te.set_generated(0, true);
+        let mut idle = WarpState::new(1, 5);
+        idle.finished = true;
+        let mut warps = vec![donor, idle];
+        assert_eq!(redistribute(&mut warps), 0);
+        assert_eq!(warps[0].te.live_count(0), 2, "subtree donated despite seed_only");
+        // a queued seed on the trie donor is still fair game
+        warps[0].queue.push_back(vec![7]);
+        assert_eq!(redistribute(&mut warps), 1);
+        assert_eq!(warps[1].queue.front().unwrap(), &vec![7]);
+        assert_eq!(warps[0].te.live_count(0), 2);
     }
 
     #[test]

@@ -9,7 +9,9 @@ use anyhow::{anyhow, bail, Result};
 #[derive(Debug, Default)]
 pub struct Args {
     pub positionals: Vec<String>,
-    options: HashMap<String, String>,
+    /// Every occurrence of each option, in order — repeatable options
+    /// (`--pattern`) read them all, scalar options read the last.
+    options: HashMap<String, Vec<String>>,
     flags: Vec<String>,
 }
 
@@ -22,7 +24,7 @@ impl Args {
         while let Some(a) = it.next() {
             if let Some(key) = a.strip_prefix("--") {
                 if let Some((k, v)) = key.split_once('=') {
-                    args.options.insert(k.to_string(), v.to_string());
+                    args.options.entry(k.to_string()).or_default().push(v.to_string());
                 } else if flag_names.contains(&key) {
                     args.flags.push(key.to_string());
                 } else {
@@ -33,7 +35,7 @@ impl Args {
                     let takes_value = matches!(it.peek(), Some(v) if !v.starts_with("--"));
                     if takes_value {
                         let v = it.next().expect("peeked Some");
-                        args.options.insert(key.to_string(), v);
+                        args.options.entry(key.to_string()).or_default().push(v);
                     } else if let Some(v) = it.peek() {
                         bail!("option --{key} expects a value, got option '{v}'");
                     } else {
@@ -52,7 +54,13 @@ impl Args {
     }
 
     pub fn get(&self, name: &str) -> Option<&str> {
-        self.options.get(name).map(|s| s.as_str())
+        self.options.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    /// Every occurrence of a repeatable option (`--pattern a --pattern b`),
+    /// in command-line order. Empty slice when the option never appeared.
+    pub fn get_all(&self, name: &str) -> &[String] {
+        self.options.get(name).map_or(&[][..], |v| &v[..])
     }
 
     pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
@@ -110,6 +118,18 @@ mod tests {
         assert!(a.parse_or::<usize>("k", 0).is_ok());
         let b = parse(&["--k", "x"], &[]);
         assert!(b.parse_or::<usize>("k", 0).is_err());
+    }
+
+    #[test]
+    fn repeated_options_accumulate_in_order() {
+        let a = parse(
+            &["--pattern", "0-1,1-2", "--pattern=0-1,1-2,0-2", "--k", "3", "--k", "4"],
+            &[],
+        );
+        assert_eq!(a.get_all("pattern"), &["0-1,1-2", "0-1,1-2,0-2"]);
+        // scalar access reads the last occurrence
+        assert_eq!(a.get("k"), Some("4"));
+        assert_eq!(a.get_all("missing"), &[] as &[String]);
     }
 
     #[test]

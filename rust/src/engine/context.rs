@@ -119,6 +119,9 @@ pub struct Aggregators {
     pub pattern_raw: HashMap<u64, u64>,
     /// [A3] stored subgraphs.
     pub stored: Vec<StoredSubgraph>,
+    /// Per-leaf counters of a plan-trie run (`leaf_counts[i]` = matches
+    /// of the trie's i-th pattern); empty outside trie jobs.
+    pub leaf_counts: Vec<u64>,
 }
 
 /// The warp execution context handed to `GpmAlgorithm::run`.
@@ -130,6 +133,12 @@ pub struct WarpContext<'a> {
     pub agg: &'a mut Aggregators,
     pub shared: &'a SharedRun,
     pub scratch: &'a mut ThreadScratch,
+    /// Plan-trie walk position: `walk[i]` is the trie-node index whose
+    /// recipe governs extensions out of the i-vertex prefix (node depth
+    /// `i + 1`), so `walk.len() == te.len()` throughout a trie run. Owned
+    /// by the warp (persists across quanta like the TE); empty outside
+    /// trie jobs.
+    pub walk: &'a mut Vec<u32>,
     /// Segment-cycle ceiling for this scheduling round (quantum). The
     /// scheduler round-robins warps in quanta so all warps of a segment
     /// progress quasi-concurrently, as they would on the GPU; `INFINITY`
@@ -537,6 +546,321 @@ impl<'a> WarpContext<'a> {
     }
 
     // ------------------------------------------------------------------
+    // [EX] extend_trie: plan-trie candidate generation.
+    //
+    // The trie analogue of extend_planned, reading the per-level recipe
+    // (backward set, restriction sources, position label) from the
+    // current trie node instead of a single plan. Everything else —
+    // smallest-list source selection, the lower-bound slice, the
+    // per-level IntersectChoice charges — is identical, which is the
+    // point: a shared node generates its candidates *once* for every
+    // pattern in its subtree, so the per-node charge is the sequential
+    // per-pattern charge divided by the sharing factor.
+    // Returns true when extensions were (newly) generated.
+    // ------------------------------------------------------------------
+    pub fn extend_trie(&mut self, trie: &crate::plan::trie::PlanTrie, node: usize) -> bool {
+        self.prof.sisd(); // fetch level + generated test
+        let len = self.te.len();
+        debug_assert_eq!(self.te.k(), trie.k());
+        debug_assert!(len >= 1 && len < self.te.k());
+        let nd = trie.node(node);
+        debug_assert_eq!(nd.depth, len, "walk node must govern the current position");
+        let level = len - 1;
+        if self.te.generated(level) {
+            return false;
+        }
+        let backward = &nd.backward;
+        debug_assert!(!backward.is_empty(), "matching order guarantees an anchor");
+        let mut trav = [INVALID_V; MAX_K];
+        trav[..len].copy_from_slice(self.te.traversal());
+        // source: the matched backward neighbor with the smallest list
+        // (same selection + charges as extend_planned)
+        let mut src = backward[0];
+        if backward.len() > 1 {
+            self.prof.gld_raw(backward.len() as u64);
+            for &b in &backward[1..] {
+                self.prof.sisd(); // broadcast degree compare
+                if self.g.degree(trav[b]) < self.g.degree(trav[src]) {
+                    src = b;
+                }
+            }
+        }
+        // the node's restriction sources collapse to one lower bound
+        let mut lb: Option<VertexId> = None;
+        for &a in &nd.restr_sources {
+            self.prof.sisd(); // broadcast max
+            lb = Some(lb.map_or(trav[a], |x| x.max(trav[a])));
+        }
+        self.scratch.begin();
+        for &v in &trav[..len] {
+            self.scratch.mark(v);
+        }
+        let src_v = trav[src];
+        let adj = self.g.neighbors(src_v);
+        let start = match lb {
+            Some(x) => {
+                // one warp bisect of the (cached) source list
+                self.prof.sisd();
+                self.prof.gld_raw(1);
+                adj.partition_point(|&u| u <= x)
+            }
+            None => 0,
+        };
+        let nprobe = (backward.len() - 1) as u64;
+        // per-level intersection strategy, charges derived exactly as in
+        // extend_planned (the trie intersect plan sizes each level by its
+        // widest node, engine/intersect.rs)
+        let mut probe_insts = 0u64;
+        let mut probe_glds = 0u64;
+        if nprobe > 0 && start < adj.len() {
+            match self.shared.intersect.choice(len) {
+                IntersectChoice::Bisect => {
+                    for &b in backward.iter() {
+                        if b != src {
+                            probe_insts += bisect_steps(self.g.degree(trav[b]));
+                        }
+                    }
+                    probe_glds = nprobe;
+                }
+                IntersectChoice::Merge => {
+                    let sliced = adj.len() - start;
+                    for &b in backward.iter() {
+                        if b != src {
+                            self.charge_adj_stream(trav[b]);
+                            self.prof.simd_n(
+                                ((sliced + self.g.degree(trav[b])) as u64)
+                                    .div_ceil(WARP_SIZE as u64)
+                                    .max(1),
+                            );
+                        }
+                    }
+                    probe_insts = nprobe;
+                }
+                IntersectChoice::Bitmap => {
+                    let dense = backward
+                        .iter()
+                        .copied()
+                        .filter(|&b| b != src)
+                        .max_by_key(|&b| self.g.degree(trav[b]))
+                        .expect("nprobe > 0");
+                    self.charge_adj_stream(trav[dense]);
+                    self.prof.simd_n(
+                        (self.g.degree(trav[dense]) as u64).div_ceil(WARP_SIZE as u64).max(1),
+                    );
+                    probe_insts = 1;
+                    for &b in backward.iter() {
+                        if b != src && b != dense {
+                            probe_insts += bisect_steps(self.g.degree(trav[b]));
+                        }
+                    }
+                    probe_glds = nprobe - 1;
+                }
+            }
+        }
+        let want_label = nd.label;
+        let (ptr, cap) = self.te.ext_raw_cap(level);
+        // SAFETY: see `ext_items_mut` — exclusive slab, phase-local use.
+        let out = unsafe { std::slice::from_raw_parts_mut(ptr, cap) };
+        let mut n = 0usize;
+        let mut offset = start;
+        'chunks: while offset < adj.len() {
+            let chunk = &adj[offset..adj.len().min(offset + WARP_SIZE)];
+            self.prof
+                .gld_contiguous(self.g.adj_address(src_v, offset), chunk.len());
+            self.prof.simd_n(len as u64);
+            if nprobe > 0 {
+                self.prof.simd_n(probe_insts);
+                if probe_glds > 0 {
+                    self.prof.gld_raw(probe_glds);
+                }
+            }
+            if want_label.is_some() {
+                self.prof.simd_n(1); // broadcast label compare
+                self.prof.gld_raw(chunk.len() as u64);
+            }
+            self.prof.simd(chunk.len());
+            'cand: for &e in chunk {
+                if self.scratch.seen(e) {
+                    continue;
+                }
+                if want_label.is_some_and(|l| self.g.label(e) != l) {
+                    continue;
+                }
+                for &b in backward.iter() {
+                    if b != src && !self.g.has_edge(trav[b], e) {
+                        continue 'cand;
+                    }
+                }
+                if n >= out.len() {
+                    self.raise_slab_fault(level, out.len());
+                    break 'chunks;
+                }
+                out[n] = e;
+                n += 1;
+            }
+            offset += WARP_SIZE;
+        }
+        self.te.finish_ext(level, n);
+        self.prof.sisd(); // return flag
+        true
+    }
+
+    // ------------------------------------------------------------------
+    // [FL] filter_trie: the current trie node's induced anti-edge
+    // constraints — filter_plan with the forbidden set read off the node.
+    // ------------------------------------------------------------------
+    pub fn filter_trie(&mut self, trie: &crate::plan::trie::PlanTrie, node: usize) {
+        let nd = trie.node(node);
+        debug_assert_eq!(nd.depth, self.te.len());
+        let nforbidden = nd.forbidden.len() as u64;
+        if nforbidden == 0 {
+            self.prof.sisd(); // fetch empty constraint set
+            return;
+        }
+        self.filter((nforbidden, nforbidden), |g, te, e| {
+            nd.forbidden.iter().all(|&j| !g.has_edge(te.vertex(j), e))
+        });
+    }
+
+    // ------------------------------------------------------------------
+    // [A1-per-leaf] aggregate_trie_leaf: fold the surviving candidates
+    // into the leaf's counter slot. Leaf identity replaces the unplanned
+    // path's canonical relabeling: the trie walk *knows* which pattern a
+    // match belongs to, so no bitmap/dictionary work is charged — just
+    // the warp ballot over the slab, like aggregate_counter.
+    // ------------------------------------------------------------------
+    pub fn aggregate_trie_leaf(&mut self, trie: &crate::plan::trie::PlanTrie, node: usize) {
+        debug_assert_eq!(self.te.len(), self.te.k() - 1);
+        let nd = trie.node(node);
+        let leaf = nd.leaf.expect("leaf-depth trie nodes carry a counter slot");
+        let level = self.te.cur_level();
+        self.prof
+            .simd_n((self.te.ext_len(level) as u64).div_ceil(WARP_SIZE as u64).max(1));
+        self.charge_slab_read(level);
+        if self.agg.leaf_counts.len() < trie.num_patterns() {
+            self.agg.leaf_counts.resize(trie.num_patterns(), 0);
+        }
+        self.agg.leaf_counts[leaf] += self.te.live_count(level) as u64;
+    }
+
+    // ------------------------------------------------------------------
+    // [MV] advance_trie: the trie walk's Move step. Forward pops the next
+    // valid candidate and descends into the node's first child (charges
+    // mirror move_); an exhausted level first tries the node's next
+    // sibling — the *divergence point*, charged one branch instruction,
+    // where the same prefix is re-enumerated under the sibling's key —
+    // and only backtracks when the whole sibling list is spent.
+    // ------------------------------------------------------------------
+    fn advance_trie(&mut self, trie: &crate::plan::trie::PlanTrie) {
+        self.prof.sisd(); // read extensions array head
+        let k = self.te.k();
+        let len = self.te.len();
+        let level = len - 1;
+        if len < k - 1 {
+            self.prof.sisd(); // branch test
+            let tail = self.te.ext_len(level);
+            if tail > 0 {
+                self.prof
+                    .gld_contiguous(self.te.ext_base_addr(level) + (tail - 1) * 4, 1);
+            }
+            if let Some(e) = self.te.pop_valid_cur() {
+                self.prof.sisd(); // pop + tr write
+                self.te.push_vertex(e, self.g, false);
+                let node = self.walk[level] as usize;
+                self.prof.sisd(); // child fetch
+                self.walk.push(trie.node(node).children[0] as u32);
+                return;
+            }
+        }
+        // level exhausted (or leaf depth counted): fan out to the next
+        // sibling node, re-enumerating this level under its key
+        if let Some(sib) = self.next_trie_sibling(trie, level) {
+            self.prof.sisd(); // divergence branch
+            self.walk[level] = sib as u32;
+            self.te.reset_level(level);
+            return;
+        }
+        self.prof.sisd();
+        self.walk.pop();
+        self.te.pop_vertex();
+    }
+
+    /// The next sibling of the walk's node at `level`, if any. Depth-1
+    /// siblings come from the trie's root list and are re-checked against
+    /// the seed (root label + degree floor — the same admission test the
+    /// walk's entry applies); deeper siblings share an admitted prefix
+    /// and need no re-check.
+    fn next_trie_sibling(
+        &mut self,
+        trie: &crate::plan::trie::PlanTrie,
+        level: usize,
+    ) -> Option<usize> {
+        let cur = self.walk[level] as usize;
+        if level == 0 {
+            let at = trie.roots().iter().position(|&r| r == cur)?;
+            let v0 = self.te.vertex(0);
+            for &r in &trie.roots()[at + 1..] {
+                self.prof.sisd(); // root admission test
+                let nd = trie.node(r);
+                if !nd.root_label.is_some_and(|l| self.g.label(v0) != l)
+                    && self.g.degree(v0) >= nd.min_floor
+                {
+                    return Some(r);
+                }
+            }
+            None
+        } else {
+            let parent = trie.node(self.walk[level - 1] as usize);
+            let at = parent.children.iter().position(|&c| c == cur)?;
+            parent.children.get(at + 1).copied()
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // run_trie: the complete plan-trie workflow — one traversal for the
+    // whole pattern set. Control/Extend/Filter/Aggregate are the planned
+    // phases with the recipe read off the walk's current node; Move is
+    // advance_trie, whose sibling step is the only place the fused run
+    // pays for pattern divergence.
+    // ------------------------------------------------------------------
+    pub fn run_trie(&mut self, trie: &crate::plan::trie::PlanTrie) {
+        let k = self.te.k();
+        debug_assert_eq!(k, trie.k());
+        while self.control() {
+            if self.walk.len() < self.te.len() {
+                // fresh single-vertex seed: enter the first admissible
+                // root (trie warps only ever receive whole seeds)
+                debug_assert_eq!(self.te.len(), 1);
+                debug_assert!(self.walk.is_empty());
+                let v0 = self.te.vertex(0);
+                let first = trie.roots().iter().copied().find(|&r| {
+                    self.prof.sisd(); // root admission test
+                    let nd = trie.node(r);
+                    !nd.root_label.is_some_and(|l| self.g.label(v0) != l)
+                        && self.g.degree(v0) >= nd.min_floor
+                });
+                match first {
+                    Some(r) => self.walk.push(r as u32),
+                    None => {
+                        self.prof.sisd();
+                        self.te.pop_vertex();
+                        continue;
+                    }
+                }
+            }
+            let len = self.te.len();
+            let node = self.walk[len - 1] as usize;
+            if self.extend_trie(trie, node) {
+                self.filter_trie(trie, node);
+                if len == k - 1 {
+                    self.aggregate_trie_leaf(trie, node);
+                }
+            }
+            self.advance_trie(trie);
+        }
+    }
+
+    // ------------------------------------------------------------------
     // [FL] Filter (paper Alg 3): invalidate extensions violating `keep`.
     //
     // `cost = (insts_per_chunk, probes_per_chunk)`: instructions are
@@ -755,10 +1079,11 @@ mod tests {
     use crate::engine::runner::SharedRun;
     use crate::graph::generators;
 
+    #[allow(clippy::type_complexity)]
     fn harness(
         g: &CsrGraph,
         k: usize,
-    ) -> (Te, VecDeque<Seed>, WarpProfiler, Aggregators, SharedRun, ThreadScratch) {
+    ) -> (Te, VecDeque<Seed>, WarpProfiler, Aggregators, SharedRun, ThreadScratch, Vec<u32>) {
         (
             Te::new(k),
             VecDeque::new(),
@@ -766,6 +1091,7 @@ mod tests {
             Aggregators::default(),
             SharedRun::new(k, false, None),
             ThreadScratch::new(g.num_vertices()),
+            Vec::new(),
         )
     }
 
@@ -779,6 +1105,7 @@ mod tests {
                 agg: &mut $h.3,
                 shared: &$h.4,
                 scratch: &mut $h.5,
+                walk: &mut $h.6,
                 quantum_limit: f64::INFINITY,
             }
         };
@@ -1128,6 +1455,100 @@ mod tests {
             "LUT probes must undercut repeated deep bisects: {per_strategy:?}"
         );
         assert_ne!(bitmap.1, bisect.1, "build stream vs probe transactions must differ");
+    }
+
+    #[test]
+    fn run_trie_single_pattern_matches_count_from() {
+        // a one-pattern trie is just the planned walk: triangle counts on
+        // K5 must come out at C(5,3) = 10 in leaf slot 0
+        let g = generators::complete(5);
+        let trie =
+            crate::plan::trie::PlanTrie::build(&[crate::plan::ExecutionPlan::clique(3)]).unwrap();
+        let mut h = harness(&g, 3);
+        for v in 0..5 {
+            h.1.push_back(vec![v]);
+        }
+        let mut c = ctx!(&g, h);
+        c.run_trie(&trie);
+        assert_eq!(c.agg.leaf_counts, vec![10]);
+        assert!(c.walk.is_empty(), "walk must drain with the TE");
+    }
+
+    #[test]
+    fn run_trie_motif_set_matches_per_plan_oracles() {
+        // every leaf counter must equal the member plan's independent CPU
+        // oracle summed over all seeds — the per-pattern ground truth
+        for (k, seed) in [(3usize, 1u64), (4, 2), (4, 5)] {
+            let g = generators::erdos_renyi(14, 0.35, seed);
+            let trie = crate::plan::trie::PlanTrie::motifs(k);
+            let mut h = harness(&g, k);
+            for v in 0..g.num_vertices() as u32 {
+                if trie.seed_matches(&g, v) {
+                    h.1.push_back(vec![v]);
+                }
+            }
+            let mut c = ctx!(&g, h);
+            c.run_trie(&trie);
+            for (i, p) in trie.plans().iter().enumerate() {
+                let want: u64 =
+                    (0..g.num_vertices() as u32).map(|v| p.count_from(&g, v)).sum();
+                let got = c.agg.leaf_counts.get(i).copied().unwrap_or(0);
+                assert_eq!(got, want, "k={k} seed={seed} leaf={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn run_trie_skips_inadmissible_seeds_without_counting() {
+        // star leaves (degree 1) fail every k=3 member's degree-2 floor at
+        // the hub... wedge roots at the center. Counts must match oracles
+        // even when seeds enter that no member admits.
+        let g = generators::star(6);
+        let trie = crate::plan::trie::PlanTrie::motifs(3);
+        let mut h = harness(&g, 3);
+        for v in 0..7u32 {
+            h.1.push_back(vec![v]); // all seeds, admissible or not
+        }
+        let mut c = ctx!(&g, h);
+        c.run_trie(&trie);
+        for (i, p) in trie.plans().iter().enumerate() {
+            let want: u64 = (0..7u32).map(|v| p.count_from(&g, v)).sum();
+            assert_eq!(c.agg.leaf_counts.get(i).copied().unwrap_or(0), want, "leaf={i}");
+        }
+    }
+
+    #[test]
+    fn trie_sharing_undercuts_sequential_planned_charges() {
+        // fused k=4 motifs vs six sequential planned traversals: the
+        // shared-prefix walk must charge strictly fewer instructions and
+        // transactions (this inequality, scaled up, is the bench gate)
+        let g = generators::erdos_renyi(16, 0.4, 3);
+        let trie = crate::plan::trie::PlanTrie::motifs(4);
+        let mut h = harness(&g, 4);
+        for v in 0..16u32 {
+            if trie.seed_matches(&g, v) {
+                h.1.push_back(vec![v]);
+            }
+        }
+        let mut c = ctx!(&g, h);
+        c.run_trie(&trie);
+        let fused = (c.prof.insts, c.prof.gld_transactions);
+        let mut seq = (0u64, 0u64);
+        for p in trie.plans() {
+            let single = crate::plan::trie::PlanTrie::build(&[p.clone()]).unwrap();
+            let mut h1 = harness(&g, 4);
+            for v in 0..16u32 {
+                if single.seed_matches(&g, v) {
+                    h1.1.push_back(vec![v]);
+                }
+            }
+            let mut c1 = ctx!(&g, h1);
+            c1.run_trie(&single);
+            seq.0 += c1.prof.insts;
+            seq.1 += c1.prof.gld_transactions;
+        }
+        assert!(fused.0 < seq.0, "insts: fused {} vs sequential {}", fused.0, seq.0);
+        assert!(fused.1 < seq.1, "glds: fused {} vs sequential {}", fused.1, seq.1);
     }
 
     #[test]

@@ -191,11 +191,44 @@ impl IntersectPlan {
                 if nb <= 1 {
                     return IntersectChoice::Bisect;
                 }
+                let restricted = plan.restrictions.iter().any(|&(_, b)| b == pos);
                 match strategy {
                     IntersectStrategy::Merge => IntersectChoice::Merge,
                     IntersectStrategy::Bisect => IntersectChoice::Bisect,
                     IntersectStrategy::Bitmap => IntersectChoice::Bitmap,
-                    IntersectStrategy::Auto => Self::auto_choice(plan, pos, nb, &stats, cost),
+                    IntersectStrategy::Auto => Self::auto_choice(nb, restricted, &stats, cost),
+                }
+            })
+            .collect();
+        IntersectPlan { choices }
+    }
+
+    /// Resolve per-level choices for a plan *trie*: one shared table for
+    /// the whole pattern set, sized by each level's widest node (the
+    /// largest backward set dominates the intersection cost there) and
+    /// sliced when *any* node at the level carries a symmetry bound. The
+    /// fused walk reads it through the same `choice(level)` the planned
+    /// path uses.
+    pub fn build_for_trie(
+        trie: &crate::plan::trie::PlanTrie,
+        g: &CsrGraph,
+        cost: &CostModel,
+        strategy: IntersectStrategy,
+    ) -> IntersectPlan {
+        let stats = DegreeStats::of(g);
+        let choices = (0..trie.k())
+            .map(|pos| {
+                let nb = trie.max_backward_at(pos);
+                if nb <= 1 {
+                    return IntersectChoice::Bisect;
+                }
+                match strategy {
+                    IntersectStrategy::Merge => IntersectChoice::Merge,
+                    IntersectStrategy::Bisect => IntersectChoice::Bisect,
+                    IntersectStrategy::Bitmap => IntersectChoice::Bitmap,
+                    IntersectStrategy::Auto => {
+                        Self::auto_choice(nb, trie.any_restricted_at(pos), &stats, cost)
+                    }
                 }
             })
             .collect();
@@ -203,16 +236,15 @@ impl IntersectPlan {
     }
 
     fn auto_choice(
-        plan: &ExecutionPlan,
-        pos: usize,
         nb: usize,
+        restricted: bool,
         stats: &DegreeStats,
         cost: &CostModel,
     ) -> IntersectChoice {
         // expected streamed-source size: the smallest of `nb` backward
         // lists, halved again when a symmetry lower bound slices it
         let mut s = (stats.mean / nb as f64).max(1.0);
-        if plan.restrictions.iter().any(|&(_, b)| b == pos) {
+        if restricted {
             s = (s / 2.0).max(1.0);
         }
         let nprobe = nb - 1;
@@ -307,6 +339,27 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn trie_plan_sizes_levels_by_the_widest_node() {
+        let g = generators::erdos_renyi(40, 0.3, 1);
+        let cost = CostModel::default();
+        let trie = crate::plan::trie::PlanTrie::motifs(4);
+        // the clique member pushes max backward to `pos` at every level,
+        // so the fused table must match the clique plan's own resolution
+        // under every fixed strategy
+        for strategy in
+            [IntersectStrategy::Merge, IntersectStrategy::Bitmap, IntersectStrategy::Bisect]
+        {
+            let fused = IntersectPlan::build_for_trie(&trie, &g, &cost, strategy);
+            let clique = IntersectPlan::build(&ExecutionPlan::clique(4), &g, &cost, strategy);
+            assert_eq!(fused, clique, "{strategy:?}");
+        }
+        // auto resolves deterministically and covers every level
+        let auto = IntersectPlan::build_for_trie(&trie, &g, &cost, IntersectStrategy::Auto);
+        assert_eq!(auto.choices().len(), 4);
+        assert_eq!(auto, IntersectPlan::build_for_trie(&trie, &g, &cost, IntersectStrategy::Auto));
     }
 
     #[test]

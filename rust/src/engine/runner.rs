@@ -70,6 +70,13 @@ pub struct WarpState {
     pub prof: WarpProfiler,
     pub agg: Aggregators,
     pub finished: bool,
+    /// Plan-trie walk position (one trie-node index per matched vertex);
+    /// persists across quanta like the TE. Empty outside trie jobs.
+    pub walk: Vec<u32>,
+    /// Restrict load balancing to whole queued seeds: a trie warp's TE
+    /// subtree cannot be donated, because the walk position it was
+    /// enumerated under is not reconstructible from its vertices alone.
+    pub seed_only: bool,
 }
 
 impl WarpState {
@@ -87,6 +94,8 @@ impl WarpState {
             prof: WarpProfiler::new(),
             agg: Aggregators::default(),
             finished: false,
+            walk: Vec::new(),
+            seed_only: false,
         }
     }
 
@@ -197,6 +206,11 @@ pub struct RunReport {
     pub patterns: Vec<(u64, u64)>,
     /// [A3] all stored subgraphs.
     pub stored: Vec<StoredSubgraph>,
+    /// Per-leaf counters of a plan-trie run, indexed by the trie's
+    /// pattern (= input) order; empty outside trie jobs. `count` is their
+    /// sum and `patterns` their canonical census, so consumers that don't
+    /// care about leaf identity read the usual fields.
+    pub leaf_counts: Vec<u64>,
     pub metrics: KernelMetrics,
     pub timed_out: bool,
     /// First structured engine fault of the run (`None` = clean). A
@@ -236,6 +250,7 @@ impl<A: GpmAlgorithm> SegmentRunner for EngineRun<'_, A> {
             agg: &mut warp.agg,
             shared: self.shared,
             scratch,
+            walk: &mut warp.walk,
             quantum_limit: limit,
         };
         self.algo.run(&mut ctx);
@@ -273,12 +288,19 @@ pub(crate) fn reduce_device(
     dict: Option<&CanonDict>,
     warps: &mut [WarpState],
     metrics: &mut KernelMetrics,
-) -> (u64, Vec<(u64, u64)>, Vec<StoredSubgraph>) {
+) -> (u64, Vec<(u64, u64)>, Vec<StoredSubgraph>, Vec<u64>) {
     let mut count = 0u64;
     let mut stored = Vec::new();
+    let mut leaf_counts: Vec<u64> = Vec::new();
     for w in warps.iter_mut() {
         count += w.agg.count;
         stored.append(&mut w.agg.stored);
+        if leaf_counts.len() < w.agg.leaf_counts.len() {
+            leaf_counts.resize(w.agg.leaf_counts.len(), 0);
+        }
+        for (i, &c) in w.agg.leaf_counts.iter().enumerate() {
+            leaf_counts[i] += c;
+        }
         metrics.total_insts += w.prof.insts;
         metrics.total_gld += w.prof.gld_transactions;
     }
@@ -303,7 +325,7 @@ pub(crate) fn reduce_device(
         }
     };
     patterns.sort_unstable();
-    (count, patterns, stored)
+    (count, patterns, stored, leaf_counts)
 }
 
 /// The engine entry point.
@@ -321,6 +343,13 @@ impl Runner {
                 "oriented plans take an ordering::orient()ed graph (and only them)"
             );
         }
+        if let Some(t) = algo.trie() {
+            assert_eq!(
+                t.oriented(),
+                g.is_directed(),
+                "oriented plan tries take an ordering::orient()ed graph (and only them)"
+            );
+        }
         if cfg.devices > 1 {
             return DeviceFleet::new(cfg).run(g, algo);
         }
@@ -334,6 +363,8 @@ impl Runner {
         shared.cost = cfg.cost;
         if let Some(p) = algo.plan() {
             shared.intersect = IntersectPlan::build(p, g, &cfg.cost, cfg.intersect);
+        } else if let Some(t) = algo.trie() {
+            shared.intersect = IntersectPlan::build_for_trie(t, g, &cfg.cost, cfg.intersect);
         }
         let num_warps = cfg.warps.max(1);
 
@@ -347,7 +378,7 @@ impl Runner {
             num_warps,
             cfg.layout,
             cfg.ext_slab_cap,
-            algo.plan().is_some(),
+            algo.plan().is_some() || algo.trie().is_some(),
         );
         // SAFETY: `arena` lives (unmoved) to the end of this function and
         // the handles are dropped before it; per-warp exclusivity is the
@@ -357,15 +388,26 @@ impl Runner {
             .enumerate()
             .map(|(i, te)| WarpState::bound(i, te))
             .collect();
+        if algo.trie().is_some() {
+            for w in warps.iter_mut() {
+                w.seed_only = true; // trie walks donate whole seeds only
+            }
+        }
         // Pattern-aware seed pruning: a seed matched at the plan's root
         // position needs at least the root's pattern degree and (on
-        // labeled plans) the root's label; unplanned algorithms keep the
+        // labeled plans) the root's label — for tries, the union of the
+        // member plans' predicates. Unplanned algorithms keep the
         // every-non-isolated-vertex deal.
-        let seeds: Vec<VertexId> = match algo.plan() {
-            Some(p) => {
+        let seeds: Vec<VertexId> = match (algo.plan(), algo.trie()) {
+            (Some(p), _) => {
                 (0..g.num_vertices() as VertexId).filter(|&v| p.seed_matches(g, v)).collect()
             }
-            None => (0..g.num_vertices() as VertexId).filter(|&v| g.degree(v) >= 1).collect(),
+            (None, Some(t)) => {
+                (0..g.num_vertices() as VertexId).filter(|&v| t.seed_matches(g, v)).collect()
+            }
+            (None, None) => {
+                (0..g.num_vertices() as VertexId).filter(|&v| g.degree(v) >= 1).collect()
+            }
         };
         deal_seeds(&mut warps, &seeds);
         let initial: Vec<usize> = warps.iter().filter(|w| !w.finished).map(|w| w.id).collect();
@@ -443,8 +485,15 @@ impl Runner {
 
         // Reduction (CPU side, as in the paper).
         let mut warps: Vec<WarpState> = run.warps.into_inner();
-        let (count, patterns, stored) =
+        let (mut count, mut patterns, stored, mut leaf_counts) =
             reduce_device(k, shared.dict.as_deref(), &mut warps, &mut metrics);
+        if let Some(t) = algo.trie() {
+            // trie jobs count per leaf: the scalar total is the leaves'
+            // sum, and the census comes from leaf identity (no dict)
+            leaf_counts.resize(t.num_patterns(), 0);
+            count = leaf_counts.iter().sum();
+            patterns = t.census(&leaf_counts);
+        }
         metrics.wall_seconds = wall.secs();
         // The warp handles point into `arena`; drop them before it.
         drop(warps);
@@ -459,6 +508,7 @@ impl Runner {
             metrics,
             timed_out: outcome.timed_out,
             fault: shared.fault.get().cloned(),
+            leaf_counts,
         }
     }
 

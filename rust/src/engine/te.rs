@@ -370,6 +370,15 @@ impl Te {
         self.len -= 1;
     }
 
+    /// Clear `level`'s slab and its generated flag so the next Extend
+    /// regenerates it — the plan-trie walk's sibling step (the same
+    /// prefix re-enumerated under the sibling node's key).
+    #[inline]
+    pub fn reset_level(&mut self, level: usize) {
+        debug_assert!(level < self.k - 1);
+        self.levels[level].clear();
+    }
+
     /// Reset to a (possibly partial) seed traversal. Prefix levels are
     /// marked generated-and-empty: their remaining extensions belong to
     /// the donating warp (or don't exist for fresh single-vertex seeds).

@@ -11,7 +11,8 @@
 
 use anyhow::{anyhow, bail, Result};
 
-use dumato::apps::{CliqueCount, MotifCount, SubgraphQuery};
+use dumato::api::GpmAlgorithm;
+use dumato::apps::{CliqueCount, MotifCount, SubgraphQuery, SubgraphQuerySet};
 use dumato::baselines::{App, DmDfs, FractalDfs, PangolinBfs, Peregrine};
 use dumato::canon::patterns::pattern_name;
 use dumato::cli::Args;
@@ -21,7 +22,7 @@ use dumato::graph::{generators, GraphStats};
 use dumato::report::Table;
 use dumato::util::fmt_count;
 
-const FLAGS: &[&str] = &["lb", "wall", "unplanned", "orient"];
+const FLAGS: &[&str] = &["lb", "wall", "unplanned", "orient", "planned"];
 
 fn main() {
     let raw: Vec<String> = std::env::args().skip(1).collect();
@@ -44,11 +45,16 @@ const USAGE: &str = "usage: dumato <clique|motif|query|stats|triangles|baseline>
   multi-device: --devices N --partition round-robin|degree-aware --interconnect pcie|nvlink --epoch-segments N
   clique/motif: --k N
   clique: --orient (enumerate the oriented out-CSR; pair with --ordering degeneracy for core-bounded lists)
+  motif: --planned (fused plan-trie census: one traversal over all k-patterns, k <= 7)
   query: --k N --pattern <3-clique|wedge|4-cycle|4-path|3-star|diamond|tailed-triangle>
          or --pattern a-b,b-c,... (edge list over 0..k; k inferred) [--unplanned]
          or --pattern a:La-b:Lb,... (labeled edge list: vertex:label endpoints)
+  query sets (fused): repeat --pattern, and/or --patterns FILE (one spec per line, # comments);
+         2+ patterns run as one plan-trie traversal with per-pattern counts
   labeled quickstart:
          dumato query --dataset er:500,0.05 --label-cardinality 4 --pattern 0:0-1:1,1:1-2:2
+  fused quickstart:
+         dumato query --dataset citeseer --pattern 4-cycle --pattern 4-path --pattern diamond
   oriented quickstart:
          dumato clique --dataset mico --k 5 --ordering degeneracy --orient
   triangles: --engine <engine|xla>
@@ -139,7 +145,24 @@ fn cmd_motif(args: &Args) -> Result<()> {
     let g = graph_from(args)?;
     let k: usize = args.parse_or("k", 3)?;
     let cfg = engine_config(args, 0.10)?;
-    let mut r = Runner::run(&g, &MotifCount::new(k), &cfg);
+    let algo = if args.flag("planned") {
+        let max = dumato::canon::CanonDict::MAX_DICT_K;
+        if !(3..=max).contains(&k) {
+            bail!("--planned motif counting needs 3 <= k <= {max} (got {k})");
+        }
+        let m = MotifCount::planned(k);
+        let t = m.trie().expect("planned mode carries a trie");
+        println!(
+            "plan trie: {} patterns, {} nodes ({} interior)",
+            t.num_patterns(),
+            t.num_nodes(),
+            t.num_interior()
+        );
+        m
+    } else {
+        MotifCount::new(k)
+    };
+    let mut r = Runner::run(&g, &algo, &cfg);
     r.count = r.patterns.iter().map(|&(_, c)| c).sum(); // total subgraphs
     println!("dataset={} |V|={} |E|={}", g.name(), g.num_vertices(), g.num_edges());
     print_run(&r, args.flag("wall"));
@@ -176,9 +199,105 @@ fn is_edge_list(spec: &str) -> bool {
             .all(|c| c.is_ascii_digit() || c == '-' || c == ',' || c == ':' || c.is_whitespace())
 }
 
+/// Normalize one `--pattern` value to an edge-list spec: edge lists pass
+/// through; built-in names resolve against `--k` when given, else the
+/// smallest k the name is defined for.
+fn resolve_spec(spec: &str, explicit_k: Option<usize>) -> Result<String> {
+    if is_edge_list(spec) {
+        return Ok(spec.to_string());
+    }
+    let ks: Vec<usize> = match explicit_k {
+        Some(k) => vec![k],
+        None => (3..=8).collect(),
+    };
+    for k in ks {
+        if let Ok(edges) = known_pattern(k, spec) {
+            let parts: Vec<String> =
+                edges.iter().map(|&(a, b)| format!("{a}-{b}")).collect();
+            return Ok(parts.join(","));
+        }
+    }
+    bail!("unknown pattern '{spec}' (pass --k for named patterns like 'clique')")
+}
+
+/// Collect the full pattern-set spec list: every `--pattern` occurrence
+/// plus the lines of `--patterns FILE` (one spec per line, blank lines
+/// and `#` comments skipped), in that order.
+fn pattern_specs(args: &Args) -> Result<Vec<String>> {
+    let mut specs: Vec<String> = args.get_all("pattern").to_vec();
+    if let Some(path) = args.get("patterns") {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("cannot read --patterns file '{path}': {e}"))?;
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            specs.push(line.to_string());
+        }
+    }
+    Ok(specs)
+}
+
+/// The fused path: 2+ patterns compiled into one plan trie, counted in a
+/// single traversal with per-pattern leaf counters.
+fn cmd_query_set(args: &Args, g: &dumato::graph::CsrGraph, specs: &[String]) -> Result<()> {
+    if args.flag("unplanned") {
+        bail!("--unplanned applies to single-pattern queries; pattern sets run fused (planned)");
+    }
+    let explicit_k: Option<usize> = match args.get("k") {
+        Some(v) => Some(v.parse().map_err(|_| anyhow!("bad value '{v}' for --k"))?),
+        None => None,
+    };
+    let resolved: Vec<String> = specs
+        .iter()
+        .map(|s| resolve_spec(s, explicit_k))
+        .collect::<Result<_>>()?;
+    let parsed = dumato::plan::parse_pattern_set(&resolved)?;
+    if parsed[0].labels.is_some() && !g.is_labeled() {
+        println!(
+            "note: patterns are labeled but the graph carries no labels \
+             (every vertex reads label 0) — pass --labels or --label-cardinality"
+        );
+    }
+    let qs = SubgraphQuerySet::for_graph(&parsed, g)?;
+    let t = qs.trie().expect("query sets carry a trie");
+    println!(
+        "plan trie: {} patterns, {} nodes ({} interior)",
+        t.num_patterns(),
+        t.num_nodes(),
+        t.num_interior()
+    );
+    let cfg = engine_config(args, 0.10)?;
+    let r = Runner::run(g, &qs, &cfg);
+    println!(
+        "dataset={} patterns={} total={}  sim_time={:.4}s",
+        g.name(),
+        qs.num_patterns(),
+        fmt_count(r.count),
+        r.metrics.sim_seconds,
+    );
+    let mut table = Table::new("fused query counts".to_string(), &["pattern", "count"]);
+    for (i, &c) in qs.counts(&r).iter().enumerate() {
+        table.row(vec![specs[i].clone(), fmt_count(c)]);
+    }
+    println!("{}", table.render());
+    if r.timed_out {
+        println!("  ** timed out — counts are partial **");
+    }
+    if let Some(f) = &r.fault {
+        println!("  ** engine fault — counts are partial: {f} **");
+    }
+    Ok(())
+}
+
 fn cmd_query(args: &Args) -> Result<()> {
     let g = graph_from(args)?;
-    let pattern = args.get_or("pattern", "3-clique");
+    let specs = pattern_specs(args)?;
+    if specs.len() > 1 {
+        return cmd_query_set(args, &g, &specs);
+    }
+    let pattern = specs.first().map(|s| s.as_str()).unwrap_or("3-clique");
     let (k, edges, plabels) = if is_edge_list(pattern) {
         let parsed = dumato::plan::parse_pattern(pattern)?;
         if let Some(explicit) = args.get("k") {

@@ -64,10 +64,13 @@ impl DeviceFleet {
         // One intersection-choice resolution, replicated to every device:
         // the fleet passes `--intersect` through unchanged, so per-level
         // choices (and therefore charges) match the single-device engine.
-        let intersect = algo
-            .plan()
-            .map(|p| crate::engine::IntersectPlan::build(p, g, &cfg.cost, cfg.intersect))
-            .unwrap_or_default();
+        let intersect = if let Some(p) = algo.plan() {
+            crate::engine::IntersectPlan::build(p, g, &cfg.cost, cfg.intersect)
+        } else if let Some(t) = algo.trie() {
+            crate::engine::IntersectPlan::build_for_trie(t, g, &cfg.cost, cfg.intersect)
+        } else {
+            Default::default()
+        };
         let shareds: Vec<SharedRun> = (0..ndev)
             .map(|_| {
                 let mut s = SharedRun::new(k, algo.needs_edges(), dict.clone());
@@ -80,8 +83,9 @@ impl DeviceFleet {
         // TE pool in its own address space — sized through the same
         // `TeArena::for_run` path as the single-device runner, so slab
         // caps cannot drift with the device count.
+        let planned = algo.plan().is_some() || algo.trie().is_some();
         let mut arenas: Vec<TeArena> = (0..ndev)
-            .map(|_| TeArena::for_run(g, k, wpd, cfg.layout, cfg.ext_slab_cap, algo.plan().is_some()))
+            .map(|_| TeArena::for_run(g, k, wpd, cfg.layout, cfg.ext_slab_cap, planned))
             .collect();
         // SAFETY: `arenas` is fully built before binding and never grows
         // or moves afterwards; every warp set is dropped before the
@@ -98,11 +102,21 @@ impl DeviceFleet {
                     .collect()
             })
             .collect();
+        if algo.trie().is_some() {
+            // trie walks donate whole seeds only; both LB layers honor it
+            for w in warp_sets.iter_mut().flatten() {
+                w.seed_only = true;
+            }
+        }
         // Seed sharding: the partition policy assigns every admissible
         // vertex to exactly one device, using the same `seed_matches`
-        // predicate (degree floor + root label for labeled plans) as the
-        // single-device runner's deal.
-        let shards = cfg.partition.shard_for_plan(g, ndev, algo.plan());
+        // predicate (degree floor + root label for labeled plans; the
+        // union predicate for plan tries) as the single-device runner's
+        // deal.
+        let shards = match algo.trie() {
+            Some(t) => cfg.partition.shard_for_trie(g, ndev, t),
+            None => cfg.partition.shard_for_plan(g, ndev, algo.plan()),
+        };
         for (ws, seeds) in warp_sets.iter_mut().zip(&shards) {
             deal_seeds(ws, seeds);
         }
@@ -255,15 +269,29 @@ impl DeviceFleet {
         let mut count = 0u64;
         let mut stored = Vec::new();
         let mut merged: BTreeMap<u64, u64> = BTreeMap::new();
+        let mut leaf_counts: Vec<u64> = Vec::new();
         for ws in warp_sets.iter_mut() {
-            let (c, pats, mut st) = reduce_device(k, dict.as_deref(), ws, &mut metrics);
+            let (c, pats, mut st, lc) = reduce_device(k, dict.as_deref(), ws, &mut metrics);
             count += c;
             stored.append(&mut st);
             for (bm, n) in pats {
                 *merged.entry(bm).or_insert(0) += n;
             }
+            if leaf_counts.len() < lc.len() {
+                leaf_counts.resize(lc.len(), 0);
+            }
+            for (i, &n) in lc.iter().enumerate() {
+                leaf_counts[i] += n;
+            }
         }
-        let patterns: Vec<(u64, u64)> = merged.into_iter().collect();
+        let mut patterns: Vec<(u64, u64)> = merged.into_iter().collect();
+        if let Some(t) = algo.trie() {
+            // exactly the single-device override: the scalar total is the
+            // leaves' sum and the census comes from leaf identity
+            leaf_counts.resize(t.num_patterns(), 0);
+            count = leaf_counts.iter().sum();
+            patterns = t.census(&leaf_counts);
+        }
         metrics.wall_seconds = wall.secs();
         // The warp handles point into the arenas; drop them first.
         drop(warp_sets);
@@ -275,6 +303,7 @@ impl DeviceFleet {
             count,
             patterns,
             stored,
+            leaf_counts,
             metrics,
             timed_out,
             fault: shareds.iter().find_map(|s| s.fault.get().cloned()),

@@ -76,6 +76,20 @@ impl Partition {
         }
     }
 
+    /// [`Partition::shard`] restricted to the seeds a plan *trie* admits:
+    /// the union of the member plans' predicates
+    /// ([`crate::plan::trie::PlanTrie::seed_matches`]) — again the exact
+    /// predicate the single-device runner applies, so fused multi-device
+    /// deals cannot desync from single-device ones.
+    pub fn shard_for_trie(
+        &self,
+        g: &CsrGraph,
+        devices: usize,
+        trie: &crate::plan::trie::PlanTrie,
+    ) -> Vec<Vec<VertexId>> {
+        self.shard_admitted(g, devices, |v| trie.seed_matches(g, v))
+    }
+
     /// Core sharding loop over an arbitrary seed-admission predicate.
     fn shard_admitted(
         &self,

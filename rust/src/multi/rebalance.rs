@@ -52,7 +52,9 @@ fn donate_one(warps: &mut [WarpState]) -> Option<Seed> {
         }
         return s;
     }
-    warps.iter_mut().find_map(|w| {
+    // trie warps (`seed_only`) never ship TE subtrees across the fleet:
+    // a migrated prefix's trie-walk position cannot be reconstructed
+    warps.iter_mut().filter(|w| !w.seed_only).find_map(|w| {
         let l = w.te.donation_level()?;
         w.te.donate(l)
     })

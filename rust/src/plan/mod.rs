@@ -31,6 +31,8 @@
 //! the Peregrine-like CPU baseline (`baselines::peregrine`), and the
 //! planner-correctness property tests — one planner, three consumers.
 
+pub mod trie;
+
 use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::canon::bitmap::{AdjMat, MAX_PATTERN_K};
@@ -495,6 +497,50 @@ pub fn parse_pattern(spec: &str) -> Result<ParsedPattern> {
     Ok(ParsedPattern { k, edges, labels })
 }
 
+/// Parse a batch of `--pattern` specs into a uniform pattern set — the
+/// CLI front door to [`trie::PlanTrie`]. Beyond per-spec
+/// [`parse_pattern`] validation, the *set* must be non-empty, uniform in
+/// k, uniform in labeledness, and duplicate-free up to isomorphism
+/// (canonical bitmap + labels — `0-1,1-2` and `1-2,0-1` and the
+/// relabeled `0-2,2-1` are all one wedge). Each violation carries its
+/// own distinct error.
+pub fn parse_pattern_set(specs: &[String]) -> Result<Vec<ParsedPattern>> {
+    ensure!(
+        !specs.is_empty(),
+        "empty pattern set (give at least one --pattern or a non-empty --patterns file)"
+    );
+    let mut parsed: Vec<ParsedPattern> = Vec::with_capacity(specs.len());
+    let mut seen: Vec<(u64, Option<Vec<Label>>)> = Vec::with_capacity(specs.len());
+    for spec in specs {
+        let p = parse_pattern(spec)?;
+        if let Some(first) = parsed.first() {
+            ensure!(
+                p.k == first.k,
+                "pattern set mixes sizes: '{spec}' has {} vertices, expected {}",
+                p.k,
+                first.k
+            );
+            ensure!(
+                p.labels.is_some() == first.labels.is_some(),
+                "pattern set mixes labeled and unlabeled patterns ('{spec}')"
+            );
+        }
+        let mut m = AdjMat::empty(p.k);
+        for &(a, b) in &p.edges {
+            m.set_edge(a, b);
+        }
+        let key = (canonical_form(&m), p.labels.clone());
+        ensure!(
+            !seen.contains(&key),
+            "duplicate pattern in set: '{spec}' (canonical bitmap {:#x})",
+            key.0
+        );
+        seen.push(key);
+        parsed.push(p);
+    }
+    Ok(parsed)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -778,5 +824,33 @@ mod tests {
         let big: Vec<String> = (0..8).map(|i| format!("{i}-{}", i + 1)).collect();
         assert!(parse_pattern(&big.join(",")).is_err());
         assert!(parse_pattern("0-1,1-2,2-3,3-4,4-5,5-6,6-7").is_ok()); // k=8 ok
+    }
+
+    fn specs(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_pattern_set_accepts_distinct_uniform_patterns() {
+        let set = parse_pattern_set(&specs(&["0-1,1-2,2-3,3-0", "0-1,1-2,2-3"])).unwrap();
+        assert_eq!(set.len(), 2);
+        assert!(set.iter().all(|p| p.k == 4));
+    }
+
+    #[test]
+    fn parse_pattern_set_rejects_each_malformed_set_distinctly() {
+        let err = |v: &[&str]| format!("{:#}", parse_pattern_set(&specs(v)).unwrap_err());
+        assert!(err(&[]).contains("empty pattern set"));
+        assert!(err(&["0-1,1-2", "0-1,1-2,2-3"]).contains("mixes sizes"));
+        assert!(
+            err(&["0-1,1-2", "0:1-1:1,1:1-2:1"]).contains("mixes labeled and unlabeled"),
+        );
+        // exact repeat, permuted edges, and a relabeled isomorph are all
+        // one pattern by canonical bitmap
+        for dup in [["0-1,1-2", "0-1,1-2"], ["0-1,1-2", "1-2,0-1"], ["0-1,1-2", "0-2,2-1"]] {
+            assert!(err(&dup).contains("duplicate pattern"), "{dup:?}");
+        }
+        // member-level parse errors pass through unchanged
+        assert!(err(&["0-1,1-1,1-2"]).contains("self-loop"));
     }
 }

@@ -1,0 +1,450 @@
+//! Prefix-sharing plan tries: one traversal for a whole pattern *set*.
+//!
+//! Running a batch of per-pattern [`ExecutionPlan`]s sequentially pays
+//! one full enumeration per pattern even when the plans agree on most of
+//! their matching-order prefix — for unlabeled k = 4 motifs, six plans
+//! whose level-1 recipes collapse to just two distinct keys. A
+//! [`PlanTrie`] merges the plans level-wise: each trie node carries the
+//! per-level recipe (backward set, forbidden set, restriction sources,
+//! position label) for one matching position, and two plans share a node
+//! exactly when their recipes agree on the *entire* path from the root.
+//! Leaves sit at depth k-1 and carry the pattern index — the counter
+//! slot `WarpContext::aggregate_trie_leaf` accumulates into.
+//!
+//! Sharing is sound because a node's key path determines the remapped
+//! pattern: `backward[i] ∪ forbidden[i] = {0..i-1}` partitions the
+//! earlier positions into edges and anti-edges, so identical key paths
+//! through depth k-1 mean identical remapped adjacency (and labels), and
+//! plan compilation is deterministic — two plans with the same full path
+//! are the *same* plan, which [`PlanTrie::build`] rejects as a duplicate.
+//! Distinct patterns therefore always end at distinct leaves, and the
+//! engine's per-leaf counters need no canonical relabeling at all.
+//!
+//! The execution model (`WarpContext::run_trie`) walks the trie inside
+//! one traversal: candidate generation is charged once per shared node
+//! (the G²Miner prefix-sharing win), and divergence — re-enumerating a
+//! prefix level under a sibling node's key — is charged only at fan-out
+//! points, where the plans genuinely disagree.
+
+use anyhow::{bail, Result};
+
+use crate::canon::dict::CanonDict;
+use crate::canon::patterns::all_patterns;
+use crate::graph::{CsrGraph, Label, VertexId};
+
+use super::ExecutionPlan;
+
+/// One merged per-level recipe: the plan data every pattern sharing this
+/// node agrees on for matching position `depth`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TrieNode {
+    /// Matching position this node extends into (`1..k`).
+    pub depth: usize,
+    /// Earlier positions whose adjacency lists are intersected
+    /// (`ExecutionPlan::backward[depth]`).
+    pub backward: Vec<usize>,
+    /// Earlier positions a candidate must *not* neighbor (induced
+    /// anti-edges; the leaf-residual filter).
+    pub forbidden: Vec<usize>,
+    /// Restriction sources: positions `a` with a symmetry constraint
+    /// `match[a] < match[depth]`. The engine collapses them to one lower
+    /// bound, exactly like [`ExecutionPlan::lower_bound`].
+    pub restr_sources: Vec<usize>,
+    /// Label a candidate must carry (`None` on unlabeled plans).
+    pub label: Option<Label>,
+    /// Root-label key component: the seed label the subtree's plans
+    /// demand. Only depth-1 nodes key on it (deeper nodes inherit it
+    /// through their path), so it is `None` past depth 1.
+    pub root_label: Option<Label>,
+    /// Minimum seed-degree floor over the subtree's plans — the root
+    /// admission test `run_trie` applies before descending into this
+    /// depth-1 node (deeper nodes keep it for symmetry but never test).
+    pub min_floor: usize,
+    /// Child node indices (fan-out points of the walk).
+    pub children: Vec<usize>,
+    /// Pattern index (= counter slot) when this node is a leaf at depth
+    /// k-1.
+    pub leaf: Option<usize>,
+}
+
+impl TrieNode {
+    fn matches_key(
+        &self,
+        backward: &[usize],
+        forbidden: &[usize],
+        restr: &[usize],
+        label: Option<Label>,
+        root_label: Option<Label>,
+    ) -> bool {
+        self.backward == backward
+            && self.forbidden == forbidden
+            && self.restr_sources == restr
+            && self.label == label
+            && self.root_label == root_label
+    }
+}
+
+/// A set of per-pattern plans merged into one prefix-sharing trie.
+#[derive(Clone, Debug)]
+pub struct PlanTrie {
+    k: usize,
+    oriented: bool,
+    nodes: Vec<TrieNode>,
+    roots: Vec<usize>,
+    plans: Vec<ExecutionPlan>,
+    /// `leaves[i]` = node index of pattern `i`'s leaf.
+    leaves: Vec<usize>,
+}
+
+impl PlanTrie {
+    /// Merge a pattern set's plans into a trie. The set must be
+    /// non-empty, uniform in k (>= 3), uniform in orientation and
+    /// labeledness, and duplicate-free (by canonical bitmap + labels) —
+    /// each violation carries its own distinct error.
+    pub fn build(plans: &[ExecutionPlan]) -> Result<PlanTrie> {
+        let Some(first) = plans.first() else {
+            bail!("empty pattern set (a plan trie needs at least one pattern)");
+        };
+        let k = first.k();
+        if k < 3 {
+            bail!("pattern set has {k}-vertex patterns (the engine needs k >= 3)");
+        }
+        for p in plans {
+            if p.k() != k {
+                bail!("pattern set mixes sizes: got a {}-vertex pattern, expected {k}", p.k());
+            }
+            if p.oriented != first.oriented {
+                bail!("pattern set mixes oriented and unoriented plans");
+            }
+            if p.labels.is_some() != first.labels.is_some() {
+                bail!("pattern set mixes labeled and unlabeled patterns");
+            }
+        }
+        let mut seen: Vec<(u64, Option<Vec<Label>>)> = Vec::with_capacity(plans.len());
+        for p in plans {
+            let key = (p.canonical, p.labels.clone());
+            if seen.contains(&key) {
+                bail!(
+                    "duplicate pattern in set (canonical bitmap {:#x})",
+                    p.canonical
+                );
+            }
+            seen.push(key);
+        }
+        let mut trie = PlanTrie {
+            k,
+            oriented: first.oriented,
+            nodes: Vec::new(),
+            roots: Vec::new(),
+            plans: plans.to_vec(),
+            leaves: Vec::with_capacity(plans.len()),
+        };
+        for (i, p) in plans.iter().enumerate() {
+            trie.insert(i, p)?;
+        }
+        Ok(trie)
+    }
+
+    fn insert(&mut self, idx: usize, p: &ExecutionPlan) -> Result<()> {
+        let floor = p.min_seed_degree().max(1);
+        let mut parent: Option<usize> = None;
+        for depth in 1..self.k {
+            let restr: Vec<usize> = p
+                .restrictions
+                .iter()
+                .filter(|&&(_, b)| b == depth)
+                .map(|&(a, _)| a)
+                .collect();
+            let label = p.position_label(depth);
+            let root_label = if depth == 1 { p.root_label() } else { None };
+            let siblings: Vec<usize> = match parent {
+                None => self.roots.clone(),
+                Some(par) => self.nodes[par].children.clone(),
+            };
+            let found = siblings.iter().copied().find(|&n| {
+                self.nodes[n].matches_key(
+                    &p.backward[depth],
+                    &p.forbidden[depth],
+                    &restr,
+                    label,
+                    root_label,
+                )
+            });
+            let node = match found {
+                Some(n) => {
+                    self.nodes[n].min_floor = self.nodes[n].min_floor.min(floor);
+                    n
+                }
+                None => {
+                    let n = self.nodes.len();
+                    self.nodes.push(TrieNode {
+                        depth,
+                        backward: p.backward[depth].clone(),
+                        forbidden: p.forbidden[depth].clone(),
+                        restr_sources: restr,
+                        label,
+                        root_label,
+                        min_floor: floor,
+                        children: Vec::new(),
+                        leaf: None,
+                    });
+                    match parent {
+                        None => self.roots.push(n),
+                        Some(par) => self.nodes[par].children.push(n),
+                    }
+                    n
+                }
+            };
+            if depth == self.k - 1 {
+                // key-path identity => identical plan, caught above; this
+                // guards the invariant rather than a reachable user error
+                if self.nodes[node].leaf.is_some() {
+                    bail!("duplicate pattern in set (identical execution plan)");
+                }
+                self.nodes[node].leaf = Some(idx);
+                self.leaves.push(node);
+            }
+            parent = Some(node);
+        }
+        Ok(())
+    }
+
+    /// Compile the full connected-pattern set for size `k` (enumerated
+    /// via [`all_patterns`]) into one trie — the planned motif-counting
+    /// job. The clique pattern takes the direct
+    /// [`ExecutionPlan::clique`] construction (the oriented-aware one;
+    /// `build` is proven equal for dictionary-sized k, and the trie is
+    /// uniform-unoriented so the plain variant is the right member).
+    pub fn motifs(k: usize) -> PlanTrie {
+        assert!(
+            (3..=CanonDict::MAX_DICT_K).contains(&k),
+            "motif tries support k in 3..={}",
+            CanonDict::MAX_DICT_K
+        );
+        let plans: Vec<ExecutionPlan> = all_patterns(k)
+            .iter()
+            .map(|m| {
+                let complete = (0..k).all(|v| m.degree(v) as usize == k - 1);
+                if complete {
+                    ExecutionPlan::clique(k)
+                } else {
+                    ExecutionPlan::build(m)
+                }
+            })
+            .collect();
+        Self::build(&plans).expect("all_patterns yields distinct canonical patterns")
+    }
+
+    /// Pattern size (uniform across the set).
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Whether the plans are oriented (must match the graph's
+    /// directedness, asserted by the runner).
+    #[inline]
+    pub fn oriented(&self) -> bool {
+        self.oriented
+    }
+
+    /// Number of patterns (= leaf counter slots).
+    #[inline]
+    pub fn num_patterns(&self) -> usize {
+        self.plans.len()
+    }
+
+    /// Total trie nodes.
+    #[inline]
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Interior (non-leaf-depth) nodes — the prefix-sharing metric: a
+    /// set with shared prefixes has strictly fewer interior nodes than
+    /// the Σ per-plan levels a sequential run walks.
+    pub fn num_interior(&self) -> usize {
+        self.nodes.iter().filter(|n| n.depth < self.k - 1).count()
+    }
+
+    /// Depth-1 node indices (the walk's entry fan-out).
+    #[inline]
+    pub fn roots(&self) -> &[usize] {
+        &self.roots
+    }
+
+    /// Node accessor.
+    #[inline]
+    pub fn node(&self, idx: usize) -> &TrieNode {
+        &self.nodes[idx]
+    }
+
+    /// The i-th pattern's compiled plan (leaf order = input order).
+    #[inline]
+    pub fn plan(&self, i: usize) -> &ExecutionPlan {
+        &self.plans[i]
+    }
+
+    /// All member plans, in input (= counter-slot) order.
+    #[inline]
+    pub fn plans(&self) -> &[ExecutionPlan] {
+        &self.plans
+    }
+
+    /// Seed admission for the whole set: the union of the member plans'
+    /// predicates. A seed failing a stricter member's floor or root
+    /// label still enters the walk (its subtree for that member finds
+    /// nothing), so union admission never changes counts — it only
+    /// skips seeds *no* member can root.
+    pub fn seed_matches(&self, g: &CsrGraph, v: VertexId) -> bool {
+        self.plans.iter().any(|p| p.seed_matches(g, v))
+    }
+
+    /// Largest backward set at matching position `pos` across the
+    /// trie's nodes — the intersect planner's per-level cost input.
+    pub fn max_backward_at(&self, pos: usize) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| n.depth == pos)
+            .map(|n| n.backward.len())
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Whether any node at position `pos` carries a symmetry lower
+    /// bound (the intersect planner's slice-halving signal).
+    pub fn any_restricted_at(&self, pos: usize) -> bool {
+        self.nodes
+            .iter()
+            .any(|n| n.depth == pos && !n.restr_sources.is_empty())
+    }
+
+    /// Fold per-leaf counters into the report's per-pattern census:
+    /// `(canonical bitmap, count)` pairs, zero rows dropped, sorted by
+    /// bitmap — the same shape the unplanned dictionary census emits,
+    /// with leaf identity replacing canonical relabeling.
+    pub fn census(&self, leaf_counts: &[u64]) -> Vec<(u64, u64)> {
+        let mut by_canon: std::collections::BTreeMap<u64, u64> = std::collections::BTreeMap::new();
+        for (i, p) in self.plans.iter().enumerate() {
+            let c = leaf_counts.get(i).copied().unwrap_or(0);
+            if c > 0 {
+                *by_canon.entry(p.canonical).or_insert(0) += c;
+            }
+        }
+        by_canon.into_iter().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::canon::bitmap::AdjMat;
+
+    fn mat(k: usize, edges: &[(usize, usize)]) -> AdjMat {
+        let mut m = AdjMat::empty(k);
+        for &(a, b) in edges {
+            m.set_edge(a, b);
+        }
+        m
+    }
+
+    fn four_path() -> ExecutionPlan {
+        ExecutionPlan::build(&mat(4, &[(0, 1), (1, 2), (2, 3)]))
+    }
+
+    fn four_cycle() -> ExecutionPlan {
+        ExecutionPlan::build(&mat(4, &[(0, 1), (1, 2), (2, 3), (3, 0)]))
+    }
+
+    #[test]
+    fn build_rejects_each_malformed_set_distinctly() {
+        let err = |plans: &[ExecutionPlan]| format!("{:#}", PlanTrie::build(plans).unwrap_err());
+        assert!(err(&[]).contains("empty pattern set"));
+        let tri = ExecutionPlan::clique(3);
+        assert!(err(&[tri.clone(), four_cycle()]).contains("mixes sizes"));
+        assert!(err(&[tri.clone(), tri.clone()]).contains("duplicate pattern"));
+        let oriented = ExecutionPlan::clique_oriented(4);
+        assert!(err(&[four_cycle(), oriented]).contains("mixes oriented"));
+        let m = mat(3, &[(0, 1), (1, 2)]);
+        let labeled = ExecutionPlan::build_labeled(&m, &[1, 1, 1], None);
+        assert!(err(&[tri, labeled]).contains("mixes labeled and unlabeled"));
+    }
+
+    #[test]
+    fn four_path_and_four_cycle_share_their_depth_one_node() {
+        // both plans open with backward=[0], no forbidden, restriction
+        // lower bound from position 0, no label: one shared root
+        let t = PlanTrie::build(&[four_path(), four_cycle()]).unwrap();
+        assert_eq!(t.num_patterns(), 2);
+        assert_eq!(t.roots().len(), 1, "depth-1 recipes must merge");
+        assert_eq!(t.node(t.roots()[0]).restr_sources, vec![0]);
+        // they diverge by depth 3 at the latest: two distinct leaves
+        let leaves: Vec<usize> =
+            (0..t.num_nodes()).filter(|&n| t.node(n).leaf.is_some()).collect();
+        assert_eq!(leaves.len(), 2);
+        // strictly fewer interior nodes than the sequential 2 plans ×
+        // (k-2) interior levels
+        assert!(t.num_interior() < 2 * 2, "no sharing: {}", t.num_interior());
+    }
+
+    #[test]
+    fn motif_trie_sizes_match_the_pattern_dictionaries() {
+        for (k, want) in [(3usize, 2usize), (4, 6), (5, 21)] {
+            let t = PlanTrie::motifs(k);
+            assert_eq!(t.num_patterns(), want, "k={k}");
+            assert!(!t.oriented());
+            // every pattern got a distinct leaf slot
+            let mut slots: Vec<usize> = (0..t.num_nodes())
+                .filter_map(|n| t.node(n).leaf)
+                .collect();
+            slots.sort_unstable();
+            assert_eq!(slots, (0..want).collect::<Vec<_>>(), "k={k}");
+        }
+    }
+
+    #[test]
+    fn motif_trie_shares_prefixes_aggressively() {
+        // unlabeled depth-1 keys only vary in their restriction sources
+        // (backward is always [0], forbidden empty): at most 2 roots
+        let t = PlanTrie::motifs(4);
+        assert!(t.roots().len() <= 2, "got {} roots", t.roots().len());
+        // sequential planned motifs walk 6 plans × 2 interior levels
+        assert!(t.num_interior() < 6 * 2, "interior {}", t.num_interior());
+    }
+
+    #[test]
+    fn census_merges_leaf_counts_by_canonical_and_drops_zeros() {
+        let t = PlanTrie::build(&[four_path(), four_cycle()]).unwrap();
+        let census = t.census(&[7, 0]);
+        assert_eq!(census, vec![(t.plan(0).canonical, 7)]);
+        let both = t.census(&[3, 5]);
+        assert_eq!(both.len(), 2);
+        assert_eq!(both.iter().map(|&(_, c)| c).sum::<u64>(), 8);
+        // short slices read as zeros (pre-resize aggregators)
+        assert_eq!(t.census(&[]), vec![]);
+    }
+
+    #[test]
+    fn seed_union_admits_what_any_member_admits() {
+        let g = crate::graph::generators::star(5);
+        // star hub degree 5, leaves degree 1: the triangle member needs
+        // degree 2, the wedge member degree 2 at its center root — but
+        // the 3-path... all k=3 motifs root at degree >= 1 positions
+        let t = PlanTrie::motifs(3);
+        for v in 0..6 {
+            let union: bool = t.plans().iter().any(|p| p.seed_matches(&g, v));
+            assert_eq!(t.seed_matches(&g, v), union, "v={v}");
+        }
+    }
+
+    #[test]
+    fn intersect_cost_inputs_cover_every_depth() {
+        let t = PlanTrie::motifs(4);
+        for pos in 1..4 {
+            assert!(t.max_backward_at(pos) >= 1, "pos={pos}");
+        }
+        assert_eq!(t.max_backward_at(3), 3, "the clique member intersects 3 lists");
+        // symmetry bounds exist somewhere in an unlabeled motif set
+        assert!((1..4).any(|pos| t.any_restricted_at(pos)));
+    }
+}

@@ -21,7 +21,7 @@
 //! vocabularies round-trip.
 
 use dumato::cli::Args;
-use dumato::plan::parse_pattern;
+use dumato::plan::{parse_pattern, parse_pattern_set};
 use dumato::util::Rng;
 
 /// A random connected edge list over `0..k` (path spine + extras),
@@ -151,6 +151,81 @@ fn fuzz_malformed_specs_each_reject_with_a_distinct_error() {
         }
     }
     assert!(total >= 250, "fuzz volume regressed: {total} specs");
+}
+
+fn assert_set_rejected(specs: &[String], marker: &str, category: &str) {
+    match parse_pattern_set(specs) {
+        Ok(p) => panic!("{category}: set {specs:?} parsed as {p:?}, expected rejection"),
+        Err(e) => {
+            let msg = format!("{e:#}");
+            assert!(
+                msg.contains(marker),
+                "{category}: set {specs:?} rejected with '{msg}', expected marker '{marker}'"
+            );
+        }
+    }
+}
+
+#[test]
+fn fuzz_malformed_pattern_sets_each_reject_with_a_distinct_error() {
+    // the set-level corruption categories, same treatment as the per-spec
+    // fuzz: empty set, mixed sizes, duplicates up to isomorphism, mixed
+    // labeled/unlabeled members, and per-spec errors passing through
+    let mut rng = Rng::new(0x5E7F);
+    assert_set_rejected(&[], "empty pattern set", "empty set");
+    let mut total = 1usize;
+    for _ in 0..40 {
+        let k = rng.range(3, 6);
+        let edges = random_edges(&mut rng, k);
+        let base = render(&edges, None).join(",");
+
+        // 1. mixed sizes: one member on k vertices, one on k' != k
+        {
+            let k2 = if rng.chance(0.5) { k + 1 } else { k + 2 };
+            let other = render(&random_edges(&mut rng, k2), None).join(",");
+            let set = vec![base.clone(), other];
+            assert_set_rejected(&set, "mixes sizes", "mixed sizes");
+            total += 1;
+        }
+
+        // 2. duplicate up to isomorphism: the same pattern with its edge
+        // list shuffled and every edge's endpoints possibly flipped
+        {
+            let mut perm: Vec<(usize, usize)> = edges
+                .iter()
+                .map(|&(a, b)| if rng.chance(0.5) { (b, a) } else { (a, b) })
+                .collect();
+            rng.shuffle(&mut perm);
+            let twin = render(&perm, None).join(",");
+            let set = vec![base.clone(), twin];
+            assert_set_rejected(&set, "duplicate pattern", "isomorphic duplicate");
+            total += 1;
+        }
+
+        // 3. mixed labeled and unlabeled members
+        {
+            let labels: Vec<u32> = (0..k).map(|_| rng.below(4) as u32).collect();
+            let labeled = render(&edges, Some(&labels)).join(",");
+            let set = vec![base.clone(), labeled];
+            assert_set_rejected(&set, "mixes labeled and unlabeled", "mixed labeledness");
+            total += 1;
+        }
+
+        // 4. a malformed member surfaces its own per-spec error
+        {
+            let v = rng.range(0, k);
+            let set = vec![base.clone(), format!("{v}-{v}")];
+            assert_set_rejected(&set, "self-loop", "malformed member");
+            total += 1;
+        }
+    }
+    assert!(total >= 160, "fuzz volume regressed: {total} sets");
+
+    // and valid sets still pass: distinct patterns, uniform k
+    let set = vec!["0-1,1-2,2-3,3-0".to_string(), "0-1,1-2,2-3".to_string()];
+    let parsed = parse_pattern_set(&set).unwrap();
+    assert_eq!(parsed.len(), 2);
+    assert!(parsed.iter().all(|p| p.k == 4));
 }
 
 /// Random flag value that is NOT in the valid vocabulary: random ASCII

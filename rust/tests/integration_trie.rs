@@ -1,0 +1,189 @@
+//! Fused multi-pattern execution, end to end:
+//!
+//! - the fused plan-trie traversal, the sequential per-pattern planned
+//!   engine, and the unplanned motif classification all agree on random
+//!   G(n,p) graphs, across k in {3,4,5}, devices in {1,2}, and every
+//!   intersection strategy;
+//! - every leaf counter matches the member plan's CPU oracle
+//!   (`ExecutionPlan::count_from` summed over seeds);
+//! - prefix sharing is real: the trie holds strictly fewer interior
+//!   nodes than the member plans laid side by side (k >= 4);
+//! - labeled pattern sets ride the same machinery;
+//! - intra-device load balancing stays exact on trie jobs (the
+//!   `seed_only` donation restriction).
+
+use dumato::api::GpmAlgorithm;
+use dumato::apps::{MotifCount, SubgraphQuerySet};
+use dumato::balance::LbConfig;
+use dumato::engine::{EngineConfig, IntersectStrategy, Runner, WarpContext};
+use dumato::graph::generators;
+use dumato::plan::trie::PlanTrie;
+use dumato::plan::{parse_pattern_set, ExecutionPlan};
+use dumato::util::proptest::{check, Config};
+
+fn cfg() -> EngineConfig {
+    EngineConfig {
+        warps: 8,
+        threads: 2,
+        ..Default::default()
+    }
+}
+
+/// Minimal sequential planned counter (the pre-trie execution model): one
+/// full engine run per pattern through `extend_planned`/`filter_plan`.
+struct PlanCounter {
+    plan: ExecutionPlan,
+}
+
+impl GpmAlgorithm for PlanCounter {
+    fn name(&self) -> &str {
+        "plan_counter"
+    }
+
+    fn k(&self) -> usize {
+        self.plan.k()
+    }
+
+    fn plan(&self) -> Option<&ExecutionPlan> {
+        Some(&self.plan)
+    }
+
+    fn run(&self, ctx: &mut WarpContext) {
+        let k = self.plan.k();
+        while ctx.control() {
+            if ctx.extend_planned(&self.plan) {
+                ctx.filter_plan(&self.plan);
+                if ctx.te.len() == k - 1 {
+                    ctx.aggregate_counter();
+                }
+            }
+            ctx.move_(false);
+        }
+    }
+}
+
+/// `count_from` summed over every vertex: the CPU oracle for one member.
+fn oracle(p: &ExecutionPlan, g: &dumato::graph::CsrGraph) -> u64 {
+    (0..g.num_vertices() as u32).map(|v| p.count_from(g, v)).sum()
+}
+
+#[test]
+fn fused_equals_sequential_planned_and_unplanned_property() {
+    check(
+        Config { cases: 8, ..Default::default() },
+        "fused == sequential planned == unplanned across devices x strategies",
+        |rng| {
+            let n = rng.range(10, 16);
+            let p = 0.2 + rng.f64() * 0.25;
+            let g = generators::erdos_renyi(n, p, rng.next_u64());
+            let k = rng.range(3, 6);
+            let trie = PlanTrie::motifs(k);
+            let oracles: Vec<u64> = trie.plans().iter().map(|pl| oracle(pl, &g)).collect();
+            // the unplanned Algorithm-4 census is the third witness
+            let unplanned = Runner::run(&g, &MotifCount::new(k), &cfg()).patterns;
+            for devices in [1usize, 2] {
+                for strategy in [
+                    IntersectStrategy::Auto,
+                    IntersectStrategy::Merge,
+                    IntersectStrategy::Bisect,
+                    IntersectStrategy::Bitmap,
+                ] {
+                    let mut c = cfg();
+                    c.devices = devices;
+                    c.intersect = strategy;
+                    let r = Runner::run(&g, &MotifCount::planned(k), &c);
+                    dumato::prop_assert_eq!(
+                        &r.leaf_counts,
+                        &oracles,
+                        "leaf counts vs count_from: k={k} devices={devices} {strategy:?}"
+                    );
+                    dumato::prop_assert_eq!(
+                        &r.patterns,
+                        &unplanned,
+                        "census vs unplanned: k={k} devices={devices} {strategy:?}"
+                    );
+                    dumato::prop_assert_eq!(
+                        r.count,
+                        oracles.iter().sum::<u64>(),
+                        "total: k={k} devices={devices} {strategy:?}"
+                    );
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn fused_leaves_match_the_sequential_planned_engine() {
+    // the engine-vs-engine differential (not just the CPU oracle): each
+    // leaf counter equals one full sequential planned run of that member
+    let g = generators::erdos_renyi(16, 0.35, 21);
+    let trie = PlanTrie::motifs(4);
+    let fused = Runner::run(&g, &MotifCount::planned(4), &cfg());
+    assert_eq!(fused.leaf_counts.len(), trie.num_patterns());
+    for (i, pl) in trie.plans().iter().enumerate() {
+        let seq = Runner::run(&g, &PlanCounter { plan: pl.clone() }, &cfg());
+        assert_eq!(fused.leaf_counts[i], seq.count, "pattern {i}");
+    }
+}
+
+#[test]
+fn prefix_sharing_shrinks_the_interior() {
+    // laid side by side the member plans hold plans.len() * (k - 2)
+    // interior nodes (depths 1..k-1); the trie must merge some of them
+    for k in [4usize, 5] {
+        let trie = PlanTrie::motifs(k);
+        let separate = trie.num_patterns() * (k - 2);
+        assert!(
+            trie.num_interior() < separate,
+            "k={k}: {} interior nodes, separate plans hold {separate}",
+            trie.num_interior()
+        );
+    }
+}
+
+#[test]
+fn labeled_pattern_sets_count_exactly_across_devices() {
+    let g = generators::with_random_labels(generators::erdos_renyi(18, 0.35, 13), 2, 7);
+    let specs: Vec<String> = ["0:0-1:1,1:1-2:0", "0:1-1:1,1:1-2:1", "0:0-1:0,1:0-2:0,0:0-2:0"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    let parsed = parse_pattern_set(&specs).unwrap();
+    let qs = SubgraphQuerySet::for_graph(&parsed, &g).unwrap();
+    let want: Vec<u64> =
+        (0..qs.num_patterns()).map(|i| oracle(qs.member_plan(i), &g)).collect();
+    for devices in [1usize, 2] {
+        let mut c = cfg();
+        c.devices = devices;
+        let r = Runner::run(&g, &qs, &c);
+        assert_eq!(qs.counts(&r), want, "devices={devices}");
+    }
+}
+
+#[test]
+fn trie_counts_survive_aggressive_load_balancing() {
+    // an aggressive LB threshold forces many segment stops and donation
+    // attempts; `seed_only` must keep trie warps from shipping TE
+    // subtrees (whose walk position cannot move with them)
+    let g = generators::erdos_renyi(40, 0.25, 17);
+    let trie = PlanTrie::motifs(4);
+    let want: Vec<u64> = trie.plans().iter().map(|pl| oracle(pl, &g)).collect();
+    let lb = EngineConfig {
+        warps: 8,
+        threads: 2,
+        ..Default::default()
+    }
+    .with_lb(LbConfig {
+        threshold: 0.9,
+        poll_interval: std::time::Duration::from_micros(50),
+    });
+    let r = Runner::run(&g, &MotifCount::planned(4), &lb);
+    assert_eq!(r.leaf_counts, want);
+    // and the same under fleet epochs (inter-device donations)
+    let mut fleet = lb.clone();
+    fleet.devices = 2;
+    let r2 = Runner::run(&g, &MotifCount::planned(4), &fleet);
+    assert_eq!(r2.leaf_counts, want);
+}
