@@ -1,0 +1,243 @@
+//! Service-layer load generator: batched admission + caching vs.
+//! sequential per-query execution on a repeat-heavy Zipfian mix.
+//!
+//! ```
+//! cargo bench --bench service
+//! DUMATO_BENCH_SCALE=0.02 cargo bench --bench service        # CI smoke
+//! DUMATO_BENCH_JSON=1 cargo bench --bench service            # + BENCH_service.json
+//! ```
+//!
+//! Workloads draw queries Zipf-style (weight 1/(rank+1)) from a small
+//! pattern pool; repeat draws rotate through relabeled-isomorph
+//! spellings of the same pattern, so the cache layer earns its hits
+//! through canonicalization, not string identity. The sequential mode
+//! runs every query as its own cold planned `Runner` job (the pre-
+//! service reality: plan compile + full traversal per query); the
+//! service mode pushes the whole mix through one `ServiceHandle`
+//! (submit-all-then-wait, so admission fuses the in-flight set).
+//! Both report modeled seconds; `sim_time` and `p99` feed the
+//! `bench_check` regression gate (lower is better — qps and hit rates
+//! are printed but not gated).
+//!
+//! ISSUE-7 acceptance: batched admission must clear >= 2x modeled
+//! throughput over sequential on the unlabeled mix (asserted below
+//! unless a cell times out).
+
+#[path = "support.rs"]
+mod support;
+
+use std::sync::Arc;
+
+use dumato::apps::SubgraphQuery;
+use dumato::engine::Runner;
+use dumato::graph::{generators, CsrGraph};
+use dumato::plan::parse_pattern;
+use dumato::report::{percentile_cell, Table};
+use dumato::service::{Service, ServiceConfig, Ticket};
+use dumato::util::Rng;
+
+/// A pattern with isomorphic respellings (rotated on repeat draws).
+struct PoolEntry {
+    spellings: &'static [&'static str],
+}
+
+const UNLABELED_POOL: &[PoolEntry] = &[
+    PoolEntry { spellings: &["0-1,1-2,2-3,3-0", "0-2,2-1,1-3,3-0"] },
+    PoolEntry { spellings: &["0-1,1-2,2-3", "2-0,0-3,3-1"] },
+    PoolEntry { spellings: &["0-1,1-2,0-2,0-3,2-3", "1-0,0-3,1-3,1-2,3-2"] },
+    PoolEntry { spellings: &["0-1,0-2,0-3", "2-0,2-1,2-3"] },
+    PoolEntry { spellings: &["0-1,1-2,0-2,2-3", "1-3,3-0,1-0,0-2"] },
+    PoolEntry { spellings: &["0-1,0-2,0-3,1-2,1-3,2-3", "3-2,3-1,3-0,2-1,2-0,1-0"] },
+];
+
+const LABELED_POOL: &[PoolEntry] = &[
+    PoolEntry { spellings: &["0:0-1:1,1:1-2:0", "2:0-1:1,1:1-0:0"] },
+    PoolEntry { spellings: &["0:0-1:1,1:1-2:2,2:2-0:0", "1:0-2:1,2:1-0:2,0:2-1:0"] },
+    PoolEntry { spellings: &["0:1-1:0,1:0-2:1", "2:1-1:0,1:0-0:1"] },
+];
+
+/// Draw a Zipfian workload: `n` specs from `pool`, rank weights
+/// 1/(rank+1), spellings rotated per rank so repeats re-arrive as
+/// isomorphs.
+fn zipf_workload(pool: &[PoolEntry], n: usize, rng: &mut Rng) -> Vec<String> {
+    let weights: Vec<f64> = (0..pool.len()).map(|r| 1.0 / (r as f64 + 1.0)).collect();
+    let total: f64 = weights.iter().sum();
+    let mut hits = vec![0usize; pool.len()];
+    (0..n)
+        .map(|_| {
+            let mut x = rng.f64() * total;
+            let mut rank = 0;
+            for (r, w) in weights.iter().enumerate() {
+                if x < *w {
+                    rank = r;
+                    break;
+                }
+                x -= w;
+                rank = r;
+            }
+            let spellings = pool[rank].spellings;
+            let s = spellings[hits[rank] % spellings.len()];
+            hits[rank] += 1;
+            s.to_string()
+        })
+        .collect()
+}
+
+struct ModeCell {
+    sim: f64,
+    lat: Vec<f64>,
+    counts: Vec<u64>,
+    timed_out: bool,
+    cold: u64,
+    hit_rate: f64,
+}
+
+/// Sequential mode: every query is its own cold planned run.
+fn run_sequential(g: &CsrGraph, workload: &[String]) -> ModeCell {
+    let cfg = support::engine_cfg();
+    let mut cell = ModeCell {
+        sim: 0.0,
+        lat: Vec::new(),
+        counts: Vec::new(),
+        timed_out: false,
+        cold: workload.len() as u64,
+        hit_rate: 0.0,
+    };
+    for spec in workload {
+        let p = parse_pattern(spec).expect("pool specs are valid");
+        let q = match &p.labels {
+            Some(ls) => SubgraphQuery::labeled_for(p.k, &p.edges, ls, g),
+            None => SubgraphQuery::new(p.k, &p.edges),
+        };
+        let r = Runner::run(g, &q, &cfg);
+        cell.timed_out |= r.timed_out;
+        cell.sim += r.metrics.sim_seconds;
+        cell.lat.push(r.metrics.sim_seconds);
+        cell.counts.push(q.matches(&r).len() as u64);
+    }
+    cell
+}
+
+/// Service mode: submit the whole mix, then await — in-flight queries
+/// fuse in the admission window and repeats hit the caches.
+fn run_service(g: &CsrGraph, workload: &[String]) -> ModeCell {
+    let svc = Service::start(
+        Arc::new(g.clone()),
+        ServiceConfig {
+            engine: support::engine_cfg(),
+            batch_window: std::time::Duration::from_millis(2),
+            ..ServiceConfig::default()
+        },
+    );
+    let h = svc.handle();
+    let tickets: Vec<Ticket> = workload
+        .iter()
+        .map(|s| h.submit(std::slice::from_ref(s)).expect("pool specs are valid"))
+        .collect();
+    let mut cell = ModeCell {
+        sim: 0.0,
+        lat: Vec::new(),
+        counts: Vec::new(),
+        timed_out: false,
+        cold: 0,
+        hit_rate: 0.0,
+    };
+    let mut member_hits = 0usize;
+    for t in tickets {
+        let o = t.wait().expect("service stays up for the whole mix");
+        assert!(o.fault.is_none(), "engine fault under load: {:?}", o.fault);
+        cell.timed_out |= o.timed_out;
+        cell.lat.push(o.latency);
+        cell.counts.push(o.counts[0]);
+        member_hits += o.result_hits;
+    }
+    let stats = h.stats();
+    cell.sim = stats.sim_seconds;
+    cell.cold = stats.cold_patterns;
+    cell.hit_rate = member_hits as f64 / workload.len() as f64;
+    svc.shutdown();
+    cell
+}
+
+fn push_rows(t: &mut Table, workload: &str, seq: &ModeCell, svc: &ModeCell) {
+    let any_timeout = seq.timed_out || svc.timed_out;
+    if !any_timeout {
+        assert_eq!(
+            seq.counts, svc.counts,
+            "{workload}: service counts must match per-query cold runs"
+        );
+    }
+    for (mode, cell, speedup) in [
+        ("sequential", seq, "-".to_string()),
+        (
+            "service",
+            svc,
+            if any_timeout || svc.sim == 0.0 {
+                "-".to_string()
+            } else {
+                format!("{:.2}", seq.sim / svc.sim)
+            },
+        ),
+    ] {
+        t.row(vec![
+            workload.to_string(),
+            mode.to_string(),
+            cell.counts.len().to_string(),
+            cell.cold.to_string(),
+            format!("{:.6}", cell.sim),
+            percentile_cell(&cell.lat, 0.50),
+            percentile_cell(&cell.lat, 0.99),
+            format!("{:.2}", cell.hit_rate),
+            speedup,
+        ]);
+    }
+}
+
+fn main() {
+    support::print_env_banner("service");
+    let s = support::scale();
+    let g = generators::CITESEER.scaled(s).generate(1);
+    let gl = generators::with_random_labels(g.clone(), 4, 2);
+    println!("dataset={} |V|={} |E|={}", g.name(), g.num_vertices(), g.num_edges());
+
+    let n = 40 + (s * 400.0) as usize;
+    let mut rng = Rng::new(0x5e21);
+    let unlabeled = zipf_workload(UNLABELED_POOL, n, &mut rng);
+    let labeled = zipf_workload(LABELED_POOL, n / 2, &mut rng);
+
+    let mut t = Table::new(
+        "Service layer: batched admission + caches vs sequential cold runs (modeled seconds)",
+        &["workload", "mode", "queries", "cold", "sim_time", "p50", "p99", "hit_rate", "speedup"],
+    );
+
+    let seq_u = run_sequential(&g, &unlabeled);
+    let svc_u = run_service(&g, &unlabeled);
+    push_rows(&mut t, "zipf-unlabeled", &seq_u, &svc_u);
+
+    let seq_l = run_sequential(&gl, &labeled);
+    let svc_l = run_service(&gl, &labeled);
+    push_rows(&mut t, "zipf-labeled", &seq_l, &svc_l);
+
+    print!("{}", t.render());
+
+    if seq_u.timed_out || svc_u.timed_out {
+        println!("note: timeout hit — skipping the throughput acceptance assert");
+    } else {
+        let speedup = seq_u.sim / svc_u.sim;
+        println!(
+            "unlabeled mix: {} queries, {} cold, modeled speedup {speedup:.2}x",
+            unlabeled.len(),
+            svc_u.cold
+        );
+        assert!(
+            speedup >= 2.0,
+            "ISSUE-7 acceptance: batched admission must be >= 2x sequential \
+             on the repeat-heavy mix (got {speedup:.2}x)"
+        );
+    }
+
+    if std::env::var("DUMATO_BENCH_JSON").is_ok() {
+        std::fs::write("BENCH_service.json", t.to_json()).expect("write BENCH_service.json");
+        println!("wrote BENCH_service.json");
+    }
+}

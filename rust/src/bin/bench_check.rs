@@ -49,6 +49,13 @@ const SPECS: &[Spec] = &[
         key: &["dataset", "app", "ordering", "strategy"],
         metrics: &["sim_time"],
     },
+    // service rows carry qps-style columns too (hit_rate, speedup) —
+    // only the lower-is-better modeled times are gated
+    Spec {
+        file: "BENCH_service.json",
+        key: &["workload", "mode"],
+        metrics: &["sim_time", "p99"],
+    },
 ];
 
 // ---------------------------------------------------------------------
@@ -113,24 +120,69 @@ impl<'a> Parser<'a> {
                         b'r' => out.push('\r'),
                         b't' => out.push('\t'),
                         b'u' => {
-                            let hex = self
-                                .b
-                                .get(self.i..self.i + 4)
-                                .ok_or_else(|| self.err("bad \\u"))?;
-                            let code = u32::from_str_radix(
-                                std::str::from_utf8(hex).map_err(|_| self.err("bad \\u"))?,
-                                16,
-                            )
-                            .map_err(|_| self.err("bad \\u"))?;
-                            self.i += 4;
-                            out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                            let hi = self.hex4()?;
+                            out.push(self.combine_surrogates(hi)?);
                         }
                         _ => return Err(self.err("unknown escape")),
                     }
                 }
-                c => out.push(c as char),
+                c if c < 0x80 => out.push(c as char),
+                c => {
+                    // multibyte UTF-8: the input is a &str, so the
+                    // sequence is complete and valid — copy it whole
+                    // instead of mangling it byte-by-byte
+                    let len = match c {
+                        0xc0..=0xdf => 2,
+                        0xe0..=0xef => 3,
+                        _ => 4,
+                    };
+                    let start = self.i - 1;
+                    let end = start + len;
+                    let seq = self
+                        .b
+                        .get(start..end)
+                        .and_then(|s| std::str::from_utf8(s).ok())
+                        .ok_or_else(|| self.err("bad utf-8 sequence"))?;
+                    out.push_str(seq);
+                    self.i = end;
+                }
             }
         }
+    }
+
+    /// Four hex digits of a `\u` escape.
+    fn hex4(&mut self) -> Result<u32, String> {
+        let hex = self
+            .b
+            .get(self.i..self.i + 4)
+            .ok_or_else(|| self.err("bad \\u"))?;
+        let code =
+            u32::from_str_radix(std::str::from_utf8(hex).map_err(|_| self.err("bad \\u"))?, 16)
+                .map_err(|_| self.err("bad \\u"))?;
+        self.i += 4;
+        Ok(code)
+    }
+
+    /// Resolve a `\u` code unit: a high surrogate combines with an
+    /// immediately following `\uDC00..\uDFFF` escape (how
+    /// `Table::to_json` emits beyond-BMP cells); anything unpaired
+    /// degrades to U+FFFD rather than failing the gate.
+    fn combine_surrogates(&mut self, hi: u32) -> Result<char, String> {
+        if !(0xd800..=0xdbff).contains(&hi) {
+            return Ok(char::from_u32(hi).unwrap_or('\u{fffd}'));
+        }
+        if self.b.get(self.i) == Some(&b'\\') && self.b.get(self.i + 1) == Some(&b'u') {
+            let save = self.i;
+            self.i += 2;
+            let lo = self.hex4()?;
+            if (0xdc00..=0xdfff).contains(&lo) {
+                let code = 0x10000 + ((hi - 0xd800) << 10) + (lo - 0xdc00);
+                return Ok(char::from_u32(code).unwrap_or('\u{fffd}'));
+            }
+            // not a low surrogate: rewind so the loop sees the escape
+            self.i = save;
+        }
+        Ok('\u{fffd}')
     }
 
     /// Scan any scalar value, returning strings verbatim and everything
@@ -455,6 +507,39 @@ mod tests {
         assert_eq!(cell(&rows[0], "dataset"), Some("cite\nseer"));
         assert_eq!(cell(&rows[0], "sim_time"), Some("0.125"));
         assert_eq!(cell(&rows[1], "sim_time"), Some("-"));
+    }
+
+    #[test]
+    fn unicode_escapes_roundtrip_including_surrogate_pairs() {
+        // Table::to_json now emits pure-ASCII \u escapes; the reader
+        // must reassemble them — including beyond-BMP pairs
+        let mut t = dumato::report::Table::new("résumé", &["p", "sim_time"]);
+        t.row(vec!["naïve 𝄞".into(), "0.5".into()]);
+        let j = t.to_json();
+        assert!(j.is_ascii());
+        let (title, rows) = parse_table(&j).expect("parse");
+        assert_eq!(title, "résumé");
+        assert_eq!(cell(&rows[0], "p"), Some("naïve 𝄞"));
+        // raw multibyte UTF-8 (hand-written baseline) survives too
+        let (_, rows) = parse_table("{\"title\":\"t\",\"rows\":[{\"p\":\"é𝄞\"}]}").expect("parse");
+        assert_eq!(cell(&rows[0], "p"), Some("é𝄞"));
+        // unpaired surrogates degrade to U+FFFD instead of failing
+        let (_, rows) =
+            parse_table("{\"title\":\"t\",\"rows\":[{\"p\":\"\\ud834x\"}]}").expect("parse");
+        assert_eq!(cell(&rows[0], "p"), Some("\u{fffd}x"));
+    }
+
+    #[test]
+    fn service_spec_gates_modeled_times_only() {
+        let spec = SPECS
+            .iter()
+            .find(|s| s.file == "BENCH_service.json")
+            .expect("service spec present");
+        assert_eq!(spec.key, &["workload", "mode"]);
+        // lower-is-better columns only: qps-style columns (hit_rate,
+        // speedup) must never be gated — an improvement would read as
+        // a regression
+        assert_eq!(spec.metrics, &["sim_time", "p99"]);
     }
 
     #[test]

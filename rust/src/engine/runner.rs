@@ -332,10 +332,52 @@ pub(crate) fn reduce_device(
 pub struct Runner;
 
 impl Runner {
+    /// The one-shot entry point: borrow a graph, run one job, return.
+    /// A thin wrapper over the same internals [`Runner::run_shared`]
+    /// uses — the graph is only ever borrowed, never cloned, in both.
     pub fn run<A: GpmAlgorithm>(g: &CsrGraph, algo: &A, cfg: &EngineConfig) -> RunReport {
-        // Oriented plans enumerate over out-arcs: running one on an
-        // undirected graph double-counts, running a restricted plan on a
-        // directed CSR undercounts — both are wiring bugs, not data bugs.
+        Self::assert_orientation(g, algo);
+        if cfg.devices > 1 {
+            return DeviceFleet::new(cfg).run(g, algo);
+        }
+        Self::run_single(g, algo, cfg)
+    }
+
+    /// Run against a shared immutable snapshot: the service layer's
+    /// entry point. Concurrent jobs hand out `Arc::clone`s of one
+    /// resident [`CsrGraph`] (so worker threads get `'static` ownership
+    /// with zero graph copies) and every run borrows through the `Arc` —
+    /// identical execution to [`Runner::run`] on the same graph.
+    pub fn run_shared<A: GpmAlgorithm>(
+        g: &Arc<CsrGraph>,
+        algo: &A,
+        cfg: &EngineConfig,
+    ) -> RunReport {
+        Self::assert_orientation(g, algo);
+        if cfg.devices > 1 {
+            return DeviceFleet::new(cfg).run_shared(g, algo);
+        }
+        Self::run_single(g, algo, cfg)
+    }
+
+    /// [`Runner::run_shared`] with structured faults turned into an
+    /// `Err` (the snapshot twin of [`Runner::try_run`]).
+    pub fn try_run_shared<A: GpmAlgorithm>(
+        g: &Arc<CsrGraph>,
+        algo: &A,
+        cfg: &EngineConfig,
+    ) -> Result<RunReport, EngineError> {
+        let report = Self::run_shared(g, algo, cfg);
+        match report.fault {
+            Some(f) => Err(f),
+            None => Ok(report),
+        }
+    }
+
+    /// Oriented plans enumerate over out-arcs: running one on an
+    /// undirected graph double-counts, running a restricted plan on a
+    /// directed CSR undercounts — both are wiring bugs, not data bugs.
+    fn assert_orientation<A: GpmAlgorithm>(g: &CsrGraph, algo: &A) {
         if let Some(p) = algo.plan() {
             assert_eq!(
                 p.oriented,
@@ -350,9 +392,11 @@ impl Runner {
                 "oriented plan tries take an ordering::orient()ed graph (and only them)"
             );
         }
-        if cfg.devices > 1 {
-            return DeviceFleet::new(cfg).run(g, algo);
-        }
+    }
+
+    /// The single-device engine body (orientation pre-asserted, fleet
+    /// dispatch handled by the callers above).
+    fn run_single<A: GpmAlgorithm>(g: &CsrGraph, algo: &A, cfg: &EngineConfig) -> RunReport {
         let k = algo.k();
         let dict = if algo.needs_dict() && k <= CanonDict::MAX_DICT_K {
             Some(Arc::new(CanonDict::build(k)))
@@ -696,6 +740,42 @@ mod tests {
         )
         .unwrap();
         assert_eq!(ok.count, Runner::run(&g, &CliqueCount::new(4), &small_cfg()).count);
+    }
+
+    #[test]
+    fn shared_snapshot_runs_match_one_shot_and_never_clone() {
+        // concurrent jobs over one Arc snapshot: identical counts to the
+        // borrowed one-shot path, and every clone handed out is an Arc
+        // refcount bump (strong_count returns to 1 after the joins)
+        let g = Arc::new(generators::erdos_renyi(36, 0.3, 7));
+        let want = Runner::run(&g, &CliqueCount::new(4), &small_cfg()).count;
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let g = Arc::clone(&g);
+                std::thread::spawn(move || {
+                    Runner::run_shared(&g, &CliqueCount::new(4), &small_cfg()).count
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), want);
+        }
+        assert_eq!(Arc::strong_count(&g), 1, "jobs must not retain graph refs");
+        // the fleet path accepts the same snapshot
+        let fleet = Runner::run_shared(
+            &g,
+            &CliqueCount::new(4),
+            &EngineConfig { devices: 2, ..small_cfg() },
+        );
+        assert_eq!(fleet.count, want);
+        // and the fault-surfacing twin behaves like try_run
+        let err = Runner::try_run_shared(
+            &Arc::new(generators::complete(64)),
+            &CliqueCount::new(4),
+            &EngineConfig { ext_slab_cap: Some(8), ..small_cfg() },
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("slab overflow"), "{err}");
     }
 
     #[test]

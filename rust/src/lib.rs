@@ -11,7 +11,9 @@
 //!   an explicit interconnect model), a pattern-aware plan compiler
 //!   (plan::ExecutionPlan: matching orders, backward intersections,
 //!   automorphism symmetry breaking) shared by engine apps and the
-//!   Peregrine-like baseline, baselines, benches.
+//!   Peregrine-like baseline, a persistent query service (service::
+//!   Service: shared Arc snapshot, fused-batch admission, plan/result
+//!   LRU caches, line protocol), baselines, benches.
 //! - L2/L1 (python/compile): jax + Pallas kernels, AOT-lowered to HLO text.
 //! - runtime: PJRT CPU client executing the AOT artifacts from the L3 hot
 //!   path (gated behind the `xla` cargo feature offline).
@@ -29,5 +31,6 @@ pub mod multi;
 pub mod plan;
 pub mod report;
 pub mod runtime;
+pub mod service;
 pub mod util;
 pub mod vgpu;

@@ -36,7 +36,7 @@ fn main() {
     }
 }
 
-const USAGE: &str = "usage: dumato <clique|motif|query|stats|triangles|baseline> [options]
+const USAGE: &str = "usage: dumato <clique|motif|query|serve|stats|triangles|baseline> [options]
   common: --dataset NAME|FIXTURE|PATH --scale F --seed N --warps N --threads N --lb --timeout SECS
   intersection: --intersect auto|merge|bisect|bitmap (planned extends; auto = per-level cost-model choice)
   ordering: --ordering none|degree|degeneracy|random (relabel at load; counts are invariant)
@@ -57,6 +57,11 @@ const USAGE: &str = "usage: dumato <clique|motif|query|stats|triangles|baseline>
          dumato query --dataset citeseer --pattern 4-cycle --pattern 4-path --pattern diamond
   oriented quickstart:
          dumato clique --dataset mico --k 5 --ordering degeneracy --orient
+  serve: persistent query service on stdin/stdout (line protocol: QUERY/BATCH/STATS/INVALIDATE/QUIT)
+         --batch-window-ms N (admission window, default 5) --max-batch N
+         --plan-cache N --result-cache N (LRU capacities)
+  serve quickstart:
+         printf 'QUERY 0-1,1-2,2-0\\nSTATS\\nQUIT\\n' | dumato serve --dataset citeseer
   triangles: --engine <engine|xla>
   baseline: --system <dfs|pangolin|fractal|peregrine> --app <clique|motif> --k N";
 
@@ -70,6 +75,7 @@ fn dispatch(raw: Vec<String>) -> Result<()> {
         "clique" => cmd_clique(&args),
         "motif" => cmd_motif(&args),
         "query" => cmd_query(&args),
+        "serve" => cmd_serve(&args),
         "stats" => cmd_stats(&args),
         "triangles" => cmd_triangles(&args),
         "baseline" => cmd_baseline(&args),
@@ -355,6 +361,44 @@ fn cmd_query(args: &Args) -> Result<()> {
     for m in matches.iter().take(args.parse_or("limit", 10usize)?) {
         println!("  {m:?}");
     }
+    Ok(())
+}
+
+/// Persistent query service over stdin/stdout. One request per line
+/// (QUERY/BATCH/STATS/INVALIDATE/QUIT), one `OK`/`ERR` response line
+/// per request; the banner goes to stderr so piped sessions stay
+/// machine-readable.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use dumato::service::{serve_lines, Service, ServiceConfig};
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    let g = Arc::new(graph_from(args)?);
+    if g.is_directed() {
+        bail!("serve needs an undirected snapshot (drop --orient-style orderings)");
+    }
+    let cfg = ServiceConfig {
+        engine: engine_config(args, 0.10)?,
+        batch_window: Duration::from_millis(args.parse_or("batch-window-ms", 5u64)?),
+        max_batch: args.parse_or("max-batch", 256usize)?,
+        plan_cache_cap: args.parse_or("plan-cache", 128usize)?,
+        result_cache_cap: args.parse_or("result-cache", 1024usize)?,
+    };
+    eprintln!(
+        "serving {} ({} vertices), batch_window={:?}, plan_cache={}, result_cache={} \
+         — QUERY <spec>[;<spec>], BATCH <n>, STATS, INVALIDATE, QUIT",
+        g.name(),
+        g.num_vertices(),
+        cfg.batch_window,
+        cfg.plan_cache_cap,
+        cfg.result_cache_cap,
+    );
+    let service = Service::start(g, cfg);
+    let handle = service.handle();
+    let stdin = std::io::stdin();
+    let mut stdout = std::io::stdout();
+    serve_lines(&handle, stdin.lock(), &mut stdout)?;
+    service.shutdown();
     Ok(())
 }
 

@@ -50,6 +50,14 @@ impl DeviceFleet {
         self.cfg.devices.max(1)
     }
 
+    /// [`DeviceFleet::run`] against a shared immutable snapshot (the
+    /// service path): every device borrows the one resident graph
+    /// through the `Arc` — the fleet never clones graph data, it only
+    /// models per-device CSR replicas in its arena sizing.
+    pub fn run_shared<A: GpmAlgorithm>(&self, g: &Arc<CsrGraph>, algo: &A) -> RunReport {
+        self.run(g, algo)
+    }
+
     pub fn run<A: GpmAlgorithm>(&self, g: &CsrGraph, algo: &A) -> RunReport {
         let cfg = &self.cfg;
         let ndev = self.devices();

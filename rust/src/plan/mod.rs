@@ -36,9 +36,79 @@ pub mod trie;
 use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::canon::bitmap::{AdjMat, MAX_PATTERN_K};
-use crate::canon::canonical::canonical_form;
+use crate::canon::canonical::{canonical_form, for_each_permutation};
 use crate::canon::patterns::{automorphism_count, automorphisms};
 use crate::graph::{CsrGraph, Label, VertexId};
+
+/// Canonical identity of a (possibly labeled) pattern — the cache key
+/// the service layer's plan and result caches join on, so an
+/// isomorphic-but-relabeled resubmission lands on the same entry.
+///
+/// For unlabeled patterns the key is the canonical traversal bitmap
+/// (the same value [`ExecutionPlan::canonical`] records). For labeled
+/// patterns the `(bitmap, labels)` pair is minimized *jointly* over all
+/// position permutations keeping an edge at (0,1): two labeled patterns
+/// get equal keys exactly when some isomorphism maps one onto the other
+/// label-preservingly. `k` rides along explicitly because a traversal
+/// bitmap alone does not pin the vertex count.
+#[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct PatternKey {
+    /// Pattern size.
+    pub k: usize,
+    /// Canonical traversal bitmap (minimum over valid permutations).
+    pub bitmap: u64,
+    /// Labels in canonical position order (`None` = unlabeled).
+    pub labels: Option<Vec<Label>>,
+}
+
+/// Compute the [`PatternKey`] of a connected pattern. `labels`, when
+/// given, carries one label per pattern position (the
+/// [`ParsedPattern::labels`] layout).
+///
+/// The labeled path enumerates all k! permutations (k <= [`MAX_PARSE_K`]
+/// keeps that instant); the unlabeled path reuses the pruned
+/// [`canonical_form`] search.
+pub fn pattern_key(m: &AdjMat, labels: Option<&[Label]>) -> PatternKey {
+    let k = m.k;
+    assert!(m.is_connected(), "pattern keys need a connected pattern");
+    let Some(ls) = labels else {
+        return PatternKey { k, bitmap: canonical_form(m), labels: None };
+    };
+    assert_eq!(ls.len(), k, "one label per pattern position");
+    assert!(
+        k <= MAX_PARSE_K,
+        "labeled pattern keys enumerate k! permutations (k <= {MAX_PARSE_K})"
+    );
+    let mut best: Option<(u64, Vec<Label>)> = None;
+    for_each_permutation(k, |perm| {
+        // perm maps old position -> new position
+        let p = m.permute(perm);
+        if !p.has_edge(0, 1) {
+            return;
+        }
+        let bm = p.encode();
+        // cheap reject before materializing the permuted label vector
+        if let Some((bb, _)) = &best {
+            if bm > *bb {
+                return;
+            }
+        }
+        let mut pl: Vec<Label> = vec![0; k];
+        for (old, &new) in perm.iter().enumerate() {
+            pl[new] = ls[old];
+        }
+        let cand = (bm, pl);
+        let better = match &best {
+            None => true,
+            Some(b) => cand < *b,
+        };
+        if better {
+            best = Some(cand);
+        }
+    });
+    let (bitmap, labels) = best.expect("connected k >= 2 patterns have an adjacent pair");
+    PatternKey { k, bitmap, labels: Some(labels) }
+}
 
 /// A compiled per-level execution plan for one connected pattern.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -391,6 +461,22 @@ pub struct ParsedPattern {
     /// `labels[v]` for `v in 0..k` when the spec used `v:label` syntax;
     /// `None` for plain `a-b` specs.
     pub labels: Option<Vec<Label>>,
+}
+
+impl ParsedPattern {
+    /// The pattern's adjacency matrix over positions `0..k`.
+    pub fn adj(&self) -> AdjMat {
+        let mut m = AdjMat::empty(self.k);
+        for &(a, b) in &self.edges {
+            m.set_edge(a, b);
+        }
+        m
+    }
+
+    /// The pattern's canonical cache key (see [`pattern_key`]).
+    pub fn key(&self) -> PatternKey {
+        pattern_key(&self.adj(), self.labels.as_deref())
+    }
 }
 
 /// One endpoint of a pattern edge: `v` or `v:label`.
@@ -824,6 +910,72 @@ mod tests {
         let big: Vec<String> = (0..8).map(|i| format!("{i}-{}", i + 1)).collect();
         assert!(parse_pattern(&big.join(",")).is_err());
         assert!(parse_pattern("0-1,1-2,2-3,3-4,4-5,5-6,6-7").is_ok()); // k=8 ok
+    }
+
+    #[test]
+    fn pattern_key_is_invariant_under_relabeling() {
+        use crate::canon::canonical::for_each_permutation;
+        use crate::util::Rng;
+        // property: every permuted presentation of a random connected
+        // pattern — labels carried along — keys identically
+        for k in 3..=5usize {
+            let mut rng = Rng::new(0xC0FFEE ^ k as u64);
+            for _ in 0..40 {
+                let mut m = AdjMat::empty(k);
+                for i in 1..k {
+                    m.set_edge(rng.range(0, i), i); // random spanning tree
+                }
+                for a in 0..k {
+                    for b in (a + 1)..k {
+                        if rng.chance(0.4) {
+                            m.set_edge(a, b);
+                        }
+                    }
+                }
+                let ls: Vec<Label> = (0..k).map(|_| rng.below(3) as Label).collect();
+                let plain = pattern_key(&m, None);
+                let labeled = pattern_key(&m, Some(&ls));
+                assert_eq!(plain.bitmap, canonical_form(&m));
+                assert_eq!(labeled.bitmap, plain.bitmap, "joint min shares the bitmap");
+                for_each_permutation(k, |perm| {
+                    let pm = m.permute(perm);
+                    let mut pl: Vec<Label> = vec![0; k];
+                    for (old, &new) in perm.iter().enumerate() {
+                        pl[new] = ls[old];
+                    }
+                    assert_eq!(pattern_key(&pm, None), plain);
+                    assert_eq!(pattern_key(&pm, Some(&pl)), labeled);
+                });
+            }
+        }
+    }
+
+    #[test]
+    fn pattern_key_separates_structures_and_labelings() {
+        let tri = mat(3, &[(0, 1), (1, 2), (0, 2)]);
+        let wedge = mat(3, &[(0, 1), (1, 2)]);
+        assert_ne!(pattern_key(&tri, None), pattern_key(&wedge, None));
+        // same structure, genuinely different labeling: distinct keys
+        let a = pattern_key(&wedge, Some(&[0, 1, 0]));
+        let b = pattern_key(&wedge, Some(&[1, 0, 0]));
+        assert_ne!(a, b, "center label differs");
+        // labeled vs unlabeled never collide
+        assert_ne!(pattern_key(&wedge, None), a);
+        // wedge with swapped leaves is the same labeled pattern
+        let c = pattern_key(&wedge, Some(&[0, 1, 0]));
+        assert_eq!(a, c);
+    }
+
+    #[test]
+    fn parsed_pattern_key_collapses_relabeled_specs() {
+        let k1 = parse_pattern("0-1,1-2,2-3,3-0").unwrap().key();
+        let k2 = parse_pattern("0-2,2-1,1-3,3-0").unwrap().key();
+        assert_eq!(k1, k2, "relabeled 4-cycles are one pattern");
+        assert_eq!(k1.k, 4);
+        let l1 = parse_pattern("0:0-1:1,1:1-2:0").unwrap().key();
+        let l2 = parse_pattern("2:0-1:1,1:1-0:0").unwrap().key();
+        assert_eq!(l1, l2, "relabeled labeled wedges are one pattern");
+        assert_ne!(l1, parse_pattern("0:1-1:0,1:0-2:1").unwrap().key());
     }
 
     fn specs(v: &[&str]) -> Vec<String> {

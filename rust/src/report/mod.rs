@@ -81,6 +81,16 @@ impl Table {
                     '\r' => out.push_str("\\r"),
                     '\t' => out.push_str("\\t"),
                     c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+                    // Everything past ASCII goes out as \u escapes
+                    // (surrogate pairs above the BMP): bench_check's
+                    // byte-level reader would otherwise mangle multibyte
+                    // UTF-8 cells, and plain-ASCII dumps diff cleanly.
+                    c if (c as u32) > 0x7f => {
+                        let mut buf = [0u16; 2];
+                        for unit in c.encode_utf16(&mut buf) {
+                            out.push_str(&format!("\\u{:04x}", unit));
+                        }
+                    }
                     c => out.push(c),
                 }
             }
@@ -135,6 +145,35 @@ pub fn count_cell(c: u64) -> String {
     fmt_count(c)
 }
 
+/// Nearest-rank percentile of a sample set: the smallest sample such
+/// that at least `q` of the distribution lies at or below it
+/// (`q` in `[0, 1]`; `q = 0.5` is the median, `q = 0.99` the p99 the
+/// service bench reports). Returns `None` on an empty sample set.
+/// NaN samples are rejected by assertion — a latency column containing
+/// NaN is a bug upstream, not a distribution.
+pub fn percentile(samples: &[f64], q: f64) -> Option<f64> {
+    if samples.is_empty() {
+        return None;
+    }
+    assert!((0.0..=1.0).contains(&q), "percentile rank {q} outside [0, 1]");
+    let mut sorted: Vec<f64> = samples.to_vec();
+    assert!(sorted.iter().all(|x| !x.is_nan()), "NaN sample in percentile input");
+    sorted.sort_unstable_by(|a, b| a.partial_cmp(b).expect("NaN rejected above"));
+    // nearest-rank: ceil(q * n), clamped to [1, n], 1-indexed
+    let n = sorted.len();
+    let rank = ((q * n as f64).ceil() as usize).clamp(1, n);
+    Some(sorted[rank - 1])
+}
+
+/// `percentile` rendered as a table cell (`-` for an empty sample set),
+/// with the same precision bench tables use for modeled seconds.
+pub fn percentile_cell(samples: &[f64], q: f64) -> String {
+    match percentile(samples, q) {
+        Some(v) => format!("{v:.6}"),
+        None => "-".into(),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -178,6 +217,36 @@ mod tests {
         assert!(j.contains("{\"app\":\"clique\\nk=5\",\"time\":\"0.01\"}"), "{j}");
         assert!(j.contains("{\"app\":\"motif\",\"time\":\"1.2\"}"), "{j}");
         assert!(j.ends_with("]}"), "{j}");
+    }
+
+    #[test]
+    fn to_json_is_pure_ascii_even_for_unicode_cells() {
+        // bench_check reads the dump byte-wise; multibyte UTF-8 must
+        // leave the table as \u escapes (pairs beyond the BMP)
+        let mut t = Table::new("résumé", &["p", "t"]);
+        t.row(vec!["naïve £5 𝄞".into(), "0.1".into()]);
+        let j = t.to_json();
+        assert!(j.is_ascii(), "{j}");
+        assert!(j.contains("r\\u00e9sum\\u00e9"), "{j}");
+        assert!(j.contains("na\\u00efve \\u00a35"), "{j}");
+        // U+1D11E musical clef: a surrogate pair
+        assert!(j.contains("\\ud834\\udd1e"), "{j}");
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let s: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&s, 0.50), Some(50.0));
+        assert_eq!(percentile(&s, 0.99), Some(99.0));
+        assert_eq!(percentile(&s, 1.0), Some(100.0));
+        assert_eq!(percentile(&s, 0.0), Some(1.0));
+        // unsorted input, small n: p99 of 4 samples is the max
+        assert_eq!(percentile(&[0.4, 0.1, 0.3, 0.2], 0.99), Some(0.4));
+        assert_eq!(percentile(&[0.4, 0.1, 0.3, 0.2], 0.5), Some(0.2));
+        assert_eq!(percentile(&[7.0], 0.5), Some(7.0));
+        assert_eq!(percentile(&[], 0.5), None);
+        assert_eq!(percentile_cell(&[], 0.99), "-");
+        assert_eq!(percentile_cell(&[0.25], 0.5), "0.250000");
     }
 
     #[test]

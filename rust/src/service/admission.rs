@@ -1,0 +1,156 @@
+//! Admission controller: group pending queries into fusable batches.
+//!
+//! Queries drained from the service queue in one admission round are
+//! partitioned by [`BatchClass`] — the compatibility triple a fused
+//! [`PlanTrie`](crate::plan::trie::PlanTrie) demands (same pattern
+//! size, same labeledness, same orientation). Within a class, member
+//! patterns are deduplicated by [`PatternKey`], so two tenants asking
+//! for relabeled isomorphs of the same pattern share one trie leaf and
+//! both receive its count.
+
+use std::sync::mpsc;
+
+use crate::plan::{ParsedPattern, PatternKey};
+
+use super::server::QueryOutcome;
+
+/// The compatibility class a fused trie can mix: `PlanTrie::build`
+/// rejects sets mixing sizes, labeledness, or orientation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct BatchClass {
+    pub k: usize,
+    pub labeled: bool,
+    /// Always `false` today — the service owns an undirected snapshot
+    /// and compiles unoriented plans; the field keeps the admission
+    /// triple explicit for the oriented-service follow-up.
+    pub oriented: bool,
+}
+
+impl BatchClass {
+    pub fn of(p: &ParsedPattern) -> Self {
+        Self {
+            k: p.k,
+            labeled: p.labels.is_some(),
+            oriented: false,
+        }
+    }
+}
+
+/// One accepted query waiting for execution. A query's specs form one
+/// pattern set (uniform k/labeledness — enforced at submit by
+/// `parse_pattern_set`), so the whole query lands in a single class.
+pub struct PendingQuery {
+    pub id: u64,
+    pub specs: Vec<String>,
+    pub patterns: Vec<ParsedPattern>,
+    pub keys: Vec<PatternKey>,
+    /// Modeled service clock at submission (latency baseline).
+    pub submitted_clock: f64,
+    /// Completion channel back to the ticket holder.
+    pub reply: mpsc::Sender<QueryOutcome>,
+}
+
+/// One fusable unit of work: the deduplicated patterns of a class plus
+/// the member queries and, per member pattern, its slot in `unique`.
+pub struct Batch {
+    pub class: BatchClass,
+    /// Unique `(key, first-seen presentation)` pairs, in first-seen
+    /// order — the trie's pattern order.
+    pub unique: Vec<(PatternKey, ParsedPattern)>,
+    /// `(query, slots)`: `slots[i]` indexes `unique` for the query's
+    /// i-th pattern.
+    pub members: Vec<(PendingQuery, Vec<usize>)>,
+}
+
+/// Partition one admission round into per-class batches, deduplicating
+/// member patterns by canonical key. Class order and within-class
+/// pattern order follow first arrival (deterministic for tests).
+pub fn group_batches(queries: Vec<PendingQuery>) -> Vec<Batch> {
+    let mut batches: Vec<Batch> = Vec::new();
+    for q in queries {
+        assert!(
+            !q.patterns.is_empty(),
+            "submit rejects empty pattern sets before enqueue"
+        );
+        let class = BatchClass::of(&q.patterns[0]);
+        let bi = match batches.iter().position(|b| b.class == class) {
+            Some(i) => i,
+            None => {
+                batches.push(Batch {
+                    class,
+                    unique: Vec::new(),
+                    members: Vec::new(),
+                });
+                batches.len() - 1
+            }
+        };
+        let b = &mut batches[bi];
+        let mut slots = Vec::with_capacity(q.keys.len());
+        for (key, pat) in q.keys.iter().zip(&q.patterns) {
+            let slot = match b.unique.iter().position(|(k2, _)| k2 == key) {
+                Some(s) => s,
+                None => {
+                    b.unique.push((key.clone(), pat.clone()));
+                    b.unique.len() - 1
+                }
+            };
+            slots.push(slot);
+        }
+        b.members.push((q, slots));
+    }
+    batches
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::parse_pattern_set;
+
+    fn pending(id: u64, specs: &[&str]) -> PendingQuery {
+        let specs: Vec<String> = specs.iter().map(|s| s.to_string()).collect();
+        let patterns = parse_pattern_set(&specs).unwrap();
+        let keys = patterns.iter().map(|p| p.key()).collect();
+        // the receiver side drops: these tests never deliver outcomes
+        let (tx, _rx) = mpsc::channel();
+        PendingQuery {
+            id,
+            specs,
+            patterns,
+            keys,
+            submitted_clock: 0.0,
+            reply: tx,
+        }
+    }
+
+    #[test]
+    fn classes_split_and_isomorphs_share_slots() {
+        let qs = vec![
+            pending(1, &["0-1,1-2,2-0"]),            // k=3 triangle
+            pending(2, &["0-1,1-2,2-3,3-0"]),        // k=4 cycle
+            pending(3, &["1-2,2-0,0-1"]),            // triangle, respelled
+            pending(4, &["0:0-1:1,1:1-2:0"]),        // k=3 labeled
+            pending(5, &["0-1,1-2,2-0", "0-1,1-2"]), // set: triangle + wedge
+        ];
+        let batches = group_batches(qs);
+        assert_eq!(batches.len(), 3, "k3-unlabeled, k4-unlabeled, k3-labeled");
+
+        let k3 = &batches[0];
+        assert_eq!(
+            k3.class,
+            BatchClass {
+                k: 3,
+                labeled: false,
+                oriented: false
+            }
+        );
+        // triangle deduped across queries 1, 3, 5; wedge is a second slot
+        assert_eq!(k3.unique.len(), 2);
+        assert_eq!(k3.members.len(), 3);
+        assert_eq!(k3.members[0].1, vec![0]);
+        assert_eq!(k3.members[1].1, vec![0], "respelled triangle shares slot 0");
+        assert_eq!(k3.members[2].1, vec![0, 1]);
+
+        assert_eq!(batches[1].class.k, 4);
+        assert!(batches[2].class.labeled);
+    }
+}

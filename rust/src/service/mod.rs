@@ -1,0 +1,116 @@
+//! Query-service layer: a persistent server over one graph snapshot.
+//!
+//! One-shot CLI runs pay graph load, plan compilation, and engine
+//! spin-up per query. This module keeps all three resident: a
+//! [`Service`] owns an immutable `Arc<CsrGraph>` snapshot and a worker
+//! thread, and concurrent clients submit pattern queries through a
+//! cloneable [`ServiceHandle`] (in-process) or the line-delimited wire
+//! protocol ([`serve_lines`], the `serve` CLI subcommand).
+//!
+//! Three amortization layers stack on the PR-6 fusion substrate:
+//!
+//! 1. **Admission batching** — in-flight queries arriving within
+//!    [`ServiceConfig::batch_window`] are grouped into compatibility
+//!    classes (same k, same labeledness, same orientation —
+//!    [`admission::BatchClass`]) and each class is compiled onto one
+//!    fused [`PlanTrie`](crate::plan::trie::PlanTrie), so N concurrent
+//!    tenants share a single traversal of the graph.
+//! 2. **Plan cache** — an LRU map keyed on [`PatternKey`]
+//!    (canonical bitmap + canonical label signature), so an
+//!    isomorphic-but-relabeled resubmission skips plan compilation.
+//! 3. **Result cache** — same key, caching final counts of *clean*
+//!    runs (timed-out or faulted runs are never cached). Explicit
+//!    invalidation hooks ([`ServiceHandle::invalidate_results`])
+//!    are the contract point for a future dynamic-graph layer: any
+//!    graph mutation must invalidate before the next query is
+//!    admitted. Plans survive invalidation — a plan is correct for
+//!    any graph, only its selectivity heuristic can go stale.
+//!
+//! Latency is *modeled*, like every other time in this codebase: the
+//! service keeps a monotone clock of accumulated engine
+//! `sim_seconds`, a query's latency is the clock at its batch's
+//! completion minus the clock at submission, and a result-cache hit
+//! costs zero modeled time.
+
+pub mod admission;
+pub mod plan_cache;
+pub mod protocol;
+pub mod result_cache;
+pub mod server;
+
+use std::time::Duration;
+
+use crate::engine::EngineConfig;
+use crate::plan::PatternKey;
+
+pub use admission::{group_batches, Batch, BatchClass, PendingQuery};
+pub use plan_cache::PlanCache;
+pub use protocol::{parse_request, Request, MAX_BATCH, MAX_LINE};
+pub use result_cache::{CachedCount, ResultCache};
+pub use server::{serve_lines, QueryOutcome, Service, ServiceHandle, Ticket};
+
+/// Service tuning knobs. `Default` suits interactive use; tests and
+/// benches shrink the engine and stretch the window.
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    /// Engine configuration every admitted batch runs under (shared
+    /// snapshot: `devices > 1` routes through the fleet as usual).
+    pub engine: EngineConfig,
+    /// How long the admission controller waits after the first pending
+    /// query for compatible arrivals before sealing a batch. Zero
+    /// disables batching-by-time (each drain takes whatever is queued).
+    pub batch_window: Duration,
+    /// Hard cap on queries drained into one admission round.
+    pub max_batch: usize,
+    /// LRU capacity of the compiled-plan cache (entries).
+    pub plan_cache_cap: usize,
+    /// LRU capacity of the result cache (entries).
+    pub result_cache_cap: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self {
+            engine: EngineConfig::default(),
+            batch_window: Duration::from_millis(5),
+            max_batch: 256,
+            plan_cache_cap: 128,
+            result_cache_cap: 1024,
+        }
+    }
+}
+
+/// A point-in-time snapshot of service counters
+/// ([`ServiceHandle::stats`]).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ServiceStats {
+    /// Queries accepted (parse errors are rejected before counting).
+    pub queries: u64,
+    /// Member patterns across accepted queries.
+    pub patterns: u64,
+    /// Engine invocations (fused batches plus singleton fallbacks).
+    pub engine_runs: u64,
+    /// Admission rounds that reached the engine.
+    pub batches: u64,
+    /// Cold (uncached) patterns executed across all rounds.
+    pub cold_patterns: u64,
+    /// Plan-cache hits / misses / evictions.
+    pub plan_hits: u64,
+    pub plan_misses: u64,
+    pub plan_evictions: u64,
+    /// Result-cache hits / misses / evictions / invalidated entries.
+    pub result_hits: u64,
+    pub result_misses: u64,
+    pub result_evictions: u64,
+    pub result_invalidations: u64,
+    /// The modeled service clock: accumulated engine sim-seconds.
+    pub sim_seconds: f64,
+}
+
+/// Compute a result/plan cache key from a pattern spec string —
+/// the same key [`ServiceHandle::submit`] derives, exposed so external
+/// layers (the future dynamic-graph hook, tests) can invalidate by
+/// spec without knowing the canonicalization rules.
+pub fn key_for_spec(spec: &str) -> anyhow::Result<PatternKey> {
+    Ok(crate::plan::parse_pattern(spec)?.key())
+}

@@ -1,0 +1,235 @@
+//! LRU cache of compiled [`ExecutionPlan`]s keyed on [`PatternKey`].
+//!
+//! Plan compilation enumerates automorphism groups and permutations —
+//! cheap for one query, pure waste for the repeat-heavy mixes a
+//! resident service sees. Entries are `Arc`ed so a cached plan can be
+//! handed to a running batch while an eviction drops the cache's own
+//! reference. Eviction is strict LRU by access tick; capacity is in
+//! entries (plans are a few hundred bytes, so counting them is enough).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::plan::{ExecutionPlan, PatternKey};
+
+struct Entry {
+    plan: Arc<ExecutionPlan>,
+    last_used: u64,
+}
+
+/// See module docs. Not internally synchronized — the service wraps it
+/// in a `Mutex`; tests drive it directly.
+pub struct PlanCache {
+    cap: usize,
+    map: HashMap<PatternKey, Entry>,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+impl PlanCache {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap >= 1, "plan cache needs capacity for at least one plan");
+        Self {
+            cap,
+            map: HashMap::new(),
+            tick: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    /// Look up `key`, compiling (and inserting) via `compile` on a miss.
+    /// Either way the entry becomes most-recently-used.
+    pub fn get_or_compile(
+        &mut self,
+        key: &PatternKey,
+        compile: impl FnOnce() -> ExecutionPlan,
+    ) -> Arc<ExecutionPlan> {
+        self.tick += 1;
+        if let Some(e) = self.map.get_mut(key) {
+            e.last_used = self.tick;
+            self.hits += 1;
+            return Arc::clone(&e.plan);
+        }
+        self.misses += 1;
+        let plan = Arc::new(compile());
+        if self.map.len() >= self.cap {
+            self.evict_lru();
+        }
+        self.map.insert(
+            key.clone(),
+            Entry {
+                plan: Arc::clone(&plan),
+                last_used: self.tick,
+            },
+        );
+        plan
+    }
+
+    /// Look up without bumping recency or touching hit/miss counters
+    /// (test and introspection path).
+    pub fn peek(&self, key: &PatternKey) -> Option<Arc<ExecutionPlan>> {
+        self.map.get(key).map(|e| Arc::clone(&e.plan))
+    }
+
+    fn evict_lru(&mut self) {
+        let victim = self
+            .map
+            .iter()
+            .min_by_key(|(_, e)| e.last_used)
+            .map(|(k, _)| k.clone());
+        if let Some(key) = victim {
+            self.map.remove(&key);
+            self.evictions += 1;
+        }
+    }
+
+    /// Cached keys ordered least- to most-recently-used (eviction order).
+    pub fn keys_by_recency(&self) -> Vec<PatternKey> {
+        let mut v: Vec<(u64, PatternKey)> = self
+            .map
+            .iter()
+            .map(|(k, e)| (e.last_used, k.clone()))
+            .collect();
+        v.sort();
+        v.into_iter().map(|(_, k)| k).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::canon::bitmap::AdjMat;
+    use crate::plan::{parse_pattern, pattern_key};
+
+    fn key_of(spec: &str) -> PatternKey {
+        parse_pattern(spec).unwrap().key()
+    }
+
+    fn plan_of(spec: &str) -> ExecutionPlan {
+        let p = parse_pattern(spec).unwrap();
+        match &p.labels {
+            Some(ls) => ExecutionPlan::build_labeled(&p.adj(), ls, None),
+            None => ExecutionPlan::build(&p.adj()),
+        }
+    }
+
+    #[test]
+    fn relabeled_isomorphs_hit_the_same_entry() {
+        let mut c = PlanCache::new(8);
+        let a = c.get_or_compile(&key_of("0-1,1-2,2-3,3-0"), || plan_of("0-1,1-2,2-3,3-0"));
+        // same 4-cycle spelled through a different vertex numbering
+        let b = c.get_or_compile(&key_of("0-2,2-1,1-3,3-0"), || plan_of("0-2,2-1,1-3,3-0"));
+        assert!(Arc::ptr_eq(&a, &b), "isomorphic respelling must be a hit");
+        assert_eq!((c.hits(), c.misses()), (1, 1));
+
+        // labeled: swapping spec vertex ids, not the labeling itself
+        let la = c.get_or_compile(&key_of("0:0-1:1,1:1-2:0"), || plan_of("0:0-1:1,1:1-2:0"));
+        let lb = c.get_or_compile(&key_of("2:0-1:1,1:1-0:0"), || plan_of("2:0-1:1,1:1-0:0"));
+        assert!(Arc::ptr_eq(&la, &lb));
+        // a genuinely different labeling is a different entry
+        let lc = c.get_or_compile(&key_of("0:1-1:0,1:0-2:1"), || plan_of("0:1-1:0,1:0-2:1"));
+        assert!(!Arc::ptr_eq(&la, &lc));
+        assert_eq!((c.hits(), c.misses()), (2, 3));
+    }
+
+    #[test]
+    fn eviction_is_lru_ordered() {
+        let mut c = PlanCache::new(3);
+        let tri = key_of("0-1,1-2,2-0");
+        let path = key_of("0-1,1-2,2-3");
+        let cyc = key_of("0-1,1-2,2-3,3-0");
+        let star = key_of("0-1,0-2,0-3");
+        for (k, s) in [
+            (&tri, "0-1,1-2,2-0"),
+            (&path, "0-1,1-2,2-3"),
+            (&cyc, "0-1,1-2,2-3,3-0"),
+        ] {
+            c.get_or_compile(k, || plan_of(s));
+        }
+        assert_eq!(c.keys_by_recency(), vec![tri.clone(), path.clone(), cyc.clone()]);
+        // touch the oldest: it must move to the MRU slot
+        c.get_or_compile(&tri, || unreachable!("must be a hit"));
+        assert_eq!(c.keys_by_recency(), vec![path.clone(), cyc.clone(), tri.clone()]);
+        // overflow: the new LRU (the path) is the victim
+        c.get_or_compile(&star, || plan_of("0-1,0-2,0-3"));
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.evictions(), 1);
+        assert!(c.peek(&path).is_none(), "LRU entry must be evicted");
+        assert!(c.peek(&tri).is_some() && c.peek(&cyc).is_some() && c.peek(&star).is_some());
+    }
+
+    #[test]
+    fn cached_plan_is_bit_identical_to_cold_compile() {
+        // ExecutionPlan derives PartialEq; a hit must return exactly what
+        // a fresh compile of the *first-seen* presentation produced.
+        let mut c = PlanCache::new(4);
+        let cold = plan_of("0-1,1-2,2-3,3-0");
+        let cached = c.get_or_compile(&key_of("0-1,1-2,2-3,3-0"), || plan_of("0-1,1-2,2-3,3-0"));
+        let hit = c.get_or_compile(&key_of("0-2,2-1,1-3,3-0"), || unreachable!("must hit"));
+        assert_eq!(*cached, cold);
+        assert_eq!(*hit, cold);
+    }
+
+    #[test]
+    fn property_random_relabelings_collapse_to_one_key() {
+        // random connected patterns, random spec-level vertex renamings:
+        // every renaming must produce the same PatternKey
+        use crate::util::Rng;
+        let mut rng = Rng::new(0x5eed_cafe);
+        for trial in 0..40 {
+            let k = 3 + (trial % 3); // 3..=5
+            let mut m = AdjMat::empty(k);
+            for v in 1..k {
+                m.set_edge(v, rng.below(v as u64) as usize);
+            }
+            for a in 0..k {
+                for b in (a + 1)..k {
+                    if rng.chance(0.4) {
+                        m.set_edge(a, b);
+                    }
+                }
+            }
+            let labels: Vec<u32> = (0..k).map(|_| rng.below(3) as u32).collect();
+            let base = pattern_key(&m, Some(&labels));
+            for _ in 0..6 {
+                let mut perm: Vec<usize> = (0..k).collect();
+                rng.shuffle(&mut perm);
+                // rename vertex v -> perm[v]; labels ride along
+                let renamed = m.permute(&perm);
+                let mut rl = vec![0u32; k];
+                for v in 0..k {
+                    rl[perm[v]] = labels[v];
+                }
+                assert_eq!(pattern_key(&renamed, Some(&rl)), base, "trial {trial}");
+            }
+        }
+    }
+}

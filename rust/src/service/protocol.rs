@@ -1,0 +1,147 @@
+//! Line-delimited wire protocol for the query service.
+//!
+//! One request per line, one response line per request (`BATCH` is the
+//! exception: its response is `n` lines, one per member query, in
+//! submission order). Responses start with `OK ` or `ERR `; an `ERR`
+//! is always a single line with a distinct, human-readable message —
+//! malformed input must never panic the server (fuzzed in
+//! `tests/fuzz_protocol.rs`).
+//!
+//! Verbs (case-insensitive):
+//!
+//! - `QUERY <spec>[;<spec>...]` — count the pattern(s). Specs use the
+//!   CLI `--pattern` edge-list syntax (`0-1,1-2,...`, optionally
+//!   labeled `0:2-1:0,...`); multiple specs in one request form a
+//!   pattern set (uniform k and labeledness) fused into one job.
+//! - `BATCH <n>` — the next `n` lines must each be a `QUERY`; all are
+//!   submitted before any is awaited, so one connection gets fused
+//!   admission without racing the batch window.
+//! - `STATS` — cache and admission counters.
+//! - `INVALIDATE` — drop every cached result (dynamic-graph hook).
+//! - `QUIT` — close the session.
+
+use anyhow::{bail, ensure, Result};
+
+/// Longest accepted request line, in bytes (a k=8 pattern set is far
+/// below this; the cap bounds memory for garbage input).
+pub const MAX_LINE: usize = 4096;
+
+/// Most member queries in one `BATCH`.
+pub const MAX_BATCH: usize = 1024;
+
+/// A parsed request line.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Request {
+    /// `QUERY a-b,...[;a-b,...]`
+    Query { specs: Vec<String> },
+    /// `BATCH n` — the header only; members follow on the wire.
+    Batch { n: usize },
+    Stats,
+    Invalidate,
+    Quit,
+}
+
+/// Parse one request line (no trailing newline). Every rejection is a
+/// distinct error; pattern-spec *content* is not validated here — that
+/// happens at submit time, with the parser's own distinct errors.
+pub fn parse_request(line: &str) -> Result<Request> {
+    ensure!(
+        line.len() <= MAX_LINE,
+        "request line exceeds {MAX_LINE} bytes ({} bytes)",
+        line.len()
+    );
+    let line = line.trim();
+    ensure!(!line.is_empty(), "empty request line");
+    let (verb, rest) = match line.split_once(char::is_whitespace) {
+        Some((v, r)) => (v, r.trim()),
+        None => (line, ""),
+    };
+    if verb.eq_ignore_ascii_case("QUERY") {
+        ensure!(
+            !rest.is_empty(),
+            "QUERY needs at least one pattern spec: QUERY <edge-list>[;<edge-list>...]"
+        );
+        let specs: Vec<String> = rest.split(';').map(|s| s.trim().to_string()).collect();
+        ensure!(
+            specs.iter().all(|s| !s.is_empty()),
+            "empty pattern spec in QUERY (stray ';'?)"
+        );
+        Ok(Request::Query { specs })
+    } else if verb.eq_ignore_ascii_case("BATCH") {
+        ensure!(!rest.is_empty(), "BATCH needs a count: BATCH <n>");
+        let n: usize = rest
+            .parse()
+            .map_err(|_| anyhow::anyhow!("BATCH count '{rest}' is not a number"))?;
+        ensure!(n >= 1, "BATCH count must be at least 1");
+        ensure!(n <= MAX_BATCH, "BATCH count {n} exceeds the {MAX_BATCH} cap");
+        Ok(Request::Batch { n })
+    } else if verb.eq_ignore_ascii_case("STATS") {
+        ensure!(rest.is_empty(), "STATS takes no arguments");
+        Ok(Request::Stats)
+    } else if verb.eq_ignore_ascii_case("INVALIDATE") {
+        ensure!(rest.is_empty(), "INVALIDATE takes no arguments");
+        Ok(Request::Invalidate)
+    } else if verb.eq_ignore_ascii_case("QUIT") {
+        ensure!(rest.is_empty(), "QUIT takes no arguments");
+        Ok(Request::Quit)
+    } else {
+        bail!("unknown verb '{verb}' (expected QUERY, BATCH, STATS, INVALIDATE, or QUIT)")
+    }
+}
+
+/// Flatten a message onto one response line (ERR payloads may wrap
+/// multi-line anyhow chains).
+pub fn one_line(msg: &str) -> String {
+    msg.replace(['\n', '\r'], " ")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn err_of(line: &str) -> String {
+        format!("{:#}", parse_request(line).unwrap_err())
+    }
+
+    #[test]
+    fn verbs_parse() {
+        assert_eq!(
+            parse_request("QUERY 0-1,1-2").unwrap(),
+            Request::Query {
+                specs: vec!["0-1,1-2".into()]
+            }
+        );
+        assert_eq!(
+            parse_request("query 0-1,1-2 ; 0-1,0-2").unwrap(),
+            Request::Query {
+                specs: vec!["0-1,1-2".into(), "0-1,0-2".into()]
+            }
+        );
+        assert_eq!(parse_request("BATCH 3").unwrap(), Request::Batch { n: 3 });
+        assert_eq!(parse_request("  stats  ").unwrap(), Request::Stats);
+        assert_eq!(parse_request("INVALIDATE").unwrap(), Request::Invalidate);
+        assert_eq!(parse_request("Quit").unwrap(), Request::Quit);
+    }
+
+    #[test]
+    fn rejections_are_distinct() {
+        assert!(err_of("").contains("empty request line"));
+        assert!(err_of("   ").contains("empty request line"));
+        assert!(err_of("FETCH 0-1").contains("unknown verb 'FETCH'"));
+        assert!(err_of("QUERY").contains("at least one pattern spec"));
+        assert!(err_of("QUERY 0-1;;0-2").contains("empty pattern spec"));
+        assert!(err_of("BATCH").contains("needs a count"));
+        assert!(err_of("BATCH two").contains("not a number"));
+        assert!(err_of("BATCH 0").contains("at least 1"));
+        assert!(err_of("BATCH 9999").contains("exceeds"));
+        assert!(err_of("STATS now").contains("no arguments"));
+        assert!(err_of("QUIT please").contains("no arguments"));
+        let long = format!("QUERY {}", "0-1,".repeat(2000));
+        assert!(err_of(&long).contains("exceeds 4096 bytes"));
+    }
+
+    #[test]
+    fn one_line_flattens() {
+        assert_eq!(one_line("a\nb\r\nc"), "a b  c");
+    }
+}

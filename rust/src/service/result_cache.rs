@@ -1,0 +1,212 @@
+//! LRU cache of final pattern counts keyed on [`PatternKey`].
+//!
+//! A hit short-circuits the engine entirely: the query is answered at
+//! zero modeled cost. Correctness contract:
+//!
+//! - only counts from *clean* runs are inserted (the server refuses to
+//!   cache timed-out or faulted batches — their counts are partial);
+//! - the cache is valid for exactly one graph snapshot. The future
+//!   dynamic-graph layer must call [`ResultCache::invalidate_all`] (or
+//!   targeted [`ResultCache::invalidate`]) on any mutation *before*
+//!   admitting the next query; the service exposes this as
+//!   [`ServiceHandle::invalidate_results`](super::ServiceHandle) and
+//!   the wire verb `INVALIDATE`. Stale hits are impossible as long as
+//!   that ordering holds, because the graph snapshot itself is
+//!   immutable (`Arc<CsrGraph>`).
+
+use std::collections::HashMap;
+
+use crate::plan::PatternKey;
+
+/// A cached per-pattern answer.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CachedCount {
+    /// Total matches of the pattern in the snapshot.
+    pub count: u64,
+    /// Modeled engine seconds the cold run charged for this pattern
+    /// (its share of the fused batch) — kept for stats/introspection,
+    /// not used for correctness.
+    pub cold_sim_seconds: f64,
+}
+
+struct Entry {
+    val: CachedCount,
+    last_used: u64,
+}
+
+/// See module docs. Not internally synchronized — the service wraps it
+/// in a `Mutex`; tests drive it directly.
+pub struct ResultCache {
+    cap: usize,
+    map: HashMap<PatternKey, Entry>,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+    invalidations: u64,
+}
+
+impl ResultCache {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap >= 1, "result cache needs capacity for at least one entry");
+        Self {
+            cap,
+            map: HashMap::new(),
+            tick: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+            invalidations: 0,
+        }
+    }
+
+    /// Counted lookup: bumps recency on a hit, records a hit or miss.
+    pub fn get(&mut self, key: &PatternKey) -> Option<CachedCount> {
+        self.tick += 1;
+        match self.map.get_mut(key) {
+            Some(e) => {
+                e.last_used = self.tick;
+                self.hits += 1;
+                Some(e.val)
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Uncounted lookup (no recency bump, no stats) — used by the
+    /// submit path to test "fully cached?" before committing to the
+    /// counted reads, and by tests.
+    pub fn peek(&self, key: &PatternKey) -> Option<CachedCount> {
+        self.map.get(key).map(|e| e.val)
+    }
+
+    pub fn contains(&self, key: &PatternKey) -> bool {
+        self.map.contains_key(key)
+    }
+
+    /// Insert (or refresh) an entry, evicting the LRU entry at capacity.
+    pub fn insert(&mut self, key: PatternKey, val: CachedCount) {
+        self.tick += 1;
+        if let Some(e) = self.map.get_mut(&key) {
+            e.val = val;
+            e.last_used = self.tick;
+            return;
+        }
+        if self.map.len() >= self.cap {
+            let victim = self
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone());
+            if let Some(k) = victim {
+                self.map.remove(&k);
+                self.evictions += 1;
+            }
+        }
+        self.map.insert(
+            key,
+            Entry {
+                val,
+                last_used: self.tick,
+            },
+        );
+    }
+
+    /// Drop one entry; returns whether it existed.
+    pub fn invalidate(&mut self, key: &PatternKey) -> bool {
+        let hit = self.map.remove(key).is_some();
+        if hit {
+            self.invalidations += 1;
+        }
+        hit
+    }
+
+    /// Drop everything (the dynamic-graph mutation hook); returns the
+    /// number of entries dropped.
+    pub fn invalidate_all(&mut self) -> usize {
+        let n = self.map.len();
+        self.invalidations += n as u64;
+        self.map.clear();
+        n
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    pub fn invalidations(&self) -> u64 {
+        self.invalidations
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::plan::parse_pattern;
+
+    fn key_of(spec: &str) -> PatternKey {
+        parse_pattern(spec).unwrap().key()
+    }
+
+    fn cc(count: u64) -> CachedCount {
+        CachedCount {
+            count,
+            cold_sim_seconds: 0.25,
+        }
+    }
+
+    #[test]
+    fn hit_miss_invalidate_roundtrip() {
+        let mut c = ResultCache::new(4);
+        let tri = key_of("0-1,1-2,2-0");
+        assert_eq!(c.get(&tri), None);
+        c.insert(tri.clone(), cc(7));
+        // the relabeled spelling of the triangle is the same key
+        assert_eq!(c.get(&key_of("1-2,2-0,0-1")), Some(cc(7)));
+        assert!(c.invalidate(&tri));
+        assert!(!c.invalidate(&tri), "second invalidate finds nothing");
+        assert_eq!(c.get(&tri), None, "stale hit after invalidate is impossible");
+        assert_eq!((c.hits(), c.misses(), c.invalidations()), (1, 3, 1));
+    }
+
+    #[test]
+    fn capacity_eviction_is_lru_and_invalidate_all_clears() {
+        let mut c = ResultCache::new(2);
+        let a = key_of("0-1,1-2,2-0");
+        let b = key_of("0-1,1-2,2-3");
+        let d = key_of("0-1,0-2,0-3");
+        c.insert(a.clone(), cc(1));
+        c.insert(b.clone(), cc(2));
+        c.get(&a); // b becomes LRU
+        c.insert(d.clone(), cc(3));
+        assert!(!c.contains(&b), "LRU entry must be evicted");
+        assert!(c.contains(&a) && c.contains(&d));
+        assert_eq!(c.evictions(), 1);
+        assert_eq!(c.invalidate_all(), 2);
+        assert!(c.is_empty());
+        assert_eq!(c.invalidations(), 2);
+    }
+}

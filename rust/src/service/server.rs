@@ -1,0 +1,693 @@
+//! The persistent query server: worker thread, admission loop, wire
+//! front-end.
+//!
+//! One background worker owns the execution path. Clients submit
+//! through [`ServiceHandle`] (thread-safe, cloneable); each submission
+//! parses and canonicalizes on the *client's* thread, so the worker
+//! only compiles, fuses, and runs. The worker collects arrivals for
+//! [`ServiceConfig::batch_window`](super::ServiceConfig::batch_window)
+//! after the first pending query, partitions the drain into
+//! [`BatchClass`](super::BatchClass) groups, and executes each group
+//! as one fused [`PlanTrie`] through [`Runner::run_shared`] against
+//! the shared snapshot.
+//!
+//! `PlanTrie::build` deduplicates on `(canonical, labels)` — weaker
+//! than [`PatternKey`] for labeled patterns — so two *distinct* keys
+//! can, rarely, collide inside one trie. The worker falls back to
+//! singleton tries for that batch instead of failing the queries.
+
+use std::io::{BufRead, Write};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use crate::api::GpmAlgorithm;
+use crate::engine::{Runner, WarpContext};
+use crate::graph::CsrGraph;
+use crate::plan::trie::PlanTrie;
+use crate::plan::{parse_pattern_set, ExecutionPlan, PatternKey};
+
+use super::admission::{group_batches, Batch, PendingQuery};
+use super::plan_cache::PlanCache;
+use super::protocol::{one_line, parse_request, Request};
+use super::result_cache::{CachedCount, ResultCache};
+use super::{ServiceConfig, ServiceStats};
+
+/// The answer to one query.
+#[derive(Clone, Debug)]
+pub struct QueryOutcome {
+    /// Per-pattern counts, in the query's spec order.
+    pub counts: Vec<u64>,
+    /// Sum of `counts`.
+    pub total: u64,
+    /// Modeled latency in sim-seconds: service clock at batch
+    /// completion minus clock at submission. Zero for a query answered
+    /// entirely from the result cache.
+    pub latency: f64,
+    /// How many of the query's patterns were served from the result
+    /// cache (the rest ran cold in the fused batch).
+    pub result_hits: usize,
+    /// The engine run backing this answer hit its time budget; counts
+    /// are partial and were *not* cached.
+    pub timed_out: bool,
+    /// Structured engine fault, if any; counts are partial and were
+    /// not cached.
+    pub fault: Option<String>,
+}
+
+/// A pending answer: wait on it to get the [`QueryOutcome`].
+pub struct Ticket {
+    pub id: u64,
+    rx: mpsc::Receiver<QueryOutcome>,
+}
+
+impl Ticket {
+    /// Block until the query's batch completes. Fails only if the
+    /// service shut down before executing the query.
+    pub fn wait(self) -> Result<QueryOutcome> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("service shut down before the query ran"))
+    }
+}
+
+#[derive(Default)]
+struct Counters {
+    queries: u64,
+    patterns: u64,
+    engine_runs: u64,
+    batches: u64,
+    cold_patterns: u64,
+}
+
+struct Inner {
+    graph: Arc<CsrGraph>,
+    cfg: ServiceConfig,
+    /// Label-frequency snapshot for labeled plan selectivity.
+    freq: Vec<u64>,
+    queue: Mutex<Vec<PendingQuery>>,
+    wake: Condvar,
+    plans: Mutex<PlanCache>,
+    results: Mutex<ResultCache>,
+    /// Modeled service clock: accumulated engine sim-seconds.
+    clock: Mutex<f64>,
+    counters: Mutex<Counters>,
+    next_id: AtomicU64,
+    shutdown: AtomicBool,
+}
+
+/// The server: owns the worker thread. Dropping (or calling
+/// [`Service::shutdown`]) drains the queue, then joins the worker.
+pub struct Service {
+    inner: Arc<Inner>,
+    worker: Option<JoinHandle<()>>,
+}
+
+/// Cloneable client handle; safe to share across threads.
+#[derive(Clone)]
+pub struct ServiceHandle {
+    inner: Arc<Inner>,
+}
+
+impl Service {
+    /// Spin up a service over an immutable graph snapshot. The service
+    /// compiles unoriented plans, so the snapshot must be undirected
+    /// (orient-aware serving is a follow-up).
+    pub fn start(graph: Arc<CsrGraph>, cfg: ServiceConfig) -> Service {
+        assert!(
+            !graph.is_directed(),
+            "the query service serves undirected snapshots (got an oriented graph)"
+        );
+        let freq = graph.label_frequencies();
+        let inner = Arc::new(Inner {
+            graph,
+            plans: Mutex::new(PlanCache::new(cfg.plan_cache_cap)),
+            results: Mutex::new(ResultCache::new(cfg.result_cache_cap)),
+            cfg,
+            freq,
+            queue: Mutex::new(Vec::new()),
+            wake: Condvar::new(),
+            clock: Mutex::new(0.0),
+            counters: Mutex::new(Counters::default()),
+            next_id: AtomicU64::new(1),
+            shutdown: AtomicBool::new(false),
+        });
+        let w = Arc::clone(&inner);
+        let worker = std::thread::Builder::new()
+            .name("dumato-service".into())
+            .spawn(move || worker_loop(&w))
+            .expect("spawn service worker");
+        Service {
+            inner,
+            worker: Some(worker),
+        }
+    }
+
+    pub fn handle(&self) -> ServiceHandle {
+        ServiceHandle {
+            inner: Arc::clone(&self.inner),
+        }
+    }
+
+    /// Drain pending queries, stop the worker, and join it.
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        self.inner.shutdown.store(true, Ordering::SeqCst);
+        self.inner.wake.notify_all();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Service {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+impl ServiceHandle {
+    /// Submit one query (a uniform pattern set). Parse and
+    /// canonicalization errors surface here, before the queue; a query
+    /// whose patterns are all result-cached is answered immediately at
+    /// zero modeled latency without waking the worker.
+    pub fn submit(&self, specs: &[String]) -> Result<Ticket> {
+        let inner = &self.inner;
+        ensure!(
+            !inner.shutdown.load(Ordering::SeqCst),
+            "service is shut down"
+        );
+        let patterns = parse_pattern_set(specs)?;
+        let keys: Vec<PatternKey> = patterns.iter().map(|p| p.key()).collect();
+        let id = inner.next_id.fetch_add(1, Ordering::SeqCst);
+        {
+            let mut ctr = inner.counters.lock().unwrap();
+            ctr.queries += 1;
+            ctr.patterns += keys.len() as u64;
+        }
+        let (tx, rx) = mpsc::channel();
+        // fast path: every pattern already has a cached count
+        {
+            let mut rc = inner.results.lock().unwrap();
+            if keys.iter().all(|k| rc.contains(k)) {
+                let counts: Vec<u64> = keys
+                    .iter()
+                    .map(|k| rc.get(k).expect("checked above").count)
+                    .collect();
+                let total = counts.iter().sum();
+                let result_hits = counts.len();
+                let _ = tx.send(QueryOutcome {
+                    counts,
+                    total,
+                    latency: 0.0,
+                    result_hits,
+                    timed_out: false,
+                    fault: None,
+                });
+                return Ok(Ticket { id, rx });
+            }
+        }
+        let submitted_clock = *inner.clock.lock().unwrap();
+        let pq = PendingQuery {
+            id,
+            specs: specs.to_vec(),
+            patterns,
+            keys,
+            submitted_clock,
+            reply: tx,
+        };
+        {
+            let mut q = inner.queue.lock().unwrap();
+            ensure!(
+                !inner.shutdown.load(Ordering::SeqCst),
+                "service is shut down"
+            );
+            q.push(pq);
+        }
+        inner.wake.notify_all();
+        Ok(Ticket { id, rx })
+    }
+
+    /// Submit and wait: the blocking convenience used by the wire
+    /// layer and most tests.
+    pub fn query(&self, specs: &[String]) -> Result<QueryOutcome> {
+        self.submit(specs)?.wait()
+    }
+
+    /// Drop every cached result (the dynamic-graph mutation hook);
+    /// returns how many entries were dropped. Plans are kept — they
+    /// stay correct across snapshot changes.
+    pub fn invalidate_results(&self) -> usize {
+        self.inner.results.lock().unwrap().invalidate_all()
+    }
+
+    /// Drop one cached result by key; returns whether it existed.
+    pub fn invalidate_result(&self, key: &PatternKey) -> bool {
+        self.inner.results.lock().unwrap().invalidate(key)
+    }
+
+    /// Snapshot the service counters.
+    pub fn stats(&self) -> ServiceStats {
+        let ctr = self.inner.counters.lock().unwrap();
+        let plans = self.inner.plans.lock().unwrap();
+        let results = self.inner.results.lock().unwrap();
+        let sim_seconds = *self.inner.clock.lock().unwrap();
+        ServiceStats {
+            queries: ctr.queries,
+            patterns: ctr.patterns,
+            engine_runs: ctr.engine_runs,
+            batches: ctr.batches,
+            cold_patterns: ctr.cold_patterns,
+            plan_hits: plans.hits(),
+            plan_misses: plans.misses(),
+            plan_evictions: plans.evictions(),
+            result_hits: results.hits(),
+            result_misses: results.misses(),
+            result_evictions: results.evictions(),
+            result_invalidations: results.invalidations(),
+            sim_seconds,
+        }
+    }
+
+    /// The snapshot this service answers against.
+    pub fn graph(&self) -> &Arc<CsrGraph> {
+        &self.inner.graph
+    }
+}
+
+/// The fused batch as a trie algorithm (the `SubgraphQuerySet` shape,
+/// minus its plan bookkeeping — leaf identity lives in the admission
+/// batch, not the job).
+struct FusedJob {
+    trie: PlanTrie,
+}
+
+impl GpmAlgorithm for FusedJob {
+    fn name(&self) -> &str {
+        "service_batch"
+    }
+
+    fn k(&self) -> usize {
+        self.trie.k()
+    }
+
+    fn trie(&self) -> Option<&PlanTrie> {
+        Some(&self.trie)
+    }
+
+    fn run(&self, ctx: &mut WarpContext) {
+        ctx.run_trie(&self.trie);
+    }
+}
+
+fn worker_loop(inner: &Arc<Inner>) {
+    loop {
+        let drained: Vec<PendingQuery> = {
+            let mut q = inner.queue.lock().unwrap();
+            loop {
+                if !q.is_empty() {
+                    break;
+                }
+                if inner.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                q = inner.wake.wait(q).unwrap();
+            }
+            // admission window: give compatible arrivals a chance to
+            // join this round (skipped during shutdown drain)
+            let window = inner.cfg.batch_window;
+            if !window.is_zero() && !inner.shutdown.load(Ordering::SeqCst) {
+                let deadline = Instant::now() + window;
+                loop {
+                    let now = Instant::now();
+                    if now >= deadline || q.len() >= inner.cfg.max_batch {
+                        break;
+                    }
+                    let (guard, res) = inner.wake.wait_timeout(q, deadline - now).unwrap();
+                    q = guard;
+                    if res.timed_out() || inner.shutdown.load(Ordering::SeqCst) {
+                        break;
+                    }
+                }
+            }
+            let take = q.len().min(inner.cfg.max_batch);
+            q.drain(..take).collect()
+        };
+        for batch in group_batches(drained) {
+            execute_batch(inner, batch);
+        }
+    }
+}
+
+fn execute_batch(inner: &Arc<Inner>, batch: Batch) {
+    // 1) per unique pattern: cached answer, or a cold slot to run
+    let cached: Vec<Option<CachedCount>> = {
+        let mut rc = inner.results.lock().unwrap();
+        batch.unique.iter().map(|(key, _)| rc.get(key)).collect()
+    };
+    let to_run: Vec<usize> = (0..batch.unique.len())
+        .filter(|&u| cached[u].is_none())
+        .collect();
+    // run_slot[u] = index into `to_run`/leaf counts for cold patterns
+    let mut run_slot: Vec<Option<usize>> = vec![None; batch.unique.len()];
+    for (j, &u) in to_run.iter().enumerate() {
+        run_slot[u] = Some(j);
+    }
+
+    // 2) compile cold plans through the plan cache
+    let plans: Vec<Arc<ExecutionPlan>> = {
+        let mut pc = inner.plans.lock().unwrap();
+        to_run
+            .iter()
+            .map(|&u| {
+                let (key, pat) = &batch.unique[u];
+                pc.get_or_compile(key, || {
+                    let m = pat.adj();
+                    match &pat.labels {
+                        Some(ls) => ExecutionPlan::build_labeled(&m, ls, Some(&inner.freq)),
+                        None => ExecutionPlan::build(&m),
+                    }
+                })
+            })
+            .collect()
+    };
+
+    // 3) execute: one fused trie, or singleton fallback on a
+    //    key-collision build error
+    let mut leaf: Vec<u64> = vec![0; to_run.len()];
+    let mut sim_cost = 0.0;
+    let mut timed_out = false;
+    let mut fault: Option<String> = None;
+    let mut engine_runs = 0u64;
+    if !to_run.is_empty() {
+        let plan_vec: Vec<ExecutionPlan> = plans.iter().map(|p| (**p).clone()).collect();
+        match PlanTrie::build(&plan_vec) {
+            Ok(trie) => {
+                let job = FusedJob { trie };
+                let r = Runner::run_shared(&inner.graph, &job, &inner.cfg.engine);
+                assert_eq!(r.leaf_counts.len(), leaf.len(), "one leaf per cold pattern");
+                leaf.copy_from_slice(&r.leaf_counts);
+                sim_cost += r.metrics.sim_seconds;
+                timed_out |= r.timed_out;
+                fault = r.fault.map(|f| f.to_string());
+                engine_runs += 1;
+            }
+            Err(_) => {
+                for (j, p) in plan_vec.iter().enumerate() {
+                    let trie = PlanTrie::build(std::slice::from_ref(p))
+                        .expect("a singleton pattern set is always fusable");
+                    let job = FusedJob { trie };
+                    let r = Runner::run_shared(&inner.graph, &job, &inner.cfg.engine);
+                    leaf[j] = r.leaf_counts.first().copied().unwrap_or(r.count);
+                    sim_cost += r.metrics.sim_seconds;
+                    timed_out |= r.timed_out;
+                    if fault.is_none() {
+                        fault = r.fault.map(|f| f.to_string());
+                    }
+                    engine_runs += 1;
+                }
+            }
+        }
+    }
+
+    // 4) advance the modeled clock
+    let clock_after = {
+        let mut c = inner.clock.lock().unwrap();
+        *c += sim_cost;
+        *c
+    };
+
+    // 5) cache clean cold results only — partial counts must never be
+    //    served to a later query
+    if !timed_out && fault.is_none() && !to_run.is_empty() {
+        let share = sim_cost / to_run.len() as f64;
+        let mut rc = inner.results.lock().unwrap();
+        for (j, &u) in to_run.iter().enumerate() {
+            rc.insert(
+                batch.unique[u].0.clone(),
+                CachedCount {
+                    count: leaf[j],
+                    cold_sim_seconds: share,
+                },
+            );
+        }
+    }
+
+    {
+        let mut ctr = inner.counters.lock().unwrap();
+        ctr.engine_runs += engine_runs;
+        ctr.cold_patterns += to_run.len() as u64;
+        if !to_run.is_empty() {
+            ctr.batches += 1;
+        }
+    }
+
+    // 6) fan answers out to every member (isomorph submitters share a
+    //    slot and therefore a count)
+    for (q, slots) in batch.members {
+        let counts: Vec<u64> = slots
+            .iter()
+            .map(|&s| match &cached[s] {
+                Some(cc) => cc.count,
+                None => leaf[run_slot[s].expect("uncached slots are cold slots")],
+            })
+            .collect();
+        let result_hits = slots.iter().filter(|&&s| cached[s].is_some()).count();
+        let outcome = QueryOutcome {
+            total: counts.iter().sum(),
+            counts,
+            latency: clock_after - q.submitted_clock,
+            result_hits,
+            timed_out,
+            fault: fault.clone(),
+        };
+        // a dropped ticket just means nobody is waiting
+        let _ = q.reply.send(outcome);
+    }
+}
+
+/// Serve the wire protocol over any line stream (stdin/stdout in the
+/// CLI, in-memory buffers in tests and fuzzing). Never panics on
+/// malformed input: every rejection is a one-line `ERR`.
+pub fn serve_lines<R: BufRead, W: Write>(
+    handle: &ServiceHandle,
+    mut input: R,
+    out: &mut W,
+) -> std::io::Result<()> {
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        buf.clear();
+        if input.read_until(b'\n', &mut buf)? == 0 {
+            return Ok(()); // EOF
+        }
+        let Some(line) = decode_line(&mut buf) else {
+            writeln!(out, "ERR request line is not valid UTF-8")?;
+            out.flush()?;
+            continue;
+        };
+        match parse_request(&line) {
+            Err(e) => writeln!(out, "ERR {}", one_line(&format!("{e:#}")))?,
+            Ok(Request::Quit) => {
+                writeln!(out, "OK bye")?;
+                out.flush()?;
+                return Ok(());
+            }
+            Ok(Request::Stats) => {
+                let s = handle.stats();
+                writeln!(
+                    out,
+                    "OK queries={} patterns={} batches={} engine_runs={} cold={} \
+                     plan_hits={} plan_misses={} plan_evictions={} result_hits={} \
+                     result_misses={} result_evictions={} invalidations={} sim_seconds={:.6}",
+                    s.queries,
+                    s.patterns,
+                    s.batches,
+                    s.engine_runs,
+                    s.cold_patterns,
+                    s.plan_hits,
+                    s.plan_misses,
+                    s.plan_evictions,
+                    s.result_hits,
+                    s.result_misses,
+                    s.result_evictions,
+                    s.result_invalidations,
+                    s.sim_seconds
+                )?;
+            }
+            Ok(Request::Invalidate) => {
+                let n = handle.invalidate_results();
+                writeln!(out, "OK invalidated={n}")?;
+            }
+            Ok(Request::Query { specs }) => {
+                let line = respond_query(handle, &specs);
+                writeln!(out, "{line}")?;
+            }
+            Ok(Request::Batch { n }) => {
+                // submit all members before awaiting any: wire-level
+                // fused admission on a single connection
+                let mut slots: Vec<Result<Ticket, String>> = Vec::with_capacity(n);
+                let mut truncated = false;
+                for i in 0..n {
+                    buf.clear();
+                    if input.read_until(b'\n', &mut buf)? == 0 {
+                        writeln!(
+                            out,
+                            "ERR batch truncated: expected {n} QUERY lines, got {i}"
+                        )?;
+                        truncated = true;
+                        break;
+                    }
+                    let Some(line) = decode_line(&mut buf) else {
+                        slots.push(Err("request line is not valid UTF-8".into()));
+                        continue;
+                    };
+                    match parse_request(&line) {
+                        Ok(Request::Query { specs }) => {
+                            slots.push(handle.submit(&specs).map_err(|e| one_line(&format!("{e:#}"))));
+                        }
+                        Ok(_) => slots.push(Err(
+                            "only QUERY lines are allowed inside a BATCH".into()
+                        )),
+                        Err(e) => slots.push(Err(one_line(&format!("{e:#}")))),
+                    }
+                }
+                for slot in slots {
+                    match slot {
+                        Ok(ticket) => match ticket.wait() {
+                            Ok(o) => writeln!(out, "{}", outcome_line(&o))?,
+                            Err(e) => writeln!(out, "ERR {}", one_line(&format!("{e:#}")))?,
+                        },
+                        Err(msg) => writeln!(out, "ERR {msg}")?,
+                    }
+                }
+                if truncated {
+                    out.flush()?;
+                    return Ok(());
+                }
+            }
+        }
+        out.flush()?;
+    }
+}
+
+/// Strip the trailing newline (and CR) and decode; `None` on invalid
+/// UTF-8.
+fn decode_line(buf: &mut Vec<u8>) -> Option<String> {
+    if buf.last() == Some(&b'\n') {
+        buf.pop();
+        if buf.last() == Some(&b'\r') {
+            buf.pop();
+        }
+    }
+    std::str::from_utf8(buf).ok().map(|s| s.to_string())
+}
+
+fn respond_query(handle: &ServiceHandle, specs: &[String]) -> String {
+    match handle.query(specs) {
+        Ok(o) => outcome_line(&o),
+        Err(e) => format!("ERR {}", one_line(&format!("{e:#}"))),
+    }
+}
+
+fn outcome_line(o: &QueryOutcome) -> String {
+    if let Some(f) = &o.fault {
+        return format!("ERR engine fault: {}", one_line(f));
+    }
+    let counts: Vec<String> = o.counts.iter().map(|c| c.to_string()).collect();
+    let mut line = format!(
+        "OK count={} counts={} latency={:.6} hits={}/{}",
+        o.total,
+        counts.join(","),
+        o.latency,
+        o.result_hits,
+        o.counts.len()
+    );
+    if o.timed_out {
+        line.push_str(" timeout=1");
+    }
+    line
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::EngineConfig;
+    use crate::graph::generators;
+    use std::time::Duration;
+
+    fn tiny_service() -> Service {
+        let g = Arc::new(generators::erdos_renyi(24, 0.3, 11));
+        let cfg = ServiceConfig {
+            engine: EngineConfig {
+                warps: 64,
+                threads: 2,
+                ..EngineConfig::default()
+            },
+            batch_window: Duration::from_millis(2),
+            ..ServiceConfig::default()
+        };
+        Service::start(g, cfg)
+    }
+
+    #[test]
+    fn query_cache_and_stats_roundtrip() {
+        let svc = tiny_service();
+        let h = svc.handle();
+        let spec = vec!["0-1,1-2,2-0".to_string()];
+        let cold = h.query(&spec).unwrap();
+        assert!(cold.fault.is_none() && !cold.timed_out);
+        assert_eq!(cold.result_hits, 0);
+        // repeat: result-cache hit, zero modeled latency
+        let warm = h.query(&spec).unwrap();
+        assert_eq!(warm.counts, cold.counts);
+        assert_eq!(warm.result_hits, 1);
+        assert_eq!(warm.latency, 0.0);
+        // relabeled isomorph: same key, still a hit
+        let iso = h.query(&["1-2,2-0,0-1".to_string()]).unwrap();
+        assert_eq!(iso.counts, cold.counts);
+        assert_eq!(iso.result_hits, 1);
+        let s = h.stats();
+        assert_eq!(s.queries, 3);
+        assert_eq!(s.cold_patterns, 1);
+        assert!(s.result_hits >= 2);
+        assert!(s.sim_seconds > 0.0);
+        // invalidate: the next query recounts, identically
+        assert_eq!(h.invalidate_results(), 1);
+        let recount = h.query(&spec).unwrap();
+        assert_eq!(recount.counts, cold.counts);
+        assert_eq!(recount.result_hits, 0);
+        let s2 = h.stats();
+        assert_eq!(s2.result_invalidations, 1);
+        assert!(s2.plan_hits >= 1, "recount reuses the cached plan");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn submit_after_shutdown_errors() {
+        let svc = tiny_service();
+        let h = svc.handle();
+        svc.shutdown();
+        let err = h.query(&["0-1,1-2".to_string()]).unwrap_err();
+        assert!(format!("{err:#}").contains("shut down"));
+    }
+
+    #[test]
+    fn bad_specs_error_before_the_queue() {
+        let svc = tiny_service();
+        let h = svc.handle();
+        assert!(h.query(&[]).is_err(), "empty set");
+        assert!(h.query(&["0-1,2-3".to_string()]).is_err(), "disconnected");
+        assert!(
+            h.query(&["0-1,1-2".to_string(), "0-1,1-2,2-3".to_string()])
+                .is_err(),
+            "mixed k"
+        );
+        assert_eq!(h.stats().cold_patterns, 0, "nothing reached the engine");
+    }
+}

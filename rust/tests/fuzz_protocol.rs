@@ -1,0 +1,201 @@
+//! Fuzz-style hardening of the service wire protocol: ~350 generated
+//! malformed request lines (deterministic `util::Rng` streams) driven
+//! through `serve_lines` against a *live* service. Contract:
+//!
+//! - every malformed line gets a one-line `ERR` response with a
+//!   category-distinct message — the server never panics, never goes
+//!   silent, never answers `OK` to garbage;
+//! - the session survives: a valid query after the garbage still
+//!   returns the right count.
+//!
+//! Categories: unknown verbs, empty/whitespace lines, overlong lines,
+//! invalid UTF-8, malformed QUERY specs (delegated parser errors),
+//! BATCH header abuse, non-QUERY lines inside a BATCH, and
+//! arguments on no-argument verbs.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use dumato::engine::EngineConfig;
+use dumato::graph::generators;
+use dumato::service::{serve_lines, Service, ServiceConfig};
+use dumato::util::Rng;
+
+fn tiny_service() -> Service {
+    Service::start(
+        Arc::new(generators::erdos_renyi(20, 0.3, 13)),
+        ServiceConfig {
+            engine: EngineConfig {
+                warps: 32,
+                threads: 2,
+                ..EngineConfig::default()
+            },
+            batch_window: Duration::from_millis(1),
+            ..ServiceConfig::default()
+        },
+    )
+}
+
+/// Drive raw bytes through one live session; returns response lines.
+fn session(svc: &Service, input: &[u8]) -> Vec<String> {
+    let mut out: Vec<u8> = Vec::new();
+    serve_lines(&svc.handle(), input, &mut out).unwrap();
+    String::from_utf8(out)
+        .expect("responses are valid UTF-8")
+        .lines()
+        .map(|l| l.to_string())
+        .collect()
+}
+
+/// Random printable junk (no newline) of the given length.
+fn junk(rng: &mut Rng, len: usize) -> String {
+    const CHARS: &[u8] = b"abcdefghijklmnopqrstuvwxyzABCDEFGHIJKLMNOPQRSTUVWXYZ\
+                           0123456789 -:;,.!@#$%^&*()[]{}<>/\\'\"`~+=_|?";
+    (0..len)
+        .map(|_| CHARS[rng.below(CHARS.len() as u64) as usize] as char)
+        .collect()
+}
+
+#[test]
+fn malformed_lines_get_distinct_errors_and_never_kill_the_session() {
+    let svc = tiny_service();
+    let mut rng = Rng::new(0xf0220_7);
+    // (line, marker the ERR must carry)
+    let mut cases: Vec<(String, &str)> = Vec::new();
+
+    for i in 0..60 {
+        // unknown verbs: junk words that are not in the vocabulary
+        let verb = junk(&mut rng, 3 + i % 8).replace(' ', "_");
+        let known = ["QUERY", "BATCH", "STATS", "INVALIDATE", "QUIT"]
+            .iter()
+            .any(|k| verb.eq_ignore_ascii_case(k));
+        if !known {
+            cases.push((format!("{verb} 0-1,1-2"), "unknown verb"));
+        }
+    }
+    for _ in 0..30 {
+        // whitespace-only lines
+        let n = 1 + rng.below(6) as usize;
+        cases.push((" ".repeat(n), "empty request line"));
+    }
+    for _ in 0..20 {
+        // overlong lines
+        let n = 4097 + rng.below(2000) as usize;
+        cases.push((format!("QUERY {}", "0".repeat(n)), "exceeds 4096 bytes"));
+    }
+    for _ in 0..60 {
+        // malformed QUERY payloads: the pattern parser's own distinct
+        // errors must travel the wire
+        let bad = match rng.below(5) {
+            0 => ("QUERY 1-1".to_string(), "self-loop"),
+            1 => ("QUERY 0-1,2-3".to_string(), "disconnected"),
+            2 => ("QUERY 0:0-1,1-2".to_string(), "mixes labeled and unlabeled"),
+            3 => ("QUERY 0-1;;0-2".to_string(), "empty pattern spec"),
+            // leading 'x' guarantees a non-numeric first vertex token,
+            // so random junk can never spell a valid pattern
+            _ => (format!("QUERY x{}", junk(&mut rng, 12).replace(';', "")), ""),
+        };
+        cases.push(bad);
+    }
+    for _ in 0..40 {
+        // BATCH header abuse
+        let bad = match rng.below(4) {
+            0 => ("BATCH".to_string(), "needs a count"),
+            // trailing 'x' keeps all-digit junk from being a valid count
+            1 => (
+                format!("BATCH {}x", junk(&mut rng, 4).replace(' ', "")),
+                "not a number",
+            ),
+            2 => ("BATCH 0".to_string(), "at least 1"),
+            _ => (format!("BATCH {}", 1025 + rng.below(9000)), "exceeds"),
+        };
+        cases.push(bad);
+    }
+    for _ in 0..30 {
+        // arguments on no-argument verbs
+        let verb = ["STATS", "INVALIDATE", "QUIT"][rng.below(3) as usize];
+        cases.push((format!("{verb} {}", junk(&mut rng, 5)), "no arguments"));
+    }
+
+    // feed every case through one session, garbage then a valid probe
+    let mut input = String::new();
+    for (line, _) in &cases {
+        input.push_str(line);
+        input.push('\n');
+    }
+    input.push_str("QUERY 0-1,1-2,2-0\nQUIT\n");
+    let lines = session(&svc, input.as_bytes());
+    assert_eq!(lines.len(), cases.len() + 2, "one response per request");
+    for (i, (case, marker)) in cases.iter().enumerate() {
+        assert!(
+            lines[i].starts_with("ERR "),
+            "case {i} {case:?} answered {:?}",
+            lines[i]
+        );
+        assert!(
+            lines[i].len() > 4 && !lines[i].contains('\n'),
+            "ERR must carry a one-line message: {:?}",
+            lines[i]
+        );
+        if !marker.is_empty() {
+            assert!(
+                lines[i].contains(marker),
+                "case {i} {case:?}: expected marker {marker:?} in {:?}",
+                lines[i]
+            );
+        }
+    }
+    let probe = &lines[cases.len()];
+    assert!(probe.starts_with("OK count="), "session must survive: {probe}");
+    assert_eq!(lines[cases.len() + 1], "OK bye");
+    svc.shutdown();
+}
+
+#[test]
+fn invalid_utf8_is_rejected_not_fatal() {
+    let svc = tiny_service();
+    let mut input: Vec<u8> = Vec::new();
+    for i in 0..20u8 {
+        input.extend_from_slice(b"QUERY 0-1,1-");
+        input.push(0x80 + i); // lone continuation byte
+        input.push(b'\n');
+    }
+    input.extend_from_slice(b"QUERY 0-1,1-2,2-0\nQUIT\n");
+    let lines = session(&svc, &input);
+    assert_eq!(lines.len(), 22);
+    for line in &lines[..20] {
+        assert_eq!(line, "ERR request line is not valid UTF-8");
+    }
+    assert!(lines[20].starts_with("OK count="));
+    svc.shutdown();
+}
+
+#[test]
+fn batch_bodies_reject_non_query_lines_and_truncation() {
+    let svc = tiny_service();
+    // a 3-slot batch: valid, wrong-verb, malformed — each slot answers
+    // in order, then the session continues
+    let input = "BATCH 3\n\
+                 QUERY 0-1,1-2,2-0\n\
+                 STATS\n\
+                 QUERY 1-1\n\
+                 STATS\n\
+                 QUIT\n";
+    let lines = session(&svc, input.as_bytes());
+    assert_eq!(lines.len(), 5, "{lines:?}");
+    assert!(lines[0].starts_with("OK count="), "{lines:?}");
+    assert!(lines[1].contains("only QUERY lines are allowed inside a BATCH"), "{lines:?}");
+    assert!(lines[2].starts_with("ERR ") && lines[2].contains("self-loop"), "{lines:?}");
+    assert!(lines[3].starts_with("OK queries="), "{lines:?}");
+    assert_eq!(lines[4], "OK bye");
+
+    // truncation: EOF inside the batch is a distinct error, not a hang
+    let lines = session(&svc, b"BATCH 4\nQUERY 0-1,1-2,2-0\n");
+    assert_eq!(lines.len(), 2, "{lines:?}");
+    assert!(
+        lines[0].contains("batch truncated: expected 4 QUERY lines, got 1"),
+        "{lines:?}"
+    );
+    assert!(lines[1].starts_with("OK count="), "submitted members still answer: {lines:?}");
+    svc.shutdown();
+}

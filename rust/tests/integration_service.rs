@@ -1,0 +1,266 @@
+//! End-to-end tests of the query-service layer (ISSUE 7 acceptance):
+//! concurrent mixed queries through the in-process handle must return
+//! counts identical to one-shot `Runner` runs, with asserted plan- and
+//! result-cache behavior, warm/cold bit-identity, and invalidation.
+//!
+//! Nothing here may depend on *how* queries batched — the admission
+//! window makes batch composition timing-dependent; only counts,
+//! cache counters with known lower bounds, and outcome fields that are
+//! batching-invariant are asserted.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use dumato::apps::SubgraphQuery;
+use dumato::engine::{EngineConfig, Runner};
+use dumato::graph::{generators, CsrGraph};
+use dumato::plan::parse_pattern;
+use dumato::service::{key_for_spec, Service, ServiceConfig, ServiceHandle};
+
+fn small_engine() -> EngineConfig {
+    EngineConfig {
+        warps: 64,
+        threads: 2,
+        ..EngineConfig::default()
+    }
+}
+
+fn service_over(g: CsrGraph, window_ms: u64) -> Service {
+    Service::start(
+        Arc::new(g),
+        ServiceConfig {
+            engine: small_engine(),
+            batch_window: Duration::from_millis(window_ms),
+            ..ServiceConfig::default()
+        },
+    )
+}
+
+/// One-shot oracle: the count the classic per-query path produces.
+fn oneshot_count(g: &CsrGraph, spec: &str) -> u64 {
+    let p = parse_pattern(spec).unwrap();
+    let q = match &p.labels {
+        Some(ls) => SubgraphQuery::labeled_for(p.k, &p.edges, ls, g),
+        None => SubgraphQuery::new(p.k, &p.edges),
+    };
+    let r = Runner::run(g, &q, &small_engine());
+    assert!(!r.timed_out && r.fault.is_none());
+    q.matches(&r).len() as u64
+}
+
+#[test]
+fn concurrent_mixed_queries_match_oneshot_counts() {
+    // labeled graph: unlabeled patterns see label-blind counts, labeled
+    // patterns filter — both flavors go through the same service
+    let g = generators::with_random_labels(generators::erdos_renyi(40, 0.3, 3), 2, 9);
+    let svc = service_over(g.clone(), 20);
+    let h = svc.handle();
+
+    // mixed workload: distinct k=4 patterns, a k=3 repeat, a relabeled
+    // isomorph, and labeled wedges (distinct classes exercise admission
+    // splitting)
+    let specs: Vec<&str> = vec![
+        "0-1,1-2,2-3,3-0",     // 4-cycle
+        "0-1,1-2,2-3",         // 4-path
+        "0-1,1-2,2-0",         // triangle
+        "1-2,2-0,0-1",         // triangle, respelled (same key)
+        "0-1,0-2,0-3",         // 3-star
+        "0-1,1-2,2-0",         // triangle, exact repeat
+        "0:0-1:1,1:1-2:0",     // labeled wedge
+        "2:0-1:1,1:1-0:0",     // same labeled wedge, vertices renamed
+        "0:1-1:0,1:0-2:1",     // genuinely different labeling
+    ];
+    let expected: Vec<u64> = specs.iter().map(|s| oneshot_count(&g, s)).collect();
+
+    // 4 client threads race the same workload through cloned handles
+    let workers: Vec<_> = (0..4)
+        .map(|_| {
+            let h: ServiceHandle = h.clone();
+            let specs: Vec<String> = specs.iter().map(|s| s.to_string()).collect();
+            std::thread::spawn(move || {
+                specs
+                    .iter()
+                    .enumerate()
+                    .map(|(i, s)| {
+                        let o = h.query(std::slice::from_ref(s)).unwrap();
+                        assert!(o.fault.is_none(), "{s}: {:?}", o.fault);
+                        assert!(!o.timed_out);
+                        assert_eq!(o.counts.len(), 1);
+                        // indices 3/5/7 repeat a key this same thread
+                        // already completed — the result is cached by
+                        // the time they submit, whatever the batching
+                        if matches!(i, 3 | 5 | 7) {
+                            assert_eq!(o.result_hits, 1, "spec {i} '{s}' must hit");
+                            assert_eq!(o.latency, 0.0);
+                        }
+                        o.counts[0]
+                    })
+                    .collect::<Vec<u64>>()
+            })
+        })
+        .collect();
+    for w in workers {
+        assert_eq!(w.join().unwrap(), expected);
+    }
+
+    let s = h.stats();
+    assert_eq!(s.queries, 4 * specs.len() as u64);
+    // 6 distinct keys across the workload (triangle×3 and the wedge
+    // respelling collapse); each compiles at most once no matter how
+    // the 36 queries raced
+    assert_eq!(s.plan_misses, 6, "every distinct key compiles exactly once");
+    assert_eq!(s.cold_patterns, 6, "every distinct key runs cold exactly once");
+    // stats-level hits count cache *lookups* (batch members sharing a
+    // slot share one lookup), so only the guaranteed fast-path hits —
+    // the three repeat indices per thread — give a batching-independent
+    // lower bound
+    assert!(
+        s.result_hits >= 12,
+        "4 threads x 3 guaranteed repeat hits: {s:?}"
+    );
+    assert!(s.plan_evictions == 0 && s.result_evictions == 0);
+    assert!(s.sim_seconds > 0.0);
+    svc.shutdown();
+}
+
+#[test]
+fn multi_pattern_query_fuses_and_matches_oneshot() {
+    let g = generators::erdos_renyi(36, 0.3, 5);
+    let svc = service_over(g.clone(), 5);
+    let h = svc.handle();
+    let set: Vec<String> = ["0-1,1-2,2-3,3-0", "0-1,1-2,2-3", "0-1,0-2,0-3"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    let o = h.query(&set).unwrap();
+    assert!(o.fault.is_none() && !o.timed_out);
+    let expected: Vec<u64> = set.iter().map(|s| oneshot_count(&g, s)).collect();
+    assert_eq!(o.counts, expected);
+    assert_eq!(o.total, expected.iter().sum::<u64>());
+    // a subsequent single-pattern query for a member is a result hit
+    let again = h.query(&set[..1]).unwrap();
+    assert_eq!(again.counts[0], expected[0]);
+    assert_eq!(again.result_hits, 1);
+    assert_eq!(again.latency, 0.0, "cache hits cost zero modeled time");
+    svc.shutdown();
+}
+
+#[test]
+fn warm_queries_are_bit_identical_and_invalidation_forces_recount() {
+    let g = generators::erdos_renyi(32, 0.35, 17);
+    let svc = service_over(g, 2);
+    let h = svc.handle();
+    let spec = vec!["0-1,1-2,2-3,3-0".to_string()];
+
+    let cold = h.query(&spec).unwrap();
+    assert_eq!(cold.result_hits, 0);
+    let warm = h.query(&spec).unwrap();
+    assert_eq!(warm.counts, cold.counts, "hit must be bit-identical to cold");
+    assert_eq!(warm.result_hits, 1);
+
+    // explicit invalidation: a stale hit must be impossible
+    let key = key_for_spec(&spec[0]).unwrap();
+    assert!(h.invalidate_result(&key));
+    let recount = h.query(&spec).unwrap();
+    assert_eq!(recount.result_hits, 0, "invalidated entry cannot hit");
+    assert_eq!(recount.counts, cold.counts, "recount over the same snapshot");
+    let s = h.stats();
+    assert_eq!(s.result_invalidations, 1);
+    assert!(
+        s.plan_hits >= 1,
+        "recount reuses the cached plan (plans survive result invalidation): {s:?}"
+    );
+    assert_eq!(s.cold_patterns, 2, "cold run + forced recount");
+
+    // blanket invalidation hook
+    assert_eq!(h.invalidate_results(), 1);
+    assert_eq!(h.query(&spec).unwrap().result_hits, 0);
+    svc.shutdown();
+}
+
+#[test]
+fn relabeled_isomorph_submissions_share_one_plan_and_result() {
+    let g = generators::with_random_labels(generators::erdos_renyi(30, 0.3, 23), 3, 4);
+    let svc = service_over(g.clone(), 2);
+    let h = svc.handle();
+    // the same labeled triangle spelled three ways
+    let spellings = [
+        "0:1-1:2,1:2-2:0,2:0-0:1",
+        "2:1-0:2,0:2-1:0,1:0-2:1",
+        "1:1-2:2,2:2-0:0,0:0-1:1",
+    ];
+    let counts: Vec<u64> = spellings
+        .iter()
+        .map(|s| h.query(&[s.to_string()]).unwrap().counts[0])
+        .collect();
+    assert_eq!(counts[0], counts[1]);
+    assert_eq!(counts[0], counts[2]);
+    assert_eq!(counts[0], oneshot_count(&g, spellings[0]));
+    let s = h.stats();
+    assert_eq!(s.plan_misses, 1, "one canonical key, one compile");
+    assert_eq!(s.cold_patterns, 1);
+    assert!(s.result_hits >= 2);
+    svc.shutdown();
+}
+
+#[test]
+fn wire_protocol_end_to_end() {
+    use dumato::service::serve_lines;
+    let g = generators::erdos_renyi(28, 0.3, 7);
+    let tri = oneshot_count(&g, "0-1,1-2,2-0");
+    let cyc = oneshot_count(&g, "0-1,1-2,2-3,3-0");
+    let svc = service_over(g, 2);
+    let h = svc.handle();
+
+    let input = "QUERY 0-1,1-2,2-0\n\
+                 BATCH 2\n\
+                 QUERY 0-1,1-2,2-3,3-0\n\
+                 QUERY 1-2,2-0,0-1\n\
+                 STATS\n\
+                 INVALIDATE\n\
+                 QUIT\n";
+    let mut out: Vec<u8> = Vec::new();
+    serve_lines(&h, input.as_bytes(), &mut out).unwrap();
+    let out = String::from_utf8(out).unwrap();
+    let lines: Vec<&str> = out.lines().collect();
+    assert_eq!(lines.len(), 6, "{out}");
+    assert!(lines[0].starts_with(&format!("OK count={tri} counts={tri} ")), "{out}");
+    assert!(lines[1].starts_with(&format!("OK count={cyc} ")), "{out}");
+    // the batch's respelled triangle is a result-cache hit
+    assert!(lines[2].starts_with(&format!("OK count={tri} ")), "{out}");
+    assert!(lines[2].contains("hits=1/1"), "{out}");
+    assert!(lines[3].starts_with("OK queries=3 "), "{out}");
+    assert!(lines[4].starts_with("OK invalidated=2"), "{out}");
+    assert_eq!(lines[5], "OK bye", "{out}");
+    svc.shutdown();
+}
+
+#[test]
+fn faulted_runs_are_reported_and_never_cached() {
+    // an undersized extensions slab faults the engine; the service must
+    // surface the fault and must NOT serve the partial count later
+    let g = generators::complete(64);
+    let svc = Service::start(
+        Arc::new(g),
+        ServiceConfig {
+            engine: EngineConfig {
+                warps: 64,
+                threads: 2,
+                ext_slab_cap: Some(8),
+                ..EngineConfig::default()
+            },
+            batch_window: Duration::from_millis(1),
+            ..ServiceConfig::default()
+        },
+    );
+    let h = svc.handle();
+    let spec = vec!["0-1,1-2,2-3".to_string()];
+    let o = h.query(&spec).unwrap();
+    let fault = o.fault.expect("slab cap 8 must overflow on K64");
+    assert!(fault.contains("slab overflow"), "{fault}");
+    let again = h.query(&spec).unwrap();
+    assert_eq!(again.result_hits, 0, "faulted counts must not be cached");
+    assert!(again.fault.is_some());
+    assert_eq!(h.stats().result_hits, 0);
+    svc.shutdown();
+}
