@@ -1,0 +1,184 @@
+//! Dynamic-graph layer: incremental count maintenance vs full recount
+//! across an update-batch size sweep.
+//!
+//! ```
+//! cargo bench --bench dynamic
+//! DUMATO_BENCH_SCALE=0.02 cargo bench --bench dynamic        # CI smoke
+//! DUMATO_BENCH_JSON=1 cargo bench --bench dynamic            # + BENCH_dynamic.json
+//! ```
+//!
+//! Each sweep cell stages a mixed insert/delete batch of the given size
+//! against the same base snapshot, commits it, and then refreshes a
+//! 3-pattern working set (triangle, 4-path, 4-cycle) both ways:
+//!
+//! - **recount** — re-run every pattern cold on the post snapshot (what
+//!   a cache flush costs);
+//! - **incremental** — run `count_delta`'s frontier-pinned variant
+//!   tries on both snapshots and adjust the cached counts.
+//!
+//! Counts are asserted identical (`pre + delta == post`) whenever no
+//! cell timed out, and both modeled times feed the `bench_check` gate.
+//!
+//! ISSUE-8 acceptance: on the smallest batch the incremental path must
+//! clear >= 2x modeled speedup over the recount (asserted below unless
+//! a cell times out) — enumeration cost scales with the frontier, not
+//! the graph.
+
+#[path = "support.rs"]
+mod support;
+
+use std::sync::Arc;
+
+use dumato::apps::{count_delta, SubgraphQuery};
+use dumato::canon::bitmap::AdjMat;
+use dumato::engine::Runner;
+use dumato::graph::{generators, CsrGraph, EdgeOp, GraphStore, VertexId};
+use dumato::plan::ExecutionPlan;
+use dumato::report::Table;
+use dumato::util::Rng;
+
+/// The cached working set a commit must refresh.
+const PATTERNS: &[(&str, &[(usize, usize)])] = &[
+    ("triangle", &[(0, 1), (1, 2), (2, 0)]),
+    ("4-path", &[(0, 1), (1, 2), (2, 3)]),
+    ("4-cycle", &[(0, 1), (1, 2), (2, 3), (3, 0)]),
+];
+
+fn plan_of(edges: &[(usize, usize)]) -> ExecutionPlan {
+    let k = edges.iter().map(|&(a, b)| a.max(b)).max().unwrap() + 1;
+    let mut m = AdjMat::empty(k);
+    for &(a, b) in edges {
+        m.set_edge(a, b);
+    }
+    ExecutionPlan::build(&m)
+}
+
+struct FullRun {
+    counts: Vec<i64>,
+    sim: f64,
+    timed_out: bool,
+}
+
+/// Cold recount of the whole working set on one snapshot.
+fn full_counts(g: &Arc<CsrGraph>) -> FullRun {
+    let cfg = support::engine_cfg();
+    let mut out = FullRun { counts: Vec::new(), sim: 0.0, timed_out: false };
+    for (_, edges) in PATTERNS {
+        let k = edges.iter().map(|&(a, b)| a.max(b)).max().unwrap() + 1;
+        let q = SubgraphQuery::new(k, edges);
+        let r = Runner::run(g, &q, &cfg);
+        assert!(r.fault.is_none(), "engine fault: {:?}", r.fault);
+        out.timed_out |= r.timed_out;
+        out.sim += r.metrics.sim_seconds;
+        out.counts.push(q.matches(&r).len() as i64);
+    }
+    out
+}
+
+/// Stage + commit a mixed batch of `size` ops (half inserts, half
+/// deletes, at least one each) against the store's current snapshot.
+fn commit_batch(store: &GraphStore, size: usize, seed: u64) -> dumato::graph::Committed {
+    let base = store.snapshot().graph;
+    let n = base.num_vertices() as u64;
+    let ni = (size / 2).max(1);
+    let nd = (size - ni).max(1);
+    let mut rng = Rng::new(seed);
+    let mut b = store.begin_update();
+    while b.inserts().len() < ni {
+        let u = rng.below(n) as VertexId;
+        let v = rng.below(n) as VertexId;
+        if u != v && !base.has_edge(u, v) {
+            let _ = b.stage(EdgeOp::Insert(u, v));
+        }
+    }
+    let edges: Vec<(VertexId, VertexId)> = base.edges().collect();
+    let mut idx: Vec<usize> = (0..edges.len()).collect();
+    rng.shuffle(&mut idx);
+    for &i in idx.iter().take(nd) {
+        let (u, v) = edges[i];
+        let _ = b.stage(EdgeOp::Delete(u, v));
+    }
+    store.commit(b).expect("fresh batch commits")
+}
+
+fn main() {
+    support::print_env_banner("dynamic");
+    let g0 = Arc::new(generators::CITESEER.scaled(support::scale()).generate(1));
+    println!(
+        "dataset={} |V|={} |E|={} patterns={}",
+        g0.name(),
+        g0.num_vertices(),
+        g0.num_edges(),
+        PATTERNS.len()
+    );
+    let cfg = support::engine_cfg();
+    let pre = full_counts(&g0);
+
+    let mut t = Table::new(
+        "Dynamic graphs: incremental count maintenance vs full recount (modeled seconds)",
+        &["batch", "mode", "frontier", "patterns", "sim_time", "speedup"],
+    );
+    let mut small_speedup: Option<f64> = None;
+    let mut any_timeout = pre.timed_out;
+
+    for &size in &[2usize, 8, 32, 128] {
+        // fresh store per cell: every batch commits against the same base
+        let store = GraphStore::new(Arc::clone(&g0));
+        let c = commit_batch(&store, size, 0xd1a ^ size as u64);
+        let frontier = Arc::new(c.batch.frontier());
+
+        let post = full_counts(&c.new.graph);
+        let mut delta_sim = 0.0;
+        let mut clean = true;
+        let mut adjusted: Vec<i64> = Vec::new();
+        for (_, edges) in PATTERNS {
+            let plan = plan_of(edges);
+            let r = count_delta(&c.old.graph, &c.new.graph, &frontier, &plan, &cfg);
+            delta_sim += r.sim_seconds;
+            clean &= r.clean;
+            adjusted.push(pre.counts[adjusted.len()] + r.delta);
+        }
+        any_timeout |= post.timed_out || !clean;
+        if !pre.timed_out && !post.timed_out && clean {
+            assert_eq!(
+                adjusted, post.counts,
+                "batch={size}: incremental counts must equal the recount"
+            );
+        }
+        let speedup = if delta_sim > 0.0 { post.sim / delta_sim } else { 0.0 };
+        if size == 2 && !any_timeout {
+            small_speedup = Some(speedup);
+        }
+        for (mode, sim, sp) in [
+            ("recount", post.sim, "-".to_string()),
+            ("incremental", delta_sim, format!("{speedup:.2}")),
+        ] {
+            t.row(vec![
+                size.to_string(),
+                mode.to_string(),
+                frontier.len().to_string(),
+                PATTERNS.len().to_string(),
+                format!("{sim:.6}"),
+                sp,
+            ]);
+        }
+    }
+
+    print!("{}", t.render());
+
+    if let Some(speedup) = small_speedup {
+        println!("smallest batch: modeled incremental speedup {speedup:.2}x over recount");
+        assert!(
+            speedup >= 2.0,
+            "ISSUE-8 acceptance: incremental maintenance must be >= 2x a full \
+             recount on small batches (got {speedup:.2}x)"
+        );
+    } else {
+        println!("note: timeout hit — skipping the incremental-speedup acceptance assert");
+    }
+
+    if std::env::var("DUMATO_BENCH_JSON").is_ok() {
+        std::fs::write("BENCH_dynamic.json", t.to_json()).expect("write BENCH_dynamic.json");
+        println!("wrote BENCH_dynamic.json");
+    }
+}

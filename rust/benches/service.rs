@@ -30,7 +30,7 @@ use std::sync::Arc;
 
 use dumato::apps::SubgraphQuery;
 use dumato::engine::Runner;
-use dumato::graph::{generators, CsrGraph};
+use dumato::graph::{generators, CsrGraph, GraphStore};
 use dumato::plan::parse_pattern;
 use dumato::report::{percentile_cell, Table};
 use dumato::service::{Service, ServiceConfig, Ticket};
@@ -121,8 +121,8 @@ fn run_sequential(g: &CsrGraph, workload: &[String]) -> ModeCell {
 /// Service mode: submit the whole mix, then await — in-flight queries
 /// fuse in the admission window and repeats hit the caches.
 fn run_service(g: &CsrGraph, workload: &[String]) -> ModeCell {
-    let svc = Service::start(
-        Arc::new(g.clone()),
+    let svc = Service::open(
+        GraphStore::new(Arc::new(g.clone())),
         ServiceConfig {
             engine: support::engine_cfg(),
             batch_window: std::time::Duration::from_millis(2),

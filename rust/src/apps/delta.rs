@@ -1,0 +1,258 @@
+//! Incremental count maintenance (dynamic-graph layer, paper §V:
+//! "avoid re-enumerating the whole graph when few vertices changed").
+//!
+//! An update batch touches a *frontier* F (the endpoints of its staged
+//! edges). Matches with no vertex in F are identical on both sides of
+//! the commit, so the count delta of a pattern is exactly
+//!
+//! ```text
+//!   Δ = #touching-matches(post) − #touching-matches(pre)
+//! ```
+//!
+//! where a *touching* match has ≥ 1 position bound in F.
+//! [`ExecutionPlan::delta_variants`] compiles that predicate into k
+//! plan variants (variant p: position p is the first frontier-bound
+//! position, forced to the matching-order root so the engine seeds only
+//! from F); this module runs the variant set on both snapshots — fused
+//! into one [`PlanTrie`] traversal per side when the variants merge —
+//! and folds the embedding totals into a signed match-count delta.
+//!
+//! The variants strip symmetry restrictions (the frontier predicate is
+//! not automorphism-invariant, see `delta_variants`), so each side's
+//! total counts *embeddings* and the final delta divides by the
+//! pattern's automorphism factor. The service layer applies a clean
+//! delta to its cached count; a timed-out or faulted side reports
+//! `clean = false` and the caller falls back to invalidation.
+
+use std::sync::Arc;
+
+use crate::api::GpmAlgorithm;
+use crate::engine::{EngineConfig, Runner, WarpContext};
+use crate::graph::{CsrGraph, FrontierSet};
+use crate::plan::trie::PlanTrie;
+use crate::plan::ExecutionPlan;
+
+/// One delta variant run as a standalone planned job (the fallback when
+/// the variant set doesn't fuse, e.g. trie floor k < 3).
+struct DeltaVariantJob<'a> {
+    k: usize,
+    plan: &'a ExecutionPlan,
+}
+
+impl GpmAlgorithm for DeltaVariantJob<'_> {
+    fn name(&self) -> &str {
+        "delta_variant"
+    }
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn plan(&self) -> Option<&ExecutionPlan> {
+        Some(self.plan)
+    }
+
+    fn run(&self, ctx: &mut WarpContext) {
+        let k = self.k;
+        while ctx.control() {
+            if ctx.extend_planned(self.plan) {
+                ctx.filter_plan(self.plan);
+                if ctx.te.len() == k - 1 {
+                    ctx.aggregate_counter();
+                }
+            }
+            ctx.move_(false);
+        }
+    }
+}
+
+/// The fused path: all k variants merged into one plan trie, one
+/// traversal per side (shared prefixes of the variants' matching
+/// orders are enumerated once).
+struct DeltaVariantSet {
+    k: usize,
+    trie: PlanTrie,
+}
+
+impl GpmAlgorithm for DeltaVariantSet {
+    fn name(&self) -> &str {
+        "delta_variant_set"
+    }
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn needs_edges(&self) -> bool {
+        false
+    }
+
+    fn trie(&self) -> Option<&PlanTrie> {
+        Some(&self.trie)
+    }
+
+    fn run(&self, ctx: &mut WarpContext) {
+        ctx.run_trie(&self.trie);
+    }
+}
+
+/// Outcome of a [`count_delta`] run.
+#[derive(Clone, Copy, Debug)]
+pub struct DeltaReport {
+    /// Signed match-count delta: `post_count - pre_count` of the
+    /// pattern. Only meaningful when `clean`.
+    pub delta: i64,
+    /// Every engine run finished without timeout or fault. A dirty
+    /// report's `delta` is partial — callers must recount or
+    /// invalidate instead of applying it.
+    pub clean: bool,
+    /// Whether the variants fused into one trie traversal per side.
+    pub fused: bool,
+    /// Engine runs performed (2 fused, up to 2k unfused, 0 for an
+    /// empty frontier).
+    pub runs: usize,
+    /// Modeled GPU seconds across all runs (what the incremental path
+    /// "costs" vs a full recount).
+    pub sim_seconds: f64,
+}
+
+/// Count the signed match delta of `plan`'s pattern across a commit
+/// boundary: `pre`/`post` are the two snapshots and `frontier` the
+/// batch's touched-vertex set. `plan` must be an ordinary (unoriented)
+/// plan — the same object the full count was produced with, so labels
+/// and matching order carry over to the variants.
+pub fn count_delta(
+    pre: &Arc<CsrGraph>,
+    post: &Arc<CsrGraph>,
+    frontier: &Arc<FrontierSet>,
+    plan: &ExecutionPlan,
+    cfg: &EngineConfig,
+) -> DeltaReport {
+    if frontier.is_empty() {
+        return DeltaReport { delta: 0, clean: true, fused: true, runs: 0, sim_seconds: 0.0 };
+    }
+    let k = plan.order.len();
+    let aut = plan.automorphism_factor() as i128;
+    let variants = plan.delta_variants(frontier);
+    // Fuse when the trie accepts the set (it always should for k >= 3;
+    // the singleton fallback keeps the math valid regardless).
+    let fused = PlanTrie::build(&variants).ok().map(|trie| DeltaVariantSet { k, trie });
+    let mut runs = 0usize;
+    let mut sim = 0.0f64;
+    let mut clean = true;
+    let mut side = |g: &Arc<CsrGraph>| -> i128 {
+        let mut embeddings = 0i128;
+        match &fused {
+            Some(job) => {
+                let r = Runner::run_shared(g, job, cfg);
+                runs += 1;
+                sim += r.metrics.sim_seconds;
+                clean &= !r.timed_out && r.fault.is_none();
+                embeddings += r.count as i128;
+            }
+            None => {
+                for v in &variants {
+                    let job = DeltaVariantJob { k, plan: v };
+                    let r = Runner::run_shared(g, &job, cfg);
+                    runs += 1;
+                    sim += r.metrics.sim_seconds;
+                    clean &= !r.timed_out && r.fault.is_none();
+                    embeddings += r.count as i128;
+                }
+            }
+        }
+        embeddings
+    };
+    let pre_sum = side(pre);
+    let post_sum = side(post);
+    let diff = post_sum - pre_sum;
+    if clean {
+        assert_eq!(
+            diff % aut,
+            0,
+            "embedding delta {diff} not divisible by automorphism factor {aut}"
+        );
+    }
+    DeltaReport {
+        delta: (diff / aut) as i64,
+        clean,
+        fused: fused.is_some(),
+        runs,
+        sim_seconds: sim,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::EngineConfig;
+    use crate::graph::delta::EdgeOp;
+    use crate::graph::{generators, GraphStore};
+
+    fn cfg() -> EngineConfig {
+        EngineConfig { warps: 8, threads: 2, ..Default::default() }
+    }
+
+    fn full_count(g: &CsrGraph, k: usize, edges: &[(usize, usize)]) -> i64 {
+        let q = crate::apps::SubgraphQuery::new(k, edges);
+        q.matches(&Runner::run(g, &q, &cfg())).len() as i64
+    }
+
+    #[test]
+    fn delta_matches_recount_across_a_commit() {
+        let store = GraphStore::new(Arc::new(generators::erdos_renyi(24, 0.25, 9)));
+        let g0 = store.snapshot().graph;
+        let mut b = store.begin_update();
+        // two absent edges in, one present edge out — found, not assumed
+        let mut staged = 0;
+        'ins: for u in 0..24u32 {
+            for v in (u + 1)..24u32 {
+                if !g0.has_edge(u, v) {
+                    b.stage(EdgeOp::Insert(u, v)).unwrap();
+                    staged += 1;
+                    if staged == 2 {
+                        break 'ins;
+                    }
+                }
+            }
+        }
+        let du = (0..24u32).find(|&x| g0.degree(x) > 0).unwrap();
+        b.stage(EdgeOp::Delete(du, g0.neighbors(du)[0])).unwrap();
+        assert_eq!(b.len(), 3);
+        let frontier = Arc::new(b.frontier());
+        let c = store.commit(b).unwrap();
+        for edges in [
+            vec![(0usize, 1usize), (1, 2), (0, 2)],      // triangle
+            vec![(0, 1), (1, 2), (2, 3), (3, 0)],        // 4-cycle
+            vec![(0, 1), (1, 2), (2, 3)],                // 4-path
+        ] {
+            let k = edges.iter().map(|&(a, b)| a.max(b)).max().unwrap() + 1;
+            let mut m = crate::canon::bitmap::AdjMat::empty(k);
+            for &(a, b) in &edges {
+                m.set_edge(a, b);
+            }
+            let plan = ExecutionPlan::build(&m);
+            let r = count_delta(&c.old.graph, &c.new.graph, &frontier, &plan, &cfg());
+            assert!(r.clean);
+            assert!(r.fused, "k >= 3 variant sets must fuse");
+            let want =
+                full_count(&c.new.graph, k, &edges) - full_count(&c.old.graph, k, &edges);
+            assert_eq!(r.delta, want, "k={k}");
+        }
+    }
+
+    #[test]
+    fn empty_frontier_short_circuits() {
+        let g = Arc::new(generators::cycle(6));
+        let f = Arc::new(crate::graph::FrontierSet::from_vertices(6, []));
+        let plan = ExecutionPlan::build(&{
+            let mut m = crate::canon::bitmap::AdjMat::empty(3);
+            m.set_edge(0, 1);
+            m.set_edge(1, 2);
+            m
+        });
+        let r = count_delta(&g, &g, &f, &plan, &cfg());
+        assert_eq!((r.delta, r.runs), (0, 0));
+        assert!(r.clean);
+    }
+}

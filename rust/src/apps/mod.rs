@@ -1,11 +1,13 @@
 //! GPM applications built on the DuMato API (paper Algorithm 4).
 
 pub mod clique;
+pub mod delta;
 pub mod motif;
 pub mod quasi_clique;
 pub mod query;
 
 pub use clique::CliqueCount;
+pub use delta::{count_delta, DeltaReport};
 pub use motif::MotifCount;
 pub use quasi_clique::QuasiCliqueCount;
 pub use query::{SubgraphQuery, SubgraphQuerySet};

@@ -56,6 +56,13 @@ const SPECS: &[Spec] = &[
         key: &["workload", "mode"],
         metrics: &["sim_time", "p99"],
     },
+    // dynamic rows carry a higher-is-better speedup column — like the
+    // service file, only the modeled time is gated
+    Spec {
+        file: "BENCH_dynamic.json",
+        key: &["batch", "mode"],
+        metrics: &["sim_time"],
+    },
 ];
 
 // ---------------------------------------------------------------------

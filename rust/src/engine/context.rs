@@ -466,6 +466,13 @@ impl<'a> WarpContext<'a> {
         // indexed by candidate id, so the lanes' reads don't coalesce —
         // DESIGN.md §Label layer). Unlabeled plans charge nothing here.
         let want_label = plan.position_label(len);
+        // delta plans filter candidates by the level's frontier
+        // requirement at generation time, priced like the label filter:
+        // one broadcast compare per chunk plus one bitset-word read per
+        // candidate lane (the frontier words are indexed by candidate
+        // id, so the lanes' reads don't coalesce either). Ordinary
+        // plans charge nothing here.
+        let want_frontier = plan.position_frontier(len);
         let (ptr, cap) = self.te.ext_raw_cap(level);
         // SAFETY: see `ext_items_mut` — exclusive slab, phase-local use.
         let out = unsafe { std::slice::from_raw_parts_mut(ptr, cap) };
@@ -491,6 +498,10 @@ impl<'a> WarpContext<'a> {
                 self.prof.simd_n(1); // broadcast label compare
                 self.prof.gld_raw(chunk.len() as u64); // one label read per candidate
             }
+            if want_frontier != crate::plan::FrontierReq::Free {
+                self.prof.simd_n(1); // broadcast requirement compare
+                self.prof.gld_raw(chunk.len() as u64); // one bitset word per candidate
+            }
             // select + coalesced write
             self.prof.simd(chunk.len());
             'cand: for &e in chunk {
@@ -498,6 +509,9 @@ impl<'a> WarpContext<'a> {
                     continue;
                 }
                 if want_label.is_some_and(|l| self.g.label(e) != l) {
+                    continue;
+                }
+                if !plan.frontier_admits(len, e) {
                     continue;
                 }
                 for &b in backward.iter() {
@@ -658,6 +672,10 @@ impl<'a> WarpContext<'a> {
             }
         }
         let want_label = nd.label;
+        // frontier requirement of this node's level in a delta-variant
+        // trie (Free on ordinary tries) — charged like the label filter
+        let want_frontier = nd.frontier;
+        let frontier_set = trie.frontier();
         let (ptr, cap) = self.te.ext_raw_cap(level);
         // SAFETY: see `ext_items_mut` — exclusive slab, phase-local use.
         let out = unsafe { std::slice::from_raw_parts_mut(ptr, cap) };
@@ -678,6 +696,10 @@ impl<'a> WarpContext<'a> {
                 self.prof.simd_n(1); // broadcast label compare
                 self.prof.gld_raw(chunk.len() as u64);
             }
+            if want_frontier != crate::plan::FrontierReq::Free {
+                self.prof.simd_n(1); // broadcast requirement compare
+                self.prof.gld_raw(chunk.len() as u64); // one bitset word per candidate
+            }
             self.prof.simd(chunk.len());
             'cand: for &e in chunk {
                 if self.scratch.seen(e) {
@@ -685,6 +707,13 @@ impl<'a> WarpContext<'a> {
                 }
                 if want_label.is_some_and(|l| self.g.label(e) != l) {
                     continue;
+                }
+                if let (req, Some(f)) = (want_frontier, frontier_set) {
+                    if req != crate::plan::FrontierReq::Free
+                        && (req == crate::plan::FrontierReq::In) != f.contains(e)
+                    {
+                        continue;
+                    }
                 }
                 for &b in backward.iter() {
                     if b != src && !self.g.has_edge(trav[b], e) {
@@ -785,11 +814,25 @@ impl<'a> WarpContext<'a> {
         self.te.pop_vertex();
     }
 
+    /// Root admission for delta-variant tries: the root position's
+    /// frontier requirement resolved against the trie's shared set
+    /// (vacuously true for ordinary tries).
+    fn root_frontier_admits(
+        trie: &crate::plan::trie::PlanTrie,
+        nd: &crate::plan::trie::TrieNode,
+        v0: VertexId,
+    ) -> bool {
+        match (nd.root_frontier, trie.frontier()) {
+            (crate::plan::FrontierReq::Free, _) | (_, None) => true,
+            (req, Some(f)) => (req == crate::plan::FrontierReq::In) == f.contains(v0),
+        }
+    }
+
     /// The next sibling of the walk's node at `level`, if any. Depth-1
     /// siblings come from the trie's root list and are re-checked against
-    /// the seed (root label + degree floor — the same admission test the
-    /// walk's entry applies); deeper siblings share an admitted prefix
-    /// and need no re-check.
+    /// the seed (root label + degree floor + frontier requirement — the
+    /// same admission test the walk's entry applies); deeper siblings
+    /// share an admitted prefix and need no re-check.
     fn next_trie_sibling(
         &mut self,
         trie: &crate::plan::trie::PlanTrie,
@@ -804,6 +847,7 @@ impl<'a> WarpContext<'a> {
                 let nd = trie.node(r);
                 if !nd.root_label.is_some_and(|l| self.g.label(v0) != l)
                     && self.g.degree(v0) >= nd.min_floor
+                    && Self::root_frontier_admits(trie, nd, v0)
                 {
                     return Some(r);
                 }
@@ -838,6 +882,7 @@ impl<'a> WarpContext<'a> {
                     let nd = trie.node(r);
                     !nd.root_label.is_some_and(|l| self.g.label(v0) != l)
                         && self.g.degree(v0) >= nd.min_floor
+                        && Self::root_frontier_admits(trie, nd, v0)
                 });
                 match first {
                     Some(r) => self.walk.push(r as u32),

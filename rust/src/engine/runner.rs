@@ -17,7 +17,7 @@ use crate::api::GpmAlgorithm;
 use crate::balance::{redistribute, LbConfig, LbPolicy};
 use crate::canon::cache::merge_pattern_counts;
 use crate::canon::CanonDict;
-use crate::graph::{CsrGraph, VertexId};
+use crate::graph::{CsrGraph, Snapshot, VertexId};
 use crate::multi::{DeviceFleet, Interconnect, Partition};
 use crate::util::Timer;
 use crate::vgpu::{CostModel, KernelMetrics, WarpProfiler};
@@ -358,6 +358,18 @@ impl Runner {
             return DeviceFleet::new(cfg).run_shared(g, algo);
         }
         Self::run_single(g, algo, cfg)
+    }
+
+    /// [`Runner::run_shared`] addressed by a [`Snapshot`] — the
+    /// `GraphStore`-era spelling. The epoch travels with the graph, so
+    /// callers that cache the report can tag it with `snap.epoch`
+    /// instead of re-deriving currency from `Arc` identity.
+    pub fn run_snapshot<A: GpmAlgorithm>(
+        snap: &Snapshot,
+        algo: &A,
+        cfg: &EngineConfig,
+    ) -> RunReport {
+        Self::run_shared(&snap.graph, algo, cfg)
     }
 
     /// [`Runner::run_shared`] with structured faults turned into an

@@ -1,0 +1,654 @@
+//! Dynamic-graph layer: edge-update batches over an immutable CSR base.
+//!
+//! The whole stack enumerates against a frozen [`CsrGraph`] snapshot —
+//! that stays true. Mutation happens *between* snapshots: an
+//! [`UpdateBatch`] stages validated edge inserts/deletes against one
+//! base snapshot, and [`apply`](UpdateBatch::apply) merges them into a
+//! fresh CSR (the delta-CSR merge: per-vertex lists are cloned from the
+//! base, patched, and rebuilt through `CsrGraph::from_adjacency`, so
+//! the output carries every CSR invariant — sorted dedup'd adjacency,
+//! symmetric edges, labels preserved). [`GraphStore`](super::store)
+//! owns the epoch counter and swaps snapshots at commit.
+//!
+//! Validation is front-loaded: every staged op is checked against the
+//! base at *stage* time with a distinct error per failure mode
+//! (malformed endpoints, self-loop, out-of-range id, insert of a
+//! present edge, delete of an absent edge, duplicate staged edge), so
+//! `apply` is infallible and a wire `UPDATE` line can be rejected
+//! one-for-one.
+//!
+//! Two incremental-maintenance primitives live here:
+//!
+//! - [`FrontierSet`] — the batch's touched vertices as a bitset. Delta
+//!   plans (`plan::delta_variants`) pin one matching position to this
+//!   set; the engine tests membership per candidate.
+//! - [`CoreTracker`] — exact per-vertex core numbers maintained under
+//!   single-edge updates (subcore traversal + peel, after Sarıyüce et
+//!   al.'s streaming k-core construction), driving
+//!   [`reorient`]: within a churn threshold the old degeneracy
+//!   permutation is reused (any permutation yields a correct
+//!   orientation — only the out-degree bound degrades, by at most the
+//!   inserts incident to a vertex); past it, a full fresh peel runs,
+//!   bit-identical to `orient(&degeneracy_order(g))`.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::Arc;
+
+use anyhow::{bail, ensure, Result};
+
+use super::ordering::{core_numbers, degeneracy_peel, orient, relabel};
+use super::{CsrGraph, VertexId};
+
+/// Most ops one batch may stage (bounds memory for runaway wire input).
+pub const MAX_STAGED_OPS: usize = 1 << 16;
+
+/// Default churn threshold for [`reorient`]: past this fraction of
+/// touched vertices, permutation reuse stops paying and a fresh
+/// degeneracy peel runs.
+pub const DEFAULT_REORIENT_CHURN: f64 = 0.25;
+
+/// The touched-vertex set of an update batch, as a bitset over the
+/// (fixed) vertex universe. Delta plans pin one matching position to
+/// this set; the engine tests membership per candidate.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FrontierSet {
+    n: usize,
+    bits: Vec<u64>,
+    len: usize,
+}
+
+impl FrontierSet {
+    /// Build from an iterator of vertex ids (< `n`; duplicates fine).
+    pub fn from_vertices(n: usize, vs: impl IntoIterator<Item = VertexId>) -> Self {
+        let mut f = FrontierSet { n, bits: vec![0u64; n.div_ceil(64)], len: 0 };
+        for v in vs {
+            let v = v as usize;
+            assert!(v < n, "frontier vertex {v} out of range (|V| = {n})");
+            let (w, b) = (v / 64, v % 64);
+            if f.bits[w] & (1 << b) == 0 {
+                f.bits[w] |= 1 << b;
+                f.len += 1;
+            }
+        }
+        f
+    }
+
+    #[inline]
+    pub fn contains(&self, v: VertexId) -> bool {
+        let v = v as usize;
+        v < self.n && self.bits[v / 64] >> (v % 64) & 1 == 1
+    }
+
+    /// Number of member vertices.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Size of the vertex universe the set is defined over.
+    #[inline]
+    pub fn universe(&self) -> usize {
+        self.n
+    }
+
+    /// Member vertices, ascending.
+    pub fn vertices(&self) -> Vec<VertexId> {
+        (0..self.n as VertexId).filter(|&v| self.contains(v)).collect()
+    }
+}
+
+/// One staged edge mutation. Both endpoints are base-graph vertex ids;
+/// the edge is undirected (stored normalized low-high).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EdgeOp {
+    Insert(VertexId, VertexId),
+    Delete(VertexId, VertexId),
+}
+
+impl EdgeOp {
+    #[inline]
+    pub fn endpoints(&self) -> (VertexId, VertexId) {
+        match *self {
+            EdgeOp::Insert(u, v) | EdgeOp::Delete(u, v) => (u, v),
+        }
+    }
+
+    #[inline]
+    pub fn is_insert(&self) -> bool {
+        matches!(self, EdgeOp::Insert(..))
+    }
+}
+
+/// Parse one wire edge op: `+u,v` inserts, `-u,v` deletes. Each
+/// rejection is a distinct error (sign, endpoint syntax, self-loop);
+/// graph-dependent checks (range, presence) happen at stage time.
+pub fn parse_edge_op(s: &str) -> Result<EdgeOp> {
+    let s = s.trim();
+    let Some(sign) = s.chars().next() else {
+        bail!("empty edge op (expected +u,v or -u,v)");
+    };
+    if sign != '+' && sign != '-' {
+        bail!("edge op '{s}' must start with '+' (insert) or '-' (delete)");
+    }
+    let body = &s[1..];
+    let Some((us, vs)) = body.split_once(',') else {
+        bail!("malformed edge endpoints '{body}' (expected u,v)");
+    };
+    let u: VertexId = us
+        .trim()
+        .parse()
+        .map_err(|_| anyhow::anyhow!("malformed edge endpoint '{}' is not a vertex id", us.trim()))?;
+    let v: VertexId = vs
+        .trim()
+        .parse()
+        .map_err(|_| anyhow::anyhow!("malformed edge endpoint '{}' is not a vertex id", vs.trim()))?;
+    ensure!(u != v, "self-loop edge ({u},{u}) rejected");
+    Ok(if sign == '+' { EdgeOp::Insert(u, v) } else { EdgeOp::Delete(u, v) })
+}
+
+/// A set of staged edge updates against one base snapshot. Obtained
+/// from [`GraphStore::begin_update`](super::store::GraphStore);
+/// committed through [`GraphStore::commit`](super::store::GraphStore).
+///
+/// Every op is validated at stage time against the *base*, so the set
+/// is conflict-free by construction: inserts are absent from the base,
+/// deletes are present, and no normalized edge appears twice (in
+/// particular an edge is never both inserted and deleted). `apply` is
+/// therefore infallible and order-independent.
+#[derive(Clone, Debug)]
+pub struct UpdateBatch {
+    base: Arc<CsrGraph>,
+    epoch: u64,
+    inserts: Vec<(VertexId, VertexId)>,
+    deletes: Vec<(VertexId, VertexId)>,
+    staged: HashSet<(VertexId, VertexId)>,
+}
+
+impl UpdateBatch {
+    /// Open a batch against `base` (the snapshot at `epoch`). The store
+    /// is the usual entry point; tests construct directly.
+    pub fn new(base: Arc<CsrGraph>, epoch: u64) -> UpdateBatch {
+        assert!(!base.is_directed(), "update batches stage against undirected bases");
+        UpdateBatch { base, epoch, inserts: Vec::new(), deletes: Vec::new(), staged: HashSet::new() }
+    }
+
+    /// The base snapshot this batch was opened against.
+    #[inline]
+    pub fn base(&self) -> &Arc<CsrGraph> {
+        &self.base
+    }
+
+    /// The epoch of the base snapshot (commit-currency check).
+    #[inline]
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Stage one op. Distinct error per failure mode; on success the
+    /// op is recorded and `apply` cannot fail.
+    pub fn stage(&mut self, op: EdgeOp) -> Result<()> {
+        ensure!(
+            self.staged.len() < MAX_STAGED_OPS,
+            "update batch already holds {MAX_STAGED_OPS} staged ops"
+        );
+        let (u, v) = op.endpoints();
+        ensure!(u != v, "self-loop edge ({u},{u}) rejected");
+        let n = self.base.num_vertices();
+        for x in [u, v] {
+            ensure!(
+                (x as usize) < n,
+                "vertex id {x} out of range for '{}' (|V| = {n})",
+                self.base.name()
+            );
+        }
+        let key = (u.min(v), u.max(v));
+        ensure!(
+            !self.staged.contains(&key),
+            "edge ({},{}) already staged in this batch",
+            key.0,
+            key.1
+        );
+        match op {
+            EdgeOp::Insert(..) => {
+                ensure!(
+                    !self.base.has_edge(u, v),
+                    "insert of already-present edge ({u},{v})"
+                );
+                self.inserts.push(key);
+            }
+            EdgeOp::Delete(..) => {
+                ensure!(self.base.has_edge(u, v), "delete of absent edge ({u},{v})");
+                self.deletes.push(key);
+            }
+        }
+        self.staged.insert(key);
+        Ok(())
+    }
+
+    /// Parse-and-stage one wire op line (`+u,v` / `-u,v`).
+    pub fn stage_line(&mut self, line: &str) -> Result<()> {
+        self.stage(parse_edge_op(line)?)
+    }
+
+    /// Staged ops, inserts first (order is irrelevant to `apply`).
+    pub fn ops(&self) -> Vec<EdgeOp> {
+        self.inserts
+            .iter()
+            .map(|&(u, v)| EdgeOp::Insert(u, v))
+            .chain(self.deletes.iter().map(|&(u, v)| EdgeOp::Delete(u, v)))
+            .collect()
+    }
+
+    #[inline]
+    pub fn inserts(&self) -> &[(VertexId, VertexId)] {
+        &self.inserts
+    }
+
+    #[inline]
+    pub fn deletes(&self) -> &[(VertexId, VertexId)] {
+        &self.deletes
+    }
+
+    /// Total staged ops.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.inserts.len() + self.deletes.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.staged.is_empty()
+    }
+
+    /// The update frontier: every endpoint of every staged op. This is
+    /// the set delta plans pin a matching position to — a match is
+    /// affected by the batch iff it uses at least one frontier vertex
+    /// (edge-local updates cannot create or destroy a match that avoids
+    /// every touched vertex).
+    pub fn frontier(&self) -> FrontierSet {
+        FrontierSet::from_vertices(
+            self.base.num_vertices(),
+            self.staged.iter().flat_map(|&(u, v)| [u, v]),
+        )
+    }
+
+    /// Merge the staged ops over the base into a fresh CSR (labels and
+    /// name carried; vertex universe unchanged). Infallible: every op
+    /// was validated at stage time.
+    pub fn apply(&self) -> CsrGraph {
+        let n = self.base.num_vertices();
+        let mut lists: Vec<Vec<VertexId>> =
+            (0..n as VertexId).map(|v| self.base.neighbors(v).to_vec()).collect();
+        for &(u, v) in &self.inserts {
+            lists[u as usize].push(v);
+            lists[v as usize].push(u);
+        }
+        for &(u, v) in &self.deletes {
+            lists[u as usize].retain(|&x| x != v);
+            lists[v as usize].retain(|&x| x != u);
+        }
+        let mut g = CsrGraph::from_adjacency(lists, self.base.name().to_string());
+        if let Some(ls) = self.base.labels() {
+            g.set_labels(ls.to_vec()).expect("apply preserves the vertex count");
+        }
+        g
+    }
+}
+
+/// Exact per-vertex core numbers maintained under single-edge updates.
+///
+/// Seeded from [`core_numbers`]; each insert/delete runs the subcore
+/// traversal: only vertices with core `K = min(core(u), core(v))`
+/// connected to the touched endpoints through core-`K` vertices can
+/// change, and by exactly 1. A peel over that candidate set decides
+/// who moves. The tracker also records every vertex whose core
+/// changed (plus the endpoints) — the churn input to [`reorient`].
+pub struct CoreTracker {
+    adj: Vec<HashSet<VertexId>>,
+    cores: Vec<u32>,
+    touched: HashSet<VertexId>,
+}
+
+impl CoreTracker {
+    pub fn new(g: &CsrGraph) -> CoreTracker {
+        assert!(!g.is_directed(), "core tracking runs on undirected graphs");
+        let adj = (0..g.num_vertices() as VertexId)
+            .map(|v| g.neighbors(v).iter().copied().collect())
+            .collect();
+        CoreTracker { adj, cores: core_numbers(g), touched: HashSet::new() }
+    }
+
+    /// Current core numbers (exact at every point between updates).
+    #[inline]
+    pub fn cores(&self) -> &[u32] {
+        &self.cores
+    }
+
+    /// Current degeneracy = max core.
+    pub fn degeneracy(&self) -> u32 {
+        self.cores.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Vertices whose core changed (or that were edge endpoints) since
+    /// the last [`CoreTracker::clear_touched`].
+    #[inline]
+    pub fn touched(&self) -> usize {
+        self.touched.len()
+    }
+
+    pub fn clear_touched(&mut self) {
+        self.touched.clear();
+    }
+
+    /// Candidate subcore: vertices with core == `k` reachable from the
+    /// given roots through core-`k` vertices (roots below core `k` are
+    /// skipped). Returns (order, membership).
+    fn subcore(&self, roots: [VertexId; 2], k: u32) -> (Vec<VertexId>, HashSet<VertexId>) {
+        let mut cand = Vec::new();
+        let mut in_cand = HashSet::new();
+        let mut stack = Vec::new();
+        for &r in &roots {
+            if self.cores[r as usize] == k && in_cand.insert(r) {
+                stack.push(r);
+            }
+        }
+        while let Some(w) = stack.pop() {
+            cand.push(w);
+            for &x in &self.adj[w as usize] {
+                if self.cores[x as usize] == k && in_cand.insert(x) {
+                    stack.push(x);
+                }
+            }
+        }
+        (cand, in_cand)
+    }
+
+    /// Apply one edge insertion (must be absent).
+    pub fn insert_edge(&mut self, u: VertexId, v: VertexId) {
+        let fresh = self.adj[u as usize].insert(v) && self.adj[v as usize].insert(u);
+        assert!(fresh, "insert of already-present edge ({u},{v})");
+        self.touched.insert(u);
+        self.touched.insert(v);
+        let k = self.cores[u as usize].min(self.cores[v as usize]);
+        // Promotion candidates: the subcore of the lower endpoint(s),
+        // computed with the new edge in place. Support counts neighbors
+        // already above k plus fellow candidates; a candidate needs
+        // k + 1 of those to join the (k+1)-core.
+        let (cand, in_cand) = self.subcore([u, v], k);
+        let mut support: HashMap<VertexId, usize> = cand
+            .iter()
+            .map(|&w| {
+                let s = self.adj[w as usize]
+                    .iter()
+                    .filter(|&&x| self.cores[x as usize] > k || in_cand.contains(&x))
+                    .count();
+                (w, s)
+            })
+            .collect();
+        let mut queue: Vec<VertexId> =
+            cand.iter().copied().filter(|w| support[w] <= k as usize).collect();
+        let mut removed: HashSet<VertexId> = queue.iter().copied().collect();
+        while let Some(w) = queue.pop() {
+            for &x in &self.adj[w as usize] {
+                if in_cand.contains(&x) && !removed.contains(&x) {
+                    let s = support.get_mut(&x).expect("candidate has a support slot");
+                    *s -= 1;
+                    if *s <= k as usize {
+                        removed.insert(x);
+                        queue.push(x);
+                    }
+                }
+            }
+        }
+        for &w in &cand {
+            if !removed.contains(&w) {
+                self.cores[w as usize] = k + 1;
+                self.touched.insert(w);
+            }
+        }
+    }
+
+    /// Apply one edge deletion (must be present).
+    pub fn delete_edge(&mut self, u: VertexId, v: VertexId) {
+        let had = self.adj[u as usize].remove(&v) && self.adj[v as usize].remove(&u);
+        assert!(had, "delete of absent edge ({u},{v})");
+        self.touched.insert(u);
+        self.touched.insert(v);
+        let k = self.cores[u as usize].min(self.cores[v as usize]);
+        // Demotion candidates: the subcores of both endpoints at level
+        // k, computed with the edge gone. Support counts neighbors with
+        // core >= k (cores above k cannot drop — the deleted edge is
+        // outside the (k+1)-core subgraph); dropping below k demotes.
+        let (cand, in_cand) = self.subcore([u, v], k);
+        let mut support: HashMap<VertexId, usize> = cand
+            .iter()
+            .map(|&w| {
+                let s = self.adj[w as usize]
+                    .iter()
+                    .filter(|&&x| self.cores[x as usize] >= k)
+                    .count();
+                (w, s)
+            })
+            .collect();
+        let mut queue: Vec<VertexId> =
+            cand.iter().copied().filter(|w| support[w] < k as usize).collect();
+        let mut removed: HashSet<VertexId> = queue.iter().copied().collect();
+        while let Some(w) = queue.pop() {
+            for &x in &self.adj[w as usize] {
+                if in_cand.contains(&x) && !removed.contains(&x) {
+                    let s = support.get_mut(&x).expect("candidate has a support slot");
+                    *s -= 1;
+                    if *s < k as usize {
+                        removed.insert(x);
+                        queue.push(x);
+                    }
+                }
+            }
+        }
+        for &w in &removed {
+            self.cores[w as usize] = k.saturating_sub(1);
+            self.touched.insert(w);
+        }
+    }
+
+    /// Apply a whole batch, edge by edge (inserts first; the batch's
+    /// stage-time validation makes the order irrelevant to the final
+    /// state).
+    pub fn apply_batch(&mut self, batch: &UpdateBatch) {
+        for &(u, v) in batch.inserts() {
+            self.insert_edge(u, v);
+        }
+        for &(u, v) in batch.deletes() {
+            self.delete_edge(u, v);
+        }
+    }
+}
+
+/// Output of [`reorient`].
+pub struct Reoriented {
+    /// Relabeled + oriented graph, ready for oriented plans.
+    pub graph: CsrGraph,
+    /// The permutation used (`perm[new_id] = old_id`) — feed it back
+    /// into the next incremental round.
+    pub perm: Vec<VertexId>,
+    /// Whether churn forced a full fresh peel.
+    pub full: bool,
+    /// Touched fraction that drove the decision.
+    pub churn: f64,
+}
+
+/// Incremental re-orientation. `touched` is the number of vertices the
+/// batch's [`CoreTracker`] saw change (or `batch.frontier().len()`
+/// when cores aren't tracked); `old_perm` is the degeneracy
+/// permutation of the pre-update graph.
+///
+/// Within the churn threshold the old permutation is *reused*: any
+/// permutation yields a correct orientation (each undirected edge
+/// becomes exactly one ascending arc, so oriented-plan counts are
+/// permutation-invariant — the relabel-invariance property tests
+/// already lock this down), and the out-degree bound degrades only by
+/// the inserts incident to a vertex. Past the threshold a fresh
+/// degeneracy peel runs — bit-identical to
+/// `orient(&degeneracy_order(g))`.
+pub fn reorient(
+    new_g: &CsrGraph,
+    old_perm: &[VertexId],
+    touched: usize,
+    churn_threshold: f64,
+) -> Reoriented {
+    let n = new_g.num_vertices();
+    assert_eq!(old_perm.len(), n, "permutation must cover the vertex universe");
+    let churn = if n == 0 { 0.0 } else { touched as f64 / n as f64 };
+    if churn <= churn_threshold {
+        let graph = orient(&relabel(new_g, old_perm));
+        Reoriented { graph, perm: old_perm.to_vec(), full: false, churn }
+    } else {
+        let (perm, _) = degeneracy_peel(new_g);
+        let graph = orient(&relabel(new_g, &perm));
+        Reoriented { graph, perm, full: true, churn }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::util::Rng;
+
+    fn er(n: usize, p: f64, seed: u64) -> Arc<CsrGraph> {
+        Arc::new(generators::erdos_renyi(n, p, seed))
+    }
+
+    /// Random batch: `ni` inserts of absent pairs, `nd` deletes of
+    /// present edges.
+    fn random_batch(base: &Arc<CsrGraph>, ni: usize, nd: usize, seed: u64) -> UpdateBatch {
+        let mut b = UpdateBatch::new(Arc::clone(base), 0);
+        let n = base.num_vertices() as u64;
+        let mut rng = Rng::new(seed);
+        let mut tries = 0;
+        while b.inserts().len() < ni && tries < 10_000 {
+            tries += 1;
+            let u = rng.below(n) as VertexId;
+            let v = rng.below(n) as VertexId;
+            if u != v && !base.has_edge(u, v) {
+                let _ = b.stage(EdgeOp::Insert(u, v));
+            }
+        }
+        let edges: Vec<(VertexId, VertexId)> = base.edges().collect();
+        let mut idx: Vec<usize> = (0..edges.len()).collect();
+        rng.shuffle(&mut idx);
+        for &i in idx.iter().take(nd) {
+            let (u, v) = edges[i];
+            let _ = b.stage(EdgeOp::Delete(u, v));
+        }
+        b
+    }
+
+    #[test]
+    fn parse_rejections_are_distinct() {
+        let err = |s: &str| format!("{:#}", parse_edge_op(s).unwrap_err());
+        assert!(err("").contains("empty edge op"));
+        assert!(err("3,4").contains("must start with '+'"));
+        assert!(err("*3,4").contains("must start with '+'"));
+        assert!(err("+34").contains("malformed edge endpoints '34'"));
+        assert!(err("+a,4").contains("'a' is not a vertex id"));
+        assert!(err("+3,").contains("'' is not a vertex id"));
+        assert!(err("-5,5").contains("self-loop edge (5,5)"));
+        assert_eq!(parse_edge_op(" +3 , 4 ").unwrap(), EdgeOp::Insert(3, 4));
+        assert_eq!(parse_edge_op("-0,9").unwrap(), EdgeOp::Delete(0, 9));
+    }
+
+    #[test]
+    fn stage_rejections_are_distinct() {
+        let base = Arc::new(generators::cycle(6));
+        let mut b = UpdateBatch::new(base, 3);
+        let err = |b: &mut UpdateBatch, op: EdgeOp| format!("{:#}", b.stage(op).unwrap_err());
+        assert!(err(&mut b, EdgeOp::Insert(2, 2)).contains("self-loop"));
+        assert!(err(&mut b, EdgeOp::Insert(0, 6)).contains("out of range"));
+        assert!(err(&mut b, EdgeOp::Delete(99, 1)).contains("out of range"));
+        assert!(err(&mut b, EdgeOp::Insert(0, 1)).contains("already-present edge (0,1)"));
+        assert!(err(&mut b, EdgeOp::Delete(0, 2)).contains("absent edge (0,2)"));
+        b.stage(EdgeOp::Insert(0, 3)).unwrap();
+        assert!(err(&mut b, EdgeOp::Insert(3, 0)).contains("already staged"));
+        assert!(err(&mut b, EdgeOp::Delete(0, 3)).contains("already staged"));
+        assert_eq!((b.len(), b.epoch()), (1, 3));
+    }
+
+    #[test]
+    fn apply_patches_the_base_and_carries_labels() {
+        let base = Arc::new(generators::with_random_labels(generators::cycle(5), 3, 7));
+        let mut b = UpdateBatch::new(Arc::clone(&base), 0);
+        b.stage_line("+0,2").unwrap();
+        b.stage_line("-1,2").unwrap();
+        let g = b.apply();
+        assert_eq!(g.num_vertices(), 5);
+        assert_eq!(g.num_edges(), base.num_edges()); // +1 -1
+        assert!(g.has_edge(0, 2) && !g.has_edge(1, 2));
+        assert!(g.has_edge(2, 3), "untouched edges survive");
+        assert_eq!(g.labels(), base.labels());
+        assert_eq!(g.name(), base.name());
+        // frontier = endpoints of both ops
+        let f = b.frontier();
+        assert_eq!(f.vertices(), vec![0, 1, 2]);
+        assert_eq!((f.len(), f.universe()), (3, 5));
+        assert!(!f.contains(3) && !f.contains(4));
+    }
+
+    #[test]
+    fn tracker_matches_fresh_core_numbers_under_random_churn() {
+        for seed in 0..6u64 {
+            let base = er(36, 0.12, seed);
+            let mut t = CoreTracker::new(&base);
+            let b = random_batch(&base, 10, 8, seed ^ 0xdead);
+            t.apply_batch(&b);
+            let fresh = core_numbers(&b.apply());
+            assert_eq!(t.cores(), &fresh[..], "seed {seed}");
+            assert!(t.touched() >= b.frontier().len().min(1), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn tracker_handles_promote_and_demote_chains() {
+        // path 0-1-2-3: all cores 1. Closing the 4-cycle promotes all
+        // four to 2; reopening demotes all four back to 1.
+        let base = Arc::new(CsrGraph::from_adjacency(
+            vec![vec![1], vec![0, 2], vec![1, 3], vec![2]],
+            "p4",
+        ));
+        let mut t = CoreTracker::new(&base);
+        assert_eq!(t.cores(), &[1, 1, 1, 1]);
+        t.insert_edge(0, 3);
+        assert_eq!(t.cores(), &[2, 2, 2, 2]);
+        assert_eq!(t.degeneracy(), 2);
+        t.delete_edge(1, 2);
+        assert_eq!(t.cores(), &[1, 1, 1, 1]);
+        t.clear_touched();
+        assert_eq!(t.touched(), 0);
+    }
+
+    #[test]
+    fn reorient_reuses_the_perm_under_threshold_and_is_bit_identical_past_it(
+    ) {
+        let base = er(40, 0.1, 11);
+        let mut b = UpdateBatch::new(Arc::clone(&base), 0);
+        b.stage_line("+0,1").unwrap_or_else(|_| b.stage_line("-0,1").unwrap());
+        let new_g = b.apply();
+        let (old_perm, _) = degeneracy_peel(&base);
+        let low = reorient(&new_g, &old_perm, 2, DEFAULT_REORIENT_CHURN);
+        assert!(!low.full);
+        assert_eq!(low.perm, old_perm);
+        assert!(low.graph.is_directed());
+        assert_eq!(low.graph.num_edges(), new_g.num_edges());
+        // past the threshold: bit-identical to the fresh pipeline
+        let high = reorient(&new_g, &old_perm, 40, DEFAULT_REORIENT_CHURN);
+        assert!(high.full);
+        let fresh = orient(&super::super::ordering::degeneracy_order(&new_g));
+        assert_eq!(high.graph.offsets(), fresh.offsets());
+        assert_eq!(high.graph.adjacency(), fresh.adjacency());
+    }
+}

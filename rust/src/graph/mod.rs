@@ -1,16 +1,21 @@
 //! Graph substrate: CSR storage, builders, file loaders, synthetic dataset
-//! generators (Table III equivalents), statistics, and vertex orderings.
+//! generators (Table III equivalents), statistics, vertex orderings, and
+//! the dynamic layer (update batches, epoch snapshots, core tracking).
 
 pub mod builder;
 pub mod csr;
+pub mod delta;
 pub mod generators;
 pub mod loaders;
 pub mod ordering;
 pub mod stats;
+pub mod store;
 
 pub use builder::GraphBuilder;
 pub use csr::CsrGraph;
+pub use delta::{parse_edge_op, EdgeOp, FrontierSet, UpdateBatch};
 pub use stats::GraphStats;
+pub use store::{Committed, GraphStore, Snapshot};
 
 /// Vertex identifier. Graphs up to 2^32 vertices (paper max: 3.9M).
 pub type VertexId = u32;

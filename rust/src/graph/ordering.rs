@@ -121,6 +121,46 @@ pub fn degeneracy_peel(g: &CsrGraph) -> (Vec<VertexId>, usize) {
     (order, core)
 }
 
+/// Per-vertex core numbers, O(V + E): `cores[v]` is the largest `c`
+/// such that `v` belongs to a subgraph of minimum degree `c`. The same
+/// bucket-queue peel as [`degeneracy_peel`], recording the running
+/// peel level at each removal — `cores.iter().max()` equals
+/// [`degeneracy`]. This is the baseline the dynamic layer's
+/// [`CoreTracker`](super::delta::CoreTracker) maintains incrementally.
+pub fn core_numbers(g: &CsrGraph) -> Vec<u32> {
+    let n = g.num_vertices();
+    let mut deg: Vec<usize> = (0..n).map(|v| g.degree(v as VertexId)).collect();
+    let mut buckets: Vec<Vec<VertexId>> = vec![Vec::new(); g.max_degree() + 1];
+    for (v, &d) in deg.iter().enumerate() {
+        buckets[d].push(v as VertexId);
+    }
+    let mut removed = vec![false; n];
+    let mut cores = vec![0u32; n];
+    let mut level = 0usize;
+    let mut cur = 0usize;
+    for _ in 0..n {
+        let v = loop {
+            match buckets[cur].pop() {
+                Some(v) if !removed[v as usize] && deg[v as usize] == cur => break v,
+                Some(_) => {}
+                None => cur += 1,
+            }
+        };
+        removed[v as usize] = true;
+        level = level.max(cur);
+        cores[v as usize] = level as u32;
+        for &u in g.neighbors(v) {
+            let u = u as usize;
+            if !removed[u] {
+                deg[u] -= 1;
+                buckets[deg[u]].push(u as VertexId);
+                cur = cur.min(deg[u]);
+            }
+        }
+    }
+    cores
+}
+
 /// Orient an undirected (already relabeled) graph into the low->high
 /// directed out-CSR: `neighbors(v)` keeps only `v`'s higher-numbered
 /// neighbors. Labels carry over unchanged (ids are preserved). The
@@ -179,6 +219,29 @@ pub fn random_order(g: &CsrGraph, seed: u64) -> CsrGraph {
 mod tests {
     use super::*;
     use crate::graph::generators;
+
+    #[test]
+    fn core_numbers_agree_with_peel_and_certify_themselves() {
+        for seed in 0..4u64 {
+            let g = generators::erdos_renyi(40, 0.12, seed);
+            let cores = core_numbers(&g);
+            assert_eq!(
+                cores.iter().copied().max().unwrap_or(0) as usize,
+                degeneracy(&g)
+            );
+            // certificate: within the subgraph {cores >= c}, every member
+            // has >= c neighbors (the c-core property), for every level
+            for v in 0..g.num_vertices() {
+                let c = cores[v];
+                let inside = g
+                    .neighbors(v as VertexId)
+                    .iter()
+                    .filter(|&&u| cores[u as usize] >= c)
+                    .count();
+                assert!(inside >= c as usize, "seed {seed} v {v}: {inside} < {c}");
+            }
+        }
+    }
 
     #[test]
     fn relabel_preserves_structure() {

@@ -1,0 +1,195 @@
+//! `GraphStore`: the one construction + mutation entry point.
+//!
+//! The pre-dynamic API grew three parallel construction doors
+//! (`loaders::load`, the `generators` free functions, `GraphBuilder`)
+//! and every consumer owned a raw `Arc<CsrGraph>` with no notion of
+//! *which version* of the graph it held. The store closes both gaps:
+//!
+//! - **Construction** — [`GraphStore::from_edges`] /
+//!   [`GraphStore::load`] / [`GraphStore::generate`] wrap the old doors
+//!   (which remain available for one release as the underlying
+//!   primitives) and land in the same place: a store at epoch 0.
+//! - **Versioning** — [`GraphStore::snapshot`] hands out
+//!   [`Snapshot`]`{graph: Arc<CsrGraph>, epoch}` pairs. The `Arc` is
+//!   immutable forever; the epoch names it. Consumers that cache
+//!   derived state (the service's result cache) key it by epoch and
+//!   drop it when the epoch moves.
+//! - **Mutation** — [`GraphStore::begin_update`] opens an
+//!   [`UpdateBatch`] against the current snapshot;
+//!   [`GraphStore::commit`] validates the batch is still current
+//!   (first-committer-wins on concurrent batches), merges it into a
+//!   fresh CSR, bumps the epoch, and swaps the snapshot atomically.
+//!   Readers never block: an in-flight enumeration keeps its `Arc` and
+//!   finishes against the old snapshot.
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::{ensure, Result};
+
+use super::delta::UpdateBatch;
+use super::{loaders, CsrGraph, VertexId};
+
+/// A point-in-time view of the store: an immutable graph plus the
+/// epoch that names it.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    pub graph: Arc<CsrGraph>,
+    pub epoch: u64,
+}
+
+/// The result of a successful [`GraphStore::commit`]: both sides of
+/// the boundary, for incremental maintenance (delta counts run
+/// against `old` with sign − and `new` with sign +).
+pub struct Committed {
+    /// The pre-commit snapshot the batch was staged against.
+    pub old: Snapshot,
+    /// The post-commit snapshot.
+    pub new: Snapshot,
+    /// The batch itself (frontier, op lists).
+    pub batch: UpdateBatch,
+}
+
+struct StoreInner {
+    graph: Arc<CsrGraph>,
+    epoch: u64,
+}
+
+/// See module docs. Cheap to share: `Clone` shares the store (both
+/// clones see each other's commits).
+#[derive(Clone)]
+pub struct GraphStore {
+    inner: Arc<Mutex<StoreInner>>,
+}
+
+impl GraphStore {
+    /// Wrap an existing graph at epoch 0.
+    pub fn new(graph: Arc<CsrGraph>) -> GraphStore {
+        GraphStore { inner: Arc::new(Mutex::new(StoreInner { graph, epoch: 0 })) }
+    }
+
+    /// Build from an undirected edge list (vertex ids are dense from 0;
+    /// `n` fixes the universe so isolated tail vertices survive).
+    pub fn from_edges(
+        n: usize,
+        edges: &[(VertexId, VertexId)],
+        name: impl Into<String>,
+    ) -> GraphStore {
+        let mut builder = super::GraphBuilder::new(name);
+        builder.ensure_vertices(n);
+        for &(u, v) in edges {
+            builder.add_edge(u, v);
+        }
+        GraphStore::new(Arc::new(builder.build()))
+    }
+
+    /// Load from disk (edge-list or MatrixMarket — the
+    /// [`loaders`] formats).
+    pub fn load(path: &std::path::Path) -> Result<GraphStore> {
+        Ok(GraphStore::new(Arc::new(loaders::load(path)?)))
+    }
+
+    /// Generate from a dataset/fixture spec (`er:100,0.1`,
+    /// `citeseer`, … — anything [`crate::config::load_graph`]
+    /// accepts).
+    pub fn generate(spec: &str, scale: f64, seed: u64) -> Result<GraphStore> {
+        Ok(GraphStore::new(Arc::new(crate::config::load_graph(spec, scale, seed)?)))
+    }
+
+    /// The current snapshot. The returned `Arc` stays valid (and
+    /// immutable) forever; only its currency expires.
+    pub fn snapshot(&self) -> Snapshot {
+        let inner = self.inner.lock().expect("store lock");
+        Snapshot { graph: Arc::clone(&inner.graph), epoch: inner.epoch }
+    }
+
+    /// Current epoch (0 until the first commit).
+    pub fn epoch(&self) -> u64 {
+        self.inner.lock().expect("store lock").epoch
+    }
+
+    /// Open an update batch against the current snapshot. Staging
+    /// validates each op against that base; committing requires the
+    /// base to still be current.
+    pub fn begin_update(&self) -> UpdateBatch {
+        let snap = self.snapshot();
+        UpdateBatch::new(snap.graph, snap.epoch)
+    }
+
+    /// Commit a staged batch: merge, bump the epoch, swap the
+    /// snapshot. Fails (without mutating) when the batch is empty or
+    /// was staged against a superseded snapshot.
+    pub fn commit(&self, batch: UpdateBatch) -> Result<Committed> {
+        ensure!(!batch.is_empty(), "commit of an empty update batch");
+        let merged = Arc::new(batch.apply());
+        let mut inner = self.inner.lock().expect("store lock");
+        ensure!(
+            inner.epoch == batch.epoch() && Arc::ptr_eq(&inner.graph, batch.base()),
+            "update batch staged against epoch {} but the store is at epoch {} \
+             (concurrent commit won; restage)",
+            batch.epoch(),
+            inner.epoch
+        );
+        let old = Snapshot { graph: Arc::clone(&inner.graph), epoch: inner.epoch };
+        inner.epoch += 1;
+        inner.graph = Arc::clone(&merged);
+        let new = Snapshot { graph: merged, epoch: inner.epoch };
+        Ok(Committed { old, new, batch })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::delta::EdgeOp;
+    use crate::graph::generators;
+
+    #[test]
+    fn snapshot_epoch_advances_and_old_arcs_survive() {
+        let store = GraphStore::new(Arc::new(generators::cycle(5)));
+        let s0 = store.snapshot();
+        assert_eq!(s0.epoch, 0);
+        let mut b = store.begin_update();
+        b.stage(EdgeOp::Insert(0, 2)).unwrap();
+        let c = store.commit(b).unwrap();
+        assert_eq!((c.old.epoch, c.new.epoch), (0, 1));
+        assert_eq!(store.epoch(), 1);
+        let s1 = store.snapshot();
+        assert!(s1.graph.has_edge(0, 2));
+        // the old snapshot is untouched — readers finish on their Arc
+        assert!(!s0.graph.has_edge(0, 2));
+        assert!(Arc::ptr_eq(&c.old.graph, &s0.graph));
+    }
+
+    #[test]
+    fn commit_rejects_stale_and_empty_batches_distinctly() {
+        let store = GraphStore::new(Arc::new(generators::cycle(5)));
+        let empty = store.begin_update();
+        let msg = format!("{:#}", store.commit(empty).unwrap_err());
+        assert!(msg.contains("empty update batch"));
+        let mut first = store.begin_update();
+        let mut second = store.begin_update();
+        first.stage(EdgeOp::Insert(0, 2)).unwrap();
+        second.stage(EdgeOp::Insert(1, 3)).unwrap();
+        store.commit(first).unwrap();
+        let msg = format!("{:#}", store.commit(second).unwrap_err());
+        assert!(msg.contains("staged against epoch 0"), "{msg}");
+        assert_eq!(store.epoch(), 1, "failed commit must not advance the epoch");
+    }
+
+    #[test]
+    fn construction_doors_land_in_a_store() {
+        let s = GraphStore::from_edges(5, &[(0, 1), (1, 2), (2, 0)], "tri+tails");
+        let snap = s.snapshot();
+        assert_eq!(snap.graph.num_vertices(), 5, "isolated tail vertices survive");
+        assert_eq!(snap.graph.num_edges(), 3);
+        let g = GraphStore::generate("er:30,0.1", 1.0, 7).unwrap().snapshot();
+        assert_eq!(g.graph.num_vertices(), 30);
+        // clones share commits
+        let a = GraphStore::new(Arc::new(generators::cycle(4)));
+        let b = a.clone();
+        let mut up = a.begin_update();
+        up.stage(EdgeOp::Insert(0, 2)).unwrap();
+        a.commit(up).unwrap();
+        assert_eq!(b.epoch(), 1);
+    }
+}

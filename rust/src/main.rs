@@ -57,11 +57,14 @@ const USAGE: &str = "usage: dumato <clique|motif|query|serve|stats|triangles|bas
          dumato query --dataset citeseer --pattern 4-cycle --pattern 4-path --pattern diamond
   oriented quickstart:
          dumato clique --dataset mico --k 5 --ordering degeneracy --orient
-  serve: persistent query service on stdin/stdout (line protocol: QUERY/BATCH/STATS/INVALIDATE/QUIT)
+  serve: persistent query service on stdin/stdout
+         (line protocol: QUERY/BATCH/UPDATE/COMMIT/EPOCH/STATS/INVALIDATE/QUIT)
          --batch-window-ms N (admission window, default 5) --max-batch N
          --plan-cache N --result-cache N (LRU capacities)
   serve quickstart:
          printf 'QUERY 0-1,1-2,2-0\\nSTATS\\nQUIT\\n' | dumato serve --dataset citeseer
+  dynamic quickstart:
+         printf 'UPDATE +0,5\\nCOMMIT\\nEPOCH\\nQUIT\\n' | dumato serve --dataset citeseer
   triangles: --engine <engine|xla>
   baseline: --system <dfs|pangolin|fractal|peregrine> --app <clique|motif> --k N";
 
@@ -365,10 +368,11 @@ fn cmd_query(args: &Args) -> Result<()> {
 }
 
 /// Persistent query service over stdin/stdout. One request per line
-/// (QUERY/BATCH/STATS/INVALIDATE/QUIT), one `OK`/`ERR` response line
-/// per request; the banner goes to stderr so piped sessions stay
-/// machine-readable.
+/// (QUERY/BATCH/UPDATE/COMMIT/EPOCH/STATS/INVALIDATE/QUIT), one
+/// `OK`/`ERR` response line per request; the banner goes to stderr so
+/// piped sessions stay machine-readable.
 fn cmd_serve(args: &Args) -> Result<()> {
+    use dumato::graph::GraphStore;
     use dumato::service::{serve_lines, Service, ServiceConfig};
     use std::sync::Arc;
     use std::time::Duration;
@@ -386,14 +390,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     eprintln!(
         "serving {} ({} vertices), batch_window={:?}, plan_cache={}, result_cache={} \
-         — QUERY <spec>[;<spec>], BATCH <n>, STATS, INVALIDATE, QUIT",
+         — QUERY <spec>[;<spec>], BATCH <n>, UPDATE <+u,v|-u,v>[;..], COMMIT, EPOCH, \
+         STATS, INVALIDATE, QUIT",
         g.name(),
         g.num_vertices(),
         cfg.batch_window,
         cfg.plan_cache_cap,
         cfg.result_cache_cap,
     );
-    let service = Service::start(g, cfg);
+    let service = Service::open(GraphStore::new(g), cfg);
     let handle = service.handle();
     let stdin = std::io::stdin();
     let mut stdout = std::io::stdout();

@@ -58,6 +58,16 @@ impl DeviceFleet {
         self.run(g, algo)
     }
 
+    /// [`DeviceFleet::run_shared`] addressed by a [`Snapshot`] (the
+    /// `GraphStore`-era spelling, matching `Runner::run_snapshot`).
+    pub fn run_snapshot<A: GpmAlgorithm>(
+        &self,
+        snap: &crate::graph::Snapshot,
+        algo: &A,
+    ) -> RunReport {
+        self.run(&snap.graph, algo)
+    }
+
     pub fn run<A: GpmAlgorithm>(&self, g: &CsrGraph, algo: &A) -> RunReport {
         let cfg = &self.cfg;
         let ndev = self.devices();

@@ -33,12 +33,14 @@
 
 pub mod trie;
 
+use std::sync::Arc;
+
 use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::canon::bitmap::{AdjMat, MAX_PATTERN_K};
 use crate::canon::canonical::{canonical_form, for_each_permutation};
 use crate::canon::patterns::{automorphism_count, automorphisms};
-use crate::graph::{CsrGraph, Label, VertexId};
+use crate::graph::{CsrGraph, FrontierSet, Label, VertexId};
 
 /// Canonical identity of a (possibly labeled) pattern — the cache key
 /// the service layer's plan and result caches join on, so an
@@ -110,6 +112,51 @@ pub fn pattern_key(m: &AdjMat, labels: Option<&[Label]>) -> PatternKey {
     PatternKey { k, bitmap, labels: Some(labels) }
 }
 
+/// Per-level frontier requirement of a delta plan: whether the vertex
+/// matched at a level must be in the update frontier, outside it, or
+/// unconstrained.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FrontierReq {
+    /// Candidate must be a frontier vertex.
+    In,
+    /// Candidate must *not* be a frontier vertex (the dedup half of
+    /// the first-frontier-position rule).
+    Out,
+    /// No constraint.
+    Free,
+}
+
+/// The frontier binding of a delta plan: a matching-order-indexed
+/// requirement vector over one shared frontier set.
+///
+/// Delta counting decomposes "matches touching the frontier `F`" by
+/// the *first* pattern position (in a fixed per-pattern indexing) that
+/// lands in `F`: variant `p` requires position `p` in-frontier and
+/// positions `< p` out-of-frontier, leaving positions `> p` free. The
+/// variants partition the affected matches, so their counts sum
+/// exactly — and each variant is recompiled with position `p` forced
+/// to the *root* of the matching order, so seed admission itself is
+/// frontier-restricted (the whole point: enumeration cost scales with
+/// the batch, not the graph).
+///
+/// Delta plans strip symmetry restrictions and count **embeddings**
+/// (divided back by [`ExecutionPlan::automorphism_factor`] at the
+/// driver): a per-variant frontier constraint is not
+/// automorphism-invariant, so keeping restrictions would count an
+/// orbit zero or multiple times depending on where its canonical
+/// representative falls relative to `F`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DeltaBinding {
+    /// The update frontier (shared across a batch's variants).
+    pub frontier: Arc<FrontierSet>,
+    /// `reqs[i]` = requirement for matching level `i` (`reqs[0]` is
+    /// always [`FrontierReq::In`] — the forced frontier root).
+    pub reqs: Vec<FrontierReq>,
+    /// The pattern position (in the parent plan's matching-order
+    /// indexing) this variant pins in-frontier.
+    pub pinned: usize,
+}
+
 /// A compiled per-level execution plan for one connected pattern.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ExecutionPlan {
@@ -140,6 +187,11 @@ pub struct ExecutionPlan {
     /// arc tests, so only ascending traversals survive — symmetry
     /// breaking folds into the orientation and `restrictions` is empty.
     pub oriented: bool,
+    /// Frontier binding of a delta plan (`None` for ordinary plans —
+    /// the engine then performs no membership tests and behaves
+    /// exactly as before the dynamic layer existed). Built by
+    /// [`ExecutionPlan::delta_variants`], never by `build`.
+    pub delta: Option<DeltaBinding>,
 }
 
 impl ExecutionPlan {
@@ -176,6 +228,18 @@ impl ExecutionPlan {
     }
 
     fn compile(pat: &AdjMat, plabels: Option<&[Label]>, freq: Option<&[u64]>) -> ExecutionPlan {
+        Self::compile_rooted(pat, plabels, freq, None)
+    }
+
+    /// `compile` with an optional *forced* root position — the delta
+    /// compiler pins the frontier position there so seed admission
+    /// itself is frontier-restricted. `None` keeps the heuristic root.
+    fn compile_rooted(
+        pat: &AdjMat,
+        plabels: Option<&[Label]>,
+        freq: Option<&[u64]>,
+        forced_root: Option<usize>,
+    ) -> ExecutionPlan {
         let k = pat.k;
         assert!(pat.is_connected(), "execution plans need a connected pattern");
         if let Some(ls) = plabels {
@@ -192,9 +256,12 @@ impl ExecutionPlan {
         };
         let mut order: Vec<usize> = Vec::with_capacity(k);
         let mut placed = vec![false; k];
-        let root = (0..k)
-            .max_by_key(|&v| (std::cmp::Reverse(sel(v)), pat.degree(v), std::cmp::Reverse(v)))
-            .expect("k >= 2");
+        let root = forced_root.unwrap_or_else(|| {
+            (0..k)
+                .max_by_key(|&v| (std::cmp::Reverse(sel(v)), pat.degree(v), std::cmp::Reverse(v)))
+                .expect("k >= 2")
+        });
+        assert!(root < k, "forced root position out of range");
         order.push(root);
         placed[root] = true;
         while order.len() < k {
@@ -258,6 +325,7 @@ impl ExecutionPlan {
             restrictions,
             labels: rlabels,
             oriented: false,
+            delta: None,
         }
     }
 
@@ -293,6 +361,7 @@ impl ExecutionPlan {
                 .collect(),
             labels: None,
             oriented: false,
+            delta: None,
         }
     }
 
@@ -347,6 +416,72 @@ impl ExecutionPlan {
         self.position_label(0)
     }
 
+    /// The frontier requirement for matching level `pos`
+    /// ([`FrontierReq::Free`] on ordinary plans).
+    #[inline]
+    pub fn position_frontier(&self, pos: usize) -> FrontierReq {
+        self.delta.as_ref().map_or(FrontierReq::Free, |d| d.reqs[pos])
+    }
+
+    /// Whether data vertex `v` satisfies the frontier requirement of
+    /// matching level `pos` (always true on ordinary plans).
+    #[inline]
+    pub fn frontier_admits(&self, pos: usize, v: VertexId) -> bool {
+        match &self.delta {
+            None => true,
+            Some(d) => match d.reqs[pos] {
+                FrontierReq::Free => true,
+                FrontierReq::In => d.frontier.contains(v),
+                FrontierReq::Out => !d.frontier.contains(v),
+            },
+        }
+    }
+
+    /// Compile the delta variants of this plan for an update frontier
+    /// `F`: one restriction-stripped, frontier-pinned plan per pattern
+    /// position, with the pinned position forced to the *root* of its
+    /// matching order (so only frontier vertices seed — enumeration
+    /// cost scales with `|F|`, not `|V|`).
+    ///
+    /// Variant `p` counts embeddings with position `p` in `F` and
+    /// positions `< p` (in this plan's position indexing) outside `F`
+    /// — a partition of the frontier-touching embeddings by first
+    /// frontier position. Summed over all `k` variants and divided by
+    /// [`ExecutionPlan::automorphism_factor`], that is exactly the
+    /// number of *matches* with at least one vertex in `F`. See
+    /// [`DeltaBinding`] for why restrictions must be stripped rather
+    /// than kept per-variant.
+    pub fn delta_variants(&self, frontier: &Arc<FrontierSet>) -> Vec<ExecutionPlan> {
+        assert!(!self.oriented, "delta variants run on the undirected snapshots");
+        let k = self.k();
+        assert!(
+            k <= MAX_PATTERN_K,
+            "delta variants recompile through the canonical form (k <= {MAX_PATTERN_K})"
+        );
+        (0..k)
+            .map(|p| {
+                let mut v =
+                    Self::compile_rooted(&self.pat, self.labels.as_deref(), None, Some(p));
+                v.restrictions.clear();
+                let reqs = v
+                    .order
+                    .iter()
+                    .map(|&q| match q.cmp(&p) {
+                        std::cmp::Ordering::Equal => FrontierReq::In,
+                        std::cmp::Ordering::Less => FrontierReq::Out,
+                        std::cmp::Ordering::Greater => FrontierReq::Free,
+                    })
+                    .collect();
+                v.delta = Some(DeltaBinding {
+                    frontier: Arc::clone(frontier),
+                    reqs,
+                    pinned: p,
+                });
+                v
+            })
+            .collect()
+    }
+
     /// Whether data vertex `v` can match position 0: the degree floor
     /// plus the root label. The runner and the fleet's seed sharding
     /// both consult this, so single- and multi-device deals prune
@@ -355,6 +490,7 @@ impl ExecutionPlan {
     pub fn seed_matches(&self, g: &CsrGraph, v: VertexId) -> bool {
         g.degree(v) >= self.min_seed_degree().max(1)
             && !self.root_label().is_some_and(|l| g.label(v) != l)
+            && self.frontier_admits(0, v)
     }
 
     /// The same plan with symmetry breaking stripped: counts every
@@ -397,6 +533,9 @@ impl ExecutionPlan {
         if self.root_label().is_some_and(|l| g.label(v0) != l) {
             return 0;
         }
+        if !self.frontier_admits(0, v0) {
+            return 0;
+        }
         let mut matched = vec![VertexId::MAX; self.k()];
         matched[0] = v0;
         let mut acc = 0;
@@ -422,6 +561,9 @@ impl ExecutionPlan {
                 continue;
             }
             if want_label.is_some_and(|l| g.label(c) != l) {
+                continue;
+            }
+            if !self.frontier_admits(pos, c) {
                 continue;
             }
             for &m in matched[..pos].iter() {
@@ -748,6 +890,77 @@ mod tests {
                 (0..g.num_vertices() as VertexId).map(|v| free.count_from(&g, v)).sum();
             assert_eq!(embeddings, matches * p.automorphism_factor());
         }
+    }
+
+    #[test]
+    fn delta_variants_partition_frontier_touching_matches() {
+        let g = generators::erdos_renyi(14, 0.35, 3);
+        let n = g.num_vertices() as VertexId;
+        let frontier = Arc::new(FrontierSet::from_vertices(14, [2u32, 5, 11]));
+        for edges in [
+            vec![(0usize, 1usize), (1, 2)],       // wedge
+            vec![(0, 1), (1, 2), (0, 2)],         // triangle
+            vec![(0, 1), (1, 2), (2, 3), (3, 0)], // 4-cycle
+            vec![(0, 1), (1, 2), (2, 3)],         // 4-path
+        ] {
+            let k = edges.iter().map(|&(a, b)| a.max(b)).max().unwrap() + 1;
+            let p = ExecutionPlan::build(&mat(k, &edges));
+            let total: u64 = (0..n).map(|v| p.count_from(&g, v)).sum();
+            // oracle: matches touching F = total - matches avoiding F.
+            // "all positions outside F" is automorphism-invariant, so a
+            // restriction-keeping all-Out plan counts the avoiders.
+            let mut avoiders = p.clone();
+            avoiders.delta = Some(DeltaBinding {
+                frontier: Arc::clone(&frontier),
+                reqs: vec![FrontierReq::Out; k],
+                pinned: 0,
+            });
+            let avoiding: u64 = (0..n).map(|v| avoiders.count_from(&g, v)).sum();
+            let variants = p.delta_variants(&frontier);
+            assert_eq!(variants.len(), k);
+            let embeddings: u64 = variants
+                .iter()
+                .flat_map(|vp| (0..n).map(move |v| vp.count_from(&g, v)))
+                .sum();
+            let aut = p.automorphism_factor();
+            assert_eq!(embeddings % aut, 0, "{edges:?}: variants must sum to whole orbits");
+            assert_eq!(embeddings / aut, total - avoiding, "{edges:?}");
+            for vp in &variants {
+                assert!(vp.restrictions.is_empty(), "delta variants strip restrictions");
+                assert_eq!(vp.position_frontier(0), FrontierReq::In);
+                assert_eq!(vp.canonical, p.canonical);
+                for v in 0..n {
+                    if vp.seed_matches(&g, v) {
+                        assert!(frontier.contains(v), "only frontier vertices may seed");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn labeled_delta_variants_respect_the_label_subgroup() {
+        let g = generators::with_random_labels(generators::erdos_renyi(14, 0.4, 5), 2, 8);
+        let n = g.num_vertices() as VertexId;
+        let frontier = Arc::new(FrontierSet::from_vertices(14, [0u32, 7, 9]));
+        // labeled wedge 0-1-0: the label-preserving subgroup has order 2
+        let m = mat(3, &[(0, 1), (1, 2)]);
+        let p = ExecutionPlan::build_labeled(&m, &[0, 1, 0], None);
+        assert_eq!(p.automorphism_factor(), 2);
+        let total: u64 = (0..n).map(|v| p.count_from(&g, v)).sum();
+        let mut avoiders = p.clone();
+        avoiders.delta = Some(DeltaBinding {
+            frontier: Arc::clone(&frontier),
+            reqs: vec![FrontierReq::Out; 3],
+            pinned: 0,
+        });
+        let avoiding: u64 = (0..n).map(|v| avoiders.count_from(&g, v)).sum();
+        let embeddings: u64 = p
+            .delta_variants(&frontier)
+            .iter()
+            .flat_map(|vp| (0..n).map(move |v| vp.count_from(&g, v)))
+            .sum();
+        assert_eq!(embeddings, (total - avoiding) * 2);
     }
 
     #[test]

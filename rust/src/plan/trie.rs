@@ -26,13 +26,15 @@
 //! prefix level under a sibling node's key — is charged only at fan-out
 //! points, where the plans genuinely disagree.
 
+use std::sync::Arc;
+
 use anyhow::{bail, Result};
 
 use crate::canon::dict::CanonDict;
 use crate::canon::patterns::all_patterns;
-use crate::graph::{CsrGraph, Label, VertexId};
+use crate::graph::{CsrGraph, FrontierSet, Label, VertexId};
 
-use super::ExecutionPlan;
+use super::{ExecutionPlan, FrontierReq};
 
 /// One merged per-level recipe: the plan data every pattern sharing this
 /// node agrees on for matching position `depth`.
@@ -52,10 +54,17 @@ pub struct TrieNode {
     pub restr_sources: Vec<usize>,
     /// Label a candidate must carry (`None` on unlabeled plans).
     pub label: Option<Label>,
+    /// Frontier requirement a candidate must satisfy at this position
+    /// ([`FrontierReq::Free`] on ordinary plans; the set itself lives
+    /// on [`PlanTrie::frontier`], uniform across the trie).
+    pub frontier: FrontierReq,
     /// Root-label key component: the seed label the subtree's plans
     /// demand. Only depth-1 nodes key on it (deeper nodes inherit it
     /// through their path), so it is `None` past depth 1.
     pub root_label: Option<Label>,
+    /// Root-frontier key component: the seed (position-0) frontier
+    /// requirement, keyed at depth 1 like `root_label` (Free deeper).
+    pub root_frontier: FrontierReq,
     /// Minimum seed-degree floor over the subtree's plans — the root
     /// admission test `run_trie` applies before descending into this
     /// depth-1 node (deeper nodes keep it for symmetry but never test).
@@ -68,19 +77,24 @@ pub struct TrieNode {
 }
 
 impl TrieNode {
+    #[allow(clippy::too_many_arguments)]
     fn matches_key(
         &self,
         backward: &[usize],
         forbidden: &[usize],
         restr: &[usize],
         label: Option<Label>,
+        frontier: FrontierReq,
         root_label: Option<Label>,
+        root_frontier: FrontierReq,
     ) -> bool {
         self.backward == backward
             && self.forbidden == forbidden
             && self.restr_sources == restr
             && self.label == label
+            && self.frontier == frontier
             && self.root_label == root_label
+            && self.root_frontier == root_frontier
     }
 }
 
@@ -94,6 +108,9 @@ pub struct PlanTrie {
     plans: Vec<ExecutionPlan>,
     /// `leaves[i]` = node index of pattern `i`'s leaf.
     leaves: Vec<usize>,
+    /// The shared frontier set when the members are delta plans
+    /// (uniform across the set — mixing frontiers is rejected).
+    frontier: Option<Arc<FrontierSet>>,
 }
 
 impl PlanTrie {
@@ -119,10 +136,24 @@ impl PlanTrie {
             if p.labels.is_some() != first.labels.is_some() {
                 bail!("pattern set mixes labeled and unlabeled patterns");
             }
+            let same_binding = match (&first.delta, &p.delta) {
+                (None, None) => true,
+                (Some(a), Some(b)) => Arc::ptr_eq(&a.frontier, &b.frontier),
+                _ => false,
+            };
+            if !same_binding {
+                bail!("pattern set mixes delta bindings (one shared frontier per trie)");
+            }
         }
-        let mut seen: Vec<(u64, Option<Vec<Label>>)> = Vec::with_capacity(plans.len());
+        // Dedup key: canonical identity plus the delta requirement
+        // vector — two frontier-pin variants of one pattern are
+        // distinct trie members (their counts are summed by the delta
+        // driver, never conflated).
+        type SeenKey = (u64, Option<Vec<Label>>, Option<(usize, Vec<FrontierReq>)>);
+        let mut seen: Vec<SeenKey> = Vec::with_capacity(plans.len());
         for p in plans {
-            let key = (p.canonical, p.labels.clone());
+            let dkey = p.delta.as_ref().map(|d| (d.pinned, d.reqs.clone()));
+            let key = (p.canonical, p.labels.clone(), dkey);
             if seen.contains(&key) {
                 bail!(
                     "duplicate pattern in set (canonical bitmap {:#x})",
@@ -138,6 +169,7 @@ impl PlanTrie {
             roots: Vec::new(),
             plans: plans.to_vec(),
             leaves: Vec::with_capacity(plans.len()),
+            frontier: first.delta.as_ref().map(|d| Arc::clone(&d.frontier)),
         };
         for (i, p) in plans.iter().enumerate() {
             trie.insert(i, p)?;
@@ -156,7 +188,10 @@ impl PlanTrie {
                 .map(|&(a, _)| a)
                 .collect();
             let label = p.position_label(depth);
+            let frontier = p.position_frontier(depth);
             let root_label = if depth == 1 { p.root_label() } else { None };
+            let root_frontier =
+                if depth == 1 { p.position_frontier(0) } else { FrontierReq::Free };
             let siblings: Vec<usize> = match parent {
                 None => self.roots.clone(),
                 Some(par) => self.nodes[par].children.clone(),
@@ -167,7 +202,9 @@ impl PlanTrie {
                     &p.forbidden[depth],
                     &restr,
                     label,
+                    frontier,
                     root_label,
+                    root_frontier,
                 )
             });
             let node = match found {
@@ -183,7 +220,9 @@ impl PlanTrie {
                         forbidden: p.forbidden[depth].clone(),
                         restr_sources: restr,
                         label,
+                        frontier,
                         root_label,
+                        root_frontier,
                         min_floor: floor,
                         children: Vec::new(),
                         leaf: None,
@@ -271,6 +310,14 @@ impl PlanTrie {
     #[inline]
     pub fn roots(&self) -> &[usize] {
         &self.roots
+    }
+
+    /// The shared frontier set of a delta trie (`None` for ordinary
+    /// tries). The engine resolves each node's [`TrieNode::frontier`]
+    /// requirement against this set.
+    #[inline]
+    pub fn frontier(&self) -> Option<&Arc<FrontierSet>> {
+        self.frontier.as_ref()
     }
 
     /// Node accessor.
@@ -410,6 +457,33 @@ mod tests {
         assert!(t.roots().len() <= 2, "got {} roots", t.roots().len());
         // sequential planned motifs walk 6 plans × 2 interior levels
         assert!(t.num_interior() < 6 * 2, "interior {}", t.num_interior());
+    }
+
+    #[test]
+    fn delta_variants_fuse_into_one_trie_and_mixed_frontiers_reject() {
+        let p = four_cycle();
+        let f = Arc::new(FrontierSet::from_vertices(10, [1u32, 4]));
+        let variants = p.delta_variants(&f);
+        let t = PlanTrie::build(&variants).unwrap();
+        assert_eq!(t.num_patterns(), 4, "all pin-variants are distinct members");
+        assert!(t.frontier().is_some());
+        for &r in t.roots() {
+            assert_eq!(t.node(r).root_frontier, FrontierReq::In);
+        }
+        // mixing an ordinary plan into a delta set is rejected
+        let err = format!(
+            "{:#}",
+            PlanTrie::build(&[variants[0].clone(), four_path()]).unwrap_err()
+        );
+        assert!(err.contains("mixes delta bindings"), "{err}");
+        // two different frontier sets are rejected too
+        let f2 = Arc::new(FrontierSet::from_vertices(10, [2u32]));
+        let mut other = four_path().delta_variants(&f2);
+        let err = format!(
+            "{:#}",
+            PlanTrie::build(&[variants[0].clone(), other.remove(0)]).unwrap_err()
+        );
+        assert!(err.contains("mixes delta bindings"), "{err}");
     }
 
     #[test]

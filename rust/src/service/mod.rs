@@ -19,12 +19,22 @@
 //!    (canonical bitmap + canonical label signature), so an
 //!    isomorphic-but-relabeled resubmission skips plan compilation.
 //! 3. **Result cache** — same key, caching final counts of *clean*
-//!    runs (timed-out or faulted runs are never cached). Explicit
-//!    invalidation hooks ([`ServiceHandle::invalidate_results`])
-//!    are the contract point for a future dynamic-graph layer: any
-//!    graph mutation must invalidate before the next query is
-//!    admitted. Plans survive invalidation — a plan is correct for
-//!    any graph, only its selectivity heuristic can go stale.
+//!    runs (timed-out or faulted runs are never cached). Entries are
+//!    tagged with the graph epoch they were computed on and become
+//!    unreachable the moment a commit advances it. Plans survive
+//!    commits — a plan is correct for any graph, only its selectivity
+//!    heuristic can go stale.
+//!
+//! The dynamic-graph layer rides on the same
+//! [`GraphStore`](crate::graph::GraphStore) every engine entry point
+//! shares: `UPDATE`
+//! stages edge ops against the current snapshot, `COMMIT` merges them,
+//! advances the epoch, and reconciles the result cache — cached counts
+//! whose plans are still resident are *adjusted* by frontier-restricted
+//! delta runs ([`crate::apps::count_delta`]) instead of dropped, so a
+//! small update batch keeps a warm cache warm. Dirty delta runs (or
+//! evicted plans) fall back to invalidation; the explicit `INVALIDATE`
+//! verb remains for callers that mutate the store out-of-band.
 //!
 //! Latency is *modeled*, like every other time in this codebase: the
 //! service keeps a monotone clock of accumulated engine
@@ -45,9 +55,9 @@ use crate::plan::PatternKey;
 
 pub use admission::{group_batches, Batch, BatchClass, PendingQuery};
 pub use plan_cache::PlanCache;
-pub use protocol::{parse_request, Request, MAX_BATCH, MAX_LINE};
+pub use protocol::{parse_request, Request, MAX_BATCH, MAX_LINE, MAX_UPDATE_OPS};
 pub use result_cache::{CachedCount, ResultCache};
-pub use server::{serve_lines, QueryOutcome, Service, ServiceHandle, Ticket};
+pub use server::{serve_lines, CommitOutcome, QueryOutcome, Service, ServiceHandle, Ticket};
 
 /// Service tuning knobs. `Default` suits interactive use; tests and
 /// benches shrink the engine and stretch the window.
@@ -105,6 +115,12 @@ pub struct ServiceStats {
     pub result_invalidations: u64,
     /// The modeled service clock: accumulated engine sim-seconds.
     pub sim_seconds: f64,
+    /// Current graph epoch (0 until the first commit).
+    pub epoch: u64,
+    /// Update batches committed through the service.
+    pub commits: u64,
+    /// Cached counts incrementally adjusted across those commits.
+    pub adjusted_counts: u64,
 }
 
 /// Compute a result/plan cache key from a pattern spec string —

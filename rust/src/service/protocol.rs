@@ -17,7 +17,17 @@
 //!   submitted before any is awaited, so one connection gets fused
 //!   admission without racing the batch window.
 //! - `STATS` — cache and admission counters.
-//! - `INVALIDATE` — drop every cached result (dynamic-graph hook).
+//! - `INVALIDATE` — drop every cached result (explicit cache drop; the
+//!   dynamic path below invalidates selectively on `COMMIT`).
+//! - `UPDATE <op>[;<op>...]` — stage edge updates against the current
+//!   snapshot: `+u,v` inserts, `-u,v` deletes. Ops are validated as
+//!   they are staged (malformed endpoints, self-loops, out-of-range
+//!   ids, insert-of-present / delete-of-absent each get a distinct
+//!   `ERR`); ops before the failing one remain staged.
+//! - `COMMIT` — merge the staged batch into a fresh snapshot, advance
+//!   the epoch, and incrementally adjust cached counts where a delta
+//!   run is clean (invalidating the rest).
+//! - `EPOCH` — report the current graph epoch and staged op count.
 //! - `QUIT` — close the session.
 
 use anyhow::{bail, ensure, Result};
@@ -29,6 +39,10 @@ pub const MAX_LINE: usize = 4096;
 /// Most member queries in one `BATCH`.
 pub const MAX_BATCH: usize = 1024;
 
+/// Most edge ops in one `UPDATE` line (the staged-batch cap in
+/// `graph::delta` bounds the total; this bounds one request).
+pub const MAX_UPDATE_OPS: usize = 256;
+
 /// A parsed request line.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Request {
@@ -36,6 +50,13 @@ pub enum Request {
     Query { specs: Vec<String> },
     /// `BATCH n` — the header only; members follow on the wire.
     Batch { n: usize },
+    /// `UPDATE +u,v;-u,v;...` — edge-op *strings*; content validation
+    /// happens at stage time with `graph::delta`'s distinct errors.
+    Update { ops: Vec<String> },
+    /// `COMMIT` — seal and apply the staged update batch.
+    Commit,
+    /// `EPOCH` — current graph epoch + staged op count.
+    Epoch,
     Stats,
     Invalidate,
     Quit,
@@ -75,6 +96,28 @@ pub fn parse_request(line: &str) -> Result<Request> {
         ensure!(n >= 1, "BATCH count must be at least 1");
         ensure!(n <= MAX_BATCH, "BATCH count {n} exceeds the {MAX_BATCH} cap");
         Ok(Request::Batch { n })
+    } else if verb.eq_ignore_ascii_case("UPDATE") {
+        ensure!(
+            !rest.is_empty(),
+            "UPDATE needs at least one edge op: UPDATE <+u,v|-u,v>[;<op>...]"
+        );
+        let ops: Vec<String> = rest.split(';').map(|s| s.trim().to_string()).collect();
+        ensure!(
+            ops.iter().all(|s| !s.is_empty()),
+            "empty edge op in UPDATE (stray ';'?)"
+        );
+        ensure!(
+            ops.len() <= MAX_UPDATE_OPS,
+            "UPDATE holds {} ops, exceeding the {MAX_UPDATE_OPS} cap",
+            ops.len()
+        );
+        Ok(Request::Update { ops })
+    } else if verb.eq_ignore_ascii_case("COMMIT") {
+        ensure!(rest.is_empty(), "COMMIT takes no arguments");
+        Ok(Request::Commit)
+    } else if verb.eq_ignore_ascii_case("EPOCH") {
+        ensure!(rest.is_empty(), "EPOCH takes no arguments");
+        Ok(Request::Epoch)
     } else if verb.eq_ignore_ascii_case("STATS") {
         ensure!(rest.is_empty(), "STATS takes no arguments");
         Ok(Request::Stats)
@@ -85,7 +128,10 @@ pub fn parse_request(line: &str) -> Result<Request> {
         ensure!(rest.is_empty(), "QUIT takes no arguments");
         Ok(Request::Quit)
     } else {
-        bail!("unknown verb '{verb}' (expected QUERY, BATCH, STATS, INVALIDATE, or QUIT)")
+        bail!(
+            "unknown verb '{verb}' (expected QUERY, BATCH, STATS, INVALIDATE, \
+             UPDATE, COMMIT, EPOCH, or QUIT)"
+        )
     }
 }
 
@@ -121,6 +167,20 @@ mod tests {
         assert_eq!(parse_request("  stats  ").unwrap(), Request::Stats);
         assert_eq!(parse_request("INVALIDATE").unwrap(), Request::Invalidate);
         assert_eq!(parse_request("Quit").unwrap(), Request::Quit);
+        assert_eq!(
+            parse_request("UPDATE +0,1").unwrap(),
+            Request::Update {
+                ops: vec!["+0,1".into()]
+            }
+        );
+        assert_eq!(
+            parse_request("update +0,1 ; -2,3").unwrap(),
+            Request::Update {
+                ops: vec!["+0,1".into(), "-2,3".into()]
+            }
+        );
+        assert_eq!(parse_request("Commit").unwrap(), Request::Commit);
+        assert_eq!(parse_request("EPOCH").unwrap(), Request::Epoch);
     }
 
     #[test]
@@ -136,6 +196,12 @@ mod tests {
         assert!(err_of("BATCH 9999").contains("exceeds"));
         assert!(err_of("STATS now").contains("no arguments"));
         assert!(err_of("QUIT please").contains("no arguments"));
+        assert!(err_of("UPDATE").contains("at least one edge op"));
+        assert!(err_of("UPDATE +0,1;;+2,3").contains("empty edge op"));
+        let crowded = format!("UPDATE {}", vec!["+0,1"; 257].join(";"));
+        assert!(err_of(&crowded).contains("exceeding the 256 cap"));
+        assert!(err_of("COMMIT now").contains("no arguments"));
+        assert!(err_of("EPOCH now").contains("no arguments"));
         let long = format!("QUERY {}", "0-1,".repeat(2000));
         assert!(err_of(&long).contains("exceeds 4096 bytes"));
     }

@@ -1,18 +1,22 @@
-//! LRU cache of final pattern counts keyed on [`PatternKey`].
+//! LRU cache of final pattern counts keyed on [`PatternKey`], tagged
+//! with the graph epoch they were computed on.
 //!
 //! A hit short-circuits the engine entirely: the query is answered at
 //! zero modeled cost. Correctness contract:
 //!
 //! - only counts from *clean* runs are inserted (the server refuses to
 //!   cache timed-out or faulted batches — their counts are partial);
-//! - the cache is valid for exactly one graph snapshot. The future
-//!   dynamic-graph layer must call [`ResultCache::invalidate_all`] (or
-//!   targeted [`ResultCache::invalidate`]) on any mutation *before*
-//!   admitting the next query; the service exposes this as
-//!   [`ServiceHandle::invalidate_results`](super::ServiceHandle) and
-//!   the wire verb `INVALIDATE`. Stale hits are impossible as long as
-//!   that ordering holds, because the graph snapshot itself is
-//!   immutable (`Arc<CsrGraph>`).
+//! - every entry is valid for exactly one graph epoch. [`ResultCache::
+//!   insert`] takes the epoch the result was computed on and drops the
+//!   insert when that epoch is no longer current (a worker batch that
+//!   raced a commit arrives dead); [`ResultCache::set_epoch`] advances
+//!   the cache across a [`GraphStore`](crate::graph::GraphStore)
+//!   commit, purging every entry of the superseded epoch; `get`/
+//!   `peek`/`contains` reject (and `get` evicts) anything a purge
+//!   missed. Stale hits are therefore impossible by construction, not
+//!   by call-ordering discipline — the pre-epoch contract ("callers
+//!   must `invalidate_all` before the next query") survives only as
+//!   the wire verb `INVALIDATE` for explicit cache drops.
 
 use std::collections::HashMap;
 
@@ -31,6 +35,8 @@ pub struct CachedCount {
 
 struct Entry {
     val: CachedCount,
+    /// Graph epoch the count was computed on.
+    epoch: u64,
     last_used: u64,
 }
 
@@ -39,6 +45,8 @@ struct Entry {
 pub struct ResultCache {
     cap: usize,
     map: HashMap<PatternKey, Entry>,
+    /// The current graph epoch: only entries at this epoch are served.
+    epoch: u64,
     tick: u64,
     hits: u64,
     misses: u64,
@@ -52,6 +60,7 @@ impl ResultCache {
         Self {
             cap,
             map: HashMap::new(),
+            epoch: 0,
             tick: 0,
             hits: 0,
             misses: 0,
@@ -60,9 +69,29 @@ impl ResultCache {
         }
     }
 
+    /// The epoch entries are currently served against.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Advance to `epoch`, purging every entry computed on another one
+    /// (counted as invalidations). Idempotent at the current epoch.
+    pub fn set_epoch(&mut self, epoch: u64) {
+        self.epoch = epoch;
+        let before = self.map.len();
+        self.map.retain(|_, e| e.epoch == epoch);
+        self.invalidations += (before - self.map.len()) as u64;
+    }
+
     /// Counted lookup: bumps recency on a hit, records a hit or miss.
+    /// An entry from a superseded epoch is evicted and reported as a
+    /// miss — a stale count is never served.
     pub fn get(&mut self, key: &PatternKey) -> Option<CachedCount> {
         self.tick += 1;
+        if self.map.get(key).is_some_and(|e| e.epoch != self.epoch) {
+            self.map.remove(key);
+            self.invalidations += 1;
+        }
         match self.map.get_mut(key) {
             Some(e) => {
                 e.last_used = self.tick;
@@ -78,20 +107,38 @@ impl ResultCache {
 
     /// Uncounted lookup (no recency bump, no stats) — used by the
     /// submit path to test "fully cached?" before committing to the
-    /// counted reads, and by tests.
+    /// counted reads, and by tests. Epoch-checked like `get`.
     pub fn peek(&self, key: &PatternKey) -> Option<CachedCount> {
-        self.map.get(key).map(|e| e.val)
+        self.map.get(key).filter(|e| e.epoch == self.epoch).map(|e| e.val)
     }
 
     pub fn contains(&self, key: &PatternKey) -> bool {
-        self.map.contains_key(key)
+        self.peek(key).is_some()
     }
 
-    /// Insert (or refresh) an entry, evicting the LRU entry at capacity.
-    pub fn insert(&mut self, key: PatternKey, val: CachedCount) {
+    /// Keys of the current epoch's entries (the commit hook's working
+    /// set), in no particular order.
+    pub fn keys(&self) -> Vec<PatternKey> {
+        self.map
+            .iter()
+            .filter(|(_, e)| e.epoch == self.epoch)
+            .map(|(k, _)| k.clone())
+            .collect()
+    }
+
+    /// Insert (or refresh) an entry computed on graph epoch `epoch`,
+    /// evicting the LRU entry at capacity. An insert whose epoch is no
+    /// longer current is dropped (counted as an invalidation): the
+    /// result belongs to a superseded snapshot.
+    pub fn insert(&mut self, key: PatternKey, val: CachedCount, epoch: u64) {
+        if epoch != self.epoch {
+            self.invalidations += 1;
+            return;
+        }
         self.tick += 1;
         if let Some(e) = self.map.get_mut(&key) {
             e.val = val;
+            e.epoch = epoch;
             e.last_used = self.tick;
             return;
         }
@@ -110,6 +157,7 @@ impl ResultCache {
             key,
             Entry {
                 val,
+                epoch,
                 last_used: self.tick,
             },
         );
@@ -124,7 +172,7 @@ impl ResultCache {
         hit
     }
 
-    /// Drop everything (the dynamic-graph mutation hook); returns the
+    /// Drop everything (the explicit `INVALIDATE` hook); returns the
     /// number of entries dropped.
     pub fn invalidate_all(&mut self) -> usize {
         let n = self.map.len();
@@ -183,7 +231,7 @@ mod tests {
         let mut c = ResultCache::new(4);
         let tri = key_of("0-1,1-2,2-0");
         assert_eq!(c.get(&tri), None);
-        c.insert(tri.clone(), cc(7));
+        c.insert(tri.clone(), cc(7), 0);
         // the relabeled spelling of the triangle is the same key
         assert_eq!(c.get(&key_of("1-2,2-0,0-1")), Some(cc(7)));
         assert!(c.invalidate(&tri));
@@ -198,15 +246,40 @@ mod tests {
         let a = key_of("0-1,1-2,2-0");
         let b = key_of("0-1,1-2,2-3");
         let d = key_of("0-1,0-2,0-3");
-        c.insert(a.clone(), cc(1));
-        c.insert(b.clone(), cc(2));
+        c.insert(a.clone(), cc(1), 0);
+        c.insert(b.clone(), cc(2), 0);
         c.get(&a); // b becomes LRU
-        c.insert(d.clone(), cc(3));
+        c.insert(d.clone(), cc(3), 0);
         assert!(!c.contains(&b), "LRU entry must be evicted");
         assert!(c.contains(&a) && c.contains(&d));
         assert_eq!(c.evictions(), 1);
         assert_eq!(c.invalidate_all(), 2);
         assert!(c.is_empty());
         assert_eq!(c.invalidations(), 2);
+    }
+
+    #[test]
+    fn epoch_advance_makes_old_entries_unreachable() {
+        // the stale-result regression: a count cached at epoch 0 must
+        // be invisible through every read path once the graph moves on
+        let mut c = ResultCache::new(4);
+        let tri = key_of("0-1,1-2,2-0");
+        let path = key_of("0-1,1-2,2-3");
+        c.insert(tri.clone(), cc(7), 0);
+        c.insert(path.clone(), cc(9), 0);
+        c.set_epoch(1);
+        assert_eq!(c.invalidations(), 2, "purged at the epoch boundary");
+        assert!(!c.contains(&tri) && c.peek(&tri).is_none() && c.get(&tri).is_none());
+        assert!(c.keys().is_empty());
+        // re-insert at the new epoch: served again
+        c.insert(tri.clone(), cc(8), 1);
+        assert_eq!(c.get(&tri), Some(cc(8)));
+        assert_eq!(c.keys(), vec![tri.clone()]);
+        // an in-flight result computed on the old snapshot arrives dead
+        c.insert(path.clone(), cc(9), 0);
+        assert!(!c.contains(&path), "stale insert must be dropped");
+        // set_epoch is idempotent and keeps current entries
+        c.set_epoch(1);
+        assert_eq!(c.get(&tri), Some(cc(8)));
     }
 }

@@ -22,11 +22,12 @@ use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use anyhow::{ensure, Result};
+use anyhow::{anyhow, ensure, Result};
 
 use crate::api::GpmAlgorithm;
+use crate::apps::count_delta;
 use crate::engine::{Runner, WarpContext};
-use crate::graph::CsrGraph;
+use crate::graph::{CsrGraph, GraphStore, UpdateBatch};
 use crate::plan::trie::PlanTrie;
 use crate::plan::{parse_pattern_set, ExecutionPlan, PatternKey};
 
@@ -81,13 +82,21 @@ struct Counters {
     engine_runs: u64,
     batches: u64,
     cold_patterns: u64,
+    commits: u64,
+    adjusted: u64,
 }
 
 struct Inner {
-    graph: Arc<CsrGraph>,
+    /// The versioned graph: workers read `store.snapshot()` per batch,
+    /// commits advance it ([`ServiceHandle::commit_updates`]).
+    store: GraphStore,
     cfg: ServiceConfig,
-    /// Label-frequency snapshot for labeled plan selectivity.
-    freq: Vec<u64>,
+    /// Label-frequency view for labeled plan selectivity; refreshed at
+    /// every commit (it describes the current snapshot).
+    freq: Mutex<Vec<u64>>,
+    /// The wire session's staged update batch (`UPDATE` accumulates,
+    /// `COMMIT` takes).
+    pending: Mutex<Option<UpdateBatch>>,
     queue: Mutex<Vec<PendingQuery>>,
     wake: Condvar,
     plans: Mutex<PlanCache>,
@@ -113,21 +122,29 @@ pub struct ServiceHandle {
 }
 
 impl Service {
-    /// Spin up a service over an immutable graph snapshot. The service
-    /// compiles unoriented plans, so the snapshot must be undirected
-    /// (orient-aware serving is a follow-up).
-    pub fn start(graph: Arc<CsrGraph>, cfg: ServiceConfig) -> Service {
+    /// Spin up a service over a [`GraphStore`] — the canonical door.
+    /// The service compiles unoriented plans, so the store's snapshots
+    /// must be undirected (orient-aware serving is a follow-up).
+    /// Sharing the store with other writers is allowed, but a commit
+    /// from outside the service invalidates nothing — route mutations
+    /// through [`ServiceHandle::stage_updates`] /
+    /// [`ServiceHandle::commit_updates`].
+    pub fn open(store: GraphStore, cfg: ServiceConfig) -> Service {
+        let snap = store.snapshot();
         assert!(
-            !graph.is_directed(),
+            !snap.graph.is_directed(),
             "the query service serves undirected snapshots (got an oriented graph)"
         );
-        let freq = graph.label_frequencies();
+        let freq = snap.graph.label_frequencies();
+        let mut results = ResultCache::new(cfg.result_cache_cap);
+        results.set_epoch(snap.epoch);
         let inner = Arc::new(Inner {
-            graph,
+            store,
             plans: Mutex::new(PlanCache::new(cfg.plan_cache_cap)),
-            results: Mutex::new(ResultCache::new(cfg.result_cache_cap)),
+            results: Mutex::new(results),
             cfg,
-            freq,
+            freq: Mutex::new(freq),
+            pending: Mutex::new(None),
             queue: Mutex::new(Vec::new()),
             wake: Condvar::new(),
             clock: Mutex::new(0.0),
@@ -144,6 +161,12 @@ impl Service {
             inner,
             worker: Some(worker),
         }
+    }
+
+    /// Pre-`GraphStore` spelling: wrap a bare snapshot at epoch 0.
+    #[deprecated(note = "use Service::open(GraphStore::new(graph), cfg)")]
+    pub fn start(graph: Arc<CsrGraph>, cfg: ServiceConfig) -> Service {
+        Service::open(GraphStore::new(graph), cfg)
     }
 
     pub fn handle(&self) -> ServiceHandle {
@@ -272,13 +295,143 @@ impl ServiceHandle {
             result_evictions: results.evictions(),
             result_invalidations: results.invalidations(),
             sim_seconds,
+            epoch: self.inner.store.epoch(),
+            commits: ctr.commits,
+            adjusted_counts: ctr.adjusted,
         }
     }
 
-    /// The snapshot this service answers against.
-    pub fn graph(&self) -> &Arc<CsrGraph> {
-        &self.inner.graph
+    /// The current snapshot's graph. Valid (and immutable) forever;
+    /// a commit supersedes it without touching it.
+    pub fn graph(&self) -> Arc<CsrGraph> {
+        self.inner.store.snapshot().graph
     }
+
+    /// The current graph epoch (0 until the first commit).
+    pub fn epoch(&self) -> u64 {
+        self.inner.store.epoch()
+    }
+
+    /// Edge ops staged and not yet committed.
+    pub fn pending_updates(&self) -> usize {
+        self.inner.pending.lock().unwrap().as_ref().map_or(0, |b| b.len())
+    }
+
+    /// Stage edge-op lines (`+u,v` / `-u,v`) against the current
+    /// snapshot, opening a batch if none is pending. Each op is
+    /// validated as it is staged; on the first bad op the call errors
+    /// with that op's distinct message and the *earlier* ops of this
+    /// call remain staged. Returns `(staged_now, total_pending)`.
+    pub fn stage_updates(&self, ops: &[String]) -> Result<(usize, usize)> {
+        ensure!(!ops.is_empty(), "nothing to stage: UPDATE needs at least one edge op");
+        let mut pending = self.inner.pending.lock().unwrap();
+        let batch = pending.get_or_insert_with(|| self.inner.store.begin_update());
+        let mut staged = 0usize;
+        for op in ops {
+            batch.stage_line(op)?;
+            staged += 1;
+        }
+        Ok((staged, batch.len()))
+    }
+
+    /// Commit the staged batch: merge it into a fresh snapshot,
+    /// advance the epoch, and reconcile the result cache — each cached
+    /// count whose plan is still resident is adjusted by a frontier-
+    /// restricted delta run ([`count_delta`]); entries whose delta run
+    /// was dirty (timeout/fault) or whose plan was evicted are
+    /// invalidated instead. Queries admitted after this call see the
+    /// new snapshot; in-flight results computed on the old one are
+    /// dropped by the cache's epoch check.
+    pub fn commit_updates(&self) -> Result<CommitOutcome> {
+        let inner = &self.inner;
+        let batch = inner
+            .pending
+            .lock()
+            .unwrap()
+            .take()
+            .ok_or_else(|| anyhow!("nothing staged (stage edge ops with UPDATE first)"))?;
+        let frontier = Arc::new(batch.frontier());
+        let committed = inner.store.commit(batch)?;
+        // Holding the result-cache lock across the delta runs makes
+        // the commit a barrier: the fast path and batch completions
+        // wait, and nothing can read a pre-commit count afterwards.
+        let mut rc = inner.results.lock().unwrap();
+        let entries: Vec<(PatternKey, CachedCount)> = rc
+            .keys()
+            .into_iter()
+            .filter_map(|k| rc.peek(&k).map(|cc| (k, cc)))
+            .collect();
+        let plans: Vec<Option<Arc<ExecutionPlan>>> = {
+            let pc = inner.plans.lock().unwrap();
+            entries.iter().map(|(k, _)| pc.peek(k)).collect()
+        };
+        rc.set_epoch(committed.new.epoch);
+        let mut adjusted = 0usize;
+        let mut invalidated = 0usize;
+        let mut sim = 0.0f64;
+        for ((key, old), plan) in entries.into_iter().zip(plans) {
+            let mut delta = None;
+            if let Some(p) = plan.as_ref().filter(|p| !p.oriented) {
+                let r = count_delta(
+                    &committed.old.graph,
+                    &committed.new.graph,
+                    &frontier,
+                    p,
+                    &inner.cfg.engine,
+                );
+                sim += r.sim_seconds;
+                if r.clean {
+                    delta = Some(r.delta);
+                }
+            }
+            match delta {
+                Some(d) => {
+                    let count = old.count as i128 + d as i128;
+                    assert!(count >= 0, "cached count went negative under delta {d}");
+                    rc.insert(
+                        key,
+                        CachedCount {
+                            count: count as u64,
+                            cold_sim_seconds: old.cold_sim_seconds,
+                        },
+                        committed.new.epoch,
+                    );
+                    adjusted += 1;
+                }
+                None => invalidated += 1,
+            }
+        }
+        drop(rc);
+        *inner.freq.lock().unwrap() = committed.new.graph.label_frequencies();
+        {
+            let mut c = inner.clock.lock().unwrap();
+            *c += sim;
+        }
+        {
+            let mut ctr = inner.counters.lock().unwrap();
+            ctr.commits += 1;
+            ctr.adjusted += adjusted as u64;
+        }
+        Ok(CommitOutcome {
+            epoch: committed.new.epoch,
+            adjusted,
+            invalidated,
+            sim_seconds: sim,
+        })
+    }
+}
+
+/// What a [`ServiceHandle::commit_updates`] did.
+#[derive(Clone, Copy, Debug)]
+pub struct CommitOutcome {
+    /// The post-commit graph epoch.
+    pub epoch: u64,
+    /// Cached counts incrementally adjusted (kept warm).
+    pub adjusted: usize,
+    /// Cached counts invalidated (plan evicted, or dirty delta run).
+    pub invalidated: usize,
+    /// Modeled engine seconds the delta runs charged.
+    pub sim_seconds: f64,
 }
 
 /// The fused batch as a trie algorithm (the `SubgraphQuerySet` shape,
@@ -346,6 +499,10 @@ fn worker_loop(inner: &Arc<Inner>) {
 }
 
 fn execute_batch(inner: &Arc<Inner>, batch: Batch) {
+    // 0) pin the snapshot this whole batch runs against. Results are
+    //    inserted tagged with its epoch: if a commit lands while the
+    //    engine is running, the insert arrives stale and is dropped.
+    let snap = inner.store.snapshot();
     // 1) per unique pattern: cached answer, or a cold slot to run
     let cached: Vec<Option<CachedCount>> = {
         let mut rc = inner.results.lock().unwrap();
@@ -361,6 +518,7 @@ fn execute_batch(inner: &Arc<Inner>, batch: Batch) {
     }
 
     // 2) compile cold plans through the plan cache
+    let freq = inner.freq.lock().unwrap().clone();
     let plans: Vec<Arc<ExecutionPlan>> = {
         let mut pc = inner.plans.lock().unwrap();
         to_run
@@ -370,7 +528,7 @@ fn execute_batch(inner: &Arc<Inner>, batch: Batch) {
                 pc.get_or_compile(key, || {
                     let m = pat.adj();
                     match &pat.labels {
-                        Some(ls) => ExecutionPlan::build_labeled(&m, ls, Some(&inner.freq)),
+                        Some(ls) => ExecutionPlan::build_labeled(&m, ls, Some(&freq)),
                         None => ExecutionPlan::build(&m),
                     }
                 })
@@ -390,7 +548,7 @@ fn execute_batch(inner: &Arc<Inner>, batch: Batch) {
         match PlanTrie::build(&plan_vec) {
             Ok(trie) => {
                 let job = FusedJob { trie };
-                let r = Runner::run_shared(&inner.graph, &job, &inner.cfg.engine);
+                let r = Runner::run_shared(&snap.graph, &job, &inner.cfg.engine);
                 assert_eq!(r.leaf_counts.len(), leaf.len(), "one leaf per cold pattern");
                 leaf.copy_from_slice(&r.leaf_counts);
                 sim_cost += r.metrics.sim_seconds;
@@ -403,7 +561,7 @@ fn execute_batch(inner: &Arc<Inner>, batch: Batch) {
                     let trie = PlanTrie::build(std::slice::from_ref(p))
                         .expect("a singleton pattern set is always fusable");
                     let job = FusedJob { trie };
-                    let r = Runner::run_shared(&inner.graph, &job, &inner.cfg.engine);
+                    let r = Runner::run_shared(&snap.graph, &job, &inner.cfg.engine);
                     leaf[j] = r.leaf_counts.first().copied().unwrap_or(r.count);
                     sim_cost += r.metrics.sim_seconds;
                     timed_out |= r.timed_out;
@@ -435,6 +593,7 @@ fn execute_batch(inner: &Arc<Inner>, batch: Batch) {
                     count: leaf[j],
                     cold_sim_seconds: share,
                 },
+                snap.epoch,
             );
         }
     }
@@ -504,7 +663,8 @@ pub fn serve_lines<R: BufRead, W: Write>(
                     out,
                     "OK queries={} patterns={} batches={} engine_runs={} cold={} \
                      plan_hits={} plan_misses={} plan_evictions={} result_hits={} \
-                     result_misses={} result_evictions={} invalidations={} sim_seconds={:.6}",
+                     result_misses={} result_evictions={} invalidations={} sim_seconds={:.6} \
+                     epoch={} commits={} adjusted={}",
                     s.queries,
                     s.patterns,
                     s.batches,
@@ -517,12 +677,35 @@ pub fn serve_lines<R: BufRead, W: Write>(
                     s.result_misses,
                     s.result_evictions,
                     s.result_invalidations,
-                    s.sim_seconds
+                    s.sim_seconds,
+                    s.epoch,
+                    s.commits,
+                    s.adjusted_counts
                 )?;
             }
             Ok(Request::Invalidate) => {
                 let n = handle.invalidate_results();
                 writeln!(out, "OK invalidated={n}")?;
+            }
+            Ok(Request::Update { ops }) => match handle.stage_updates(&ops) {
+                Ok((staged, pending)) => writeln!(out, "OK staged={staged} pending={pending}")?,
+                Err(e) => writeln!(out, "ERR {}", one_line(&format!("{e:#}")))?,
+            },
+            Ok(Request::Commit) => match handle.commit_updates() {
+                Ok(c) => writeln!(
+                    out,
+                    "OK epoch={} adjusted={} invalidated={}",
+                    c.epoch, c.adjusted, c.invalidated
+                )?,
+                Err(e) => writeln!(out, "ERR {}", one_line(&format!("{e:#}")))?,
+            },
+            Ok(Request::Epoch) => {
+                writeln!(
+                    out,
+                    "OK epoch={} pending={}",
+                    handle.epoch(),
+                    handle.pending_updates()
+                )?;
             }
             Ok(Request::Query { specs }) => {
                 let line = respond_query(handle, &specs);
@@ -621,9 +804,8 @@ mod tests {
     use crate::graph::generators;
     use std::time::Duration;
 
-    fn tiny_service() -> Service {
-        let g = Arc::new(generators::erdos_renyi(24, 0.3, 11));
-        let cfg = ServiceConfig {
+    fn tiny_cfg() -> ServiceConfig {
+        ServiceConfig {
             engine: EngineConfig {
                 warps: 64,
                 threads: 2,
@@ -631,8 +813,12 @@ mod tests {
             },
             batch_window: Duration::from_millis(2),
             ..ServiceConfig::default()
-        };
-        Service::start(g, cfg)
+        }
+    }
+
+    fn tiny_service() -> Service {
+        let g = Arc::new(generators::erdos_renyi(24, 0.3, 11));
+        Service::open(GraphStore::new(g), tiny_cfg())
     }
 
     #[test]
@@ -665,6 +851,95 @@ mod tests {
         let s2 = h.stats();
         assert_eq!(s2.result_invalidations, 1);
         assert!(s2.plan_hits >= 1, "recount reuses the cached plan");
+        svc.shutdown();
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_start_wrapper_still_serves() {
+        let g = Arc::new(generators::erdos_renyi(16, 0.3, 3));
+        let svc = Service::start(g, tiny_cfg());
+        let h = svc.handle();
+        assert_eq!(h.epoch(), 0);
+        assert!(h.query(&["0-1,1-2".to_string()]).unwrap().fault.is_none());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn update_commit_adjusts_cached_counts_and_epochs() {
+        let svc = tiny_service();
+        let h = svc.handle();
+        let spec = vec!["0-1,1-2,2-0".to_string()];
+        let key = crate::service::key_for_spec(&spec[0]).unwrap();
+        let cold = h.query(&spec).unwrap();
+        assert!(cold.fault.is_none() && !cold.timed_out);
+        // stage: one absent edge in, one present edge out
+        let g0 = h.graph();
+        let (mut ins, mut del) = (None, None);
+        'scan: for u in 0..24u32 {
+            for v in (u + 1)..24u32 {
+                if g0.has_edge(u, v) {
+                    del.get_or_insert((u, v));
+                } else {
+                    ins.get_or_insert((u, v));
+                }
+                if ins.is_some() && del.is_some() {
+                    break 'scan;
+                }
+            }
+        }
+        let (iu, iv) = ins.unwrap();
+        let (du, dv) = del.unwrap();
+        let (staged, pending) =
+            h.stage_updates(&[format!("+{iu},{iv}"), format!("-{du},{dv}")]).unwrap();
+        assert_eq!((staged, pending), (2, 2));
+        assert_eq!(h.pending_updates(), 2);
+        // commit: epoch advances, the cached triangle count is adjusted
+        let c = h.commit_updates().unwrap();
+        assert_eq!((c.epoch, h.epoch()), (1, 1));
+        assert_eq!(c.adjusted, 1, "plan is resident, delta run is clean");
+        assert_eq!(c.invalidated, 0);
+        assert_eq!(h.pending_updates(), 0);
+        // the adjusted entry answers without an engine run...
+        let warm = h.query(&spec).unwrap();
+        assert_eq!(warm.result_hits, 1);
+        assert_eq!(warm.latency, 0.0);
+        // ...and agrees with a from-scratch recount on the new snapshot
+        h.invalidate_result(&key);
+        let recount = h.query(&spec).unwrap();
+        assert_eq!(recount.result_hits, 0);
+        assert_eq!(warm.counts, recount.counts, "adjusted count must equal recount");
+        let s = h.stats();
+        assert_eq!((s.epoch, s.commits, s.adjusted_counts), (1, 1, 1));
+        // committing with nothing staged is a distinct error
+        let err = h.commit_updates().unwrap_err();
+        assert!(format!("{err:#}").contains("nothing staged"), "{err:#}");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn stale_results_are_unreachable_after_commit() {
+        let svc = tiny_service();
+        let h = svc.handle();
+        let spec = vec!["0-1,1-2".to_string()]; // wedge: count shifts with degrees
+        let before = h.query(&spec).unwrap();
+        // insert an edge at the highest-degree hub: the wedge count
+        // strictly grows, so serving the pre-commit entry would be
+        // observably wrong — the assertion below is the stale-result
+        // regression at the service level
+        let g0 = h.graph();
+        let hub = (0..24u32).max_by_key(|&v| g0.degree(v)).unwrap();
+        let other = (0..24u32).find(|&v| v != hub && !g0.has_edge(hub, v)).unwrap();
+        h.stage_updates(&[format!("+{},{}", hub.min(other), hub.max(other))]).unwrap();
+        let c = h.commit_updates().unwrap();
+        assert_eq!(c.epoch, 1);
+        let after = h.query(&spec).unwrap();
+        assert!(
+            after.counts[0] > before.counts[0],
+            "a new hub edge must add wedges ({} vs {})",
+            after.counts[0],
+            before.counts[0]
+        );
         svc.shutdown();
     }
 

@@ -10,20 +10,23 @@
 //!
 //! Categories: unknown verbs, empty/whitespace lines, overlong lines,
 //! invalid UTF-8, malformed QUERY specs (delegated parser errors),
-//! BATCH header abuse, non-QUERY lines inside a BATCH, and
-//! arguments on no-argument verbs.
+//! BATCH header abuse, non-QUERY lines inside a BATCH, arguments on
+//! no-argument verbs, and the dynamic-graph verbs — malformed UPDATE
+//! edge ops (bad sign, missing comma, non-numeric / out-of-range /
+//! self-loop endpoints, insert-of-present, delete-of-absent,
+//! duplicate-staged, op-count cap) plus COMMIT with nothing staged.
 
 use std::sync::Arc;
 use std::time::Duration;
 
 use dumato::engine::EngineConfig;
-use dumato::graph::generators;
+use dumato::graph::{generators, GraphStore};
 use dumato::service::{serve_lines, Service, ServiceConfig};
 use dumato::util::Rng;
 
 fn tiny_service() -> Service {
-    Service::start(
-        Arc::new(generators::erdos_renyi(20, 0.3, 13)),
+    Service::open(
+        GraphStore::new(Arc::new(generators::erdos_renyi(20, 0.3, 13))),
         ServiceConfig {
             engine: EngineConfig {
                 warps: 32,
@@ -66,9 +69,11 @@ fn malformed_lines_get_distinct_errors_and_never_kill_the_session() {
     for i in 0..60 {
         // unknown verbs: junk words that are not in the vocabulary
         let verb = junk(&mut rng, 3 + i % 8).replace(' ', "_");
-        let known = ["QUERY", "BATCH", "STATS", "INVALIDATE", "QUIT"]
-            .iter()
-            .any(|k| verb.eq_ignore_ascii_case(k));
+        let known = [
+            "QUERY", "BATCH", "STATS", "INVALIDATE", "QUIT", "UPDATE", "COMMIT", "EPOCH",
+        ]
+        .iter()
+        .any(|k| verb.eq_ignore_ascii_case(k));
         if !known {
             cases.push((format!("{verb} 0-1,1-2"), "unknown verb"));
         }
@@ -113,8 +118,92 @@ fn malformed_lines_get_distinct_errors_and_never_kill_the_session() {
     }
     for _ in 0..30 {
         // arguments on no-argument verbs
-        let verb = ["STATS", "INVALIDATE", "QUIT"][rng.below(3) as usize];
+        let verb = ["STATS", "INVALIDATE", "QUIT", "COMMIT", "EPOCH"][rng.below(5) as usize];
         cases.push((format!("{verb} {}", junk(&mut rng, 5)), "no arguments"));
+    }
+
+    // -- dynamic-graph verbs -------------------------------------------
+    // a twin of tiny_service's graph, so insert-of-present /
+    // delete-of-absent cases name real edges instead of guessed ones
+    let twin = generators::erdos_renyi(20, 0.3, 13);
+    let mut present = Vec::new();
+    let mut absent = Vec::new();
+    for u in 0..20u32 {
+        for v in (u + 1)..20 {
+            if twin.has_edge(u, v) {
+                present.push((u, v));
+            } else {
+                absent.push((u, v));
+            }
+        }
+    }
+    assert!(present.len() >= 5 && absent.len() >= 9, "seed 13 twin drifted");
+
+    for _ in 0..3 {
+        // COMMIT with nothing staged — must come before any case that
+        // leaves a successfully staged op behind (the duplicates below)
+        cases.push(("COMMIT".to_string(), "nothing staged"));
+    }
+    for _ in 0..5 {
+        // UPDATE with no ops at all
+        cases.push(("UPDATE".to_string(), "at least one edge op"));
+    }
+    for _ in 0..10 {
+        // stray ';' making an empty op
+        let (u, v) = absent[rng.below(absent.len() as u64) as usize];
+        cases.push((format!("UPDATE +{u},{v};;-{u},{v}"), "empty edge op"));
+    }
+    for _ in 0..15 {
+        // bad sign: first char is neither '+' nor '-'
+        let c = ['*', '=', '~', '!', '^'][rng.below(5) as usize];
+        cases.push((
+            format!("UPDATE {c}{},{}", rng.below(20), rng.below(20)),
+            "must start with",
+        ));
+    }
+    for _ in 0..10 {
+        // no comma between the endpoints
+        cases.push((format!("UPDATE +{}", 100 + rng.below(900)), "malformed edge endpoints"));
+    }
+    for _ in 0..10 {
+        // non-numeric endpoint (leading 'x' keeps junk non-numeric)
+        cases.push((
+            format!("UPDATE +x{},{}", junk(&mut rng, 4).replace([',', ';'], ""), rng.below(20)),
+            "is not a vertex id",
+        ));
+    }
+    for _ in 0..10 {
+        // self-loops
+        let u = rng.below(20);
+        cases.push((format!("UPDATE +{u},{u}"), "self-loop"));
+    }
+    for _ in 0..10 {
+        // out-of-range ids (|V| = 20)
+        let u = rng.below(20);
+        let v = 20 + rng.below(1000);
+        cases.push((format!("UPDATE -{u},{v}"), "out of range"));
+    }
+    for i in 0..5 {
+        // insert of an edge the snapshot already has
+        let (u, v) = present[i];
+        cases.push((format!("UPDATE +{u},{v}"), "insert of already-present edge"));
+    }
+    for i in 0..5 {
+        // delete of an edge the snapshot never had
+        let (u, v) = absent[i];
+        cases.push((format!("UPDATE -{u},{v}"), "delete of absent edge"));
+    }
+    for _ in 0..3 {
+        // op-count cap (257 ops is still far under the line-length cap)
+        let crowded = vec!["+0,1"; 257].join(";");
+        cases.push((format!("UPDATE {crowded}"), "exceeding the 256 cap"));
+    }
+    for i in 0..4 {
+        // same edge twice in one line: the first op stages fine, the
+        // second fails — an ERR that intentionally leaves the first op
+        // pending (ops before the failing one remain staged)
+        let (u, v) = absent[5 + i];
+        cases.push((format!("UPDATE +{u},{v};+{u},{v}"), "already staged"));
     }
 
     // feed every case through one session, garbage then a valid probe

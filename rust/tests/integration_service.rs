@@ -13,7 +13,7 @@ use std::time::Duration;
 
 use dumato::apps::SubgraphQuery;
 use dumato::engine::{EngineConfig, Runner};
-use dumato::graph::{generators, CsrGraph};
+use dumato::graph::{generators, CsrGraph, GraphStore};
 use dumato::plan::parse_pattern;
 use dumato::service::{key_for_spec, Service, ServiceConfig, ServiceHandle};
 
@@ -26,8 +26,8 @@ fn small_engine() -> EngineConfig {
 }
 
 fn service_over(g: CsrGraph, window_ms: u64) -> Service {
-    Service::start(
-        Arc::new(g),
+    Service::open(
+        GraphStore::new(Arc::new(g)),
         ServiceConfig {
             engine: small_engine(),
             batch_window: Duration::from_millis(window_ms),
@@ -236,12 +236,63 @@ fn wire_protocol_end_to_end() {
 }
 
 #[test]
+fn wire_update_commit_roundtrip_adjusts_cached_count() {
+    // the ISSUE-8 acceptance demo, end to end over the wire: a cached
+    // count survives an UPDATE+COMMIT as an *adjusted* entry (epoch
+    // advanced, old-epoch entry unreachable, new count served warm)
+    use dumato::service::serve_lines;
+    let g = generators::erdos_renyi(26, 0.3, 41);
+    // an absent edge whose endpoints both have neighbors: inserting it
+    // strictly grows the wedge count, so a stale hit would be visible
+    let (u, v) = (0..26u32)
+        .flat_map(|a| ((a + 1)..26).map(move |b| (a, b)))
+        .find(|&(a, b)| !g.has_edge(a, b) && g.degree(a) > 0 && g.degree(b) > 0)
+        .expect("ER(26, 0.3) is nowhere near complete");
+    let pre = oneshot_count(&g, "0-1,1-2");
+    let svc = service_over(g, 2);
+    let h = svc.handle();
+
+    let input = format!(
+        "QUERY 0-1,1-2\n\
+         EPOCH\n\
+         UPDATE +{u},{v}\n\
+         EPOCH\n\
+         COMMIT\n\
+         QUERY 0-1,1-2\n\
+         STATS\n\
+         QUIT\n"
+    );
+    let mut out: Vec<u8> = Vec::new();
+    serve_lines(&h, input.as_bytes(), &mut out).unwrap();
+    let out = String::from_utf8(out).unwrap();
+    let lines: Vec<&str> = out.lines().collect();
+    assert_eq!(lines.len(), 8, "{out}");
+    assert!(lines[0].starts_with(&format!("OK count={pre} ")), "{out}");
+    assert_eq!(lines[1], "OK epoch=0 pending=0", "{out}");
+    assert_eq!(lines[2], "OK staged=1 pending=1", "{out}");
+    assert_eq!(lines[3], "OK epoch=0 pending=1", "staging must not advance the epoch: {out}");
+    assert_eq!(lines[4], "OK epoch=1 adjusted=1 invalidated=0", "{out}");
+    // the adjusted entry serves the *post*-commit count, warm
+    let post = oneshot_count(&h.graph(), "0-1,1-2");
+    assert!(post > pre, "inserting {u}-{v} must create wedges");
+    assert!(lines[5].starts_with(&format!("OK count={post} ")), "{out}");
+    assert!(lines[5].contains("hits=1/1"), "adjusted count must hit warm: {out}");
+    assert!(
+        lines[6].contains(" epoch=1 commits=1 adjusted=1"),
+        "{out}"
+    );
+    assert_eq!(lines[7], "OK bye", "{out}");
+    assert_eq!(h.epoch(), 1);
+    svc.shutdown();
+}
+
+#[test]
 fn faulted_runs_are_reported_and_never_cached() {
     // an undersized extensions slab faults the engine; the service must
     // surface the fault and must NOT serve the partial count later
     let g = generators::complete(64);
-    let svc = Service::start(
-        Arc::new(g),
+    let svc = Service::open(
+        GraphStore::new(Arc::new(g)),
         ServiceConfig {
             engine: EngineConfig {
                 warps: 64,
