@@ -1,0 +1,166 @@
+//! Frequent subgraph mining: support-threshold sweep, fused candidate
+//! rounds vs per-candidate sequential execution.
+//!
+//! ```
+//! cargo bench --bench fsm
+//! DUMATO_BENCH_SCALE=0.02 cargo bench --bench fsm        # CI smoke
+//! DUMATO_BENCH_JSON=1 cargo bench --bench fsm            # + BENCH_fsm.json
+//! ```
+//!
+//! Three in-bench asserts back the ISSUE-9 acceptance:
+//!
+//! - the engine-backed miner equals a naive CPU oracle (pattern keys
+//!   AND MNI supports) on a differential-sized labeled graph;
+//! - fused and sequential modes mine identical pattern sets at every
+//!   sweep cell, and a 2-device fleet agrees with a single device;
+//! - on the candidate-richest (lowest-support) cell, fusing each
+//!   level's candidate batch into one `PlanTrie` must clear >= 2x
+//!   modeled speedup over running the same candidates as singleton
+//!   plans — same-level candidates share their frequent-parent prefix,
+//!   so the trie pays the shared extension work once per round instead
+//!   of once per candidate. (Skipped only when the wall budget times a
+//!   cell out; budgets depend on host speed and must not flap CI.)
+
+#[path = "support.rs"]
+mod support;
+
+use std::sync::Arc;
+
+use dumato::apps::fsm::{mine, oracle_frequent, FsmConfig};
+use dumato::graph::{generators, CsrGraph, Label};
+use dumato::report::Table;
+use dumato::util::Rng;
+
+/// Label cardinality of the sweep dataset: enough alphabet to split the
+/// candidate lattice into many distinct labeled patterns per level.
+const CARDINALITY: u64 = 4;
+
+/// Attach uniform-random labels (fixed seed: rows must be reproducible).
+fn labeled(g: CsrGraph, cardinality: u64, seed: u64) -> Arc<CsrGraph> {
+    let n = g.num_vertices();
+    let mut rng = Rng::new(seed);
+    let labels: Vec<Label> = (0..n).map(|_| (rng.next_u64() % cardinality) as Label).collect();
+    Arc::new(g.with_labels(labels).expect("label vector sized to |V|"))
+}
+
+/// Differential gate: the miner must reproduce the brute-force oracle
+/// exactly before any of its times are worth gating.
+fn assert_oracle_agreement() {
+    let g = labeled(generators::erdos_renyi(14, 0.3, 11), 3, 0xf5_11);
+    for support in [1u64, 2] {
+        let r = mine(
+            &g,
+            &FsmConfig { support, max_size: 3, fuse: true, engine: support::engine_cfg() },
+        );
+        assert!(r.fault.is_none(), "engine fault: {:?}", r.fault);
+        assert!(!r.timed_out, "differential graph must fit the budget");
+        assert_eq!(
+            r.keys_with_support(),
+            oracle_frequent(&g, support, 3),
+            "support={support}: miner diverged from the CPU oracle"
+        );
+    }
+    println!("oracle differential: miner == brute-force CPU oracle (keys + MNI supports)");
+}
+
+fn main() {
+    support::print_env_banner("fsm");
+    assert_oracle_agreement();
+
+    let g = labeled(
+        generators::CITESEER.scaled(support::scale()).generate(1),
+        CARDINALITY,
+        0xf5_0f,
+    );
+    println!(
+        "dataset={} |V|={} |E|={} labels={}",
+        g.name(),
+        g.num_vertices(),
+        g.num_edges(),
+        CARDINALITY
+    );
+
+    let mut t = Table::new(
+        "FSM: fused candidate rounds vs per-candidate sequential runs (modeled seconds)",
+        &["support", "mode", "candidates", "frequent", "engine_runs", "sim_time", "speedup"],
+    );
+    let mut low_speedup: Option<f64> = None;
+
+    for (i, &supp) in [2u64, 4, 8, 16].iter().enumerate() {
+        let base = FsmConfig {
+            support: supp,
+            max_size: 3,
+            fuse: true,
+            engine: support::engine_cfg(),
+        };
+        let fused = mine(&g, &base);
+        let seq = mine(&g, &FsmConfig { fuse: false, ..base.clone() });
+        for r in [&fused, &seq] {
+            assert!(r.fault.is_none(), "engine fault: {:?}", r.fault);
+        }
+        let clean = !fused.timed_out && !seq.timed_out;
+        if clean {
+            assert_eq!(
+                fused.keys_with_support(),
+                seq.keys_with_support(),
+                "support={supp}: fused and sequential mining must agree"
+            );
+        }
+        let speedup =
+            if fused.sim_seconds > 0.0 { seq.sim_seconds / fused.sim_seconds } else { 0.0 };
+        if i == 0 && clean {
+            low_speedup = Some(speedup);
+        }
+        for (mode, r, sp) in [
+            ("fused", &fused, format!("{speedup:.2}")),
+            ("sequential", &seq, "-".to_string()),
+        ] {
+            let candidates: u64 = r.levels.iter().map(|l| l.candidates).sum();
+            t.row(vec![
+                supp.to_string(),
+                mode.to_string(),
+                candidates.to_string(),
+                r.frequent.len().to_string(),
+                r.engine_runs().to_string(),
+                if r.timed_out { "-".into() } else { format!("{:.6}", r.sim_seconds) },
+                sp,
+            ]);
+        }
+    }
+
+    print!("{}", t.render());
+
+    if let Some(speedup) = low_speedup {
+        println!("lowest support: modeled fused speedup {speedup:.2}x over sequential");
+        assert!(
+            speedup >= 2.0,
+            "ISSUE-9 acceptance: fusing a level's candidates must be >= 2x the \
+             sequential singleton runs at k=3 (got {speedup:.2}x)"
+        );
+    } else {
+        println!("note: timeout hit — skipping the fused-speedup acceptance assert");
+    }
+
+    // Fleet agreement on a mid-sweep cell: partitioned domains must
+    // OR-merge to the single-device MNI supports exactly.
+    let one = FsmConfig { support: 4, max_size: 3, fuse: true, engine: support::engine_cfg() };
+    let two = FsmConfig {
+        engine: dumato::engine::EngineConfig { devices: 2, ..support::engine_cfg() },
+        ..one.clone()
+    };
+    let r1 = mine(&g, &one);
+    let r2 = mine(&g, &two);
+    if !r1.timed_out && !r2.timed_out {
+        assert_eq!(
+            r1.keys_with_support(),
+            r2.keys_with_support(),
+            "2-device fleet diverged from the single device"
+        );
+        println!("device agreement: 2-device fleet == single device at support 4");
+    }
+
+    if std::env::var("DUMATO_BENCH_JSON").is_ok() {
+        std::fs::write("BENCH_fsm.json", t.to_json()).expect("write BENCH_fsm.json");
+        println!("wrote BENCH_fsm.json");
+    }
+}

@@ -2,12 +2,14 @@
 
 pub mod clique;
 pub mod delta;
+pub mod fsm;
 pub mod motif;
 pub mod quasi_clique;
 pub mod query;
 
 pub use clique::CliqueCount;
 pub use delta::{count_delta, DeltaReport};
+pub use fsm::{mine as fsm_mine, oracle_frequent, FrequentPattern, FsmConfig, FsmReport};
 pub use motif::MotifCount;
 pub use quasi_clique::QuasiCliqueCount;
 pub use query::{SubgraphQuery, SubgraphQuerySet};

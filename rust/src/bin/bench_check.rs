@@ -63,6 +63,13 @@ const SPECS: &[Spec] = &[
         key: &["batch", "mode"],
         metrics: &["sim_time"],
     },
+    // fsm rows carry count columns (candidates, frequent, engine_runs)
+    // and a higher-is-better speedup — only the modeled time is gated
+    Spec {
+        file: "BENCH_fsm.json",
+        key: &["support", "mode"],
+        metrics: &["sim_time"],
+    },
 ];
 
 // ---------------------------------------------------------------------

@@ -122,6 +122,13 @@ pub struct Aggregators {
     /// Per-leaf counters of a plan-trie run (`leaf_counts[i]` = matches
     /// of the trie's i-th pattern); empty outside trie jobs.
     pub leaf_counts: Vec<u64>,
+    /// Per-leaf MNI domain bitsets of a `run_trie_domains` job:
+    /// `domains[leaf][pos]` holds `|V|` bits (u64 words, lazily sized)
+    /// marking the distinct data vertices this warp matched at position
+    /// `pos` of the leaf's pattern. The runner OR-merges warps (and the
+    /// fleet devices), so the merged popcount minimum over positions is
+    /// the pattern's minimum-image support. Empty outside FSM jobs.
+    pub domains: Vec<Vec<Vec<u64>>>,
 }
 
 /// The warp execution context handed to `GpmAlgorithm::run`.
@@ -773,6 +780,59 @@ impl<'a> WarpContext<'a> {
     }
 
     // ------------------------------------------------------------------
+    // [A4] aggregate_trie_domains: fold the surviving candidates into the
+    // leaf's per-position MNI domain bitsets (Pangolin's frequent-
+    // subgraph support aggregator on the trie walk). On top of the leaf
+    // ballot it charges one scattered bitset-word read-modify-write per
+    // live candidate and per matched prefix vertex — domain words land
+    // at data-dependent addresses, so nothing coalesces (the realistic
+    // device shape is an atomicOr per lane).
+    // ------------------------------------------------------------------
+    pub fn aggregate_trie_domains(&mut self, trie: &crate::plan::trie::PlanTrie, node: usize) {
+        debug_assert_eq!(self.te.len(), self.te.k() - 1);
+        let nd = trie.node(node);
+        let leaf = nd.leaf.expect("leaf-depth trie nodes carry a counter slot");
+        let level = self.te.cur_level();
+        let live = self.te.live_count(level) as u64;
+        // ballot + slab stream: the same base charges as the leaf counter
+        self.prof
+            .simd_n((self.te.ext_len(level) as u64).div_ceil(WARP_SIZE as u64).max(1));
+        self.charge_slab_read(level);
+        if self.agg.leaf_counts.len() < trie.num_patterns() {
+            self.agg.leaf_counts.resize(trie.num_patterns(), 0);
+        }
+        self.agg.leaf_counts[leaf] += live;
+        if live == 0 {
+            return;
+        }
+        let k = self.te.k();
+        self.prof.simd(k - 1); // word/bit index compute for the prefix
+        self.prof.gld_raw(live + (k as u64 - 1));
+        let words = self.g.num_vertices().div_ceil(64);
+        if self.agg.domains.len() < trie.num_patterns() {
+            self.agg.domains.resize(trie.num_patterns(), Vec::new());
+        }
+        let doms = &mut self.agg.domains[leaf];
+        if doms.len() < k {
+            doms.resize(k, Vec::new());
+        }
+        fn mark(dom: &mut Vec<u64>, words: usize, v: VertexId) {
+            if dom.len() < words {
+                dom.resize(words, 0);
+            }
+            dom[(v >> 6) as usize] |= 1u64 << (v & 63);
+        }
+        for j in 0..k - 1 {
+            mark(&mut doms[j], words, self.te.vertex(j));
+        }
+        for &v in self.te.ext_slice(level) {
+            if v != INVALID_V {
+                mark(&mut doms[k - 1], words, v);
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
     // [MV] advance_trie: the trie walk's Move step. Forward pops the next
     // valid candidate and descends into the node's first child (charges
     // mirror move_); an exhausted level first tries the node's next
@@ -868,6 +928,18 @@ impl<'a> WarpContext<'a> {
     // pays for pattern divergence.
     // ------------------------------------------------------------------
     pub fn run_trie(&mut self, trie: &crate::plan::trie::PlanTrie) {
+        self.run_trie_impl(trie, false);
+    }
+
+    /// [`WarpContext::run_trie`] with MNI domain aggregation: identical
+    /// walk and identical per-leaf counts, but every leaf additionally
+    /// folds its live matches into per-position distinct-vertex bitsets
+    /// (`Aggregators::domains`) — the FSM support aggregator.
+    pub fn run_trie_domains(&mut self, trie: &crate::plan::trie::PlanTrie) {
+        self.run_trie_impl(trie, true);
+    }
+
+    fn run_trie_impl(&mut self, trie: &crate::plan::trie::PlanTrie, domains: bool) {
         let k = self.te.k();
         debug_assert_eq!(k, trie.k());
         while self.control() {
@@ -898,7 +970,11 @@ impl<'a> WarpContext<'a> {
             if self.extend_trie(trie, node) {
                 self.filter_trie(trie, node);
                 if len == k - 1 {
-                    self.aggregate_trie_leaf(trie, node);
+                    if domains {
+                        self.aggregate_trie_domains(trie, node);
+                    } else {
+                        self.aggregate_trie_leaf(trie, node);
+                    }
                 }
             }
             self.advance_trie(trie);

@@ -100,18 +100,21 @@ pub fn bisect_steps(len: usize) -> u64 {
 }
 
 /// Expected list sizes feeding the `auto` estimator, derived once per
-/// graph. All in adjacency words.
-#[derive(Clone, Copy, Debug)]
-struct DegreeStats {
+/// graph. All in adjacency words. Public so resident layers (the query
+/// service) can pin the statistics of one snapshot, reuse them across
+/// runs, and measure post-commit drift against a fresh scan.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DegreeStats {
     /// Plain mean degree (expected streamed-source size).
-    mean: f64,
+    pub mean: f64,
     /// Size-biased mean `Σd²/Σd` (expected degree of a traversal member,
     /// i.e. of a probed / merged / LUT-encoded backward list).
-    biased: f64,
+    pub biased: f64,
 }
 
 impl DegreeStats {
-    fn of(g: &CsrGraph) -> Self {
+    /// One O(V) degree scan of `g`.
+    pub fn of(g: &CsrGraph) -> Self {
         let n = g.num_vertices();
         if n == 0 {
             return Self { mean: 1.0, biased: 1.0 };
@@ -126,6 +129,17 @@ impl DegreeStats {
         let mean = (sum as f64 / n as f64).max(1.0);
         let biased = if sum == 0 { 1.0 } else { (sum2 as f64 / sum as f64).max(1.0) };
         Self { mean, biased }
+    }
+
+    /// Relative drift between two snapshots' statistics: the larger of
+    /// the two means' relative change (both floors are >= 1, so the
+    /// ratio is always finite). The service compares this against its
+    /// churn threshold to decide whether pinned `auto` tables are stale
+    /// enough to re-resolve after a commit — the same shape as the
+    /// orientation layer's re-orientation churn test.
+    pub fn drift(&self, fresh: &DegreeStats) -> f64 {
+        let rel = |a: f64, b: f64| (b - a).abs() / a.max(1.0);
+        rel(self.mean, fresh.mean).max(rel(self.biased, fresh.biased))
     }
 }
 
@@ -184,7 +198,20 @@ impl IntersectPlan {
         cost: &CostModel,
         strategy: IntersectStrategy,
     ) -> IntersectPlan {
-        let stats = DegreeStats::of(g);
+        Self::build_with_stats(plan, &DegreeStats::of(g), cost, strategy)
+    }
+
+    /// [`IntersectPlan::build`] against pre-computed degree statistics —
+    /// the resident-service path: the service pins one [`DegreeStats`]
+    /// per snapshot generation instead of paying the O(V) scan on every
+    /// run, and refreshes the pin only when a commit drifts past its
+    /// churn threshold.
+    pub fn build_with_stats(
+        plan: &ExecutionPlan,
+        stats: &DegreeStats,
+        cost: &CostModel,
+        strategy: IntersectStrategy,
+    ) -> IntersectPlan {
         let choices = (0..plan.k())
             .map(|pos| {
                 let nb = plan.backward[pos].len();
@@ -196,7 +223,7 @@ impl IntersectPlan {
                     IntersectStrategy::Merge => IntersectChoice::Merge,
                     IntersectStrategy::Bisect => IntersectChoice::Bisect,
                     IntersectStrategy::Bitmap => IntersectChoice::Bitmap,
-                    IntersectStrategy::Auto => Self::auto_choice(nb, restricted, &stats, cost),
+                    IntersectStrategy::Auto => Self::auto_choice(nb, restricted, stats, cost),
                 }
             })
             .collect();
@@ -215,7 +242,17 @@ impl IntersectPlan {
         cost: &CostModel,
         strategy: IntersectStrategy,
     ) -> IntersectPlan {
-        let stats = DegreeStats::of(g);
+        Self::build_for_trie_with_stats(trie, &DegreeStats::of(g), cost, strategy)
+    }
+
+    /// [`IntersectPlan::build_for_trie`] against pre-computed degree
+    /// statistics (see [`IntersectPlan::build_with_stats`]).
+    pub fn build_for_trie_with_stats(
+        trie: &crate::plan::trie::PlanTrie,
+        stats: &DegreeStats,
+        cost: &CostModel,
+        strategy: IntersectStrategy,
+    ) -> IntersectPlan {
         let choices = (0..trie.k())
             .map(|pos| {
                 let nb = trie.max_backward_at(pos);
@@ -227,7 +264,7 @@ impl IntersectPlan {
                     IntersectStrategy::Bisect => IntersectChoice::Bisect,
                     IntersectStrategy::Bitmap => IntersectChoice::Bitmap,
                     IntersectStrategy::Auto => {
-                        Self::auto_choice(nb, trie.any_restricted_at(pos), &stats, cost)
+                        Self::auto_choice(nb, trie.any_restricted_at(pos), stats, cost)
                     }
                 }
             })
@@ -381,6 +418,38 @@ mod tests {
         // regular graph: no skew, the two coincide
         let r = DegreeStats::of(&generators::cycle(30));
         assert!((r.biased - r.mean).abs() < 1e-9);
+    }
+
+    #[test]
+    fn drift_is_zero_on_self_and_scales_with_densification() {
+        let sparse = DegreeStats::of(&generators::cycle(48));
+        assert!(sparse.drift(&sparse).abs() < 1e-12);
+        // one extra edge on a 200-cycle: negligible drift
+        let near = DegreeStats { mean: sparse.mean * 1.005, biased: sparse.biased * 1.005 };
+        assert!(sparse.drift(&near) < 0.01);
+        // densifying most of the graph into a clique: order-of-magnitude
+        // drift, far past any sane churn threshold
+        let dense = DegreeStats::of(&generators::complete(48));
+        assert!(sparse.drift(&dense) > 5.0, "drift {}", sparse.drift(&dense));
+        // drift is symmetric in which snapshot grew
+        assert!(dense.drift(&sparse) > 0.5);
+    }
+
+    #[test]
+    fn stats_constructors_match_the_scanning_ones() {
+        let g = generators::erdos_renyi(50, 0.25, 7);
+        let stats = DegreeStats::of(&g);
+        let cost = CostModel::default();
+        let plan = ExecutionPlan::clique(4);
+        assert_eq!(
+            IntersectPlan::build(&plan, &g, &cost, IntersectStrategy::Auto),
+            IntersectPlan::build_with_stats(&plan, &stats, &cost, IntersectStrategy::Auto)
+        );
+        let trie = crate::plan::trie::PlanTrie::motifs(4);
+        assert_eq!(
+            IntersectPlan::build_for_trie(&trie, &g, &cost, IntersectStrategy::Auto),
+            IntersectPlan::build_for_trie_with_stats(&trie, &stats, &cost, IntersectStrategy::Auto)
+        );
     }
 
     #[test]

@@ -36,7 +36,7 @@ pub mod te;
 
 pub use arena::{ExtLayout, TeArena};
 pub use context::{Aggregators, ThreadScratch, WarpContext};
-pub use intersect::{IntersectChoice, IntersectPlan, IntersectStrategy};
+pub use intersect::{DegreeStats, IntersectChoice, IntersectPlan, IntersectStrategy};
 pub use runner::{EngineConfig, RunReport, Runner, SharedRun, WarpState};
 pub use scheduler::{DriveOutcome, SchedulerConfig, SegmentRunner};
 pub use segment::{SegmentControl, UnitTable};

@@ -129,6 +129,14 @@ pub struct EngineConfig {
     /// degree statistics and the cost model; the fixed strategies pin
     /// every multi-list level (ablation cells).
     pub intersect: IntersectStrategy,
+    /// Pre-resolved per-level intersection table. When set, the runner
+    /// (and each fleet device) installs it verbatim instead of
+    /// re-resolving from `intersect` + a fresh degree scan — the
+    /// resident-service path, where one snapshot serves many runs and
+    /// the O(V) scan per run is pure waste. The caller owns currency:
+    /// a table resolved on one snapshot is *heuristically* stale (never
+    /// incorrect) on another.
+    pub intersect_table: Option<IntersectPlan>,
     /// Per-level extensions-slab word **ceiling**: the graph-derived
     /// caps are clamped to `derived.min(cap)` (`TeArena::for_run`), so a
     /// generous value never inflates the pool. `None` (default) keeps
@@ -169,6 +177,7 @@ impl Default for EngineConfig {
             quantum_cycles: 2.0e6, // ~1.4 ms of device time per round
             layout: ExtLayout::Flat,
             intersect: IntersectStrategy::default(),
+            intersect_table: None,
             ext_slab_cap: None,
             steal: true,
             devices: 1,
@@ -211,6 +220,12 @@ pub struct RunReport {
     /// sum and `patterns` their canonical census, so consumers that don't
     /// care about leaf identity read the usual fields.
     pub leaf_counts: Vec<u64>,
+    /// Per-leaf MNI domains of a `run_trie_domains` job:
+    /// `domains[leaf][pos]` is a `|V|`-bit bitset (u64 words) of the
+    /// distinct data vertices matched at position `pos` of that leaf's
+    /// pattern. The minimum popcount over positions is the pattern's
+    /// minimum-image support. Empty for every other job shape.
+    pub domains: Vec<Vec<Vec<u64>>>,
     pub metrics: KernelMetrics,
     pub timed_out: bool,
     /// First structured engine fault of the run (`None` = clean). A
@@ -288,10 +303,11 @@ pub(crate) fn reduce_device(
     dict: Option<&CanonDict>,
     warps: &mut [WarpState],
     metrics: &mut KernelMetrics,
-) -> (u64, Vec<(u64, u64)>, Vec<StoredSubgraph>, Vec<u64>) {
+) -> (u64, Vec<(u64, u64)>, Vec<StoredSubgraph>, Vec<u64>, Vec<Vec<Vec<u64>>>) {
     let mut count = 0u64;
     let mut stored = Vec::new();
     let mut leaf_counts: Vec<u64> = Vec::new();
+    let mut domains: Vec<Vec<Vec<u64>>> = Vec::new();
     for w in warps.iter_mut() {
         count += w.agg.count;
         stored.append(&mut w.agg.stored);
@@ -301,6 +317,7 @@ pub(crate) fn reduce_device(
         for (i, &c) in w.agg.leaf_counts.iter().enumerate() {
             leaf_counts[i] += c;
         }
+        merge_domains(&mut domains, &w.agg.domains);
         metrics.total_insts += w.prof.insts;
         metrics.total_gld += w.prof.gld_transactions;
     }
@@ -325,7 +342,35 @@ pub(crate) fn reduce_device(
         }
     };
     patterns.sort_unstable();
-    (count, patterns, stored, leaf_counts)
+    (count, patterns, stored, leaf_counts, domains)
+}
+
+/// OR-merge per-warp (or per-device) MNI domain bitsets into `into`,
+/// growing it to cover every leaf/position/word the source carries.
+/// Union is the right fold: a vertex is in a position's domain when
+/// *any* unit matched it there. Shared with `multi::fleet`.
+pub(crate) fn merge_domains(into: &mut Vec<Vec<Vec<u64>>>, from: &[Vec<Vec<u64>>]) {
+    if from.is_empty() {
+        return;
+    }
+    if into.len() < from.len() {
+        into.resize(from.len(), Vec::new());
+    }
+    for (leaf, positions) in from.iter().enumerate() {
+        let dst = &mut into[leaf];
+        if dst.len() < positions.len() {
+            dst.resize(positions.len(), Vec::new());
+        }
+        for (pos, words) in positions.iter().enumerate() {
+            let dw = &mut dst[pos];
+            if dw.len() < words.len() {
+                dw.resize(words.len(), 0);
+            }
+            for (i, &w) in words.iter().enumerate() {
+                dw[i] |= w;
+            }
+        }
+    }
 }
 
 /// The engine entry point.
@@ -417,7 +462,9 @@ impl Runner {
         };
         let mut shared = SharedRun::new(k, algo.needs_edges(), dict);
         shared.cost = cfg.cost;
-        if let Some(p) = algo.plan() {
+        if let Some(table) = &cfg.intersect_table {
+            shared.intersect = table.clone();
+        } else if let Some(p) = algo.plan() {
             shared.intersect = IntersectPlan::build(p, g, &cfg.cost, cfg.intersect);
         } else if let Some(t) = algo.trie() {
             shared.intersect = IntersectPlan::build_for_trie(t, g, &cfg.cost, cfg.intersect);
@@ -541,7 +588,7 @@ impl Runner {
 
         // Reduction (CPU side, as in the paper).
         let mut warps: Vec<WarpState> = run.warps.into_inner();
-        let (mut count, mut patterns, stored, mut leaf_counts) =
+        let (mut count, mut patterns, stored, mut leaf_counts, mut domains) =
             reduce_device(k, shared.dict.as_deref(), &mut warps, &mut metrics);
         if let Some(t) = algo.trie() {
             // trie jobs count per leaf: the scalar total is the leaves'
@@ -549,6 +596,9 @@ impl Runner {
             leaf_counts.resize(t.num_patterns(), 0);
             count = leaf_counts.iter().sum();
             patterns = t.census(&leaf_counts);
+            if !domains.is_empty() {
+                domains.resize(t.num_patterns(), Vec::new());
+            }
         }
         metrics.wall_seconds = wall.secs();
         // The warp handles point into `arena`; drop them before it.
@@ -565,6 +615,7 @@ impl Runner {
             timed_out: outcome.timed_out,
             fault: shared.fault.get().cloned(),
             leaf_counts,
+            domains,
         }
     }
 

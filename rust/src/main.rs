@@ -22,7 +22,7 @@ use dumato::graph::{generators, GraphStats};
 use dumato::report::Table;
 use dumato::util::fmt_count;
 
-const FLAGS: &[&str] = &["lb", "wall", "unplanned", "orient", "planned"];
+const FLAGS: &[&str] = &["lb", "wall", "unplanned", "orient", "planned", "sequential"];
 
 fn main() {
     let raw: Vec<String> = std::env::args().skip(1).collect();
@@ -36,7 +36,7 @@ fn main() {
     }
 }
 
-const USAGE: &str = "usage: dumato <clique|motif|query|serve|stats|triangles|baseline> [options]
+const USAGE: &str = "usage: dumato <clique|motif|query|fsm|serve|stats|triangles|baseline> [options]
   common: --dataset NAME|FIXTURE|PATH --scale F --seed N --warps N --threads N --lb --timeout SECS
   intersection: --intersect auto|merge|bisect|bitmap (planned extends; auto = per-level cost-model choice)
   ordering: --ordering none|degree|degeneracy|random (relabel at load; counts are invariant)
@@ -57,10 +57,16 @@ const USAGE: &str = "usage: dumato <clique|motif|query|serve|stats|triangles|bas
          dumato query --dataset citeseer --pattern 4-cycle --pattern 4-path --pattern diamond
   oriented quickstart:
          dumato clique --dataset mico --k 5 --ordering degeneracy --orient
+  fsm: frequent subgraph mining (labeled, minimum-image support, non-induced)
+       --support S (MNI threshold, default 2) --max-size K (pattern vertices, default 3)
+       [--sequential] (one engine run per candidate instead of one fused trie per round)
+  fsm quickstart:
+         dumato fsm --dataset er:200,0.05 --label-cardinality 3 --support 5 --max-size 3
   serve: persistent query service on stdin/stdout
          (line protocol: QUERY/BATCH/UPDATE/COMMIT/EPOCH/STATS/INVALIDATE/QUIT)
          --batch-window-ms N (admission window, default 5) --max-batch N
          --plan-cache N --result-cache N (LRU capacities)
+         --selectivity-churn F (degree-drift threshold re-pinning intersect selectivity, default 0.25)
   serve quickstart:
          printf 'QUERY 0-1,1-2,2-0\\nSTATS\\nQUIT\\n' | dumato serve --dataset citeseer
   dynamic quickstart:
@@ -78,6 +84,7 @@ fn dispatch(raw: Vec<String>) -> Result<()> {
         "clique" => cmd_clique(&args),
         "motif" => cmd_motif(&args),
         "query" => cmd_query(&args),
+        "fsm" => cmd_fsm(&args),
         "serve" => cmd_serve(&args),
         "stats" => cmd_stats(&args),
         "triangles" => cmd_triangles(&args),
@@ -180,6 +187,81 @@ fn cmd_motif(args: &Args) -> Result<()> {
         t.row(vec![pattern_name(k, bm), fmt_count(c)]);
     }
     println!("{}", t.render());
+    Ok(())
+}
+
+/// Render a frequent pattern back into the labeled edge-list spec
+/// syntax `--pattern` accepts, so results paste straight into `query`.
+fn fsm_spec(f: &dumato::apps::FrequentPattern) -> String {
+    let k = f.adj.k;
+    let mut parts = Vec::new();
+    for a in 0..k {
+        for b in (a + 1)..k {
+            if f.adj.has_edge(a, b) {
+                parts.push(format!("{a}:{}-{b}:{}", f.labels[a], f.labels[b]));
+            }
+        }
+    }
+    parts.join(",")
+}
+
+fn cmd_fsm(args: &Args) -> Result<()> {
+    let g = graph_from(args)?;
+    let support: u64 = args.parse_or("support", 2)?;
+    let max_size: usize = args.parse_or("max-size", 3)?;
+    let engine = engine_config(args, 0.10)?;
+    let cfg = dumato::apps::FsmConfig {
+        support,
+        max_size,
+        fuse: !args.flag("sequential"),
+        engine,
+    };
+    println!(
+        "dataset={} |V|={} |E|={} labels={}",
+        g.name(),
+        g.num_vertices(),
+        g.num_edges(),
+        g.num_labels()
+    );
+    let g = std::sync::Arc::new(g);
+    let r = dumato::apps::fsm_mine(&g, &cfg);
+    println!(
+        "fsm support={} max_size={} mode={}  frequent={}  sim_time={:.4}s  engine_runs={}",
+        r.support,
+        r.max_size,
+        if cfg.fuse { "fused" } else { "sequential" },
+        r.frequent.len(),
+        r.sim_seconds,
+        r.engine_runs(),
+    );
+    if r.timed_out {
+        println!("  ** timed out — the frequent set may be incomplete **");
+    }
+    if let Some(f) = &r.fault {
+        println!("  ** engine fault — mining stopped early: {f} **");
+    }
+    let mut lt = Table::new(
+        "lattice levels".to_string(),
+        &["k", "candidates", "frequent", "rounds", "engine_runs"],
+    );
+    for l in &r.levels {
+        lt.row(vec![
+            l.k.to_string(),
+            l.candidates.to_string(),
+            l.frequent.to_string(),
+            l.rounds.to_string(),
+            l.engine_runs.to_string(),
+        ]);
+    }
+    println!("{}", lt.render());
+    let mut ft = Table::new(
+        format!("frequent patterns (MNI >= {support})"),
+        &["pattern", "support", "embeddings"],
+    );
+    for f in &r.frequent {
+        ft.row(vec![fsm_spec(f), fmt_count(f.support), fmt_count(f.embeddings)]);
+    }
+    println!("{}", ft.render());
     Ok(())
 }
 
@@ -387,6 +469,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_batch: args.parse_or("max-batch", 256usize)?,
         plan_cache_cap: args.parse_or("plan-cache", 128usize)?,
         result_cache_cap: args.parse_or("result-cache", 1024usize)?,
+        selectivity_churn: args
+            .parse_or("selectivity-churn", dumato::service::DEFAULT_SELECTIVITY_CHURN)?,
     };
     eprintln!(
         "serving {} ({} vertices), batch_window={:?}, plan_cache={}, result_cache={} \

@@ -80,9 +80,12 @@ impl DeviceFleet {
             None
         };
         // One intersection-choice resolution, replicated to every device:
-        // the fleet passes `--intersect` through unchanged, so per-level
-        // choices (and therefore charges) match the single-device engine.
-        let intersect = if let Some(p) = algo.plan() {
+        // the fleet passes `--intersect` through unchanged (and honors a
+        // caller-pinned `intersect_table` exactly like the single-device
+        // runner), so per-level choices and charges match it.
+        let intersect = if let Some(table) = &cfg.intersect_table {
+            table.clone()
+        } else if let Some(p) = algo.plan() {
             crate::engine::IntersectPlan::build(p, g, &cfg.cost, cfg.intersect)
         } else if let Some(t) = algo.trie() {
             crate::engine::IntersectPlan::build_for_trie(t, g, &cfg.cost, cfg.intersect)
@@ -288,8 +291,9 @@ impl DeviceFleet {
         let mut stored = Vec::new();
         let mut merged: BTreeMap<u64, u64> = BTreeMap::new();
         let mut leaf_counts: Vec<u64> = Vec::new();
+        let mut domains: Vec<Vec<Vec<u64>>> = Vec::new();
         for ws in warp_sets.iter_mut() {
-            let (c, pats, mut st, lc) = reduce_device(k, dict.as_deref(), ws, &mut metrics);
+            let (c, pats, mut st, lc, dom) = reduce_device(k, dict.as_deref(), ws, &mut metrics);
             count += c;
             stored.append(&mut st);
             for (bm, n) in pats {
@@ -301,6 +305,7 @@ impl DeviceFleet {
             for (i, &n) in lc.iter().enumerate() {
                 leaf_counts[i] += n;
             }
+            crate::engine::runner::merge_domains(&mut domains, &dom);
         }
         let mut patterns: Vec<(u64, u64)> = merged.into_iter().collect();
         if let Some(t) = algo.trie() {
@@ -309,6 +314,9 @@ impl DeviceFleet {
             leaf_counts.resize(t.num_patterns(), 0);
             count = leaf_counts.iter().sum();
             patterns = t.census(&leaf_counts);
+            if !domains.is_empty() {
+                domains.resize(t.num_patterns(), Vec::new());
+            }
         }
         metrics.wall_seconds = wall.secs();
         // The warp handles point into the arenas; drop them first.
@@ -322,6 +330,7 @@ impl DeviceFleet {
             patterns,
             stored,
             leaf_counts,
+            domains,
             metrics,
             timed_out,
             fault: shareds.iter().find_map(|s| s.fault.get().cloned()),

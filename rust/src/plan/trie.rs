@@ -34,7 +34,7 @@ use crate::canon::dict::CanonDict;
 use crate::canon::patterns::all_patterns;
 use crate::graph::{CsrGraph, FrontierSet, Label, VertexId};
 
-use super::{ExecutionPlan, FrontierReq};
+use super::{pattern_key, ExecutionPlan, FrontierReq, MAX_PARSE_K};
 
 /// One merged per-level recipe: the plan data every pattern sharing this
 /// node agrees on for matching position `depth`.
@@ -116,8 +116,9 @@ pub struct PlanTrie {
 impl PlanTrie {
     /// Merge a pattern set's plans into a trie. The set must be
     /// non-empty, uniform in k (>= 3), uniform in orientation and
-    /// labeledness, and duplicate-free (by canonical bitmap + labels) —
-    /// each violation carries its own distinct error.
+    /// labeledness, and duplicate-free (by [`pattern_key`] for labeled
+    /// plans, canonical bitmap otherwise) — each violation carries its
+    /// own distinct error.
     pub fn build(plans: &[ExecutionPlan]) -> Result<PlanTrie> {
         let Some(first) = plans.first() else {
             bail!("empty pattern set (a plan trie needs at least one pattern)");
@@ -148,12 +149,27 @@ impl PlanTrie {
         // Dedup key: canonical identity plus the delta requirement
         // vector — two frontier-pin variants of one pattern are
         // distinct trie members (their counts are summed by the delta
-        // driver, never conflated).
+        // driver, never conflated). Labeled plans key on the full
+        // [`pattern_key`] (canonically *minimized* label vector), not
+        // the matching-order `p.labels`: two distinct labeled patterns
+        // can share a canonical bitmap *and* a matching-order label
+        // vector (the planner roots both at their rare-label vertex),
+        // and the weaker key used to reject such pairs as duplicates —
+        // silently degrading fusable service batches to singleton
+        // tries. Unlabeled plans (and oversized labeled ones, where the
+        // k! minimization is not affordable) keep the bitmap key, which
+        // is exact for them.
         type SeenKey = (u64, Option<Vec<Label>>, Option<(usize, Vec<FrontierReq>)>);
         let mut seen: Vec<SeenKey> = Vec::with_capacity(plans.len());
         for p in plans {
             let dkey = p.delta.as_ref().map(|d| (d.pinned, d.reqs.clone()));
-            let key = (p.canonical, p.labels.clone(), dkey);
+            let key = match &p.labels {
+                Some(_) if k <= MAX_PARSE_K => {
+                    let pk = pattern_key(&p.pat, p.labels.as_deref());
+                    (pk.bitmap, pk.labels, dkey)
+                }
+                _ => (p.canonical, p.labels.clone(), dkey),
+            };
             if seen.contains(&key) {
                 bail!(
                     "duplicate pattern in set (canonical bitmap {:#x})",
@@ -484,6 +500,47 @@ mod tests {
             PlanTrie::build(&[variants[0].clone(), other.remove(0)]).unwrap_err()
         );
         assert!(err.contains("mixes delta bindings"), "{err}");
+    }
+
+    #[test]
+    fn labeled_plans_colliding_on_the_weak_key_still_fuse() {
+        // Two distinct labeled 3-paths: A-B-A (labels [0,1,0]) and
+        // A-A-B (labels [0,0,1]). With label 1 rare (freq [10, 2]) the
+        // planner roots both at their label-1 vertex, so both compile
+        // to matching-order labels [1, 0, 0] over the same canonical
+        // path bitmap — the pre-fix dedup key (canonical, p.labels)
+        // collided and `build` bailed, degrading service batches to
+        // singleton tries. Their pattern keys differ, so they are
+        // genuinely distinct patterns and must fuse.
+        let m = mat(3, &[(0, 1), (1, 2)]);
+        let freq = [10u64, 2];
+        let p1 = ExecutionPlan::build_labeled(&m, &[0, 1, 0], Some(&freq));
+        let p2 = ExecutionPlan::build_labeled(&m, &[0, 0, 1], Some(&freq));
+        // preconditions: the weak key really collides on this pair (if
+        // a planner heuristic change breaks this, the test needs a new
+        // colliding pair — fail loudly rather than pass vacuously)
+        assert_eq!(p1.canonical, p2.canonical, "collision precondition");
+        assert_eq!(p1.labels, p2.labels, "collision precondition");
+        assert_ne!(
+            pattern_key(&p1.pat, p1.labels.as_deref()),
+            pattern_key(&p2.pat, p2.labels.as_deref()),
+            "the pair must still be distinct by pattern key"
+        );
+        let t = PlanTrie::build(&[p1.clone(), p2.clone()])
+            .expect("distinct-by-pattern-key labeled plans must fuse");
+        assert_eq!(t.num_patterns(), 2);
+        let leaves: Vec<usize> =
+            (0..t.num_nodes()).filter(|&n| t.node(n).leaf.is_some()).collect();
+        assert_eq!(leaves.len(), 2, "each pattern keeps its own leaf slot");
+        // genuinely identical labeled plans are still rejected
+        let err =
+            format!("{:#}", PlanTrie::build(&[p1.clone(), p1]).unwrap_err());
+        assert!(err.contains("duplicate pattern"), "{err}");
+        // and a *relabeled spelling* of the same pattern (B-A-A) is a
+        // duplicate of A-A-B under the canonical key, not a new member
+        let p3 = ExecutionPlan::build_labeled(&m, &[1, 0, 0], Some(&freq));
+        let err = format!("{:#}", PlanTrie::build(&[p2, p3]).unwrap_err());
+        assert!(err.contains("duplicate pattern"), "{err}");
     }
 
     #[test]

@@ -36,6 +36,17 @@
 //! evicted plans) fall back to invalidation; the explicit `INVALIDATE`
 //! verb remains for callers that mutate the store out-of-band.
 //!
+//! Selectivity does go stale, though, and the service owns that too:
+//! it pins the snapshot's [`DegreeStats`](crate::engine::DegreeStats)
+//! at open, resolves every batch's per-level intersect table from the
+//! pin (instead of rescanning degrees per run), and re-pins at commit
+//! when the fresh statistics drift past
+//! [`ServiceConfig::selectivity_churn`] — the same churn-threshold
+//! idiom the delta layer's reorientation uses. Small commits keep the
+//! pin (and the scan amortization); a densifying commit refreshes it
+//! so the cost model stops choosing strategies for a graph that no
+//! longer exists.
+//!
 //! Latency is *modeled*, like every other time in this codebase: the
 //! service keeps a monotone clock of accumulated engine
 //! `sim_seconds`, a query's latency is the clock at its batch's
@@ -76,7 +87,17 @@ pub struct ServiceConfig {
     pub plan_cache_cap: usize,
     /// LRU capacity of the result cache (entries).
     pub result_cache_cap: usize,
+    /// Relative drift of the pinned [`DegreeStats`](crate::engine::DegreeStats)
+    /// (max over mean and size-biased degree) a commit must exceed to
+    /// re-pin the intersect-selectivity statistics. Below it the pin —
+    /// and the per-run degree-scan amortization — is kept.
+    pub selectivity_churn: f64,
 }
+
+/// Default [`ServiceConfig::selectivity_churn`]: a commit changing the
+/// expected list sizes by a quarter is what typically moves an
+/// intersect choice at the cost-model's crossover points.
+pub const DEFAULT_SELECTIVITY_CHURN: f64 = 0.25;
 
 impl Default for ServiceConfig {
     fn default() -> Self {
@@ -86,6 +107,7 @@ impl Default for ServiceConfig {
             max_batch: 256,
             plan_cache_cap: 128,
             result_cache_cap: 1024,
+            selectivity_churn: DEFAULT_SELECTIVITY_CHURN,
         }
     }
 }
@@ -121,6 +143,10 @@ pub struct ServiceStats {
     pub commits: u64,
     /// Cached counts incrementally adjusted across those commits.
     pub adjusted_counts: u64,
+    /// Commits whose degree-statistics drift exceeded
+    /// [`ServiceConfig::selectivity_churn`] and re-pinned the
+    /// intersect-selectivity statistics.
+    pub selectivity_refreshes: u64,
 }
 
 /// Compute a result/plan cache key from a pattern spec string —

@@ -11,10 +11,11 @@
 //! as one fused [`PlanTrie`] through [`Runner::run_shared`] against
 //! the shared snapshot.
 //!
-//! `PlanTrie::build` deduplicates on `(canonical, labels)` — weaker
-//! than [`PatternKey`] for labeled patterns — so two *distinct* keys
-//! can, rarely, collide inside one trie. The worker falls back to
-//! singleton tries for that batch instead of failing the queries.
+//! `PlanTrie::build` deduplicates on the same [`PatternKey`] identity
+//! the admission layer groups by, so a batch of distinct keys always
+//! fuses. The singleton-trie fallback below survives only as a belt
+//! against future key skew — it no longer fires for labeled batches
+//! that merely share a canonical bitmap and matching-order labels.
 
 use std::io::{BufRead, Write};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -26,7 +27,7 @@ use anyhow::{anyhow, ensure, Result};
 
 use crate::api::GpmAlgorithm;
 use crate::apps::count_delta;
-use crate::engine::{Runner, WarpContext};
+use crate::engine::{DegreeStats, EngineConfig, IntersectPlan, Runner, WarpContext};
 use crate::graph::{CsrGraph, GraphStore, UpdateBatch};
 use crate::plan::trie::PlanTrie;
 use crate::plan::{parse_pattern_set, ExecutionPlan, PatternKey};
@@ -84,6 +85,7 @@ struct Counters {
     cold_patterns: u64,
     commits: u64,
     adjusted: u64,
+    selectivity_refreshes: u64,
 }
 
 struct Inner {
@@ -94,6 +96,14 @@ struct Inner {
     /// Label-frequency view for labeled plan selectivity; refreshed at
     /// every commit (it describes the current snapshot).
     freq: Mutex<Vec<u64>>,
+    /// Pinned degree statistics feeding the per-batch intersect-choice
+    /// tables: one O(V) scan at open instead of one per engine run.
+    /// Pinning alone would reintroduce the stale-selectivity bug (every
+    /// post-commit batch resolving strategies against the open-time
+    /// graph shape), so [`ServiceHandle::commit_updates`] re-pins
+    /// whenever the fresh statistics drift past
+    /// [`ServiceConfig::selectivity_churn`].
+    stats: Mutex<DegreeStats>,
     /// The wire session's staged update batch (`UPDATE` accumulates,
     /// `COMMIT` takes).
     pending: Mutex<Option<UpdateBatch>>,
@@ -136,6 +146,7 @@ impl Service {
             "the query service serves undirected snapshots (got an oriented graph)"
         );
         let freq = snap.graph.label_frequencies();
+        let stats = DegreeStats::of(&snap.graph);
         let mut results = ResultCache::new(cfg.result_cache_cap);
         results.set_epoch(snap.epoch);
         let inner = Arc::new(Inner {
@@ -144,6 +155,7 @@ impl Service {
             results: Mutex::new(results),
             cfg,
             freq: Mutex::new(freq),
+            stats: Mutex::new(stats),
             pending: Mutex::new(None),
             queue: Mutex::new(Vec::new()),
             wake: Condvar::new(),
@@ -298,7 +310,15 @@ impl ServiceHandle {
             epoch: self.inner.store.epoch(),
             commits: ctr.commits,
             adjusted_counts: ctr.adjusted,
+            selectivity_refreshes: ctr.selectivity_refreshes,
         }
+    }
+
+    /// The pinned degree statistics current batches resolve their
+    /// intersect tables from (open-time scan, re-pinned by churny
+    /// commits). Introspection for tests and the ablation banner.
+    pub fn pinned_degree_stats(&self) -> crate::engine::DegreeStats {
+        *self.inner.stats.lock().unwrap()
     }
 
     /// The current snapshot's graph. Valid (and immutable) forever;
@@ -403,6 +423,19 @@ impl ServiceHandle {
         }
         drop(rc);
         *inner.freq.lock().unwrap() = committed.new.graph.label_frequencies();
+        // Re-pin the intersect-selectivity statistics only past the
+        // churn threshold (the delta layer's reorientation idiom): a
+        // trickle of edges keeps the pinned scan, a densifying commit
+        // moves the cost model onto the graph that actually exists now.
+        let refreshed = {
+            let fresh = DegreeStats::of(&committed.new.graph);
+            let mut pinned = inner.stats.lock().unwrap();
+            let churn = pinned.drift(&fresh) > inner.cfg.selectivity_churn;
+            if churn {
+                *pinned = fresh;
+            }
+            churn
+        };
         {
             let mut c = inner.clock.lock().unwrap();
             *c += sim;
@@ -411,12 +444,14 @@ impl ServiceHandle {
             let mut ctr = inner.counters.lock().unwrap();
             ctr.commits += 1;
             ctr.adjusted += adjusted as u64;
+            ctr.selectivity_refreshes += refreshed as u64;
         }
         Ok(CommitOutcome {
             epoch: committed.new.epoch,
             adjusted,
             invalidated,
             sim_seconds: sim,
+            selectivity_refreshed: refreshed,
         })
     }
 }
@@ -432,6 +467,9 @@ pub struct CommitOutcome {
     pub invalidated: usize,
     /// Modeled engine seconds the delta runs charged.
     pub sim_seconds: f64,
+    /// Whether this commit's degree drift re-pinned the
+    /// intersect-selectivity statistics.
+    pub selectivity_refreshed: bool,
 }
 
 /// The fused batch as a trie algorithm (the `SubgraphQuerySet` shape,
@@ -537,18 +575,25 @@ fn execute_batch(inner: &Arc<Inner>, batch: Batch) {
     };
 
     // 3) execute: one fused trie, or singleton fallback on a
-    //    key-collision build error
+    //    key-collision build error. Intersect tables resolve from the
+    //    pinned degree statistics (one open-time scan, re-pinned on
+    //    churny commits) instead of a per-run rescan of the snapshot.
     let mut leaf: Vec<u64> = vec![0; to_run.len()];
     let mut sim_cost = 0.0;
     let mut timed_out = false;
     let mut fault: Option<String> = None;
     let mut engine_runs = 0u64;
     if !to_run.is_empty() {
+        let stats = *inner.stats.lock().unwrap();
+        let base = &inner.cfg.engine;
         let plan_vec: Vec<ExecutionPlan> = plans.iter().map(|p| (**p).clone()).collect();
         match PlanTrie::build(&plan_vec) {
             Ok(trie) => {
+                let table =
+                    IntersectPlan::build_for_trie_with_stats(&trie, &stats, &base.cost, base.intersect);
+                let ecfg = EngineConfig { intersect_table: Some(table), ..base.clone() };
                 let job = FusedJob { trie };
-                let r = Runner::run_shared(&snap.graph, &job, &inner.cfg.engine);
+                let r = Runner::run_shared(&snap.graph, &job, &ecfg);
                 assert_eq!(r.leaf_counts.len(), leaf.len(), "one leaf per cold pattern");
                 leaf.copy_from_slice(&r.leaf_counts);
                 sim_cost += r.metrics.sim_seconds;
@@ -558,10 +603,13 @@ fn execute_batch(inner: &Arc<Inner>, batch: Batch) {
             }
             Err(_) => {
                 for (j, p) in plan_vec.iter().enumerate() {
+                    let table =
+                        IntersectPlan::build_with_stats(p, &stats, &base.cost, base.intersect);
+                    let ecfg = EngineConfig { intersect_table: Some(table), ..base.clone() };
                     let trie = PlanTrie::build(std::slice::from_ref(p))
                         .expect("a singleton pattern set is always fusable");
                     let job = FusedJob { trie };
-                    let r = Runner::run_shared(&snap.graph, &job, &inner.cfg.engine);
+                    let r = Runner::run_shared(&snap.graph, &job, &ecfg);
                     leaf[j] = r.leaf_counts.first().copied().unwrap_or(r.count);
                     sim_cost += r.metrics.sim_seconds;
                     timed_out |= r.timed_out;
@@ -664,7 +712,7 @@ pub fn serve_lines<R: BufRead, W: Write>(
                     "OK queries={} patterns={} batches={} engine_runs={} cold={} \
                      plan_hits={} plan_misses={} plan_evictions={} result_hits={} \
                      result_misses={} result_evictions={} invalidations={} sim_seconds={:.6} \
-                     epoch={} commits={} adjusted={}",
+                     epoch={} commits={} adjusted={} selectivity_refreshes={}",
                     s.queries,
                     s.patterns,
                     s.batches,
@@ -680,7 +728,8 @@ pub fn serve_lines<R: BufRead, W: Write>(
                     s.sim_seconds,
                     s.epoch,
                     s.commits,
-                    s.adjusted_counts
+                    s.adjusted_counts,
+                    s.selectivity_refreshes
                 )?;
             }
             Ok(Request::Invalidate) => {
@@ -964,5 +1013,104 @@ mod tests {
             "mixed k"
         );
         assert_eq!(h.stats().cold_patterns, 0, "nothing reached the engine");
+    }
+
+    #[test]
+    fn colliding_labeled_patterns_fuse_into_one_engine_run() {
+        // Regression for the silent fused-batch degradation: these two
+        // 3-paths are non-isomorphic (rare label at the center vs at an
+        // end) but share a canonical bitmap AND a matching-order label
+        // vector once the planner roots both at their rare-label vertex
+        // (label 1 is the rare one here: 10 zeros, 2 ones). The old trie
+        // dedup keyed on exactly that weak pair and rejected the batch
+        // as "duplicate", silently downgrading it to singleton runs.
+        let labels: Vec<crate::graph::Label> =
+            (0..12).map(|v| u32::from(v >= 10)).collect();
+        let g = Arc::new(generators::cycle(12).with_labels(labels).unwrap());
+        let svc = Service::open(GraphStore::new(g), tiny_cfg());
+        let h = svc.handle();
+        let specs = vec![
+            "0:0-1:1,1:1-2:0".to_string(), // rare label at the center
+            "0:0-1:0,1:0-2:1".to_string(), // rare label at an end
+        ];
+        let out = h.query(&specs).unwrap();
+        assert!(out.fault.is_none(), "{:?}", out.fault);
+        let s = h.stats();
+        assert_eq!(s.cold_patterns, 2, "both patterns ran cold");
+        assert_eq!(
+            s.engine_runs, 1,
+            "distinct-key labeled patterns must fuse into one run"
+        );
+        svc.shutdown();
+    }
+
+    #[test]
+    fn commit_drift_repins_selectivity_and_flips_the_intersect_choice() {
+        use crate::engine::{DegreeStats, IntersectChoice, IntersectPlan, IntersectStrategy};
+        use crate::vgpu::CostModel;
+        // mem_cycles = 1 puts the three estimators within a few cycles
+        // of each other, so the degree shape decides the choice.
+        let cost = CostModel { mem_cycles: 1.0, cpi: 4.0, ..CostModel::default() };
+        let cfg = ServiceConfig {
+            engine: EngineConfig { warps: 16, threads: 1, cost, ..EngineConfig::default() },
+            batch_window: Duration::from_millis(0),
+            ..ServiceConfig::default()
+        };
+        let g = Arc::new(generators::cycle(48));
+        let svc = Service::open(GraphStore::new(g), cfg);
+        let h = svc.handle();
+        let mut tri = crate::canon::bitmap::AdjMat::empty(3);
+        tri.set_edge(0, 1);
+        tri.set_edge(1, 2);
+        tri.set_edge(0, 2);
+        let plan = ExecutionPlan::build(&tri);
+        let before = h.pinned_degree_stats();
+        let c0 = IntersectPlan::build_with_stats(&plan, &before, &cost, IntersectStrategy::Auto)
+            .choice(2);
+        assert_eq!(c0, IntersectChoice::Bisect, "sparse cycle favors bisect");
+        // densify: clique over vertices {0..39} (cycle edges there exist)
+        let mut ops = Vec::new();
+        for a in 0..40u32 {
+            for b in (a + 2)..40 {
+                ops.push(format!("+{a},{b}"));
+            }
+        }
+        h.stage_updates(&ops).unwrap();
+        let out = h.commit_updates().unwrap();
+        assert!(out.selectivity_refreshed, "15x mean-degree drift must re-pin");
+        assert_eq!(h.stats().selectivity_refreshes, 1);
+        let after = h.pinned_degree_stats();
+        assert!(before.drift(&after) > super::super::DEFAULT_SELECTIVITY_CHURN);
+        assert!(
+            after.drift(&DegreeStats::of(&h.graph())) < 1e-12,
+            "the pin must match a fresh scan of the committed graph"
+        );
+        let c1 = IntersectPlan::build_with_stats(&plan, &after, &cost, IntersectStrategy::Auto)
+            .choice(2);
+        assert_eq!(
+            c1,
+            IntersectChoice::Bitmap,
+            "the dense core moves the estimator off bisect"
+        );
+        assert_ne!(c0, c1, "the commit must invert the resolved choice");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn small_commits_keep_the_selectivity_pin() {
+        let g = Arc::new(generators::cycle(200));
+        let svc = Service::open(GraphStore::new(g), tiny_cfg());
+        let h = svc.handle();
+        let before = h.pinned_degree_stats();
+        h.stage_updates(&["+0,100".to_string()]).unwrap();
+        let out = h.commit_updates().unwrap();
+        assert!(
+            !out.selectivity_refreshed,
+            "one chord in a 200-cycle is below the churn threshold"
+        );
+        assert_eq!(h.stats().selectivity_refreshes, 0);
+        assert_eq!(h.pinned_degree_stats(), before, "the pin is untouched");
+        assert_eq!(h.epoch(), 1, "the commit itself still landed");
+        svc.shutdown();
     }
 }
