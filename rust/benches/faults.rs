@@ -1,0 +1,124 @@
+//! Fault-tolerance layer: modeled cost of surviving a device loss.
+//!
+//! ```
+//! cargo bench --bench faults
+//! DUMATO_BENCH_SCALE=0.02 cargo bench --bench faults        # CI smoke
+//! DUMATO_BENCH_JSON=1 cargo bench --bench faults            # + BENCH_faults.json
+//! ```
+//!
+//! Each cell runs the same job twice on a fleet: once fault-free
+//! (`clean`) and once with a deterministic `death@0:1` injected at the
+//! first epoch barrier (`recovery`) — the fleet quarantines the victim
+//! and re-deals its remaining work to the survivors. The `overhead`
+//! column is recovery/clean modeled time (not gated; both `sim_time`
+//! rows are).
+//!
+//! In-bench asserts (skipped only if a cell hits the wall budget):
+//! recovered counts are bit-identical to the clean run's, the recovered
+//! report carries `fault == None` with exactly one recorded device
+//! fault, and the fused trie job recovers per-pattern counts too.
+
+#[path = "support.rs"]
+mod support;
+
+use dumato::apps::{CliqueCount, MotifCount};
+use dumato::engine::{EngineConfig, RunReport, Runner};
+use dumato::graph::generators;
+use dumato::report::Table;
+use dumato::vgpu::FaultPlan;
+
+fn cfg(devices: usize, specs: &[&str]) -> EngineConfig {
+    let specs: Vec<String> = specs.iter().map(|s| s.to_string()).collect();
+    EngineConfig {
+        devices,
+        faults: FaultPlan::parse(&specs).expect("bench specs are well-formed"),
+        ..support::engine_cfg()
+    }
+}
+
+/// Check one clean/recovery pair and append its two table rows.
+fn record(t: &mut Table, app: &str, devices: usize, clean: &RunReport, rec: &RunReport) -> bool {
+    let timed_out = clean.timed_out || rec.timed_out;
+    if !timed_out {
+        assert!(
+            rec.fault.is_none(),
+            "{app} devices={devices}: recovery run reports fatal {:?}",
+            rec.fault
+        );
+        assert_eq!(
+            rec.count, clean.count,
+            "{app} devices={devices}: recovered count drifted"
+        );
+        assert_eq!(
+            rec.patterns, clean.patterns,
+            "{app} devices={devices}: recovered per-pattern counts drifted"
+        );
+        assert_eq!(
+            rec.metrics.device_faults, 1,
+            "{app} devices={devices}: expected exactly one recorded device fault"
+        );
+    }
+    let clean_sim = clean.metrics.sim_seconds;
+    let rec_sim = rec.metrics.sim_seconds;
+    let overhead = if clean_sim > 0.0 { rec_sim / clean_sim } else { 0.0 };
+    t.row(vec![
+        app.to_string(),
+        devices.to_string(),
+        "clean".to_string(),
+        format!("{clean_sim:.6}"),
+        "-".to_string(),
+    ]);
+    t.row(vec![
+        app.to_string(),
+        devices.to_string(),
+        "recovery".to_string(),
+        format!("{rec_sim:.6}"),
+        format!("{overhead:.2}"),
+    ]);
+    if !timed_out {
+        println!(
+            "{app} devices={devices}: recovered exactly, overhead {overhead:.2}x \
+             (recovered_units={} recovery_bytes={})",
+            rec.metrics.recovered_units, rec.metrics.recovery_bytes
+        );
+    } else {
+        println!("{app} devices={devices}: wall budget hit — asserts skipped");
+    }
+    timed_out
+}
+
+fn main() {
+    support::print_env_banner("faults");
+    let g = generators::CITESEER.scaled(support::scale()).generate(1);
+    println!("dataset={} |V|={} |E|={}", g.name(), g.num_vertices(), g.num_edges());
+
+    let mut t = Table::new(
+        "Fault tolerance: single-device death at the first epoch barrier \
+         (modeled seconds; counts asserted identical to the clean run)",
+        &["app", "devices", "mode", "sim_time", "overhead"],
+    );
+    let mut any_timeout = false;
+
+    let clique = CliqueCount::new(4);
+    let motif = MotifCount::planned(4);
+    for devices in [2usize, 4] {
+        // a fresh plan per run: clones share fire-once latches
+        let clean = Runner::run(&g, &clique, &cfg(devices, &[]));
+        let rec = Runner::run(&g, &clique, &cfg(devices, &["death@0:1"]));
+        any_timeout |= record(&mut t, "clique-k4", devices, &clean, &rec);
+
+        let clean = Runner::run(&g, &motif, &cfg(devices, &[]));
+        let rec = Runner::run(&g, &motif, &cfg(devices, &["death@0:1"]));
+        any_timeout |= record(&mut t, "motif-fused-k4", devices, &clean, &rec);
+    }
+
+    print!("{}", t.render());
+    if any_timeout {
+        println!("note: wall budget hit — exactness asserts were skipped on those cells");
+    }
+
+    if std::env::var("DUMATO_BENCH_JSON").is_ok() {
+        std::fs::write("BENCH_faults.json", t.to_json()).expect("write BENCH_faults.json");
+        println!("wrote BENCH_faults.json");
+    }
+}

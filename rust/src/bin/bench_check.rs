@@ -70,6 +70,14 @@ const SPECS: &[Spec] = &[
         key: &["support", "mode"],
         metrics: &["sim_time"],
     },
+    // faults rows carry an overhead ratio (recovery/clean) — only the
+    // modeled times are gated, so a cheaper clean run can never read as
+    // a recovery regression
+    Spec {
+        file: "BENCH_faults.json",
+        key: &["app", "devices", "mode"],
+        metrics: &["sim_time"],
+    },
 ];
 
 // ---------------------------------------------------------------------

@@ -120,7 +120,9 @@ pub fn apply_ordering(g: &mut CsrGraph, args: &Args) -> Result<()> {
 /// `--warps N --threads N --lb --lb-threshold F --timeout SECS
 ///  --intersect auto|merge|bisect|bitmap
 ///  --devices N --partition round-robin|degree-aware
-///  --interconnect pcie|nvlink --epoch-segments N`.
+///  --interconnect pcie|nvlink --epoch-segments N
+///  --inject-fault kind@when[:seed]` (repeatable; kinds slab, death,
+/// ecc, xfer — deterministic fault injection, see `vgpu::fault`).
 pub fn engine_config(args: &Args, default_lb_threshold: f64) -> Result<EngineConfig> {
     let mut cfg = EngineConfig {
         warps: args.parse_or("warps", 1024usize)?,
@@ -148,6 +150,7 @@ pub fn engine_config(args: &Args, default_lb_threshold: f64) -> Result<EngineCon
     cfg.partition = args.parse_or("partition", Partition::default())?;
     cfg.interconnect = args.parse_or("interconnect", Interconnect::default())?;
     cfg.epoch_segments = args.parse_or("epoch-segments", cfg.epoch_segments)?;
+    cfg.faults = crate::vgpu::FaultPlan::parse(args.get_all("inject-fault"))?;
     Ok(cfg)
 }
 
@@ -264,6 +267,28 @@ mod tests {
         let err =
             format!("{:#}", apply_ordering(&mut gx, &args(&["--ordering", "zorder"])).unwrap_err());
         assert!(err.contains("unknown ordering"), "{err}");
+    }
+
+    #[test]
+    fn engine_config_fault_injection_args() {
+        let cfg = engine_config(&args(&[]), 0.4).unwrap();
+        assert!(!cfg.faults.is_armed(), "no --inject-fault, disarmed plan");
+        let cfg = engine_config(
+            &args(&["--inject-fault", "death@0:1", "--inject-fault", "xfer@2"]),
+            0.4,
+        )
+        .unwrap();
+        assert!(cfg.faults.is_armed());
+        let err = format!(
+            "{:#}",
+            engine_config(&args(&["--inject-fault", "warp@3"]), 0.4).unwrap_err()
+        );
+        assert!(err.contains("unknown fault kind"), "{err}");
+        let err = format!(
+            "{:#}",
+            engine_config(&args(&["--inject-fault", "slab"]), 0.4).unwrap_err()
+        );
+        assert!(err.contains("missing '@'"), "{err}");
     }
 
     #[test]

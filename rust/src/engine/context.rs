@@ -199,7 +199,11 @@ impl<'a> WarpContext<'a> {
     /// every warp parks at its next `control()`; the runner surfaces the
     /// fault as `RunReport::fault` / an `Err` from `Runner::try_run`.
     fn raise_slab_fault(&mut self, level: usize, cap: usize) {
-        let _ = self.shared.fault.set(EngineError::SlabOverflow { level, cap });
+        let _ = self.shared.fault.set(EngineError::SlabOverflow {
+            level,
+            cap,
+            injected: false,
+        });
         self.shared.stop.store(true, Ordering::Relaxed);
     }
 
@@ -211,6 +215,28 @@ impl<'a> WarpContext<'a> {
         if self.shared.stop.load(Ordering::Relaxed) {
             // LB stop: TE is at a phase boundary => consistent checkpoint.
             return false;
+        }
+        if self.shared.faults.is_armed() {
+            // Injected slab overflow fires here, at the checkpoint —
+            // *before* any extension is generated — so unlike an organic
+            // overflow (raised mid-Extend with a partial, already
+            // partially-aggregated level) the parked state is exact and
+            // the fleet can salvage it.
+            let level = self.te.len();
+            if self
+                .shared
+                .faults
+                .slab_fires(self.shared.device, self.shared.ndev, level)
+            {
+                let cap = self.te.ext_cap(level.min(self.te.k() - 1));
+                let _ = self.shared.fault.set(EngineError::SlabOverflow {
+                    level,
+                    cap,
+                    injected: true,
+                });
+                self.shared.stop.store(true, Ordering::Relaxed);
+                return false;
+            }
         }
         if self.prof.segment_cycles(&self.shared.cost) > self.quantum_limit {
             return false; // quantum expired: yield, resume next round
@@ -1688,7 +1714,11 @@ mod tests {
         assert!(c.extend_planned(&plan));
         assert_eq!(
             c.shared.fault.get(),
-            Some(&crate::engine::EngineError::SlabOverflow { level: 1, cap: 8 })
+            Some(&crate::engine::EngineError::SlabOverflow {
+                level: 1,
+                cap: 8,
+                injected: false
+            })
         );
         assert!(c.shared.stop.load(Ordering::Relaxed), "fault must raise the stop flag");
         assert!(!c.control(), "stopped warp must park at control()");

@@ -49,21 +49,74 @@ pub use te::{Te, INVALID_V};
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum EngineError {
     /// An Extend outgrew its extensions slab. Arena caps derived by
-    /// `TeArena::for_graph`/`for_plan` cannot overflow; this fires for
-    /// an explicit `EngineConfig::ext_slab_cap` ceiling set too small,
-    /// or a standalone `Te` that needed `Te::standalone(k, cap)` sized
-    /// for the graph.
-    SlabOverflow { level: usize, cap: usize },
+    /// `TeArena::for_graph`/`for_plan` cannot overflow; an *organic*
+    /// fault (`injected: false`) fires for an explicit
+    /// `EngineConfig::ext_slab_cap` ceiling set too small, or a
+    /// standalone `Te` that needed `Te::standalone(k, cap)` sized for
+    /// the graph. `injected: true` marks a `FaultPlan` injection, which
+    /// fires at the `control()` checkpoint *before* any extension list
+    /// is generated — the distinction matters for recovery: an organic
+    /// overflow leaves a partially-generated (already partially
+    /// aggregated) level behind and is unsalvageable, while an injected
+    /// one parks at an exact boundary the fleet can drain.
+    SlabOverflow {
+        level: usize,
+        cap: usize,
+        injected: bool,
+    },
+    /// A virtual device died (injected via `FaultPlan`); observed at
+    /// the fleet epoch barrier (single-device runs: after `epoch`
+    /// scheduler segments).
+    DeviceDead { device: usize, epoch: u64 },
+    /// Modeled uncorrectable ECC/segment error on a device after its
+    /// `segment`-th kernel segment. Like device death, the device is
+    /// quarantined; unlike an organic slab overflow, the failure is
+    /// observed between segments — at a checkpoint — so its parked
+    /// state is exact and salvageable.
+    EccError { device: usize, segment: u64 },
+}
+
+impl EngineError {
+    /// Whether a fleet can recover from this fault by quarantining the
+    /// device and re-dealing its remaining work. Injected faults park
+    /// at exact checkpoints; an organic slab overflow aborts mid-phase
+    /// with a partially-generated level and must stay fatal.
+    pub fn recoverable(&self) -> bool {
+        match self {
+            EngineError::SlabOverflow { injected, .. } => *injected,
+            EngineError::DeviceDead { .. } | EngineError::EccError { .. } => true,
+        }
+    }
 }
 
 impl std::fmt::Display for EngineError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
-            EngineError::SlabOverflow { level, cap } => write!(
+            EngineError::SlabOverflow {
+                level,
+                cap,
+                injected: false,
+            } => write!(
                 f,
                 "extension slab overflow at level {level} (cap {cap} words): the \
                  extensions pool is smaller than the run needs — raise (or drop) \
                  ext_slab_cap, or size standalone TEs with Te::standalone(k, cap)"
+            ),
+            EngineError::SlabOverflow {
+                level,
+                cap,
+                injected: true,
+            } => write!(
+                f,
+                "injected slab overflow at level {level} (cap {cap} words)"
+            ),
+            EngineError::DeviceDead { device, epoch } => {
+                write!(f, "device {device} died at epoch {epoch} (injected fault)")
+            }
+            EngineError::EccError { device, segment } => write!(
+                f,
+                "uncorrectable ECC error on device {device} after segment {segment} \
+                 (injected fault)"
             ),
         }
     }

@@ -20,7 +20,7 @@ use crate::canon::CanonDict;
 use crate::graph::{CsrGraph, Snapshot, VertexId};
 use crate::multi::{DeviceFleet, Interconnect, Partition};
 use crate::util::Timer;
-use crate::vgpu::{CostModel, KernelMetrics, WarpProfiler};
+use crate::vgpu::{CostModel, FaultPlan, KernelMetrics, WarpProfiler};
 
 use super::arena::{ExtLayout, TeArena};
 use super::context::{Aggregators, StoredSubgraph, ThreadScratch, WarpContext};
@@ -46,6 +46,13 @@ pub struct SharedRun {
     /// First structured fault of the run (slab overflow); raising it also
     /// raises `stop`, and the runner surfaces it as `RunReport::fault`.
     pub fault: OnceLock<EngineError>,
+    /// This device's index and the fleet width (0 of 1 for single-device
+    /// runs) — the fault plan's victim selector needs both.
+    pub device: usize,
+    pub ndev: usize,
+    /// Deterministic fault-injection schedule (disarmed by default; the
+    /// hot `control()` path pays one `Option` test).
+    pub faults: FaultPlan,
 }
 
 impl SharedRun {
@@ -58,6 +65,9 @@ impl SharedRun {
             cost: CostModel::default(),
             intersect: IntersectPlan::default(),
             fault: OnceLock::new(),
+            device: 0,
+            ndev: 1,
+            faults: FaultPlan::default(),
         }
     }
 }
@@ -164,6 +174,12 @@ pub struct EngineConfig {
     /// The default threshold of 1.0 rebalances whenever any device has
     /// drained (`poll_interval` is unused — epochs are barriers).
     pub fleet_lb: LbConfig,
+    /// Deterministic fault-injection schedule (`--inject-fault`). The
+    /// default (disarmed) plan costs one pointer test on the hot path;
+    /// an armed plan makes the fleet exercise its recovery machinery:
+    /// recoverable faults quarantine the victim device and re-deal its
+    /// remaining work, fatal ones abort as before.
+    pub faults: FaultPlan,
 }
 
 impl Default for EngineConfig {
@@ -185,6 +201,7 @@ impl Default for EngineConfig {
             interconnect: Interconnect::default(),
             epoch_segments: 2,
             fleet_lb: LbConfig::default().with_threshold(1.0),
+            faults: FaultPlan::default(),
         }
     }
 }
@@ -228,10 +245,17 @@ pub struct RunReport {
     pub domains: Vec<Vec<Vec<u64>>>,
     pub metrics: KernelMetrics,
     pub timed_out: bool,
-    /// First structured engine fault of the run (`None` = clean). A
-    /// faulted run's counts are partial; [`Runner::try_run`] converts
-    /// this into an `Err`.
+    /// First *fatal* structured engine fault of the run (`None` =
+    /// counts are exact). A fleet that recovers every injected fault
+    /// reports `None` here — recovered faults cost modeled time, not
+    /// correctness — while [`Runner::try_run`] converts a fatal fault
+    /// into an `Err`.
     pub fault: Option<super::EngineError>,
+    /// Every per-device fault observed during the run, recovered or
+    /// fatal, in `(device, fault)` form — multi-fault runs are
+    /// diagnosable instead of collapsing to the first hit. Non-empty
+    /// with `fault == None` means "faulted and fully recovered".
+    pub faults: Vec<(usize, super::EngineError)>,
 }
 
 /// The scheduler-facing view of an engine run: the warp table in a
@@ -462,6 +486,7 @@ impl Runner {
         };
         let mut shared = SharedRun::new(k, algo.needs_edges(), dict);
         shared.cost = cfg.cost;
+        shared.faults = cfg.faults.clone();
         if let Some(table) = &cfg.intersect_table {
             shared.intersect = table.clone();
         } else if let Some(p) = algo.plan() {
@@ -536,6 +561,10 @@ impl Runner {
         };
         let policy = cfg.lb.as_ref().map(|l| l as &dyn LbPolicy);
 
+        // Injected device-level faults are observed between segments (a
+        // checkpoint); single-device runs have no survivors to recover
+        // onto, so both kinds are fatal here. 0-based segment ordinal.
+        let mut fault_segments: u64 = 0;
         let outcome = scheduler::drive(
             &run,
             num_warps,
@@ -564,6 +593,18 @@ impl Runner {
                     // faulted run: stop is re-cleared at each segment
                     // start, so end the drive here instead of spinning
                     return SegmentControl::Done;
+                }
+                if cfg.faults.is_armed() {
+                    let s = fault_segments;
+                    fault_segments += 1;
+                    if cfg.faults.ecc_fires(0, 1, s) {
+                        let _ = shared.fault.set(EngineError::EccError { device: 0, segment: s });
+                        return SegmentControl::Done;
+                    }
+                    if cfg.faults.death_fires(0, 1, s) {
+                        let _ = shared.fault.set(EngineError::DeviceDead { device: 0, epoch: s });
+                        return SegmentControl::Done;
+                    }
                 }
                 if warps.iter().all(|w| w.finished) {
                     return SegmentControl::Done;
@@ -605,6 +646,7 @@ impl Runner {
         drop(warps);
         drop(arena);
 
+        let fault = shared.fault.get().cloned();
         RunReport {
             algorithm: algo.name().to_string(),
             k,
@@ -613,7 +655,8 @@ impl Runner {
             stored,
             metrics,
             timed_out: outcome.timed_out,
-            fault: shared.fault.get().cloned(),
+            faults: fault.iter().map(|f| (0usize, f.clone())).collect(),
+            fault,
             leaf_counts,
             domains,
         }

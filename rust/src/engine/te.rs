@@ -431,6 +431,59 @@ impl Te {
         Some(seed)
     }
 
+    /// Drain a *parked* traversal's entire remainder into seeds — the
+    /// fleet-recovery salvage step for a quarantined device. At a
+    /// `control()` checkpoint the remainder decomposes exactly:
+    ///
+    /// - every generated level `l` with live extensions holds whole
+    ///   unexplored subtrees `tr[0..=l] + e` (each an ordinary donated
+    ///   seed);
+    /// - if the *current* level was never generated, the traversal's own
+    ///   subtree `tr[0..len]` is entirely unexplored and ships whole; if
+    ///   it *was* generated (we arrived by popping back into it), its
+    ///   consumed extensions are fully explored and aggregated, and its
+    ///   remainder is exactly the live extensions drained above.
+    ///
+    /// Returns `None` — salvage impossible, caller must treat the fault
+    /// as fatal — if any remainder cannot be expressed as a `<= k-1`
+    /// vertex seed (a generated level `k-2`), which a checkpoint never
+    /// exhibits but a mid-phase (organic-fault) state can. The handle is
+    /// left empty on success.
+    pub fn drain_remaining(&mut self) -> Option<Vec<Seed>> {
+        let mut out = Vec::new();
+        if self.len == 0 {
+            return Some(out);
+        }
+        // Validate before mutating: every shippable remainder must fit
+        // the seed cap (l+2 vertices for level-l extensions).
+        for l in 0..self.k - 1 {
+            if self.levels[l].generated && self.levels[l].live > 0 && l + 2 > self.k - 1 {
+                return None;
+            }
+        }
+        let cur = self.len - 1;
+        let ship_whole = !self.levels[cur].generated;
+        for l in 0..self.k - 1 {
+            if !self.levels[l].generated {
+                continue;
+            }
+            while let Some(e) = self.pop_valid(l) {
+                let mut seed: Seed = self.tr[..=l].to_vec();
+                seed.push(e);
+                out.push(seed);
+            }
+        }
+        if ship_whole {
+            out.push(self.tr[..self.len].to_vec());
+        }
+        for lv in self.levels.iter_mut().take(self.k - 1) {
+            lv.clear();
+        }
+        self.len = 0;
+        self.edges = [0; MAX_K];
+        Some(out)
+    }
+
     /// Resident bytes of the TE structure (LB copy cost, memory ablation):
     /// the handle plus the occupied portion of its slabs.
     pub fn memory_bytes(&self) -> usize {
@@ -546,6 +599,47 @@ mod tests {
         te.set_ext(2, &[5]);
         te.set_generated(2, true);
         assert_eq!(te.donation_level(), None);
+    }
+
+    #[test]
+    fn drain_remaining_ships_prefix_subtrees_and_whole_traversal() {
+        let g = generators::complete(8);
+        let mut te = Te::new(6);
+        te.init_from_seed(&vec![0], &g, false);
+        te.set_ext(0, &[5, 6]);
+        te.set_generated(0, true);
+        te.push_vertex(1, &g, false);
+        // current level (1) never generated: the whole traversal ships
+        let seeds = te.drain_remaining().unwrap();
+        assert_eq!(seeds, vec![vec![0, 6], vec![0, 5], vec![0, 1]]);
+        assert!(te.is_empty());
+        assert_eq!(te.drain_remaining().unwrap(), Vec::<Seed>::new());
+    }
+
+    #[test]
+    fn drain_remaining_skips_consumed_current_level() {
+        let g = generators::complete(8);
+        let mut te = Te::new(6);
+        // a traversal parked mid-consumption of its own level: only the
+        // live extensions remain (consumed ones were fully explored)
+        te.init_from_seed(&vec![0, 1], &g, false);
+        te.set_ext(1, &[4, 7]);
+        te.set_generated(1, true);
+        let seeds = te.drain_remaining().unwrap();
+        assert_eq!(seeds, vec![vec![0, 1, 7], vec![0, 1, 4]]);
+        assert!(te.is_empty());
+    }
+
+    #[test]
+    fn drain_remaining_refuses_unshippable_depth() {
+        let g = generators::complete(8);
+        let mut te = Te::new(4);
+        // generated level k-2 with live extensions: a k-vertex remainder
+        // no seed can express (never a checkpoint state — defensive)
+        te.init_from_seed(&vec![0, 1, 2], &g, false);
+        te.set_ext(2, &[5]);
+        te.set_generated(2, true);
+        assert!(te.drain_remaining().is_none());
     }
 
     #[test]

@@ -43,6 +43,10 @@ const USAGE: &str = "usage: dumato <clique|motif|query|fsm|serve|stats|triangles
   labels: --labels FILE (one numeric label per line, vertex order)
           or --label-cardinality L (uniform random labels over 0..L, seeded by --seed)
   multi-device: --devices N --partition round-robin|degree-aware --interconnect pcie|nvlink --epoch-segments N
+  fault injection: --inject-fault kind@when[:seed] (repeatable; kinds slab@LEVEL, death@EPOCH,
+         ecc@SEGMENT, xfer@TRANSFER; seed picks the victim device — deterministic chaos runs)
+  chaos quickstart:
+         dumato clique --dataset mico --k 4 --devices 4 --inject-fault death@0:1
   clique/motif: --k N
   clique: --orient (enumerate the oriented out-CSR; pair with --ordering degeneracy for core-bounded lists)
   motif: --planned (fused plan-trie census: one traversal over all k-patterns, k <= 7)
@@ -63,10 +67,13 @@ const USAGE: &str = "usage: dumato <clique|motif|query|fsm|serve|stats|triangles
   fsm quickstart:
          dumato fsm --dataset er:200,0.05 --label-cardinality 3 --support 5 --max-size 3
   serve: persistent query service on stdin/stdout
-         (line protocol: QUERY/BATCH/UPDATE/COMMIT/EPOCH/STATS/INVALIDATE/QUIT)
+         (line protocol: QUERY/BATCH/UPDATE/COMMIT/EPOCH/STATS/INVALIDATE/SHUTDOWN/QUIT)
          --batch-window-ms N (admission window, default 5) --max-batch N
          --plan-cache N --result-cache N (LRU capacities)
          --selectivity-churn F (degree-drift threshold re-pinning intersect selectivity, default 0.25)
+         --max-queue N (shed submissions past this queue depth with BUSY; 0 = never shed, default 1024)
+         --retries N (singleton retries after a faulted fused batch, default 2)
+         --deadline-ms N (per-query modeled deadline; late answers are exact but marked dirty)
   serve quickstart:
          printf 'QUERY 0-1,1-2,2-0\\nSTATS\\nQUIT\\n' | dumato serve --dataset citeseer
   dynamic quickstart:
@@ -138,6 +145,14 @@ fn print_run(report: &dumato::engine::RunReport, wall: bool) {
     }
     if let Some(f) = &report.fault {
         println!("  ** engine fault — counts are partial: {f} **");
+    } else if !report.faults.is_empty() {
+        println!(
+            "  ** recovered from {} device fault(s) — counts are exact **",
+            report.faults.len()
+        );
+        for (d, f) in &report.faults {
+            println!("     device {d}: {f}");
+        }
     }
 }
 
@@ -471,11 +486,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
         result_cache_cap: args.parse_or("result-cache", 1024usize)?,
         selectivity_churn: args
             .parse_or("selectivity-churn", dumato::service::DEFAULT_SELECTIVITY_CHURN)?,
+        max_queue: args.parse_or("max-queue", 1024usize)?,
+        retries: args.parse_or("retries", 2u32)?,
+        retry_backoff: args.parse_or("retry-backoff", 1e-3f64)?,
+        deadline: match args.get("deadline-ms") {
+            Some(v) => {
+                let ms: f64 = v
+                    .parse()
+                    .map_err(|_| anyhow!("bad value '{v}' for --deadline-ms"))?;
+                Some(ms / 1e3)
+            }
+            None => None,
+        },
     };
     eprintln!(
         "serving {} ({} vertices), batch_window={:?}, plan_cache={}, result_cache={} \
          — QUERY <spec>[;<spec>], BATCH <n>, UPDATE <+u,v|-u,v>[;..], COMMIT, EPOCH, \
-         STATS, INVALIDATE, QUIT",
+         STATS, INVALIDATE, SHUTDOWN, QUIT",
         g.name(),
         g.num_vertices(),
         cfg.batch_window,

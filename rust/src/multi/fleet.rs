@@ -29,7 +29,8 @@ use crate::canon::CanonDict;
 use crate::engine::runner::{deal_seeds, reduce_device, EngineRun};
 use crate::engine::scheduler::{self, SchedulerConfig};
 use crate::engine::{
-    EngineConfig, RunReport, SegmentControl, SharedRun, TeArena, UnitTable, WarpState,
+    EngineConfig, EngineError, RunReport, Seed, SegmentControl, SharedRun, TeArena, UnitTable,
+    WarpState,
 };
 use crate::graph::CsrGraph;
 use crate::util::Timer;
@@ -93,10 +94,13 @@ impl DeviceFleet {
             Default::default()
         };
         let shareds: Vec<SharedRun> = (0..ndev)
-            .map(|_| {
+            .map(|d| {
                 let mut s = SharedRun::new(k, algo.needs_edges(), dict.clone());
                 s.cost = cfg.cost;
                 s.intersect = intersect.clone();
+                s.device = d;
+                s.ndev = ndev;
+                s.faults = cfg.faults.clone();
                 s
             })
             .collect();
@@ -153,10 +157,39 @@ impl DeviceFleet {
         let deadline = cfg.time_limit.map(|d| Instant::now() + d);
         let mut clocks = vec![0.0f64; ndev];
         let mut timed_out = false;
+        // Fault-tolerance state. `alive[d]` flips at the barrier that
+        // quarantines a faulted device; `seg_counts` are the cumulative
+        // per-device kernel segments the ecc schedule is anchored to.
+        let mut alive = vec![true; ndev];
+        let mut seg_counts = vec![0u64; ndev];
+        let mut all_faults: Vec<(usize, EngineError)> = Vec::new();
+        let mut fatal_faults: Vec<(usize, EngineError)> = Vec::new();
+        // Trie jobs cannot salvage a dead device's partial aggregates
+        // (the trie-walk position is not reconstructible), so recovery
+        // re-runs the device's whole root shard. The ledger tracks which
+        // roots each device is responsible for: the initial shard, plus
+        // whatever the fleet rebalance migrated (trie donation ships
+        // whole roots only — `seed_only` warps never donate TE
+        // subtrees). Only maintained when it can be needed.
+        let mut ledger: Option<Vec<Vec<Seed>>> =
+            if algo.trie().is_some() && cfg.faults.is_armed() {
+                Some(
+                    shards
+                        .iter()
+                        .map(|sh| sh.iter().map(|&v| vec![v]).collect())
+                        .collect(),
+                )
+            } else {
+                None
+            };
 
         loop {
             let mut any_ran = false;
             for d in 0..ndev {
+                if !alive[d] {
+                    continue; // quarantined at an earlier barrier
+                }
+                let base_segs = seg_counts[d];
                 let warps_vec = std::mem::take(&mut warp_sets[d]);
                 let initial: Vec<usize> =
                     warps_vec.iter().filter(|w| !w.finished).map(|w| w.id).collect();
@@ -209,6 +242,19 @@ impl DeviceFleet {
                         if run.shared.fault.get().is_some() {
                             return SegmentControl::Done; // faulted device
                         }
+                        if cfg.faults.is_armed() {
+                            // modeled ECC error: observed at the segment
+                            // boundary (a checkpoint), 0-based cumulative
+                            // segment ordinal per device
+                            let s = base_segs + segs_this_epoch as u64 - 1;
+                            if cfg.faults.ecc_fires(d, ndev, s) {
+                                let _ = run
+                                    .shared
+                                    .fault
+                                    .set(EngineError::EccError { device: d, segment: s });
+                                return SegmentControl::Done;
+                            }
+                        }
                         if warps.iter().all(|w| w.finished) {
                             return SegmentControl::Done;
                         }
@@ -238,6 +284,7 @@ impl DeviceFleet {
                 metrics.migrations += migrations;
                 metrics.lb_overhead_seconds += lb_overhead;
                 timed_out |= outcome.timed_out;
+                seg_counts[d] += segs_this_epoch as u64;
                 warp_sets[d] = run.warps.into_inner();
             }
             if !any_ran {
@@ -254,9 +301,113 @@ impl DeviceFleet {
             if timed_out {
                 break;
             }
-            if shareds.iter().any(|s| s.fault.get().is_some()) {
-                break; // a faulted device aborts the whole job
+            // Injected device death is observed at the barrier (0-based
+            // epoch ordinal).
+            let epoch = (metrics.fleet_epochs - 1) as u64;
+            if cfg.faults.is_armed() {
+                for d in 0..ndev {
+                    if alive[d] && cfg.faults.death_fires(d, ndev, epoch) {
+                        let _ = shareds[d]
+                            .fault
+                            .set(EngineError::DeviceDead { device: d, epoch });
+                    }
+                }
             }
+            // Quarantine-and-recover: a faulted device leaves the fleet
+            // at the barrier and its remaining work moves to survivors.
+            // Only an organic (mid-phase, partially-aggregated) fault or
+            // a fleet with no survivors left aborts the job.
+            let mut fatal = false;
+            for d in 0..ndev {
+                if !alive[d] {
+                    continue;
+                }
+                let Some(f) = shareds[d].fault.get().cloned() else { continue };
+                alive[d] = false;
+                metrics.device_faults += 1;
+                all_faults.push((d, f.clone()));
+                let survivors: Vec<usize> = (0..ndev).filter(|&i| alive[i]).collect();
+                if !f.recoverable() || survivors.is_empty() {
+                    fatal_faults.push((d, f));
+                    fatal = true;
+                    continue;
+                }
+                // Gather the dead device's remaining work as seeds. The
+                // intra-device LB's stop-copy already checkpoints warp
+                // state to the host at every segment boundary, and every
+                // recoverable fault is observed at such a boundary — so
+                // the host-side checkpoint is current and nothing below
+                // models reading the dead device's memory.
+                let salvaged: Option<Vec<Seed>> = if let Some(roots) = ledger.as_mut() {
+                    // Trie re-run path: discard the device's aggregates
+                    // and re-deal its whole root responsibility.
+                    for w in warp_sets[d].iter_mut() {
+                        w.agg = Default::default();
+                        w.queue.clear();
+                        w.walk.clear();
+                        let _ = w.te.drain_remaining(); // discarded: roots re-run
+                        w.finished = true;
+                    }
+                    Some(std::mem::take(&mut roots[d]))
+                } else {
+                    // Salvage path: checkpointed aggregates are exact for
+                    // everything explored; the parked remainder
+                    // decomposes into exact prefix seeds.
+                    let mut seeds: Vec<Seed> = Vec::new();
+                    let mut ok = true;
+                    for w in warp_sets[d].iter_mut() {
+                        seeds.extend(w.queue.drain(..));
+                        match w.te.drain_remaining() {
+                            Some(more) => seeds.extend(more),
+                            None => {
+                                ok = false;
+                                break;
+                            }
+                        }
+                        w.finished = true;
+                    }
+                    ok.then_some(seeds)
+                };
+                let Some(seeds) = salvaged else {
+                    // a parked state that cannot be expressed as seeds
+                    // (never true at a checkpoint; defensive)
+                    fatal_faults.push((d, f));
+                    fatal = true;
+                    continue;
+                };
+                // Re-deal to survivors round-robin, charging the re-ship
+                // to every clock like any barrier transfer.
+                let bytes: u64 = seeds
+                    .iter()
+                    .map(|s| (s.len() * std::mem::size_of::<crate::graph::VertexId>()) as u64)
+                    .sum();
+                let transfers = seeds.len() as u64;
+                metrics.recovered_units += transfers;
+                metrics.recovery_bytes += bytes;
+                for (i, seed) in seeds.into_iter().enumerate() {
+                    let tgt = survivors[i % survivors.len()];
+                    if let Some(roots) = ledger.as_mut() {
+                        roots[tgt].push(seed.clone());
+                    }
+                    super::rebalance::receive(&mut warp_sets[tgt], seed);
+                }
+                if transfers > 0 {
+                    let mut t = cfg.interconnect.transfer_seconds(bytes, transfers);
+                    let retries = cfg.faults.xfer_retries(transfers);
+                    if retries > 0 {
+                        t += cfg.interconnect.retry_seconds(bytes / transfers, retries);
+                        metrics.xfer_retries += retries;
+                    }
+                    for c in clocks.iter_mut() {
+                        *c += t;
+                    }
+                    metrics.fleet_xfer_seconds += t;
+                }
+            }
+            if fatal {
+                break; // organic fault, or no survivors to recover onto
+            }
+            let live = alive.iter().filter(|&&a| a).count();
             let active = warp_sets
                 .iter()
                 .filter(|ws| ws.iter().any(|w| !w.finished))
@@ -265,17 +416,46 @@ impl DeviceFleet {
                 break;
             }
             // Inter-device redistribute: the LbPolicy stop rule, one
-            // granularity up (devices instead of warps).
-            if LbPolicy::should_stop(&cfg.fleet_lb, active, ndev) {
-                let xfer = super::rebalance::rebalance_fleet(&mut warp_sets);
+            // granularity up (devices instead of warps). Quarantined
+            // devices are invisible to it.
+            if LbPolicy::should_stop(&cfg.fleet_lb, active, live) {
+                let xfer = super::rebalance::rebalance_fleet(&mut warp_sets, &alive);
                 if xfer.migrations > 0 {
-                    let t = cfg.interconnect.transfer_seconds(xfer.bytes, xfer.transfers);
+                    if let Some(roots) = ledger.as_mut() {
+                        // trie donation ships whole roots: move their
+                        // ledger responsibility with them
+                        for (don, recv, seed) in &xfer.moves {
+                            if let Some(p) = roots[*don].iter().position(|s| s == seed) {
+                                let s = roots[*don].swap_remove(p);
+                                roots[*recv].push(s);
+                            }
+                        }
+                    }
+                    let mut t = cfg.interconnect.transfer_seconds(xfer.bytes, xfer.transfers);
+                    let retries = cfg.faults.xfer_retries(xfer.transfers);
+                    if retries > 0 {
+                        t += cfg
+                            .interconnect
+                            .retry_seconds(xfer.bytes / xfer.transfers.max(1), retries);
+                        metrics.xfer_retries += retries;
+                    }
                     for c in clocks.iter_mut() {
                         *c += t;
                     }
                     metrics.fleet_migrations += xfer.migrations;
                     metrics.fleet_bytes += xfer.bytes;
                     metrics.fleet_xfer_seconds += t;
+                }
+            }
+        }
+
+        // A fault raised but never processed at a barrier (a timed-out
+        // break exits before quarantine) still surfaces as fatal.
+        for (d, s) in shareds.iter().enumerate() {
+            if alive[d] {
+                if let Some(f) = s.fault.get() {
+                    all_faults.push((d, f.clone()));
+                    fatal_faults.push((d, f.clone()));
                 }
             }
         }
@@ -333,7 +513,10 @@ impl DeviceFleet {
             domains,
             metrics,
             timed_out,
-            fault: shareds.iter().find_map(|s| s.fault.get().cloned()),
+            // recovered faults cost modeled time, not correctness: only a
+            // fatal fault (organic, or no survivors) marks the report
+            fault: fatal_faults.first().map(|(_, f)| f.clone()),
+            faults: all_faults,
         }
     }
 }
@@ -434,6 +617,101 @@ mod tests {
             "{:?}",
             r.fault
         );
+    }
+
+    #[test]
+    fn fleet_recovers_single_device_death_with_exact_counts() {
+        use crate::vgpu::FaultPlan;
+        let g = generators::erdos_renyi(60, 0.2, 17);
+        for devices in [2, 4] {
+            let want = Runner::run(&g, &CliqueCount::new(4), &fleet_cfg(devices));
+            for victim in 0..devices {
+                let mut cfg = fleet_cfg(devices);
+                cfg.faults =
+                    FaultPlan::parse(&[format!("death@0:{victim}")]).unwrap();
+                let r = Runner::run(&g, &CliqueCount::new(4), &cfg);
+                assert_eq!(r.count, want.count, "devices={devices} victim={victim}");
+                assert!(r.fault.is_none(), "recovered runs are clean: {:?}", r.fault);
+                assert_eq!(r.faults.len(), 1, "{:?}", r.faults);
+                assert!(matches!(
+                    r.faults[0],
+                    (d, crate::engine::EngineError::DeviceDead { .. }) if d == victim
+                ));
+                assert_eq!(r.metrics.device_faults, 1);
+            }
+        }
+    }
+
+    #[test]
+    fn fleet_recovers_injected_slab_and_ecc_faults() {
+        use crate::vgpu::FaultPlan;
+        let g = generators::erdos_renyi(60, 0.2, 23);
+        let want = Runner::run(&g, &CliqueCount::new(4), &fleet_cfg(2)).count;
+        for spec in ["slab@1:0", "slab@0:1", "ecc@0:0", "ecc@0:1"] {
+            let mut cfg = fleet_cfg(2);
+            cfg.faults = FaultPlan::parse(&[spec.to_string()]).unwrap();
+            let r = Runner::run(&g, &CliqueCount::new(4), &cfg);
+            assert_eq!(r.count, want, "{spec}");
+            assert!(r.fault.is_none(), "{spec}: {:?}", r.fault);
+            assert_eq!(r.metrics.device_faults, 1, "{spec}");
+        }
+    }
+
+    #[test]
+    fn trie_jobs_recover_via_root_rerun() {
+        use crate::vgpu::FaultPlan;
+        // MotifCount runs on a plan trie: recovery must re-run the dead
+        // device's root shard (partial aggregates are unsalvageable) and
+        // still land on exact per-pattern counts.
+        let g = generators::erdos_renyi(28, 0.3, 5);
+        let want = Runner::run(&g, &MotifCount::new(4), &fleet_cfg(3)).patterns;
+        for spec in ["death@0:1", "ecc@1:2"] {
+            let mut cfg = fleet_cfg(3);
+            cfg.faults = FaultPlan::parse(&[spec.to_string()]).unwrap();
+            let r = Runner::run(&g, &MotifCount::new(4), &cfg);
+            assert_eq!(r.patterns, want, "{spec}");
+            assert!(r.fault.is_none(), "{spec}: {:?}", r.fault);
+            assert!(r.metrics.device_faults >= 1, "{spec}");
+        }
+    }
+
+    #[test]
+    fn all_devices_dead_aborts_with_structured_fault() {
+        use crate::vgpu::FaultPlan;
+        let g = generators::erdos_renyi(40, 0.3, 7);
+        let mut cfg = fleet_cfg(2);
+        cfg.faults = FaultPlan::parse(&[
+            "death@0:0".to_string(),
+            "death@0:1".to_string(),
+        ])
+        .unwrap();
+        let r = Runner::run(&g, &CliqueCount::new(4), &cfg);
+        assert!(
+            matches!(r.fault, Some(crate::engine::EngineError::DeviceDead { .. })),
+            "{:?}",
+            r.fault
+        );
+        assert_eq!(r.faults.len(), 2, "both deaths are diagnosable: {:?}", r.faults);
+    }
+
+    #[test]
+    fn xfer_faults_cost_time_never_counts() {
+        use crate::vgpu::FaultPlan;
+        let g = generators::erdos_renyi(60, 0.2, 31);
+        let mut clean_cfg = fleet_cfg(3);
+        clean_cfg.partition = Partition::DegreeAware;
+        let clean = Runner::run(&g, &CliqueCount::new(4), &clean_cfg);
+        let mut cfg = clean_cfg.clone();
+        cfg.faults = FaultPlan::parse(&["xfer@0".to_string()]).unwrap();
+        let r = Runner::run(&g, &CliqueCount::new(4), &cfg);
+        assert_eq!(r.count, clean.count);
+        assert!(r.fault.is_none());
+        if r.metrics.xfer_retries > 0 {
+            assert!(
+                r.metrics.fleet_xfer_seconds > clean.metrics.fleet_xfer_seconds,
+                "a retried transfer must cost extra modeled time"
+            );
+        }
     }
 
     #[test]

@@ -45,6 +45,14 @@ impl Interconnect {
     pub fn transfer_seconds(&self, bytes: u64, transfers: u64) -> f64 {
         transfers as f64 * self.latency_seconds() + bytes as f64 / self.bytes_per_second()
     }
+
+    /// Extra simulated seconds when `retries` of a barrier's transfers
+    /// fail and are re-sent (fault injection): each retry repeats its
+    /// message's setup latency and average payload. The payload still
+    /// arrives, so a transfer fault costs time, never correctness.
+    pub fn retry_seconds(&self, avg_bytes: u64, retries: u64) -> f64 {
+        self.transfer_seconds(avg_bytes * retries, retries)
+    }
 }
 
 impl FromStr for Interconnect {

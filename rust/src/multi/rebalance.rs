@@ -16,7 +16,7 @@ use crate::engine::{Seed, WarpState};
 use crate::graph::VertexId;
 
 /// What one fleet rebalance moved (the scaling bench's "rebalance bytes").
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Debug, Default)]
 pub struct FleetXfer {
     /// Traversals migrated between devices.
     pub migrations: u64,
@@ -24,11 +24,15 @@ pub struct FleetXfer {
     pub bytes: u64,
     /// Interconnect messages (one per migrated unit).
     pub transfers: u64,
+    /// Every migration as `(donor, receiver, seed)` — the fleet's
+    /// trie-job root ledger follows these to keep per-device root
+    /// responsibility exact for the recovery re-run path.
+    pub moves: Vec<(usize, usize, Seed)>,
 }
 
 /// Schedulable units a device is still holding: queued seeds plus one per
 /// active mid-enumeration TE.
-fn pending_units(warps: &[WarpState]) -> usize {
+pub(crate) fn pending_units(warps: &[WarpState]) -> usize {
     warps
         .iter()
         .map(|w| w.queue.len() + usize::from(!w.te.is_empty()))
@@ -61,8 +65,9 @@ fn donate_one(warps: &mut [WarpState]) -> Option<Seed> {
 }
 
 /// Land a migrated seed on the receiving device: a workless warp when one
-/// exists (waking it), else the shortest queue.
-fn receive(warps: &mut [WarpState], seed: Seed) {
+/// exists (waking it), else the shortest queue. Also the landing rule for
+/// recovery re-deals (`multi::fleet`).
+pub(crate) fn receive(warps: &mut [WarpState], seed: Seed) {
     let idx = (0..warps.len())
         .find(|&i| !warps[i].has_work())
         .or_else(|| (0..warps.len()).min_by_key(|&i| warps[i].queue.len()))
@@ -71,29 +76,34 @@ fn receive(warps: &mut [WarpState], seed: Seed) {
     warps[idx].finished = false;
 }
 
-/// Device-granular redistribute at a fleet epoch barrier. Drained devices
-/// are fed up to half a fair share each (enough to stay busy past the
-/// next epoch without thrashing units back and forth); donors are drawn
-/// richest-first and never give their last unit away. Returns what moved
-/// so the caller can charge the interconnect.
-pub fn rebalance_fleet(devices: &mut [Vec<WarpState>]) -> FleetXfer {
+/// Device-granular redistribute at a fleet epoch barrier. Drained live
+/// devices are fed up to half a fair share each (enough to stay busy
+/// past the next epoch without thrashing units back and forth); donors
+/// are drawn richest-first and never give their last unit away.
+/// Quarantined devices (`alive[d] == false`) are invisible: they look
+/// drained forever and must be neither fed nor consulted for the fair
+/// share. Returns what moved so the caller can charge the interconnect
+/// and maintain the trie root ledger.
+pub fn rebalance_fleet(devices: &mut [Vec<WarpState>], alive: &[bool]) -> FleetXfer {
     let mut xfer = FleetXfer::default();
-    if devices.len() < 2 {
+    debug_assert_eq!(devices.len(), alive.len());
+    let live = alive.iter().filter(|&&a| a).count();
+    if live < 2 {
         return xfer;
     }
     loop {
         let mut loads: Vec<usize> = devices.iter().map(|ws| pending_units(ws)).collect();
-        let total: usize = loads.iter().sum();
-        let fair = total.div_ceil(devices.len());
-        let Some(recv) = loads.iter().position(|&l| l == 0) else {
+        let total: usize = (0..devices.len()).filter(|&d| alive[d]).map(|d| loads[d]).sum();
+        let fair = total.div_ceil(live);
+        let Some(recv) = (0..devices.len()).find(|&d| alive[d] && loads[d] == 0) else {
             return xfer;
         };
         let want = fair.div_ceil(2).max(1);
         let mut got = 0usize;
         while got < want {
-            // richest donor still above the fair share and holding >= 2
+            // richest live donor still above the fair share, holding >= 2
             let donor = (0..devices.len())
-                .filter(|&d| d != recv && loads[d] >= 2 && loads[d] > fair)
+                .filter(|&d| d != recv && alive[d] && loads[d] >= 2 && loads[d] > fair)
                 .max_by_key(|&d| loads[d]);
             let Some(don) = donor else { break };
             let Some(seed) = donate_one(&mut devices[don]) else {
@@ -105,6 +115,7 @@ pub fn rebalance_fleet(devices: &mut [Vec<WarpState>]) -> FleetXfer {
             xfer.migrations += 1;
             xfer.transfers += 1;
             xfer.bytes += (seed.len() * std::mem::size_of::<VertexId>()) as u64;
+            xfer.moves.push((don, recv, seed.clone()));
             receive(&mut devices[recv], seed);
             loads[don] = loads[don].saturating_sub(1);
             got += 1;
@@ -149,10 +160,12 @@ mod tests {
             device_with_seeds(2, &[]),
         ];
         let before = all_seeds(&devs);
-        let x = rebalance_fleet(&mut devs);
+        let x = rebalance_fleet(&mut devs, &[true, true]);
         assert!(x.migrations > 0);
         assert_eq!(x.migrations, x.transfers);
         assert_eq!(x.bytes, x.migrations * 4, "all seeds here are 1-vertex prefixes");
+        assert_eq!(x.moves.len() as u64, x.migrations, "every move is recorded");
+        assert!(x.moves.iter().all(|&(don, recv, _)| don == 0 && recv == 1));
         assert!(pending_units(&devs[1]) > 0, "receiver stayed empty");
         assert_eq!(all_seeds(&devs), before, "seed multiset changed");
         for w in devs.iter().flatten() {
@@ -166,7 +179,7 @@ mod tests {
             device_with_seeds(1, &[vec![1]]),
             device_with_seeds(1, &[]),
         ];
-        let x = rebalance_fleet(&mut devs);
+        let x = rebalance_fleet(&mut devs, &[true, true]);
         assert_eq!(x.migrations, 0, "a 1-unit device is not a donor");
         assert_eq!(devs[0][0].queue.len(), 1);
     }
@@ -177,15 +190,38 @@ mod tests {
             device_with_seeds(1, &[vec![1], vec![2]]),
             device_with_seeds(1, &[vec![3]]),
         ];
-        let x = rebalance_fleet(&mut devs);
+        let x = rebalance_fleet(&mut devs, &[true, true]);
         assert_eq!(x.migrations, 0);
     }
 
     #[test]
     fn single_device_fleet_is_a_noop() {
         let mut devs = vec![device_with_seeds(2, &[vec![1], vec![2]])];
-        let x = rebalance_fleet(&mut devs);
+        let x = rebalance_fleet(&mut devs, &[true]);
         assert_eq!(x.migrations, 0);
+    }
+
+    #[test]
+    fn quarantined_devices_are_never_fed() {
+        // device 1 is dead (drained by salvage): it must not attract
+        // work even though it looks permanently idle
+        let mut devs = vec![
+            device_with_seeds(2, &[vec![1], vec![2], vec![3], vec![4], vec![5], vec![6]]),
+            device_with_seeds(2, &[]),
+            device_with_seeds(2, &[]),
+        ];
+        let x = rebalance_fleet(&mut devs, &[true, false, true]);
+        assert!(x.migrations > 0, "the live drained device is still fed");
+        assert_eq!(pending_units(&devs[1]), 0, "dead device received work");
+        assert!(pending_units(&devs[2]) > 0);
+        assert!(x.moves.iter().all(|&(_, recv, _)| recv == 2));
+        // a fleet with one live device left has nobody to trade with
+        let mut devs2 = vec![
+            device_with_seeds(2, &[vec![1], vec![2]]),
+            device_with_seeds(2, &[]),
+        ];
+        let x2 = rebalance_fleet(&mut devs2, &[true, false]);
+        assert_eq!(x2.migrations, 0);
     }
 
     #[test]
@@ -198,7 +234,7 @@ mod tests {
             device_with_seeds(4, &[]),
         ];
         let before = all_seeds(&devs);
-        let x = rebalance_fleet(&mut devs);
+        let x = rebalance_fleet(&mut devs, &[true; 4]);
         assert!(x.migrations >= 3, "each drained device should be fed");
         for d in 1..4 {
             assert!(pending_units(&devs[d]) > 0, "device {d} stayed empty");

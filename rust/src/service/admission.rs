@@ -46,6 +46,10 @@ pub struct PendingQuery {
     pub keys: Vec<PatternKey>,
     /// Modeled service clock at submission (latency baseline).
     pub submitted_clock: f64,
+    /// Absolute modeled deadline (service-clock seconds): answers
+    /// landing past it are delivered exact but marked dirty
+    /// (`timed_out`). `None` = no deadline.
+    pub deadline: Option<f64>,
     /// Completion channel back to the ticket holder.
     pub reply: mpsc::Sender<QueryOutcome>,
 }
@@ -118,6 +122,7 @@ mod tests {
             patterns,
             keys,
             submitted_clock: 0.0,
+            deadline: None,
             reply: tx,
         }
     }

@@ -92,6 +92,30 @@ pub struct ServiceConfig {
     /// re-pin the intersect-selectivity statistics. Below it the pin —
     /// and the per-run degree-scan amortization — is kept.
     pub selectivity_churn: f64,
+    /// Admission-queue depth past which new submissions are shed with
+    /// [`ServiceError::Busy`] instead of enqueued (load shedding keeps
+    /// tail latency bounded under overload). The bound is advisory —
+    /// concurrent submitters racing the check may overshoot by their
+    /// own count. `0` sheds every submission that misses the result
+    /// cache (drain mode).
+    pub max_queue: usize,
+    /// Singleton re-executions each member of a *faulted* fused batch
+    /// is granted before its fault is surfaced to the client. A
+    /// transient fault (injected once, or cleared by quarantine) is
+    /// absorbed; a poison pattern exhausts its budget alone without
+    /// failing its co-batched neighbors. `0` propagates the fused
+    /// fault to every member unretried.
+    pub retries: u32,
+    /// Modeled backoff charged to the service clock before retry `n`
+    /// (seconds, doubled per attempt): retries cost simulated time
+    /// like everything else, so retried queries report honest latency.
+    pub retry_backoff: f64,
+    /// Default per-query deadline in modeled seconds from submission.
+    /// A query whose batch completes past its deadline still gets its
+    /// exact counts, but the answer is marked `timed_out` (dirty) —
+    /// the client asked for freshness the service could not deliver.
+    /// `None` disables deadlines.
+    pub deadline: Option<f64>,
 }
 
 /// Default [`ServiceConfig::selectivity_churn`]: a commit changing the
@@ -108,9 +132,50 @@ impl Default for ServiceConfig {
             plan_cache_cap: 128,
             result_cache_cap: 1024,
             selectivity_churn: DEFAULT_SELECTIVITY_CHURN,
+            max_queue: 1024,
+            retries: 2,
+            retry_backoff: 1e-3,
+            deadline: None,
         }
     }
 }
+
+/// Structured service-level failures. Engine faults ride inside
+/// [`QueryOutcome::fault`](server::QueryOutcome::fault); this enum is
+/// for failures of the *service machinery* around the engine — they
+/// surface as typed errors so callers (and the wire layer, which maps
+/// `Busy` to a `BUSY` response line) can react mechanically instead of
+/// string-matching.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServiceError {
+    /// The admission queue was at [`ServiceConfig::max_queue`]: the
+    /// submission was shed, nothing was enqueued.
+    Busy { depth: usize, max_queue: usize },
+    /// The service is shut down (gracefully: its queue was drained).
+    ShutDown,
+    /// The worker thread died before the query ran. With panic
+    /// isolation this indicates a worker that aborted outside a batch
+    /// — the ticket resolves with this instead of hanging forever.
+    WorkerDead,
+}
+
+impl std::fmt::Display for ServiceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServiceError::Busy { depth, max_queue } => write!(
+                f,
+                "service busy: admission queue depth {depth} at max_queue {max_queue} \
+                 (submission shed)"
+            ),
+            ServiceError::ShutDown => write!(f, "service is shut down"),
+            ServiceError::WorkerDead => {
+                write!(f, "service worker died before the query ran")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServiceError {}
 
 /// A point-in-time snapshot of service counters
 /// ([`ServiceHandle::stats`]).
@@ -147,6 +212,17 @@ pub struct ServiceStats {
     /// [`ServiceConfig::selectivity_churn`] and re-pinned the
     /// intersect-selectivity statistics.
     pub selectivity_refreshes: u64,
+    /// Submissions shed at the [`ServiceConfig::max_queue`] bound.
+    pub shed: u64,
+    /// Singleton re-executions run to recover members of faulted
+    /// fused batches.
+    pub retries: u64,
+    /// Worker panics caught and converted to structured faults
+    /// (the batch's tickets all resolved; the worker survived).
+    pub worker_panics: u64,
+    /// Queries answered past their modeled deadline (exact counts,
+    /// marked dirty).
+    pub deadline_misses: u64,
 }
 
 /// Compute a result/plan cache key from a pattern spec string —

@@ -28,7 +28,13 @@
 //!   the epoch, and incrementally adjust cached counts where a delta
 //!   run is clean (invalidating the rest).
 //! - `EPOCH` — report the current graph epoch and staged op count.
-//! - `QUIT` — close the session.
+//! - `SHUTDOWN` — gracefully stop the service: queued queries drain
+//!   and are answered, then the worker exits and the session closes.
+//! - `QUIT` — close the session (the service keeps running).
+//!
+//! Besides `OK`/`ERR`, an overloaded service answers a `QUERY` with a
+//! `BUSY depth=<n> max=<m>` line: the submission was shed at the
+//! admission-queue bound and may be retried later.
 
 use anyhow::{bail, ensure, Result};
 
@@ -59,6 +65,9 @@ pub enum Request {
     Epoch,
     Stats,
     Invalidate,
+    /// `SHUTDOWN` — drain the queue, stop the worker, close the
+    /// session.
+    Shutdown,
     Quit,
 }
 
@@ -124,13 +133,16 @@ pub fn parse_request(line: &str) -> Result<Request> {
     } else if verb.eq_ignore_ascii_case("INVALIDATE") {
         ensure!(rest.is_empty(), "INVALIDATE takes no arguments");
         Ok(Request::Invalidate)
+    } else if verb.eq_ignore_ascii_case("SHUTDOWN") {
+        ensure!(rest.is_empty(), "SHUTDOWN takes no arguments");
+        Ok(Request::Shutdown)
     } else if verb.eq_ignore_ascii_case("QUIT") {
         ensure!(rest.is_empty(), "QUIT takes no arguments");
         Ok(Request::Quit)
     } else {
         bail!(
             "unknown verb '{verb}' (expected QUERY, BATCH, STATS, INVALIDATE, \
-             UPDATE, COMMIT, EPOCH, or QUIT)"
+             UPDATE, COMMIT, EPOCH, SHUTDOWN, or QUIT)"
         )
     }
 }
@@ -181,6 +193,7 @@ mod tests {
         );
         assert_eq!(parse_request("Commit").unwrap(), Request::Commit);
         assert_eq!(parse_request("EPOCH").unwrap(), Request::Epoch);
+        assert_eq!(parse_request("shutdown").unwrap(), Request::Shutdown);
     }
 
     #[test]
@@ -202,6 +215,8 @@ mod tests {
         assert!(err_of(&crowded).contains("exceeding the 256 cap"));
         assert!(err_of("COMMIT now").contains("no arguments"));
         assert!(err_of("EPOCH now").contains("no arguments"));
+        assert!(err_of("SHUTDOWN now").contains("no arguments"));
+        assert!(err_of("RESTART").contains("SHUTDOWN, or QUIT"));
         let long = format!("QUERY {}", "0-1,".repeat(2000));
         assert!(err_of(&long).contains("exceeds 4096 bytes"));
     }

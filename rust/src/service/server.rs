@@ -19,9 +19,9 @@
 
 use std::io::{BufRead, Write};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, ensure, Result};
 
@@ -30,13 +30,24 @@ use crate::apps::count_delta;
 use crate::engine::{DegreeStats, EngineConfig, IntersectPlan, Runner, WarpContext};
 use crate::graph::{CsrGraph, GraphStore, UpdateBatch};
 use crate::plan::trie::PlanTrie;
-use crate::plan::{parse_pattern_set, ExecutionPlan, PatternKey};
+use crate::plan::{parse_pattern_set, ExecutionPlan, ParsedPattern, PatternKey};
 
 use super::admission::{group_batches, Batch, PendingQuery};
 use super::plan_cache::PlanCache;
 use super::protocol::{one_line, parse_request, Request};
 use super::result_cache::{CachedCount, ResultCache};
-use super::{ServiceConfig, ServiceStats};
+use super::{ServiceConfig, ServiceError, ServiceStats};
+
+/// Poison-tolerant lock. A panicking batch (isolated by
+/// `catch_unwind` in [`execute_batch`]) may poison a mutex mid-update;
+/// every consumer recovers the guard instead of propagating the
+/// poison, because nothing here relies on the poison bit for
+/// correctness: counters are monotone telemetry, caches hold
+/// value-complete entries (inserts are single calls, not multi-step
+/// protocols), and the queue holds whole `PendingQuery` values.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// The answer to one query.
 #[derive(Clone, Debug)]
@@ -64,15 +75,23 @@ pub struct QueryOutcome {
 pub struct Ticket {
     pub id: u64,
     rx: mpsc::Receiver<QueryOutcome>,
+    inner: Arc<Inner>,
 }
 
 impl Ticket {
-    /// Block until the query's batch completes. Fails only if the
-    /// service shut down before executing the query.
+    /// Block until the query's batch completes. Never hangs: if the
+    /// reply channel dies before an outcome arrives, the wait resolves
+    /// with a typed [`ServiceError`] — [`ServiceError::ShutDown`] when
+    /// the service was stopped, [`ServiceError::WorkerDead`] when the
+    /// worker thread died out from under the query.
     pub fn wait(self) -> Result<QueryOutcome> {
-        self.rx
-            .recv()
-            .map_err(|_| anyhow::anyhow!("service shut down before the query ran"))
+        self.rx.recv().map_err(|_| {
+            if self.inner.shutdown.load(Ordering::SeqCst) {
+                anyhow::Error::new(ServiceError::ShutDown)
+            } else {
+                anyhow::Error::new(ServiceError::WorkerDead)
+            }
+        })
     }
 }
 
@@ -86,6 +105,10 @@ struct Counters {
     commits: u64,
     adjusted: u64,
     selectivity_refreshes: u64,
+    shed: u64,
+    retries: u64,
+    worker_panics: u64,
+    deadline_misses: u64,
 }
 
 struct Inner {
@@ -116,6 +139,14 @@ struct Inner {
     counters: Mutex<Counters>,
     next_id: AtomicU64,
     shutdown: AtomicBool,
+    /// Flipped false when the worker thread exits for any reason; what
+    /// turns a would-be ticket hang into [`ServiceError::WorkerDead`]
+    /// and what [`ServiceHandle::shutdown`] waits on.
+    worker_alive: AtomicBool,
+    /// Test hook: panic inside the next batch (exercises the
+    /// `catch_unwind` isolation path deterministically, per service).
+    #[cfg(test)]
+    panic_next_batch: AtomicBool,
 }
 
 /// The server: owns the worker thread. Dropping (or calling
@@ -163,11 +194,17 @@ impl Service {
             counters: Mutex::new(Counters::default()),
             next_id: AtomicU64::new(1),
             shutdown: AtomicBool::new(false),
+            worker_alive: AtomicBool::new(true),
+            #[cfg(test)]
+            panic_next_batch: AtomicBool::new(false),
         });
         let w = Arc::clone(&inner);
         let worker = std::thread::Builder::new()
             .name("dumato-service".into())
-            .spawn(move || worker_loop(&w))
+            .spawn(move || {
+                let _exit = WorkerExit(Arc::clone(&w));
+                worker_loop(&w);
+            })
             .expect("spawn service worker");
         Service {
             inner,
@@ -216,20 +253,24 @@ impl ServiceHandle {
         let inner = &self.inner;
         ensure!(
             !inner.shutdown.load(Ordering::SeqCst),
-            "service is shut down"
+            ServiceError::ShutDown
+        );
+        ensure!(
+            inner.worker_alive.load(Ordering::SeqCst),
+            ServiceError::WorkerDead
         );
         let patterns = parse_pattern_set(specs)?;
         let keys: Vec<PatternKey> = patterns.iter().map(|p| p.key()).collect();
         let id = inner.next_id.fetch_add(1, Ordering::SeqCst);
         {
-            let mut ctr = inner.counters.lock().unwrap();
+            let mut ctr = lock(&inner.counters);
             ctr.queries += 1;
             ctr.patterns += keys.len() as u64;
         }
         let (tx, rx) = mpsc::channel();
         // fast path: every pattern already has a cached count
         {
-            let mut rc = inner.results.lock().unwrap();
+            let mut rc = lock(&inner.results);
             if keys.iter().all(|k| rc.contains(k)) {
                 let counts: Vec<u64> = keys
                     .iter()
@@ -245,28 +286,42 @@ impl ServiceHandle {
                     timed_out: false,
                     fault: None,
                 });
-                return Ok(Ticket { id, rx });
+                return Ok(Ticket { id, rx, inner: Arc::clone(inner) });
             }
         }
-        let submitted_clock = *inner.clock.lock().unwrap();
+        // load shedding, after the fast path (a cache-served answer
+        // costs nothing and is never shed). The bound is advisory:
+        // submitters racing the check may overshoot by their own count.
+        {
+            let depth = lock(&inner.queue).len();
+            if depth >= inner.cfg.max_queue {
+                lock(&inner.counters).shed += 1;
+                return Err(anyhow::Error::new(ServiceError::Busy {
+                    depth,
+                    max_queue: inner.cfg.max_queue,
+                }));
+            }
+        }
+        let submitted_clock = *lock(&inner.clock);
         let pq = PendingQuery {
             id,
             specs: specs.to_vec(),
             patterns,
             keys,
             submitted_clock,
+            deadline: inner.cfg.deadline.map(|d| submitted_clock + d),
             reply: tx,
         };
         {
-            let mut q = inner.queue.lock().unwrap();
+            let mut q = lock(&inner.queue);
             ensure!(
                 !inner.shutdown.load(Ordering::SeqCst),
-                "service is shut down"
+                ServiceError::ShutDown
             );
             q.push(pq);
         }
         inner.wake.notify_all();
-        Ok(Ticket { id, rx })
+        Ok(Ticket { id, rx, inner: Arc::clone(inner) })
     }
 
     /// Submit and wait: the blocking convenience used by the wire
@@ -279,20 +334,40 @@ impl ServiceHandle {
     /// returns how many entries were dropped. Plans are kept — they
     /// stay correct across snapshot changes.
     pub fn invalidate_results(&self) -> usize {
-        self.inner.results.lock().unwrap().invalidate_all()
+        lock(&self.inner.results).invalidate_all()
     }
 
     /// Drop one cached result by key; returns whether it existed.
     pub fn invalidate_result(&self, key: &PatternKey) -> bool {
-        self.inner.results.lock().unwrap().invalidate(key)
+        lock(&self.inner.results).invalidate(key)
+    }
+
+    /// Gracefully stop the service from any handle: queued queries
+    /// drain and are answered, new submissions are rejected with
+    /// [`ServiceError::ShutDown`], and the call returns once the
+    /// worker has exited. The wire `SHUTDOWN` verb lands here.
+    /// Idempotent; concurrent callers all block until the drain
+    /// completes.
+    pub fn shutdown(&self) {
+        let inner = &self.inner;
+        inner.shutdown.store(true, Ordering::SeqCst);
+        inner.wake.notify_all();
+        let mut q = lock(&inner.queue);
+        while inner.worker_alive.load(Ordering::SeqCst) {
+            let (guard, _) = inner
+                .wake
+                .wait_timeout(q, Duration::from_millis(20))
+                .unwrap_or_else(PoisonError::into_inner);
+            q = guard;
+        }
     }
 
     /// Snapshot the service counters.
     pub fn stats(&self) -> ServiceStats {
-        let ctr = self.inner.counters.lock().unwrap();
-        let plans = self.inner.plans.lock().unwrap();
-        let results = self.inner.results.lock().unwrap();
-        let sim_seconds = *self.inner.clock.lock().unwrap();
+        let ctr = lock(&self.inner.counters);
+        let plans = lock(&self.inner.plans);
+        let results = lock(&self.inner.results);
+        let sim_seconds = *lock(&self.inner.clock);
         ServiceStats {
             queries: ctr.queries,
             patterns: ctr.patterns,
@@ -311,6 +386,10 @@ impl ServiceHandle {
             commits: ctr.commits,
             adjusted_counts: ctr.adjusted,
             selectivity_refreshes: ctr.selectivity_refreshes,
+            shed: ctr.shed,
+            retries: ctr.retries,
+            worker_panics: ctr.worker_panics,
+            deadline_misses: ctr.deadline_misses,
         }
     }
 
@@ -318,7 +397,7 @@ impl ServiceHandle {
     /// intersect tables from (open-time scan, re-pinned by churny
     /// commits). Introspection for tests and the ablation banner.
     pub fn pinned_degree_stats(&self) -> crate::engine::DegreeStats {
-        *self.inner.stats.lock().unwrap()
+        *lock(&self.inner.stats)
     }
 
     /// The current snapshot's graph. Valid (and immutable) forever;
@@ -334,7 +413,7 @@ impl ServiceHandle {
 
     /// Edge ops staged and not yet committed.
     pub fn pending_updates(&self) -> usize {
-        self.inner.pending.lock().unwrap().as_ref().map_or(0, |b| b.len())
+        lock(&self.inner.pending).as_ref().map_or(0, |b| b.len())
     }
 
     /// Stage edge-op lines (`+u,v` / `-u,v`) against the current
@@ -344,7 +423,7 @@ impl ServiceHandle {
     /// call remain staged. Returns `(staged_now, total_pending)`.
     pub fn stage_updates(&self, ops: &[String]) -> Result<(usize, usize)> {
         ensure!(!ops.is_empty(), "nothing to stage: UPDATE needs at least one edge op");
-        let mut pending = self.inner.pending.lock().unwrap();
+        let mut pending = lock(&self.inner.pending);
         let batch = pending.get_or_insert_with(|| self.inner.store.begin_update());
         let mut staged = 0usize;
         for op in ops {
@@ -364,10 +443,7 @@ impl ServiceHandle {
     /// dropped by the cache's epoch check.
     pub fn commit_updates(&self) -> Result<CommitOutcome> {
         let inner = &self.inner;
-        let batch = inner
-            .pending
-            .lock()
-            .unwrap()
+        let batch = lock(&inner.pending)
             .take()
             .ok_or_else(|| anyhow!("nothing staged (stage edge ops with UPDATE first)"))?;
         let frontier = Arc::new(batch.frontier());
@@ -375,14 +451,14 @@ impl ServiceHandle {
         // Holding the result-cache lock across the delta runs makes
         // the commit a barrier: the fast path and batch completions
         // wait, and nothing can read a pre-commit count afterwards.
-        let mut rc = inner.results.lock().unwrap();
+        let mut rc = lock(&inner.results);
         let entries: Vec<(PatternKey, CachedCount)> = rc
             .keys()
             .into_iter()
             .filter_map(|k| rc.peek(&k).map(|cc| (k, cc)))
             .collect();
         let plans: Vec<Option<Arc<ExecutionPlan>>> = {
-            let pc = inner.plans.lock().unwrap();
+            let pc = lock(&inner.plans);
             entries.iter().map(|(k, _)| pc.peek(k)).collect()
         };
         rc.set_epoch(committed.new.epoch);
@@ -422,14 +498,14 @@ impl ServiceHandle {
             }
         }
         drop(rc);
-        *inner.freq.lock().unwrap() = committed.new.graph.label_frequencies();
+        *lock(&inner.freq) = committed.new.graph.label_frequencies();
         // Re-pin the intersect-selectivity statistics only past the
         // churn threshold (the delta layer's reorientation idiom): a
         // trickle of edges keeps the pinned scan, a densifying commit
         // moves the cost model onto the graph that actually exists now.
         let refreshed = {
             let fresh = DegreeStats::of(&committed.new.graph);
-            let mut pinned = inner.stats.lock().unwrap();
+            let mut pinned = lock(&inner.stats);
             let churn = pinned.drift(&fresh) > inner.cfg.selectivity_churn;
             if churn {
                 *pinned = fresh;
@@ -437,11 +513,11 @@ impl ServiceHandle {
             churn
         };
         {
-            let mut c = inner.clock.lock().unwrap();
+            let mut c = lock(&inner.clock);
             *c += sim;
         }
         {
-            let mut ctr = inner.counters.lock().unwrap();
+            let mut ctr = lock(&inner.counters);
             ctr.commits += 1;
             ctr.adjusted += adjusted as u64;
             ctr.selectivity_refreshes += refreshed as u64;
@@ -497,10 +573,23 @@ impl GpmAlgorithm for FusedJob {
     }
 }
 
+/// Flips `worker_alive` (and wakes waiters) when the worker thread
+/// exits for any reason — including an unwind that somehow escapes the
+/// per-batch isolation — so tickets resolve and shutdown callers
+/// unblock instead of hanging.
+struct WorkerExit(Arc<Inner>);
+
+impl Drop for WorkerExit {
+    fn drop(&mut self) {
+        self.0.worker_alive.store(false, Ordering::SeqCst);
+        self.0.wake.notify_all();
+    }
+}
+
 fn worker_loop(inner: &Arc<Inner>) {
     loop {
         let drained: Vec<PendingQuery> = {
-            let mut q = inner.queue.lock().unwrap();
+            let mut q = lock(&inner.queue);
             loop {
                 if !q.is_empty() {
                     break;
@@ -508,7 +597,7 @@ fn worker_loop(inner: &Arc<Inner>) {
                 if inner.shutdown.load(Ordering::SeqCst) {
                     return;
                 }
-                q = inner.wake.wait(q).unwrap();
+                q = inner.wake.wait(q).unwrap_or_else(PoisonError::into_inner);
             }
             // admission window: give compatible arrivals a chance to
             // join this round (skipped during shutdown drain)
@@ -520,7 +609,10 @@ fn worker_loop(inner: &Arc<Inner>) {
                     if now >= deadline || q.len() >= inner.cfg.max_batch {
                         break;
                     }
-                    let (guard, res) = inner.wake.wait_timeout(q, deadline - now).unwrap();
+                    let (guard, res) = inner
+                        .wake
+                        .wait_timeout(q, deadline - now)
+                        .unwrap_or_else(PoisonError::into_inner);
                     q = guard;
                     if res.timed_out() || inner.shutdown.load(Ordering::SeqCst) {
                         break;
@@ -536,33 +628,177 @@ fn worker_loop(inner: &Arc<Inner>) {
     }
 }
 
+/// What [`run_batch`] produced, per unique slot. Fan-out happens
+/// outside the panic boundary so a worker panic can never strand a
+/// ticket.
+struct BatchRun {
+    cached: Vec<Option<CachedCount>>,
+    run_slot: Vec<Option<usize>>,
+    leaf: Vec<u64>,
+    slot_fault: Vec<Option<String>>,
+    slot_timeout: Vec<bool>,
+    clock_after: f64,
+}
+
 fn execute_batch(inner: &Arc<Inner>, batch: Batch) {
+    let Batch { unique, members, .. } = batch;
+    // Panic isolation: execution runs inside `catch_unwind`, replies
+    // fan out after it. A panicking batch poisons at most a mutex
+    // (recovered by `lock`), resolves every member with a structured
+    // fault, and the worker survives to serve the next round.
+    // `AssertUnwindSafe` is justified by exactly that recovery story:
+    // no cross-batch state outlives the panic half-updated in a way
+    // correctness depends on (see `lock`).
+    let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        run_batch(inner, &unique)
+    }));
+    match run {
+        Ok(r) => {
+            // fan answers out to every member (isomorph submitters
+            // share a slot and therefore a count)
+            for (q, slots) in members {
+                let counts: Vec<u64> = slots
+                    .iter()
+                    .map(|&s| match &r.cached[s] {
+                        Some(cc) => cc.count,
+                        None => r.leaf[r.run_slot[s].expect("uncached slots are cold slots")],
+                    })
+                    .collect();
+                let result_hits = slots.iter().filter(|&&s| r.cached[s].is_some()).count();
+                // a query inherits the first fault among its slots and
+                // any slot's timeout; a missed deadline marks the
+                // answer dirty the same way (late, not wrong)
+                let fault = slots
+                    .iter()
+                    .find_map(|&s| r.run_slot[s].and_then(|j| r.slot_fault[j].clone()));
+                let slot_timed = slots
+                    .iter()
+                    .any(|&s| r.run_slot[s].is_some_and(|j| r.slot_timeout[j]));
+                let missed = q.deadline.is_some_and(|d| r.clock_after > d);
+                if missed {
+                    lock(&inner.counters).deadline_misses += 1;
+                }
+                let outcome = QueryOutcome {
+                    total: counts.iter().sum(),
+                    counts,
+                    latency: r.clock_after - q.submitted_clock,
+                    result_hits,
+                    timed_out: slot_timed || missed,
+                    fault,
+                };
+                // a dropped ticket just means nobody is waiting
+                let _ = q.reply.send(outcome);
+            }
+        }
+        Err(payload) => {
+            lock(&inner.counters).worker_panics += 1;
+            let clock = *lock(&inner.clock);
+            let msg = panic_text(payload.as_ref());
+            for (q, slots) in members {
+                let outcome = QueryOutcome {
+                    counts: vec![0; slots.len()],
+                    total: 0,
+                    latency: clock - q.submitted_clock,
+                    result_hits: 0,
+                    timed_out: false,
+                    fault: Some(format!("worker panic (isolated): {msg}")),
+                };
+                let _ = q.reply.send(outcome);
+            }
+        }
+    }
+}
+
+fn panic_text(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// One singleton execution with a bounded, backoff-modeled retry
+/// budget ([`run_singleton`]).
+struct SingletonRun {
+    count: u64,
+    timed_out: bool,
+    fault: Option<String>,
+    sim: f64,
+    runs: u64,
+}
+
+/// Run one pattern alone, up to `attempts` times, stopping at the
+/// first clean run. Retry `n` charges `backoff * 2^(n-1)` modeled
+/// seconds before executing — retries cost simulated time like
+/// everything else, so recovered queries report honest latency.
+fn run_singleton(
+    graph: &Arc<CsrGraph>,
+    p: &ExecutionPlan,
+    stats: &DegreeStats,
+    base: &EngineConfig,
+    attempts: u32,
+    backoff: f64,
+) -> SingletonRun {
+    let mut out = SingletonRun {
+        count: 0,
+        timed_out: false,
+        fault: None,
+        sim: 0.0,
+        runs: 0,
+    };
+    for attempt in 0..attempts.max(1) {
+        if attempt > 0 {
+            out.sim += backoff * f64::from(1u32 << (attempt - 1).min(16));
+        }
+        let table = IntersectPlan::build_with_stats(p, stats, &base.cost, base.intersect);
+        let ecfg = EngineConfig { intersect_table: Some(table), ..base.clone() };
+        let trie = PlanTrie::build(std::slice::from_ref(p))
+            .expect("a singleton pattern set is always fusable");
+        let job = FusedJob { trie };
+        let r = Runner::run_shared(graph, &job, &ecfg);
+        out.runs += 1;
+        out.sim += r.metrics.sim_seconds;
+        out.count = r.leaf_counts.first().copied().unwrap_or(r.count);
+        out.timed_out = r.timed_out;
+        out.fault = r.fault.map(|f| f.to_string());
+        if out.fault.is_none() {
+            break;
+        }
+    }
+    out
+}
+
+fn run_batch(inner: &Arc<Inner>, unique: &[(PatternKey, ParsedPattern)]) -> BatchRun {
+    #[cfg(test)]
+    if inner.panic_next_batch.swap(false, Ordering::SeqCst) {
+        panic!("injected worker panic");
+    }
     // 0) pin the snapshot this whole batch runs against. Results are
     //    inserted tagged with its epoch: if a commit lands while the
     //    engine is running, the insert arrives stale and is dropped.
     let snap = inner.store.snapshot();
     // 1) per unique pattern: cached answer, or a cold slot to run
     let cached: Vec<Option<CachedCount>> = {
-        let mut rc = inner.results.lock().unwrap();
-        batch.unique.iter().map(|(key, _)| rc.get(key)).collect()
+        let mut rc = lock(&inner.results);
+        unique.iter().map(|(key, _)| rc.get(key)).collect()
     };
-    let to_run: Vec<usize> = (0..batch.unique.len())
-        .filter(|&u| cached[u].is_none())
-        .collect();
+    let to_run: Vec<usize> = (0..unique.len()).filter(|&u| cached[u].is_none()).collect();
     // run_slot[u] = index into `to_run`/leaf counts for cold patterns
-    let mut run_slot: Vec<Option<usize>> = vec![None; batch.unique.len()];
+    let mut run_slot: Vec<Option<usize>> = vec![None; unique.len()];
     for (j, &u) in to_run.iter().enumerate() {
         run_slot[u] = Some(j);
     }
 
     // 2) compile cold plans through the plan cache
-    let freq = inner.freq.lock().unwrap().clone();
+    let freq = lock(&inner.freq).clone();
     let plans: Vec<Arc<ExecutionPlan>> = {
-        let mut pc = inner.plans.lock().unwrap();
+        let mut pc = lock(&inner.plans);
         to_run
             .iter()
             .map(|&u| {
-                let (key, pat) = &batch.unique[u];
+                let (key, pat) = &unique[u];
                 pc.get_or_compile(key, || {
                     let m = pat.adj();
                     match &pat.labels {
@@ -579,12 +815,13 @@ fn execute_batch(inner: &Arc<Inner>, batch: Batch) {
     //    pinned degree statistics (one open-time scan, re-pinned on
     //    churny commits) instead of a per-run rescan of the snapshot.
     let mut leaf: Vec<u64> = vec![0; to_run.len()];
+    let mut slot_fault: Vec<Option<String>> = vec![None; to_run.len()];
+    let mut slot_timeout: Vec<bool> = vec![false; to_run.len()];
     let mut sim_cost = 0.0;
-    let mut timed_out = false;
-    let mut fault: Option<String> = None;
     let mut engine_runs = 0u64;
+    let mut retries_used = 0u64;
     if !to_run.is_empty() {
-        let stats = *inner.stats.lock().unwrap();
+        let stats = *lock(&inner.stats);
         let base = &inner.cfg.engine;
         let plan_vec: Vec<ExecutionPlan> = plans.iter().map(|p| (**p).clone()).collect();
         match PlanTrie::build(&plan_vec) {
@@ -594,29 +831,67 @@ fn execute_batch(inner: &Arc<Inner>, batch: Batch) {
                 let ecfg = EngineConfig { intersect_table: Some(table), ..base.clone() };
                 let job = FusedJob { trie };
                 let r = Runner::run_shared(&snap.graph, &job, &ecfg);
-                assert_eq!(r.leaf_counts.len(), leaf.len(), "one leaf per cold pattern");
-                leaf.copy_from_slice(&r.leaf_counts);
                 sim_cost += r.metrics.sim_seconds;
-                timed_out |= r.timed_out;
-                fault = r.fault.map(|f| f.to_string());
                 engine_runs += 1;
+                match r.fault {
+                    None => {
+                        assert_eq!(r.leaf_counts.len(), leaf.len(), "one leaf per cold pattern");
+                        leaf.copy_from_slice(&r.leaf_counts);
+                        if r.timed_out {
+                            slot_timeout.iter_mut().for_each(|t| *t = true);
+                        }
+                    }
+                    Some(f) => {
+                        // A faulted fused batch leaves partial leaves
+                        // that must not be served. Recovery re-runs
+                        // each member as a singleton under the retry
+                        // budget: a transient fault (fire-once
+                        // injection, quarantined device) clears and
+                        // the whole batch is absorbed; a poison member
+                        // burns its own budget and faults alone,
+                        // without its co-batched neighbors paying.
+                        let fused_msg = f.to_string();
+                        for (j, p) in plan_vec.iter().enumerate() {
+                            if inner.cfg.retries == 0 {
+                                slot_fault[j] = Some(fused_msg.clone());
+                                continue;
+                            }
+                            let s = run_singleton(
+                                &snap.graph,
+                                p,
+                                &stats,
+                                base,
+                                inner.cfg.retries,
+                                inner.cfg.retry_backoff,
+                            );
+                            leaf[j] = s.count;
+                            slot_timeout[j] = s.timed_out;
+                            slot_fault[j] = s.fault;
+                            sim_cost += s.sim;
+                            engine_runs += s.runs;
+                            retries_used += s.runs;
+                        }
+                    }
+                }
             }
             Err(_) => {
+                // unfusable set (future key skew): singletons are the
+                // primary execution, with the same retry budget on top
                 for (j, p) in plan_vec.iter().enumerate() {
-                    let table =
-                        IntersectPlan::build_with_stats(p, &stats, &base.cost, base.intersect);
-                    let ecfg = EngineConfig { intersect_table: Some(table), ..base.clone() };
-                    let trie = PlanTrie::build(std::slice::from_ref(p))
-                        .expect("a singleton pattern set is always fusable");
-                    let job = FusedJob { trie };
-                    let r = Runner::run_shared(&snap.graph, &job, &ecfg);
-                    leaf[j] = r.leaf_counts.first().copied().unwrap_or(r.count);
-                    sim_cost += r.metrics.sim_seconds;
-                    timed_out |= r.timed_out;
-                    if fault.is_none() {
-                        fault = r.fault.map(|f| f.to_string());
-                    }
-                    engine_runs += 1;
+                    let s = run_singleton(
+                        &snap.graph,
+                        p,
+                        &stats,
+                        base,
+                        1 + inner.cfg.retries,
+                        inner.cfg.retry_backoff,
+                    );
+                    leaf[j] = s.count;
+                    slot_timeout[j] = s.timed_out;
+                    slot_fault[j] = s.fault;
+                    sim_cost += s.sim;
+                    engine_runs += s.runs;
+                    retries_used += s.runs - 1;
                 }
             }
         }
@@ -624,58 +899,48 @@ fn execute_batch(inner: &Arc<Inner>, batch: Batch) {
 
     // 4) advance the modeled clock
     let clock_after = {
-        let mut c = inner.clock.lock().unwrap();
+        let mut c = lock(&inner.clock);
         *c += sim_cost;
         *c
     };
 
-    // 5) cache clean cold results only — partial counts must never be
-    //    served to a later query
-    if !timed_out && fault.is_none() && !to_run.is_empty() {
+    // 5) cache clean cold results only, per slot — partial counts must
+    //    never be served to a later query, but a poison member's fault
+    //    (or timeout) blocks its own entry, not its whole batch's
+    if !to_run.is_empty() {
         let share = sim_cost / to_run.len() as f64;
-        let mut rc = inner.results.lock().unwrap();
+        let mut rc = lock(&inner.results);
         for (j, &u) in to_run.iter().enumerate() {
-            rc.insert(
-                batch.unique[u].0.clone(),
-                CachedCount {
-                    count: leaf[j],
-                    cold_sim_seconds: share,
-                },
-                snap.epoch,
-            );
+            if slot_fault[j].is_none() && !slot_timeout[j] {
+                rc.insert(
+                    unique[u].0.clone(),
+                    CachedCount {
+                        count: leaf[j],
+                        cold_sim_seconds: share,
+                    },
+                    snap.epoch,
+                );
+            }
         }
     }
 
     {
-        let mut ctr = inner.counters.lock().unwrap();
+        let mut ctr = lock(&inner.counters);
         ctr.engine_runs += engine_runs;
         ctr.cold_patterns += to_run.len() as u64;
+        ctr.retries += retries_used;
         if !to_run.is_empty() {
             ctr.batches += 1;
         }
     }
 
-    // 6) fan answers out to every member (isomorph submitters share a
-    //    slot and therefore a count)
-    for (q, slots) in batch.members {
-        let counts: Vec<u64> = slots
-            .iter()
-            .map(|&s| match &cached[s] {
-                Some(cc) => cc.count,
-                None => leaf[run_slot[s].expect("uncached slots are cold slots")],
-            })
-            .collect();
-        let result_hits = slots.iter().filter(|&&s| cached[s].is_some()).count();
-        let outcome = QueryOutcome {
-            total: counts.iter().sum(),
-            counts,
-            latency: clock_after - q.submitted_clock,
-            result_hits,
-            timed_out,
-            fault: fault.clone(),
-        };
-        // a dropped ticket just means nobody is waiting
-        let _ = q.reply.send(outcome);
+    BatchRun {
+        cached,
+        run_slot,
+        leaf,
+        slot_fault,
+        slot_timeout,
+        clock_after,
     }
 }
 
@@ -705,6 +970,14 @@ pub fn serve_lines<R: BufRead, W: Write>(
                 out.flush()?;
                 return Ok(());
             }
+            Ok(Request::Shutdown) => {
+                // graceful: drain the queue, stop the worker, close
+                // the session once the service has fully wound down
+                handle.shutdown();
+                writeln!(out, "OK shutdown")?;
+                out.flush()?;
+                return Ok(());
+            }
             Ok(Request::Stats) => {
                 let s = handle.stats();
                 writeln!(
@@ -712,7 +985,8 @@ pub fn serve_lines<R: BufRead, W: Write>(
                     "OK queries={} patterns={} batches={} engine_runs={} cold={} \
                      plan_hits={} plan_misses={} plan_evictions={} result_hits={} \
                      result_misses={} result_evictions={} invalidations={} sim_seconds={:.6} \
-                     epoch={} commits={} adjusted={} selectivity_refreshes={}",
+                     epoch={} commits={} adjusted={} selectivity_refreshes={} \
+                     shed={} retries={} worker_panics={} deadline_misses={}",
                     s.queries,
                     s.patterns,
                     s.batches,
@@ -729,7 +1003,11 @@ pub fn serve_lines<R: BufRead, W: Write>(
                     s.epoch,
                     s.commits,
                     s.adjusted_counts,
-                    s.selectivity_refreshes
+                    s.selectivity_refreshes,
+                    s.shed,
+                    s.retries,
+                    s.worker_panics,
+                    s.deadline_misses
                 )?;
             }
             Ok(Request::Invalidate) => {
@@ -781,21 +1059,21 @@ pub fn serve_lines<R: BufRead, W: Write>(
                     };
                     match parse_request(&line) {
                         Ok(Request::Query { specs }) => {
-                            slots.push(handle.submit(&specs).map_err(|e| one_line(&format!("{e:#}"))));
+                            slots.push(handle.submit(&specs).map_err(|e| error_line(&e)));
                         }
                         Ok(_) => slots.push(Err(
-                            "only QUERY lines are allowed inside a BATCH".into()
+                            "ERR only QUERY lines are allowed inside a BATCH".into()
                         )),
-                        Err(e) => slots.push(Err(one_line(&format!("{e:#}")))),
+                        Err(e) => slots.push(Err(format!("ERR {}", one_line(&format!("{e:#}"))))),
                     }
                 }
                 for slot in slots {
                     match slot {
                         Ok(ticket) => match ticket.wait() {
                             Ok(o) => writeln!(out, "{}", outcome_line(&o))?,
-                            Err(e) => writeln!(out, "ERR {}", one_line(&format!("{e:#}")))?,
+                            Err(e) => writeln!(out, "{}", error_line(&e))?,
                         },
-                        Err(msg) => writeln!(out, "ERR {msg}")?,
+                        Err(line) => writeln!(out, "{line}")?,
                     }
                 }
                 if truncated {
@@ -820,10 +1098,21 @@ fn decode_line(buf: &mut Vec<u8>) -> Option<String> {
     std::str::from_utf8(buf).ok().map(|s| s.to_string())
 }
 
+/// One response line for a failed submit/wait. Shedding gets its own
+/// `BUSY` shape (machine-retryable, distinct from a hard `ERR`).
+fn error_line(e: &anyhow::Error) -> String {
+    match e.downcast_ref::<ServiceError>() {
+        Some(ServiceError::Busy { depth, max_queue }) => {
+            format!("BUSY depth={depth} max={max_queue}")
+        }
+        _ => format!("ERR {}", one_line(&format!("{e:#}"))),
+    }
+}
+
 fn respond_query(handle: &ServiceHandle, specs: &[String]) -> String {
     match handle.query(specs) {
         Ok(o) => outcome_line(&o),
-        Err(e) => format!("ERR {}", one_line(&format!("{e:#}"))),
+        Err(e) => error_line(&e),
     }
 }
 
@@ -999,6 +1288,166 @@ mod tests {
         svc.shutdown();
         let err = h.query(&["0-1,1-2".to_string()]).unwrap_err();
         assert!(format!("{err:#}").contains("shut down"));
+        assert!(matches!(
+            err.downcast_ref::<ServiceError>(),
+            Some(ServiceError::ShutDown)
+        ));
+    }
+
+    #[test]
+    fn handle_shutdown_drains_queue_then_rejects() {
+        let svc = tiny_service();
+        let h = svc.handle();
+        let t = h.submit(&["0-1,1-2".to_string()]).unwrap();
+        h.shutdown();
+        let out = t.wait().expect("a queued query is drained, not dropped");
+        assert!(out.fault.is_none());
+        let err = h.query(&["0-1,1-2,2-0".to_string()]).unwrap_err();
+        assert!(
+            matches!(err.downcast_ref::<ServiceError>(), Some(ServiceError::ShutDown)),
+            "{err:#}"
+        );
+        svc.shutdown();
+    }
+
+    #[test]
+    fn overloaded_service_sheds_with_busy() {
+        let g = Arc::new(generators::erdos_renyi(24, 0.3, 11));
+        let mut cfg = tiny_cfg();
+        cfg.max_queue = 0; // drain mode: shed every cache miss
+        let svc = Service::open(GraphStore::new(g), cfg);
+        let h = svc.handle();
+        let err = h.query(&["0-1,1-2".to_string()]).unwrap_err();
+        match err.downcast_ref::<ServiceError>() {
+            Some(ServiceError::Busy { max_queue: 0, .. }) => {}
+            other => panic!("expected Busy, got {other:?} ({err:#})"),
+        }
+        assert_eq!(h.stats().shed, 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn faulted_fused_batch_recovers_via_singleton_retries() {
+        use crate::vgpu::FaultPlan;
+        let g = Arc::new(generators::erdos_renyi(24, 0.3, 11));
+        let specs = vec!["0-1,1-2,2-0".to_string(), "0-1,1-2".to_string()];
+        let clean = Service::open(GraphStore::new(Arc::clone(&g)), tiny_cfg());
+        let want = clean.handle().query(&specs).unwrap();
+        clean.shutdown();
+
+        // an injected device death fires once (fire-once plan state is
+        // shared across the retries' config clones): the fused run
+        // faults, both members recover as singletons, counts exact
+        let mut cfg = tiny_cfg();
+        cfg.engine.faults = FaultPlan::parse(&["death@0:0".to_string()]).unwrap();
+        let svc = Service::open(GraphStore::new(g), cfg);
+        let h = svc.handle();
+        let out = h.query(&specs).unwrap();
+        assert!(out.fault.is_none(), "transient fault must be absorbed: {:?}", out.fault);
+        assert!(!out.timed_out);
+        assert_eq!(out.counts, want.counts);
+        let s = h.stats();
+        assert!(s.retries >= 1, "recovery ran singleton retries: {s:?}");
+        assert_eq!(s.worker_panics, 0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn poison_member_faults_alone_after_bounded_retries() {
+        // an organically undersized slab refaults on every retry: the
+        // query surfaces a structured fault once the budget burns, the
+        // worker survives, and nothing partial lands in the cache
+        let g = Arc::new(generators::erdos_renyi(24, 0.3, 11));
+        let mut cfg = tiny_cfg();
+        cfg.engine.ext_slab_cap = Some(2);
+        let svc = Service::open(GraphStore::new(g), cfg);
+        let h = svc.handle();
+        let out = h.query(&["0-1,1-2,2-0".to_string()]).unwrap();
+        assert!(
+            out.fault.as_deref().is_some_and(|f| f.contains("slab overflow")),
+            "{:?}",
+            out.fault
+        );
+        let s = h.stats();
+        assert!(s.retries >= 1, "the budget was spent: {s:?}");
+        assert_eq!(s.worker_panics, 0);
+        // the faulted count was not cached: a resubmission recounts
+        let again = h.query(&["0-1,1-2,2-0".to_string()]).unwrap();
+        assert_eq!(again.result_hits, 0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn worker_panic_is_isolated_and_tickets_resolve() {
+        let svc = tiny_service();
+        let h = svc.handle();
+        h.inner.panic_next_batch.store(true, Ordering::SeqCst);
+        let out = h.query(&["0-1,1-2,2-0".to_string()]).unwrap();
+        assert!(
+            out.fault.as_deref().is_some_and(|f| f.contains("worker panic")),
+            "{:?}",
+            out.fault
+        );
+        assert_eq!(h.stats().worker_panics, 1);
+        // the worker survived: the same query now runs clean
+        let ok = h.query(&["0-1,1-2,2-0".to_string()]).unwrap();
+        assert!(ok.fault.is_none());
+        assert_eq!(h.stats().worker_panics, 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn deadline_misses_mark_answers_dirty_but_exact() {
+        let g = Arc::new(generators::erdos_renyi(24, 0.3, 11));
+        let clean = Service::open(GraphStore::new(Arc::clone(&g)), tiny_cfg());
+        let want = clean.handle().query(&["0-1,1-2,2-0".to_string()]).unwrap();
+        clean.shutdown();
+        let mut cfg = tiny_cfg();
+        cfg.deadline = Some(0.0); // any engine work lands past it
+        let svc = Service::open(GraphStore::new(g), cfg);
+        let h = svc.handle();
+        let out = h.query(&["0-1,1-2,2-0".to_string()]).unwrap();
+        assert!(out.timed_out, "a zero deadline must mark the answer dirty");
+        assert!(out.fault.is_none());
+        assert_eq!(out.counts, want.counts, "a deadline miss is late, not wrong");
+        assert_eq!(h.stats().deadline_misses, 1);
+        // the slot itself was clean, so the count was cached — and a
+        // cache hit (zero modeled latency) meets even a zero deadline
+        let warm = h.query(&["0-1,1-2,2-0".to_string()]).unwrap();
+        assert!(!warm.timed_out);
+        assert_eq!(warm.result_hits, 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn wire_shutdown_and_busy_responses() {
+        use std::io::Cursor;
+        // SHUTDOWN drains and closes the session
+        let svc = tiny_service();
+        let h = svc.handle();
+        let mut out = Vec::new();
+        serve_lines(&h, Cursor::new(b"QUERY 0-1,1-2\nSHUTDOWN\n".to_vec()), &mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("OK count="), "{text}");
+        assert!(text.contains("OK shutdown"), "{text}");
+        assert!(h.query(&["0-1,1-2".to_string()]).is_err(), "service stopped");
+        svc.shutdown();
+        // an overloaded service answers BUSY, not ERR
+        let g = Arc::new(generators::erdos_renyi(24, 0.3, 11));
+        let mut cfg = tiny_cfg();
+        cfg.max_queue = 0;
+        let svc = Service::open(GraphStore::new(g), cfg);
+        let mut out = Vec::new();
+        serve_lines(
+            &svc.handle(),
+            Cursor::new(b"QUERY 0-1,1-2\nSTATS\nQUIT\n".to_vec()),
+            &mut out,
+        )
+        .unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("BUSY depth=0 max=0"), "{text}");
+        assert!(text.contains("shed=1"), "{text}");
+        svc.shutdown();
     }
 
     #[test]

@@ -1,0 +1,319 @@
+//! Deterministic fault injection for the vGPU model.
+//!
+//! A [`FaultPlan`] is a seeded schedule of injectable faults evaluated
+//! at well-defined points of the modeled execution (the engine's
+//! `control()` checkpoint, the scheduler's between-segment hook, the
+//! fleet's epoch barrier, the interconnect transfer path). Because the
+//! model is deterministic and every fault is keyed to a deterministic
+//! event counter (level reached, segment index, epoch index, transfer
+//! ordinal), the same plan on the same input reproduces the same
+//! failure bit-identically — which is what lets the chaos differential
+//! suite assert *exact* counts after recovery instead of "roughly
+//! right".
+//!
+//! Spec syntax (CLI `--inject-fault`, repeatable):
+//!
+//! ```text
+//! kind@when[:seed]
+//!   slab@L    — injected slab overflow when a warp's checkpoint sits
+//!               at traversal depth L (fires at the control() boundary,
+//!               *before* any extension is generated, so the parked
+//!               state stays exact and salvageable)
+//!   death@E   — device death observed at fleet epoch barrier E
+//!               (devices=1: after E scheduler segments)
+//!   ecc@S     — modeled uncorrectable ECC/segment error after the
+//!               device's S-th kernel segment
+//!   xfer@N    — the N-th interconnect transfer event fails and is
+//!               retried (double latency charged; the payload still
+//!               arrives, so counts are unaffected)
+//! ```
+//!
+//! `seed` picks the victim device (`seed % devices`); it defaults to 0.
+//! Each spec fires **once** per plan instance: clones share the fired
+//! state through an `Arc`, so a fleet evaluating one plan across N
+//! devices — or a service retrying a faulted batch — observes a
+//! *transient* fault, the realistic shape (a singleton retry of a
+//! fused batch succeeds unless the pattern itself is poison).
+
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+/// What to break. See the module docs for the per-kind `when` anchor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Injected extension-slab overflow at traversal depth `when`.
+    Slab,
+    /// Whole-device death at fleet epoch `when`.
+    Death,
+    /// Uncorrectable ECC error after the device's `when`-th segment.
+    Ecc,
+    /// Failed-and-retried interconnect transfer at ordinal `when`.
+    Xfer,
+}
+
+impl fmt::Display for FaultKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            FaultKind::Slab => "slab",
+            FaultKind::Death => "death",
+            FaultKind::Ecc => "ecc",
+            FaultKind::Xfer => "xfer",
+        };
+        f.write_str(s)
+    }
+}
+
+/// One scheduled fault: `kind@when[:seed]`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultSpec {
+    pub kind: FaultKind,
+    /// Event ordinal the fault is anchored to (kind-specific).
+    pub when: u64,
+    /// Victim selector: the target device is `seed % devices`.
+    pub seed: u64,
+}
+
+impl FaultSpec {
+    /// Parse `kind@when[:seed]`. Every rejection is a distinct error
+    /// (fuzzed in `tests/fuzz_protocol.rs`).
+    pub fn parse(s: &str) -> Result<Self> {
+        let s = s.trim();
+        let (kind_s, rest) = match s.split_once('@') {
+            Some(p) => p,
+            None => bail!("fault spec '{s}' is missing '@' (expected kind@when[:seed])"),
+        };
+        let kind = match kind_s.to_ascii_lowercase().as_str() {
+            "slab" => FaultKind::Slab,
+            "death" => FaultKind::Death,
+            "ecc" => FaultKind::Ecc,
+            "xfer" => FaultKind::Xfer,
+            other => bail!("unknown fault kind '{other}' (expected slab, death, ecc, or xfer)"),
+        };
+        let (when_s, seed_s) = match rest.split_once(':') {
+            Some((w, sd)) => (w, Some(sd)),
+            None => (rest, None),
+        };
+        let when: u64 = when_s
+            .parse()
+            .map_err(|_| anyhow::anyhow!("fault time '{when_s}' is not a number"))?;
+        let seed: u64 = match seed_s {
+            Some(sd) => sd
+                .parse()
+                .map_err(|_| anyhow::anyhow!("fault seed '{sd}' is not a number"))?,
+            None => 0,
+        };
+        Ok(Self { kind, when, seed })
+    }
+
+    /// Is `device` (of `ndev`) this spec's victim?
+    fn targets(&self, device: usize, ndev: usize) -> bool {
+        ndev > 0 && self.seed as usize % ndev == device
+    }
+}
+
+impl fmt::Display for FaultSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}@{}:{}", self.kind, self.when, self.seed)
+    }
+}
+
+struct PlanInner {
+    specs: Vec<FaultSpec>,
+    /// One fire-once latch per spec, shared across clones.
+    fired: Vec<AtomicBool>,
+    /// Cumulative interconnect transfer events observed by the plan
+    /// (xfer specs are anchored to this fleet-wide ordinal).
+    xfer_events: AtomicU64,
+}
+
+/// A shared, seeded fault schedule. `Default` is the empty plan (the
+/// armed check is one `Option` test, so the hot `control()` path pays
+/// nothing when no faults are configured). `Clone` shares the fired
+/// state: a spec consumed on one device (or one service retry) stays
+/// consumed everywhere.
+#[derive(Clone, Default)]
+pub struct FaultPlan {
+    inner: Option<Arc<PlanInner>>,
+}
+
+impl fmt::Debug for FaultPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match &self.inner {
+            None => f.write_str("FaultPlan(none)"),
+            Some(p) => {
+                let specs: Vec<String> = p.specs.iter().map(|s| s.to_string()).collect();
+                write!(f, "FaultPlan({})", specs.join(","))
+            }
+        }
+    }
+}
+
+impl FaultPlan {
+    /// Build a plan from parsed specs. An empty list yields the (free)
+    /// disarmed plan.
+    pub fn new(specs: Vec<FaultSpec>) -> Self {
+        if specs.is_empty() {
+            return Self { inner: None };
+        }
+        let fired = specs.iter().map(|_| AtomicBool::new(false)).collect();
+        Self {
+            inner: Some(Arc::new(PlanInner {
+                specs,
+                fired,
+                xfer_events: AtomicU64::new(0),
+            })),
+        }
+    }
+
+    /// Parse a list of `kind@when[:seed]` strings (the repeatable
+    /// `--inject-fault` CLI flag).
+    pub fn parse(specs: &[String]) -> Result<Self> {
+        let parsed: Result<Vec<FaultSpec>> = specs.iter().map(|s| FaultSpec::parse(s)).collect();
+        Ok(Self::new(parsed?))
+    }
+
+    /// Fast disarmed test for hot paths.
+    #[inline]
+    pub fn is_armed(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Fire the first unfired spec matching `kind`, `when`, and the
+    /// victim device. Returns the spec if it fired (exactly once per
+    /// spec across all clones).
+    fn fire(&self, kind: FaultKind, when: u64, device: usize, ndev: usize) -> Option<FaultSpec> {
+        let p = self.inner.as_deref()?;
+        for (spec, latch) in p.specs.iter().zip(&p.fired) {
+            if spec.kind == kind
+                && spec.when == when
+                && spec.targets(device, ndev)
+                && latch
+                    .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+                    .is_ok()
+            {
+                return Some(*spec);
+            }
+        }
+        None
+    }
+
+    /// Injected slab overflow: fires when the victim device parks a
+    /// warp at traversal depth `level` (control() checkpoint — no
+    /// partial extension list exists, so the state is salvageable).
+    #[inline]
+    pub fn slab_fires(&self, device: usize, ndev: usize, level: usize) -> bool {
+        self.is_armed() && self.fire(FaultKind::Slab, level as u64, device, ndev).is_some()
+    }
+
+    /// Device death observed at fleet epoch barrier `epoch` (or, on a
+    /// single-device run, after `epoch` scheduler segments).
+    #[inline]
+    pub fn death_fires(&self, device: usize, ndev: usize, epoch: u64) -> bool {
+        self.is_armed() && self.fire(FaultKind::Death, epoch, device, ndev).is_some()
+    }
+
+    /// Uncorrectable ECC error after the victim device's `segment`-th
+    /// kernel segment.
+    #[inline]
+    pub fn ecc_fires(&self, device: usize, ndev: usize, segment: u64) -> bool {
+        self.is_armed() && self.fire(FaultKind::Ecc, segment, device, ndev).is_some()
+    }
+
+    /// Advance the fleet-wide transfer ordinal by `transfers` and
+    /// return how many scheduled xfer faults fall inside the window —
+    /// each is a failed-and-retried transfer, so the caller charges
+    /// that many extra transfer latencies (the payload still arrives).
+    pub fn xfer_retries(&self, transfers: u64) -> u64 {
+        let p = match self.inner.as_deref() {
+            Some(p) => p,
+            None => return 0,
+        };
+        if transfers == 0 {
+            return 0;
+        }
+        let start = p.xfer_events.fetch_add(transfers, Ordering::AcqRel);
+        let end = start + transfers;
+        let mut retries = 0;
+        for (spec, latch) in p.specs.iter().zip(&p.fired) {
+            if spec.kind == FaultKind::Xfer
+                && spec.when >= start
+                && spec.when < end
+                && latch
+                    .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+                    .is_ok()
+            {
+                retries += 1;
+            }
+        }
+        retries
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan(specs: &[&str]) -> FaultPlan {
+        let specs: Vec<String> = specs.iter().map(|s| s.to_string()).collect();
+        FaultPlan::parse(&specs).unwrap()
+    }
+
+    #[test]
+    fn specs_parse_and_default_seed_is_zero() {
+        let s = FaultSpec::parse("slab@2").unwrap();
+        assert_eq!(s.kind, FaultKind::Slab);
+        assert_eq!(s.when, 2);
+        assert_eq!(s.seed, 0);
+        let s = FaultSpec::parse(" DEATH@1:7 ").unwrap();
+        assert_eq!(s.kind, FaultKind::Death);
+        assert_eq!(s.when, 1);
+        assert_eq!(s.seed, 7);
+        assert_eq!(s.to_string(), "death@1:7");
+    }
+
+    #[test]
+    fn parse_rejections_are_distinct() {
+        let err = |s: &str| format!("{:#}", FaultSpec::parse(s).unwrap_err());
+        assert!(err("slab2").contains("missing '@'"));
+        assert!(err("melt@2").contains("unknown fault kind 'melt'"));
+        assert!(err("slab@two").contains("not a number"));
+        assert!(err("slab@2:x").contains("fault seed 'x' is not a number"));
+    }
+
+    #[test]
+    fn fire_once_is_shared_across_clones() {
+        let p = plan(&["death@1:0"]);
+        let q = p.clone();
+        assert!(p.death_fires(0, 2, 1));
+        assert!(!q.death_fires(0, 2, 1), "clone shares the fired latch");
+    }
+
+    #[test]
+    fn victim_device_is_seed_mod_ndev() {
+        let p = plan(&["slab@2:5"]);
+        assert!(!p.slab_fires(0, 4, 2), "5 % 4 = 1, device 0 unharmed");
+        assert!(p.slab_fires(1, 4, 2));
+    }
+
+    #[test]
+    fn disarmed_plan_is_free_and_never_fires() {
+        let p = FaultPlan::default();
+        assert!(!p.is_armed());
+        assert!(!p.slab_fires(0, 1, 0));
+        assert_eq!(p.xfer_retries(100), 0);
+    }
+
+    #[test]
+    fn xfer_window_counts_cumulative_events() {
+        let p = plan(&["xfer@3", "xfer@10"]);
+        assert_eq!(p.xfer_retries(2), 0, "events 0..2");
+        assert_eq!(p.xfer_retries(2), 1, "events 2..4 hit xfer@3");
+        assert_eq!(p.xfer_retries(5), 0, "events 4..9 miss");
+        assert_eq!(p.xfer_retries(1), 0, "event 9");
+        assert_eq!(p.xfer_retries(1), 1, "event 10 hits xfer@10");
+        assert_eq!(p.xfer_retries(50), 0, "both latches consumed");
+    }
+}

@@ -135,6 +135,16 @@ pub struct KernelMetrics {
     /// Per-device idle seconds accumulated at epoch barriers — the skew
     /// the fleet could not rebalance away. Empty for single-device runs.
     pub device_idle_seconds: Vec<f64>,
+    /// Devices that faulted during the run (recovered or fatal).
+    pub device_faults: u64,
+    /// Work units (queued seeds + parked-traversal remainders) re-dealt
+    /// from quarantined devices to survivors.
+    pub recovered_units: u64,
+    /// Bytes re-shipped across the interconnect by recovery re-deals.
+    pub recovery_bytes: u64,
+    /// Interconnect transfers that failed and were retried (each one
+    /// charged a second transfer latency; payloads still arrived).
+    pub xfer_retries: u64,
 }
 
 impl KernelMetrics {

@@ -20,9 +20,11 @@
 
 pub mod coalesce;
 pub mod cost;
+pub mod fault;
 pub mod metrics;
 
 pub use cost::CostModel;
+pub use fault::{FaultKind, FaultPlan, FaultSpec};
 pub use metrics::{KernelMetrics, WarpProfiler};
 
 /// Lanes per warp (CUDA warp width).

@@ -241,6 +241,58 @@ fn malformed_lines_get_distinct_errors_and_never_kill_the_session() {
 }
 
 #[test]
+fn shutdown_verb_drains_and_closes() {
+    let svc = tiny_service();
+    let lines = session(&svc, b"SHUTDOWN now\nQUERY 0-1,1-2,2-0\nSHUTDOWN\n");
+    assert_eq!(lines.len(), 3, "{lines:?}");
+    assert!(
+        lines[0].starts_with("ERR ") && lines[0].contains("no arguments"),
+        "{lines:?}"
+    );
+    assert!(lines[1].starts_with("OK count="), "{lines:?}");
+    assert_eq!(lines[2], "OK shutdown");
+    // the service is gone: a later session's query reports shut down
+    let lines = session(&svc, b"QUERY 0-1,1-2\nQUIT\n");
+    assert!(
+        lines[0].starts_with("ERR ") && lines[0].contains("shut down"),
+        "{lines:?}"
+    );
+    svc.shutdown();
+}
+
+#[test]
+fn fault_spec_junk_errors_instead_of_panicking() {
+    use dumato::vgpu::FaultPlan;
+    let mut rng = Rng::new(0xfa417);
+    for kind in ["slab", "death", "ecc", "xfer"] {
+        assert!(FaultPlan::parse(&[format!("{kind}@0")]).is_ok(), "{kind}");
+    }
+    let mut cases: Vec<(String, &str)> = vec![
+        ("slab".into(), "missing '@'"),
+        ("warp@3".into(), "unknown fault kind"),
+        ("slab@x".into(), "is not a number"),
+        ("slab@1:y".into(), "is not a number"),
+        ("@1".into(), "unknown fault kind"),
+    ];
+    for _ in 0..80 {
+        let len = 1 + rng.below(16) as usize;
+        cases.push((junk(&mut rng, len), ""));
+    }
+    for (spec, marker) in cases {
+        match FaultPlan::parse(&[spec.clone()]) {
+            Ok(_) => assert!(marker.is_empty(), "junk {spec:?} parsed as a fault spec"),
+            Err(e) => {
+                let msg = format!("{e:#}");
+                assert!(
+                    marker.is_empty() || msg.contains(marker),
+                    "{spec:?}: expected {marker:?} in {msg}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn invalid_utf8_is_rejected_not_fatal() {
     let svc = tiny_service();
     let mut input: Vec<u8> = Vec::new();

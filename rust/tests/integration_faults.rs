@@ -1,0 +1,182 @@
+//! Chaos differential suite for the fault-tolerance layer.
+//!
+//! The invariant under test: with a seeded, deterministic [`FaultPlan`]
+//! armed, a run is **exact or structured-faulted — never silently
+//! wrong**. A fleet with survivors quarantines the victim and re-deals
+//! its work (counts match the fault-free reference bit-for-bit, `fault
+//! == None`); a run with no survivors aborts with a structured
+//! [`EngineError`] (`fault == Some`, partial counts clearly flagged).
+//! The same plan on the same input reproduces the same failure, so
+//! every assertion here is a fixed fact, not a flake.
+
+use dumato::apps::{CliqueCount, MotifCount, SubgraphQuery};
+use dumato::engine::{EngineConfig, EngineError, Runner};
+use dumato::graph::generators;
+use dumato::vgpu::FaultPlan;
+
+fn cfg(devices: usize, specs: &[String]) -> EngineConfig {
+    EngineConfig {
+        warps: 16,
+        threads: 2,
+        devices,
+        faults: FaultPlan::parse(specs).expect("test specs are well-formed"),
+        ..Default::default()
+    }
+}
+
+/// A deterministic family of fault schedules: single faults of every
+/// kind across victims and anchors, plus a compound plan mixing
+/// death + ecc + a transfer failure.
+fn chaos_plans() -> Vec<Vec<String>> {
+    let mut plans = Vec::new();
+    for s in 0..2u64 {
+        plans.push(vec![format!("death@{}:{}", s % 2, s)]);
+        plans.push(vec![format!("slab@{}:{}", 1 + s % 2, s)]);
+        plans.push(vec![format!("ecc@{}:{}", s % 3, s)]);
+        plans.push(vec![
+            format!("death@0:{s}"),
+            format!("ecc@{}:{}", s % 2, s + 1),
+            format!("xfer@{s}"),
+        ]);
+    }
+    plans
+}
+
+/// `fault == None` must mean exact; `fault == Some` must be recorded in
+/// the per-device fault list. Returns (recovered, fatal) as 0/1.
+fn check_exact_or_faulted<T: PartialEq + std::fmt::Debug>(
+    r: &dumato::engine::RunReport,
+    got: &T,
+    want: &T,
+    what: &str,
+) -> (u32, u32) {
+    match &r.fault {
+        None => {
+            assert_eq!(got, want, "{what}: clean-reported run with wrong counts");
+            (u32::from(!r.faults.is_empty()), 0)
+        }
+        Some(_) => {
+            assert!(
+                !r.faults.is_empty(),
+                "{what}: fatal fault missing from the per-device list"
+            );
+            (0, 1)
+        }
+    }
+}
+
+#[test]
+fn chaos_runs_are_exact_or_structured_never_silently_wrong() {
+    let g = generators::erdos_renyi(36, 0.25, 7);
+    let clique = CliqueCount::new(4);
+    let query = SubgraphQuery::new(4, &[(0, 1), (1, 2), (2, 3), (3, 0)]); // 4-cycle
+    let motif = MotifCount::planned(4);
+    let clique_ref = Runner::run(&g, &clique, &cfg(1, &[])).count;
+    let query_ref = Runner::run(&g, &query, &cfg(1, &[])).count;
+    let motif_ref = Runner::run(&g, &motif, &cfg(1, &[])).patterns;
+    assert!(clique_ref > 0 && query_ref > 0, "references must be non-trivial");
+
+    let (mut recovered, mut fatal) = (0u32, 0u32);
+    for devices in [1usize, 2, 4] {
+        for plan in chaos_plans() {
+            let label = format!("devices={devices} plan={plan:?}");
+
+            // cfg() parses a fresh plan per job: clones share the
+            // fire-once latches, so reusing one plan would leave the
+            // later jobs running against already-consumed faults
+            let r = Runner::run(&g, &clique, &cfg(devices, &plan));
+            let (rec, fat) =
+                check_exact_or_faulted(&r, &r.count, &clique_ref, &format!("clique {label}"));
+            recovered += rec;
+            fatal += fat;
+
+            let r = Runner::run(&g, &query, &cfg(devices, &plan));
+            let (rec, fat) =
+                check_exact_or_faulted(&r, &r.count, &query_ref, &format!("query {label}"));
+            recovered += rec;
+            fatal += fat;
+
+            let r = Runner::run(&g, &motif, &cfg(devices, &plan));
+            let (rec, fat) =
+                check_exact_or_faulted(&r, &r.patterns, &motif_ref, &format!("motif {label}"));
+            recovered += rec;
+            fatal += fat;
+        }
+    }
+    // the matrix must actually exercise both arms, or the invariant is
+    // vacuous (plans anchored past the run's horizon never fire)
+    assert!(recovered > 0, "no chaos run recovered from a fault");
+    assert!(fatal > 0, "no chaos run hit a fatal fault");
+}
+
+#[test]
+fn single_device_failure_on_a_fleet_recovers_exactly() {
+    let g = generators::erdos_renyi(36, 0.25, 7);
+    let clique = CliqueCount::new(4);
+    for devices in [2usize, 4] {
+        let reference = Runner::run(&g, &clique, &cfg(devices, &[])).count;
+        for victim in 0..devices {
+            let r = Runner::run(
+                &g,
+                &clique,
+                &cfg(devices, &[format!("death@0:{victim}")]),
+            );
+            assert!(
+                r.fault.is_none(),
+                "devices={devices} victim={victim}: recovered run reports fatal {:?}",
+                r.fault
+            );
+            assert_eq!(r.count, reference, "devices={devices} victim={victim}");
+            assert_eq!(r.faults.len(), 1);
+            assert!(
+                matches!(r.faults[0], (d, EngineError::DeviceDead { .. }) if d == victim),
+                "wrong fault recorded: {:?}",
+                r.faults
+            );
+            assert_eq!(r.metrics.device_faults, 1);
+        }
+    }
+}
+
+#[test]
+fn trie_job_recovers_device_loss_via_root_rerun() {
+    let g = generators::erdos_renyi(36, 0.25, 7);
+    let motif = MotifCount::planned(4);
+    let reference = Runner::run(&g, &motif, &cfg(1, &[])).patterns;
+    let r = Runner::run(&g, &motif, &cfg(3, &["death@0:1".to_string()]));
+    assert!(r.fault.is_none(), "fatal on a 3-device fleet: {:?}", r.fault);
+    assert_eq!(r.patterns, reference, "per-pattern counts drifted after recovery");
+    assert_eq!(r.metrics.device_faults, 1);
+}
+
+#[test]
+fn all_devices_dead_aborts_with_structured_fault() {
+    let g = generators::erdos_renyi(36, 0.25, 7);
+    let r = Runner::run(
+        &g,
+        &CliqueCount::new(4),
+        &cfg(2, &["death@0:0".to_string(), "death@0:1".to_string()]),
+    );
+    assert!(
+        matches!(r.fault, Some(EngineError::DeviceDead { .. })),
+        "expected a fatal DeviceDead, got {:?}",
+        r.fault
+    );
+    assert_eq!(r.faults.len(), 2, "both device deaths must be recorded");
+}
+
+#[test]
+fn fault_spec_rejections_surface_distinct_cli_errors() {
+    let err = |s: &str| {
+        format!(
+            "{:#}",
+            FaultPlan::parse(&[s.to_string()]).expect_err("must reject")
+        )
+    };
+    assert!(err("slab").contains("missing '@'"));
+    assert!(err("warp@3").contains("unknown fault kind"));
+    assert!(err("slab@x").contains("not a number"));
+    assert!(err("death@1:z").contains("fault seed 'z' is not a number"));
+    let ok = FaultPlan::parse(&["death@0:1".into(), "xfer@2".into()]).unwrap();
+    assert!(ok.is_armed());
+}
